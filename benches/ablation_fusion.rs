@@ -1,0 +1,93 @@
+//! Ablation: PJRT call-granularity for the consensus hot path.
+//!
+//! Three executions of the same T epochs on the XLA engine:
+//!   * per-op    — one PJRT call per eq. (6) update + native average
+//!   * fused     — one `round_*` artifact call per epoch (update+average)
+//!   * loop      — ONE `solve_*` artifact call for all T epochs
+//!
+//! Quantifies how much of the epoch cost is call/transfer overhead vs
+//! compute — the L2 optimization lever recorded in EXPERIMENTS.md §Perf.
+//! Requires `make artifacts`. Skips gracefully when absent.
+
+use std::path::Path;
+
+use dapc::benchkit::{black_box, quick_mode, Bench};
+use dapc::linalg::Matrix;
+use dapc::metrics::TableBuilder;
+use dapc::rng::seeded;
+use dapc::runtime::executor::XlaExecutorHost;
+use dapc::solver::{ComputeEngine, XlaEngine};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("ablation_fusion: artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let host = XlaExecutorHost::spawn(dir).expect("pjrt");
+    let sizes: &[usize] = if quick_mode() { &[32] } else { &[32, 128, 512] };
+    let t_epochs = if quick_mode() { 10 } else { 50 };
+    let j = 2;
+    let bench = Bench::default();
+    let mut table =
+        TableBuilder::new(&["n", "per-op", "fused round", "fused loop", "best vs per-op"]);
+
+    println!("=== Ablation: PJRT call granularity (J={j}, T={t_epochs}) ===");
+    for &n in sizes {
+        let mut g = seeded(n as u64);
+        let xs: Vec<Vec<f32>> = (0..j)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let ps: Vec<Matrix> = (0..j)
+            .map(|_| Matrix::from_fn(n, n, |_, _| 0.02 * g.normal_f32()))
+            .collect();
+
+        let mut per_op = XlaEngine::new(host.executor());
+        per_op.fused_rounds = false;
+        let fused = XlaEngine::new(host.executor());
+        let mut looped = XlaEngine::new(host.executor());
+        looped.fused_loop = true;
+
+        // warm compile caches outside the timed region
+        let _ = per_op.round(&xs, &xbar, &ps, 0.5, 0.5).unwrap();
+        let _ = fused.round(&xs, &xbar, &ps, 0.5, 0.5).unwrap();
+        let _ = looped.solve_loop(&xs, &xbar, &ps, 0.5, 0.5, 1).unwrap();
+
+        let r_perop = bench.run(&format!("per-op      n={n}"), || {
+            let (mut cx, mut cb) = (xs.clone(), xbar.clone());
+            for _ in 0..t_epochs {
+                let (a, b) = per_op.round(&cx, &cb, &ps, 0.5, 0.5).unwrap();
+                cx = a;
+                cb = b;
+            }
+            black_box(cb[0]);
+        });
+        let r_fused = bench.run(&format!("fused round n={n}"), || {
+            let (mut cx, mut cb) = (xs.clone(), xbar.clone());
+            for _ in 0..t_epochs {
+                let (a, b) = fused.round(&cx, &cb, &ps, 0.5, 0.5).unwrap();
+                cx = a;
+                cb = b;
+            }
+            black_box(cb[0]);
+        });
+        let r_loop = bench.run(&format!("fused loop  n={n}"), || {
+            let out = looped
+                .solve_loop(&xs, &xbar, &ps, 0.5, 0.5, t_epochs)
+                .unwrap()
+                .expect("solve artifact");
+            black_box(out.1[0]);
+        });
+
+        let best = r_fused.stats.median().min(r_loop.stats.median());
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}ms", r_perop.stats.median() * 1e3),
+            format!("{:.2}ms", r_fused.stats.median() * 1e3),
+            format!("{:.2}ms", r_loop.stats.median() * 1e3),
+            format!("{:.2}x", r_perop.stats.median() / best),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

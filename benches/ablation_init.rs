@@ -1,0 +1,69 @@
+//! Ablation: worker-init cost by method — the core of the paper's claim.
+//!
+//! Sweeps n and times, per (4n x n) block:
+//!   * gram+gj     — classical APC: A^T A then O(n^3) Gauss-Jordan inverse
+//!   * qr+backsub  — this paper: Householder QR + O(n^2) substitution
+//!   * qr+rinv     — middle ground the paper argues against: QR then an
+//!                   explicit O(n^3)-ish triangular inverse
+//!
+//! Expected shape: qr+backsub < qr+rinv < gram+gj, with the gap growing
+//! in n — exactly why Table 1's acceleration grows with matrix size.
+
+use dapc::benchkit::{black_box, full_mode, quick_mode, Bench};
+use dapc::linalg::{blas, inverse, qr, triangular, Matrix};
+use dapc::metrics::TableBuilder;
+use dapc::rng::seeded;
+
+fn main() {
+    let sizes: &[usize] = if full_mode() {
+        &[128, 256, 512, 1024, 2327]
+    } else if quick_mode() {
+        &[64, 128]
+    } else {
+        &[64, 128, 256, 512]
+    };
+    let bench = Bench::default();
+    let mut table =
+        TableBuilder::new(&["n", "gram+gj", "qr+backsub", "qr+rinv", "speedup gj/backsub"]);
+
+    println!("=== Ablation: init method cost (block = 4n x n) ===");
+    for &n in sizes {
+        let l = 4 * n;
+        let mut g = seeded(n as u64);
+        let a = Matrix::from_fn(l, n, |_, _| g.normal_f32());
+        let b: Vec<f32> = (0..l).map(|_| g.normal_f32()).collect();
+
+        let classical = bench.run(&format!("gram+gj       n={n}"), || {
+            let gram = blas::gram(&a);
+            let ginv = inverse::gauss_jordan_inverse(&gram).unwrap();
+            let mut atb = vec![0.0f32; n];
+            blas::gemv_t(&a, &b, &mut atb);
+            let mut x0 = vec![0.0f32; n];
+            blas::gemv(&ginv, &atb, &mut x0);
+            black_box(x0[0]);
+        });
+        let decomposed = bench.run(&format!("qr+backsub    n={n}"), || {
+            let f = qr::householder_qr(&a);
+            let c = qr::qt_mul(&f, &b);
+            let x0 = triangular::back_substitute(&f.r, &c);
+            black_box(x0[0]);
+        });
+        let rinv = bench.run(&format!("qr+rinv       n={n}"), || {
+            let f = qr::householder_qr(&a);
+            let rins = triangular::upper_triangular_inverse(&f.r);
+            let c = qr::qt_mul(&f, &b);
+            let mut x0 = vec![0.0f32; n];
+            blas::gemv(&rins, &c, &mut x0);
+            black_box(x0[0]);
+        });
+
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}ms", classical.stats.median() * 1e3),
+            format!("{:.2}ms", decomposed.stats.median() * 1e3),
+            format!("{:.2}ms", rinv.stats.median() * 1e3),
+            format!("{:.2}x", classical.stats.median() / decomposed.stats.median()),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

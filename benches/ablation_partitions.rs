@@ -1,0 +1,81 @@
+//! Ablation: partition count / task granularity (paper §2's "largest
+//! number of small-sized tasks" argument).
+//!
+//! Fixed dataset, J sweep: measures init wall time (shrinks with J — more
+//! parallelism, smaller QR blocks), per-epoch consensus time (grows with
+//! J — more coordination), and end-to-end time on the threaded local
+//! cluster, including the coordination overhead a real deployment pays.
+
+use dapc::benchkit::{black_box, full_mode, quick_mode, Bench};
+use dapc::coordinator::LocalCluster;
+use dapc::metrics::TableBuilder;
+use dapc::prelude::*;
+use dapc::solver::ApcVariant;
+use dapc::sparse::generate::GeneratorConfig;
+
+fn main() {
+    let n = if full_mode() {
+        2327
+    } else if quick_mode() {
+        128
+    } else {
+        512
+    };
+    let epochs = if quick_mode() { 10 } else { 60 };
+    let ds = GeneratorConfig::schenk_like(n).generate(31);
+    let m = ds.matrix.rows();
+    // tall regime requires l = m/J >= n; m = 4n => J <= 4
+    let js: &[usize] = &[1, 2, 4];
+    let bench = Bench::default();
+    let mut table = TableBuilder::new(&[
+        "J",
+        "regime",
+        "single-proc total",
+        "cluster total",
+        "cluster init",
+        "cluster epochs",
+    ]);
+
+    println!("=== Ablation: partition count (m={m}, n={n}, T={epochs}) ===");
+    for &j in js {
+        let opts = SolveOptions { epochs, ..Default::default() };
+        // single-process (no coordination overhead)
+        let sp = bench.run_once(&format!("single-proc J={j}"), || {
+            let r = DapcSolver::new(opts.clone())
+                .solve(&NativeEngine::new(), &ds.matrix, &ds.rhs, j)
+                .expect("solve");
+            assert!(r.final_mse(&ds.x_true) < 1e-4);
+            black_box(r.xbar.len());
+        });
+
+        // threaded cluster (channel coordination, concurrent workers)
+        let mut init_s = 0.0;
+        let mut iter_s = 0.0;
+        let cl = bench.run_once(&format!("cluster     J={j}"), || {
+            let mut cluster =
+                LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+            let r = cluster
+                .leader
+                .solve_apc(&ds.matrix, &ds.rhs, ApcVariant::Decomposed, &opts)
+                .expect("solve");
+            assert!(r.final_mse(&ds.x_true) < 1e-4);
+            init_s = r.init_time.as_secs_f64();
+            iter_s = r.iterate_time.as_secs_f64();
+            black_box(r.xbar.len());
+        });
+
+        table.row(&[
+            j.to_string(),
+            if m / j >= n { "tall".into() } else { "fat".into() },
+            format!("{:.3}s", sp.stats.mean()),
+            format!("{:.3}s", cl.stats.mean()),
+            format!("{init_s:.3}s"),
+            format!("{iter_s:.3}s"),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!(
+        "expected shape: cluster init time drops with J (parallel QR over \
+         smaller blocks); epoch time grows mildly with J (coordination)."
+    );
+}

@@ -1,0 +1,56 @@
+//! Microbenchmarks of the native linalg primitives — the L3 profile
+//! baseline for the §Perf optimization pass (gemm/gemv dominate the
+//! consensus epochs; QR dominates init).
+
+use dapc::benchkit::{black_box, quick_mode, Bench};
+use dapc::linalg::{blas, inverse, qr, triangular, Matrix};
+use dapc::rng::seeded;
+
+fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut g = seeded(seed);
+    Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+}
+
+fn main() {
+    let sizes: &[usize] = if quick_mode() { &[128] } else { &[128, 256, 512] };
+    let bench = Bench::default();
+
+    println!("=== linalg microbenches ===");
+    for &n in sizes {
+        let a = randm(n, n, 1);
+        let b = randm(n, n, 2);
+        let tall = randm(4 * n, n, 3);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+
+        let gemm_res = bench.run(&format!("gemm        {n}x{n} * {n}x{n}"), || {
+            black_box(blas::gemm(&a, &b).as_slice()[0]);
+        });
+        // effective GFLOP/s for the gemm (2 n^3 flops)
+        let gflops = 2.0 * (n as f64).powi(3) / gemm_res.stats.median() / 1e9;
+        println!("  -> gemm {n}: {gflops:.2} GFLOP/s");
+
+        bench.run(&format!("gemv        {n}x{n}"), || {
+            let mut y = vec![0.0f32; n];
+            blas::gemv(&a, &x, &mut y);
+            black_box(y[0]);
+        });
+        bench.run(&format!("gram        {}x{n}", 4 * n), || {
+            black_box(blas::gram(&tall).as_slice()[0]);
+        });
+        bench.run(&format!("qr          {}x{n}", 4 * n), || {
+            black_box(qr::householder_qr(&tall).r.as_slice()[0]);
+        });
+        bench.run(&format!("gj_inverse  {n}x{n}"), || {
+            let g = blas::gram(&tall);
+            black_box(inverse::gauss_jordan_inverse(&g).unwrap().as_slice()[0]);
+        });
+        let r = {
+            let f = qr::householder_qr(&tall);
+            f.r
+        };
+        bench.run(&format!("backsub     {n}"), || {
+            black_box(triangular::back_substitute(&r, &x)[0]);
+        });
+        println!();
+    }
+}

@@ -1,0 +1,68 @@
+//! Table 1 bench: total execution time of classical vs decomposed APC on
+//! the paper's five matrix shapes, reporting the acceleration factor.
+//!
+//! Default: 1/8-scale shapes (relative shape preserved); `DAPC_FULL=1`
+//! runs the exact published sizes.  `DAPC_QUICK=1` restricts to the two
+//! smallest rows for CI smoke runs.
+
+use dapc::benchkit::{black_box, full_mode, quick_mode, Bench};
+use dapc::metrics::TableBuilder;
+use dapc::prelude::*;
+use dapc::sparse::generate::GeneratorConfig;
+
+const TABLE1: [(usize, usize, usize); 5] = [
+    (9308, 2327, 80),
+    (15188, 3797, 70),
+    (18252, 4563, 95),
+    (21284, 5321, 85),
+    (37084, 9271, 175),
+];
+
+fn main() {
+    let scale = if full_mode() { 1 } else { 8 };
+    let rows: &[(usize, usize, usize)] =
+        if quick_mode() { &TABLE1[..2] } else { &TABLE1 };
+    let j = 2;
+    let engine = NativeEngine::new();
+    let bench = Bench::default();
+
+    println!("=== Table 1: classical vs decomposed APC (scale 1/{scale}, J={j}) ===");
+    let mut table = TableBuilder::new(&[
+        "A matrix shape",
+        "T",
+        "Classical APC",
+        "Decomposed APC",
+        "Acceleration",
+    ]);
+    let mut paper = [1.24, 1.49, 1.52, 1.68, 1.79].iter();
+
+    for &(mi, ni, t) in rows {
+        let (m, n) = (mi / scale, ni / scale);
+        let ds = GeneratorConfig::table1(m, n).generate(n as u64);
+        let opts = SolveOptions { epochs: t, ..Default::default() };
+
+        let rc = bench.run_once(&format!("classical ({m}x{n}) T={t}"), || {
+            let r = ApcClassicalSolver::new(opts.clone())
+                .solve(&engine, &ds.matrix, &ds.rhs, j)
+                .expect("solve");
+            assert!(r.final_mse(&ds.x_true) < 1e-2);
+            black_box(r.xbar.len());
+        });
+        let rd = bench.run_once(&format!("decomposed ({m}x{n}) T={t}"), || {
+            let r = DapcSolver::new(opts.clone())
+                .solve(&engine, &ds.matrix, &ds.rhs, j)
+                .expect("solve");
+            assert!(r.final_mse(&ds.x_true) < 1e-2);
+            black_box(r.xbar.len());
+        });
+        let (tc, td) = (rc.stats.mean(), rd.stats.mean());
+        table.row(&[
+            format!("({m} x {n})"),
+            format!("{t}"),
+            format!("{tc:.2}s"),
+            format!("{td:.2}s"),
+            format!("{:.2} (paper {:.2})", tc / td, paper.next().unwrap()),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

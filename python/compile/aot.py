@@ -1,0 +1,194 @@
+"""AOT compiler: lower every Layer-2 graph to HLO text + manifest.json.
+
+This is the only place python touches the artifacts the rust runtime loads.
+Run via ``make artifacts`` (no-op when inputs are unchanged) — NEVER at
+request time.
+
+Interchange format is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).  Lowering goes through stablehlo
+-> XlaComputation with ``return_tuple=True``; the rust side unwraps the
+tuple.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--full] [--only PATTERN]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+
+# f64 must be available before any graph is traced: the classical-APC init
+# computes its Gram inverse in double precision (see model.init_classical).
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (portable interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def graph_entries(full: bool) -> list[dict]:
+    """Enumerate every artifact: name, callable, example args, params."""
+    entries: list[dict] = []
+    seen: set[str] = set()
+
+    def add(name, fn, args, params, outputs):
+        if name in seen:
+            return
+        seen.add(name)
+        entries.append(
+            dict(name=name, fn=fn, args=args, params=params, outputs=outputs)
+        )
+
+    for pb in shapes.problems(full):
+        j, l, n = pb.j, pb.l, pb.n
+        if pb.tall:
+            add(
+                f"init_qr_l{l}_n{n}",
+                model.init_qr,
+                (spec(l, n), spec(l)),
+                dict(kind="init_qr", l=l, n=n),
+                [[n], [n, n]],
+            )
+            add(
+                f"init_classical_l{l}_n{n}",
+                model.init_classical,
+                (spec(l, n), spec(l)),
+                dict(kind="init_classical", l=l, n=n),
+                [[n], [n, n]],
+            )
+        else:
+            add(
+                f"init_fat_l{l}_n{n}",
+                model.init_fat,
+                (spec(l, n), spec(l)),
+                dict(kind="init_fat", l=l, n=n),
+                [[n], [n, n]],
+            )
+        add(
+            f"update_n{n}",
+            model.update,
+            (spec(n), spec(n), spec(n, n), spec()),
+            dict(kind="update", n=n),
+            [[n]],
+        )
+        add(
+            f"average_j{j}_n{n}",
+            model.average,
+            (spec(j, n), spec(n), spec()),
+            dict(kind="average", j=j, n=n),
+            [[n]],
+        )
+        add(
+            f"round_j{j}_n{n}",
+            model.consensus_round,
+            (spec(j, n), spec(n), spec(j, n, n), spec(), spec()),
+            dict(kind="round", j=j, n=n),
+            [[j, n], [n]],
+        )
+        add(
+            f"solve_j{j}_n{n}",
+            model.solve_loop,
+            (spec(j, n), spec(n), spec(j, n, n), spec(), spec(),
+             spec(dtype=I32)),
+            dict(kind="solve", j=j, n=n),
+            [[j, n], [n]],
+        )
+        add(
+            f"dgd_grad_l{l}_n{n}",
+            model.dgd_grad,
+            (spec(l, n), spec(n), spec(l)),
+            dict(kind="dgd_grad", l=l, n=n),
+            [[n]],
+        )
+        add(
+            f"mse_n{n}",
+            model.mse,
+            (spec(n), spec(n)),
+            dict(kind="mse", n=n),
+            [[]],
+        )
+    return entries
+
+
+def lower_entry(entry: dict, out_dir: str) -> dict:
+    lowered = jax.jit(entry["fn"]).lower(*entry["args"])
+    text = to_hlo_text(lowered)
+    fname = f"{entry['name']}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    inputs = [
+        dict(shape=list(s.shape), dtype=str(s.dtype)) for s in entry["args"]
+    ]
+    return dict(
+        name=entry["name"],
+        file=fname,
+        params=entry["params"],
+        inputs=inputs,
+        outputs=[dict(shape=s, dtype="float32") for s in entry["outputs"]],
+        sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also build paper-scale Table-1 shapes")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = graph_entries(args.full)
+    if args.only:
+        rx = re.compile(args.only)
+        entries = [e for e in entries if rx.search(e["name"])]
+
+    manifest = []
+    for i, e in enumerate(entries):
+        sys.stderr.write(f"[{i + 1}/{len(entries)}] {e['name']}\n")
+        manifest.append(lower_entry(e, args.out))
+
+    # Fix output dtypes for the i32 epoch counter input of solve graphs.
+    mpath = os.path.join(args.out, "manifest.json")
+    # Merge with an existing manifest (e.g. default build then --full).
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            old = {m["name"]: m for m in json.load(f)}
+        for m in manifest:
+            old[m["name"]] = m
+        manifest = sorted(old.values(), key=lambda m: m["name"])
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

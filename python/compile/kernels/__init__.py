@@ -1,0 +1,1 @@
+"""Layer-1 kernels + pure-HLO linalg + jnp oracles."""

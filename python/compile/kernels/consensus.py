@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernels for the APC consensus hot path.
+
+The per-epoch work of Algorithm 1 is, for every partition j:
+
+    x_j <- x_j + gamma * P_j @ (xbar - x_j)          (paper eq. (6))
+
+followed by the leader-side mixing
+
+    xbar <- (eta / J) * sum_j x_j + (1 - eta) * xbar (paper eq. (7))
+
+Both are implemented as Pallas kernels, tiled so a TPU lowering would stream
+``P`` tiles HBM->VMEM while the (small) vectors stay resident in VMEM:
+
+* :func:`consensus_update` — batched over J: grid (J, n/BN), each program
+  computes a BN-row slice of ``P_j (xbar - x_j)`` with the full n-length
+  vectors in VMEM (BN x n tile of P per program).
+* :func:`eta_average` — grid (n/BN,), reduces the J solutions column-wise.
+
+``interpret=True`` is mandatory here: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers these kernels to plain HLO
+(dots, loops) that any backend runs.  Correctness is pinned to
+``kernels.ref`` by ``python/tests/``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["consensus_update", "eta_average", "BN_DEFAULT"]
+
+# Row-block size for P tiles. 128 matches the MXU/VPU lane width so a real
+# TPU lowering gets full-width tiles; shapes not divisible by BN fall back to
+# a single block (interpret mode does not require padding).
+BN_DEFAULT = 128
+
+
+def _block(n: int, bn: int) -> int:
+    """Largest tile size <= bn that divides n (n is padded upstream to a
+    manifest bucket, so in practice this returns bn)."""
+    if n % bn == 0:
+        return bn
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0 and cand <= bn:
+            return cand
+    return n
+
+
+def consensus_update(
+    x: jnp.ndarray,
+    xbar: jnp.ndarray,
+    p: jnp.ndarray,
+    gamma: jnp.ndarray,
+    *,
+    bn: int | None = None,
+) -> jnp.ndarray:
+    """Batched eq. (6): ``x[j] + gamma * P[j] @ (xbar - x[j])`` for all j.
+
+    Args:
+      x:     (J, n) per-partition estimates.
+      xbar:  (n,)   consensus average.
+      p:     (J, n, n) nullspace projectors.
+      gamma: scalar (0-d or (1,1)) step size.
+
+    Returns (J, n) updated estimates.
+    """
+    jn, n = x.shape
+    bn = _block(n, bn or BN_DEFAULT)
+    gamma2d = jnp.reshape(gamma, (1, 1)).astype(x.dtype)
+
+    # The residual d_j = xbar - x_j is formed once outside the kernel (cheap,
+    # fused by XLA) so each program only streams its P tile + the full d_j.
+    d = xbar[None, :] - x  # (J, n)
+
+    def kernel(x_ref, d_full_ref, p_ref, gamma_ref, o_ref):
+        # x_ref      (1, BN)    row-block slice of x_j
+        # d_full_ref (1, n)     full residual for partition j (VMEM resident)
+        # p_ref      (1, BN, n) BN rows of P_j (streamed tile)
+        # gamma_ref  (1, 1)
+        g = gamma_ref[0, 0]
+        pd = p_ref[0] @ d_full_ref[0]  # (BN,)
+        o_ref[0, :] = x_ref[0, :] + g * pd
+
+    grid = (jn, n // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda j, i: (j, i)),
+            pl.BlockSpec((1, n), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, bn, n), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1), lambda j, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((jn, n), x.dtype),
+        interpret=True,
+    )(x, d, p, gamma2d)
+
+
+def eta_average(
+    x: jnp.ndarray,
+    xbar: jnp.ndarray,
+    eta: jnp.ndarray,
+    *,
+    bn: int | None = None,
+) -> jnp.ndarray:
+    """Eq. (7): ``(eta / J) * sum_j x[j] + (1 - eta) * xbar``.
+
+    Args:
+      x:    (J, n) updated estimates.
+      xbar: (n,)   previous average.
+      eta:  scalar mixing weight in (0, 1).
+
+    Returns (n,) new consensus average.
+    """
+    jn, n = x.shape
+    bn = _block(n, bn or BN_DEFAULT)
+    eta2d = jnp.reshape(eta, (1, 1)).astype(x.dtype)
+
+    def kernel(x_ref, xbar_ref, eta_ref, o_ref):
+        # x_ref (J, BN) — all partitions for this column block
+        e = eta_ref[0, 0]
+        col_mean = jnp.sum(x_ref[...], axis=0) / jn
+        o_ref[0, :] = e * col_mean + (1.0 - e) * xbar_ref[0, :]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((jn, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=True,
+    )(x, xbar[None, :], eta2d)[0]

@@ -1,0 +1,166 @@
+"""Pure-HLO dense linear algebra (Layer 2 substrate).
+
+The rust runtime executes AOT HLO on the ``xla`` crate's PJRT CPU client
+(xla_extension 0.5.1).  That client has *no* LAPACK custom-call targets, so
+``jnp.linalg.qr`` / ``solve_triangular`` / ``inv`` — which jax lowers to
+``lapack_*`` custom-calls — cannot appear in any exported artifact.  This
+module re-implements the three primitives the paper needs using only basic
+lax ops (dot, while-loop, select), so the lowered HLO is portable:
+
+* :func:`householder_qr` — reduced QR ``A = Q1 R`` (paper eq. (1)),
+* :func:`back_substitution` — upper-triangular solve (paper eqs. (2)-(3)),
+* :func:`forward_substitution` — lower-triangular solve (fat regime),
+* :func:`gauss_jordan_inverse` — the O(n^3) inverse the *classical* APC
+  baseline pays for (paper §2 complexity argument).
+
+Everything is shape-polymorphic in python but lowers to static shapes at AOT
+time (see ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "householder_qr",
+    "apply_reflectors",
+    "back_substitution",
+    "forward_substitution",
+    "gauss_jordan_inverse",
+]
+
+
+def _house_vector(x: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Householder reflector v for column x, acting on rows >= k.
+
+    Returns unit-norm v with rows < k zeroed; H = I - 2 v v^T maps the
+    masked x onto alpha * e_k.
+    """
+    l = x.shape[0]
+    rows = jnp.arange(l)
+    mask = rows >= k
+    xm = jnp.where(mask, x, 0.0)
+    sigma = jnp.sqrt(jnp.sum(xm * xm))
+    xk = x[k]
+    # sign convention avoiding cancellation: alpha = -sign(x_k) * ||x||.
+    alpha = -jnp.where(xk >= 0.0, 1.0, -1.0) * sigma
+    v = xm - alpha * (rows == k).astype(x.dtype)
+    vnorm = jnp.sqrt(jnp.sum(v * v))
+    # Guard: if the column is already zero below k, use a null reflector.
+    safe = vnorm > 1e-30
+    v = jnp.where(safe, v / jnp.where(safe, vnorm, 1.0), 0.0)
+    return v
+
+
+def householder_qr(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduced (economy) QR of a tall matrix ``a`` of shape (l, n), l >= n.
+
+    Returns (q1, r) with q1: (l, n) semi-orthogonal, r: (n, n) upper
+    triangular, ``a ~= q1 @ r`` (paper eq. (1)).  Implemented as n
+    Householder steps inside a fori_loop; only lax ops, no custom calls.
+    """
+    l, n = a.shape
+    dtype = a.dtype
+
+    def step(k, state):
+        r, vs = state
+        v = _house_vector(r[:, k], k)
+        # R <- R - 2 v (v^T R)
+        vtr = v @ r  # (n,)
+        r = r - 2.0 * jnp.outer(v, vtr)
+        vs = vs.at[k].set(v)
+        return r, vs
+
+    r_full, vs = lax.fori_loop(
+        0, n, step, (a, jnp.zeros((n, l), dtype=dtype))
+    )
+    # Zero out rounding noise below the diagonal and truncate to (n, n).
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    r = jnp.where(rows <= cols, r_full[:n, :n], 0.0)
+
+    # Q1 = H_0 ... H_{n-1} E  with E = first n columns of I_l.
+    e = jnp.eye(l, n, dtype=dtype)
+
+    def apply_back(i, q):
+        k = n - 1 - i
+        v = vs[k]
+        return q - 2.0 * jnp.outer(v, v @ q)
+
+    q1 = lax.fori_loop(0, n, apply_back, e)
+    return q1, r
+
+
+def apply_reflectors(vs: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Apply Q^T = H_{n-1} ... H_0 to a vector b (length l)."""
+    n = vs.shape[0]
+
+    def step(k, y):
+        v = vs[k]
+        return y - 2.0 * v * (v @ y)
+
+    return lax.fori_loop(0, n, step, b)
+
+
+def back_substitution(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Solve R x = c for upper-triangular R in O(n^2) (paper eqs. (2)-(3)).
+
+    x_n = c_n / r_nn, then x_p = (c_p - sum_{k>p} r_pk x_k) / r_pp,
+    p = n-1, ..., 1 — the backward-substitution decomposition the paper uses
+    in place of inverting R.
+    """
+    n = r.shape[0]
+
+    def step(i, x):
+        p = n - 1 - i
+        # entries of x at indices <= p are still zero, so a full dot works.
+        s = r[p] @ x
+        xp = (c[p] - s) / r[p, p]
+        return x.at[p].set(xp)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(c))
+
+
+def forward_substitution(lo: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Solve L x = c for lower-triangular L in O(n^2) (fat-regime init)."""
+    n = lo.shape[0]
+
+    def step(p, x):
+        s = lo[p] @ x
+        xp = (c[p] - s) / lo[p, p]
+        return x.at[p].set(xp)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(c))
+
+
+def gauss_jordan_inverse(a: jnp.ndarray) -> jnp.ndarray:
+    """Invert a square matrix via Gauss-Jordan with partial pivoting.
+
+    This is the O(n^3) elimination the paper's *classical* APC baseline
+    relies on ([18] in the paper); kept as a pure-HLO artifact so the
+    classical/decomposed comparison (Table 1) can run entirely on the rust
+    PJRT hot path.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+    aug = jnp.concatenate([a, jnp.eye(n, dtype=dtype)], axis=1)  # (n, 2n)
+    rows = jnp.arange(n)
+
+    def step(k, aug):
+        # partial pivot: argmax |aug[i, k]| over i >= k
+        col = jnp.where(rows >= k, jnp.abs(aug[:, k]), -1.0)
+        p = jnp.argmax(col)
+        # swap rows k and p via gather-free select
+        rk, rp = aug[k], aug[p]
+        aug = aug.at[k].set(rp).at[p].set(rk)
+        piv = aug[k, k]
+        rowk = aug[k] / piv
+        factors = aug[:, k]
+        aug = aug - jnp.outer(factors, rowk)
+        aug = aug.at[k].set(rowk)
+        return aug
+
+    aug = lax.fori_loop(0, n, step, aug)
+    return aug[:, n:]

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every kernel and graph in the compile path.
+
+These are the correctness references the pytest suite pins the Pallas
+kernels (``kernels.consensus``), the pure-HLO linalg (``kernels.linalg``)
+and the exported graphs (``compile.model``) against.  They use whatever
+jnp/np routine is most obviously correct — including LAPACK-backed ones,
+which are fine here because ref code never ships in an artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "consensus_update_ref",
+    "eta_average_ref",
+    "consensus_round_ref",
+    "qr_ref",
+    "back_substitution_ref",
+    "forward_substitution_ref",
+    "inverse_ref",
+    "worker_init_qr_ref",
+    "worker_init_classical_ref",
+    "dgd_gradient_ref",
+    "solve_loop_ref",
+]
+
+
+def consensus_update_ref(x, xbar, p, gamma):
+    """Eq. (6) for all partitions: x_j + gamma * P_j (xbar - x_j)."""
+    d = xbar[None, :] - x  # (J, n)
+    pd = jnp.einsum("jab,jb->ja", p, d)
+    return x + gamma * pd
+
+
+def eta_average_ref(x, xbar, eta):
+    """Eq. (7): eta * mean_j x_j + (1 - eta) * xbar."""
+    return eta * jnp.mean(x, axis=0) + (1.0 - eta) * xbar
+
+
+def consensus_round_ref(x, xbar, p, gamma, eta):
+    """One full epoch: eq. (6) for every j then eq. (7)."""
+    xn = consensus_update_ref(x, xbar, p, gamma)
+    return xn, eta_average_ref(xn, xbar, eta)
+
+
+def qr_ref(a):
+    """Economy QR via numpy (LAPACK)."""
+    q, r = np.linalg.qr(np.asarray(a), mode="reduced")
+    return q, r
+
+
+def back_substitution_ref(r, c):
+    import scipy.linalg as sla
+
+    return sla.solve_triangular(np.asarray(r), np.asarray(c), lower=False)
+
+
+def forward_substitution_ref(lo, c):
+    import scipy.linalg as sla
+
+    return sla.solve_triangular(np.asarray(lo), np.asarray(c), lower=True)
+
+
+def inverse_ref(a):
+    return np.linalg.inv(np.asarray(a))
+
+
+def worker_init_qr_ref(a, b):
+    """Decomposed (paper) init: QR + backsub x0, P = I - Q1^T Q1."""
+    q, r = qr_ref(a)
+    x0 = back_substitution_ref(r, q.T @ np.asarray(b))
+    n = a.shape[1]
+    p = np.eye(n) - q.T @ q
+    return x0, p
+
+
+def worker_init_classical_ref(a, b):
+    """Classical APC init: Gram inverse. x0 = (A^T A)^-1 A^T b,
+    P = I - (A^T A)^-1 (A^T A) computed *numerically* (the rounding noise is
+    the point — see DESIGN.md §1 soundness note)."""
+    a = np.asarray(a)
+    g = a.T @ a
+    ginv = np.linalg.inv(g)
+    x0 = ginv @ (a.T @ np.asarray(b))
+    n = a.shape[1]
+    p = np.eye(n) - ginv @ g
+    return x0, p
+
+
+def dgd_gradient_ref(a, x, b):
+    """Per-partition least-squares gradient A^T (A x - b)."""
+    a = np.asarray(a)
+    return a.T @ (a @ np.asarray(x) - np.asarray(b))
+
+
+def solve_loop_ref(x0, xbar0, p, gamma, eta, epochs):
+    """T epochs of Algorithm 1 steps 5-8."""
+    x, xbar = jnp.asarray(x0), jnp.asarray(xbar0)
+    for _ in range(epochs):
+        x, xbar = consensus_round_ref(x, xbar, jnp.asarray(p), gamma, eta)
+    return x, xbar

@@ -1,0 +1,148 @@
+"""Layer-2 JAX graphs for Algorithm 1 (build-time only).
+
+Each function here is a jit-able graph that ``aot.py`` lowers to HLO text
+for the rust runtime.  They compose the Layer-1 Pallas kernels
+(``kernels.consensus``) with the pure-HLO linalg substrate
+(``kernels.linalg``); nothing in this module may touch a LAPACK-backed
+jnp.linalg routine (see kernels/linalg.py docstring for why).
+
+Graph inventory (names match artifact manifest entries):
+
+  init_qr        (A_j, b_j)               -> (x0_j, P_j)   paper §2, eqs (1)-(4)
+  init_classical (A_j, b_j)               -> (x0_j, P_j)   classical APC baseline
+  init_fat       (A_j, b_j)               -> (x0_j, P_j)   original-APC fat regime
+  update         (x_j, xbar, P_j, gamma)  -> x_j'          eq. (6), one worker
+  average        (X, xbar, eta)           -> xbar'         eq. (7), leader
+  round          (X, xbar, P, gamma, eta) -> (X', xbar')   fused epoch, all j
+  solve_loop     (X, xbar, P, gamma, eta, T) -> (X', xbar') T epochs, one call
+  dgd_grad       (A_j, x, b_j)            -> g_j           DGD baseline worker
+  mse            (x, x_true)              -> scalar        Fig. 2 metric
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import consensus, linalg
+
+__all__ = [
+    "init_qr",
+    "init_classical",
+    "init_fat",
+    "update",
+    "average",
+    "consensus_round",
+    "solve_loop",
+    "dgd_grad",
+    "mse",
+]
+
+
+# ---------------------------------------------------------------------------
+# Worker initialization (Algorithm 1, steps 2-3)
+# ---------------------------------------------------------------------------
+
+def init_qr(a: jnp.ndarray, b: jnp.ndarray):
+    """Decomposed (this paper's) worker init for a tall block A_j (l, n).
+
+    QR-factorizes A_j = Q1 R (eq. (1)), solves R x0 = Q1^T b by backward
+    substitution (eqs. (2)-(3)) and forms the remapped projector
+    P = I_n - Q1^T Q1 (eq. (4)).  Cost: O(l n^2) QR + O(n^2) backsub —
+    no matrix inversion anywhere.
+    """
+    n = a.shape[1]
+    q1, r = linalg.householder_qr(a)
+    c = q1.T @ b
+    x0 = linalg.back_substitution(r, c)
+    p = jnp.eye(n, dtype=a.dtype) - q1.T @ q1
+    return x0, p
+
+
+def init_classical(a: jnp.ndarray, b: jnp.ndarray):
+    """Classical APC worker init: Gram matrix + O(n^3) Gauss-Jordan inverse.
+
+    x0 = (A^T A)^{-1} A^T b ;  P = I - (A^T A)^{-1} (A^T A), evaluated
+    numerically — this is the inversion cost the paper's decomposition
+    removes (Table 1's 'Classical APC' column).
+
+    Internals run in f64 (requires the x64 flag aot.py sets): the paper's
+    NumPy baseline is double precision, and the normal equations square
+    kappa(A) — in f32 the numeric projector noise can exceed 1 and the
+    consensus iteration diverges (DESIGN.md §1).
+    """
+    n = a.shape[1]
+    a64 = a.astype(jnp.float64)
+    b64 = b.astype(jnp.float64)
+    g = a64.T @ a64
+    ginv = linalg.gauss_jordan_inverse(g)
+    x0 = ginv @ (a64.T @ b64)
+    p = jnp.eye(n, dtype=jnp.float64) - ginv @ g
+    return x0.astype(a.dtype), p.astype(a.dtype)
+
+
+def init_fat(a: jnp.ndarray, b: jnp.ndarray):
+    """Original-APC fat regime (l < n, Azizan-Ruhi et al. [7]) via QR.
+
+    QR of A^T (n, l): A^T = Q R  =>  min-norm solution x0 = Q R^{-T} b
+    (forward substitution on R^T), genuine nullspace projector
+    P = I_n - Q Q^T.
+    """
+    n = a.shape[1]
+    q, r = linalg.householder_qr(a.T)
+    c = linalg.forward_substitution(r.T, b)
+    x0 = q @ c
+    p = jnp.eye(n, dtype=a.dtype) - q @ q.T
+    return x0, p
+
+
+# ---------------------------------------------------------------------------
+# Consensus epochs (Algorithm 1, steps 5-8)
+# ---------------------------------------------------------------------------
+
+def update(x_j: jnp.ndarray, xbar: jnp.ndarray, p_j: jnp.ndarray, gamma):
+    """Eq. (6) for a single worker (distributed mode artifact)."""
+    xn = consensus.consensus_update(x_j[None, :], xbar, p_j[None, :, :], gamma)
+    return xn[0]
+
+
+def average(x: jnp.ndarray, xbar: jnp.ndarray, eta):
+    """Eq. (7) on the leader: eta-mix of worker solutions."""
+    return consensus.eta_average(x, xbar, eta)
+
+
+def consensus_round(x, xbar, p, gamma, eta):
+    """One fused epoch over all J partitions (single-process hot path)."""
+    xn = consensus.consensus_update(x, xbar, p, gamma)
+    return xn, consensus.eta_average(xn, xbar, eta)
+
+
+def solve_loop(x, xbar, p, gamma, eta, epochs):
+    """T consensus epochs in one executable (T is a runtime i32 scalar).
+
+    The whole iterate phase of Algorithm 1 becomes a single PJRT call —
+    the fusion ablation (benches/ablation_fusion.rs) compares this against
+    per-epoch round calls and per-op updates.
+    """
+
+    def body(_, state):
+        xs, xb = state
+        return consensus_round(xs, xb, p, gamma, eta)
+
+    return lax.fori_loop(0, epochs, body, (x, xbar))
+
+
+# ---------------------------------------------------------------------------
+# Baselines and metrics
+# ---------------------------------------------------------------------------
+
+def dgd_grad(a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray):
+    """DGD worker gradient g_j = A_j^T (A_j x - b_j) (Fig. 2 baseline)."""
+    return a.T @ (a @ x - b)
+
+
+def mse(x: jnp.ndarray, x_true: jnp.ndarray):
+    """Mean squared error between estimate and reference (Fig. 2 y-axis)."""
+    d = x - x_true
+    return jnp.mean(d * d)

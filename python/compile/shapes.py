@@ -1,0 +1,74 @@
+"""Artifact shape manifest.
+
+AOT-lowered HLO has static shapes, so every (J, l, n) problem configuration
+the rust runtime wants to execute needs its own artifact set.  This module
+is the single source of truth for which configurations get built:
+
+* ``DEFAULT_PROBLEMS`` — small/medium buckets used by tests, examples and
+  the scaled-down benches (built by plain ``make artifacts``).
+* ``FULL_PROBLEMS``    — the five paper-scale Table-1 shapes (m = 4n rows,
+  J = 2 workers), padded up to 128-multiples; built with
+  ``make artifacts FULL=1``.
+
+The rust ``partition::bucket`` module pads real datasets (extra zero rows /
+block-diagonal identity columns) up to the nearest manifest entry — padding
+is exact for QR/backsub/projection, see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def _pad(v: int, mult: int = 128) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One (J, l, n) configuration: J partitions of l x n blocks."""
+
+    j: int
+    l: int  # rows per partition (tall: l >= n, fat: l < n)
+    n: int  # columns / solution dimension
+
+    @property
+    def tall(self) -> bool:
+        return self.l >= self.n
+
+    def tag(self) -> str:
+        return f"j{self.j}_l{self.l}_n{self.n}"
+
+
+# Small buckets: unit/integration tests, quickstart example.
+# Medium buckets: convergence example (scaled c-27-like), default benches.
+DEFAULT_PROBLEMS: list[Problem] = [
+    Problem(j=2, l=64, n=32),
+    Problem(j=4, l=64, n=32),
+    Problem(j=2, l=256, n=128),
+    Problem(j=4, l=256, n=128),
+    Problem(j=2, l=1024, n=512),  # scaled c-27: n=512, m=4n, J=2 blocks
+    Problem(j=4, l=32, n=128),    # fat regime (original APC [7])
+]
+
+# Paper Table-1 shapes (A is the pre-augmented (m x n), m = 4n; w = 2
+# workers per the table caption).  l = m / J padded to a 128-multiple;
+# n likewise.  Row/column padding is exact (DESIGN.md §3).
+_TABLE1_MN = [
+    (9308, 2327),
+    (15188, 3797),
+    (18252, 4563),
+    (21284, 5321),
+    (37084, 9271),
+]
+
+FULL_PROBLEMS: list[Problem] = [
+    Problem(j=2, l=_pad(m // 2), n=_pad(n)) for (m, n) in _TABLE1_MN
+]
+
+
+def problems(full: bool = False) -> list[Problem]:
+    out = list(DEFAULT_PROBLEMS)
+    if full:
+        out.extend(FULL_PROBLEMS)
+    return out

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is launched from the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,125 @@
+"""Pallas consensus kernels (kernels/consensus.py) vs jnp oracles.
+
+Hypothesis sweeps (J, n) shapes and hyper-parameters; the kernels must match
+``kernels.ref`` bit-for-bit up to f32 rounding for every shape, including
+ones that do not divide the default 128 block.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import consensus, ref
+
+F32 = np.float32
+
+
+def _mk(rng, j, n):
+    x = rng.normal(size=(j, n)).astype(F32)
+    xbar = rng.normal(size=(n,)).astype(F32)
+    p = rng.normal(size=(j, n, n)).astype(F32)
+    return x, xbar, p
+
+
+class TestConsensusUpdate:
+    @pytest.mark.parametrize("j,n", [(1, 8), (2, 32), (4, 128), (3, 96), (7, 13)])
+    def test_matches_ref(self, rng, j, n):
+        x, xbar, p = _mk(rng, j, n)
+        got = consensus.consensus_update(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p), jnp.float32(0.8)
+        )
+        want = ref.consensus_update_ref(x, xbar, p, 0.8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+    def test_gamma_zero_is_identity(self, rng):
+        x, xbar, p = _mk(rng, 3, 64)
+        got = consensus.consensus_update(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p), jnp.float32(0.0)
+        )
+        np.testing.assert_allclose(np.asarray(got), x, atol=0)
+
+    def test_zero_projector_is_identity(self, rng):
+        x, xbar, _ = _mk(rng, 2, 32)
+        p = np.zeros((2, 32, 32), dtype=F32)
+        got = consensus.consensus_update(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p), jnp.float32(0.9)
+        )
+        np.testing.assert_allclose(np.asarray(got), x, atol=0)
+
+    def test_fixed_point(self, rng):
+        # x_j == xbar for all j is a fixed point of eq. (6).
+        n, j = 48, 3
+        xbar = rng.normal(size=(n,)).astype(F32)
+        x = np.tile(xbar, (j, 1))
+        p = rng.normal(size=(j, n, n)).astype(F32)
+        got = consensus.consensus_update(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p), jnp.float32(0.7)
+        )
+        np.testing.assert_allclose(np.asarray(got), x, atol=1e-6)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        j=st.integers(min_value=1, max_value=6),
+        n=st.integers(min_value=1, max_value=80),
+        gamma=st.floats(min_value=0.0, max_value=1.0, width=32),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_property_matches_ref(self, j, n, gamma, seed):
+        g = np.random.default_rng(seed)
+        x, xbar, p = _mk(g, j, n)
+        got = consensus.consensus_update(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p),
+            jnp.float32(gamma),
+        )
+        want = ref.consensus_update_ref(x, xbar, p, gamma)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=5e-3
+        )
+
+
+class TestEtaAverage:
+    @pytest.mark.parametrize("j,n", [(1, 8), (2, 32), (4, 128), (5, 37)])
+    def test_matches_ref(self, rng, j, n):
+        x, xbar, _ = _mk(rng, j, n)
+        got = consensus.eta_average(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.float32(0.35)
+        )
+        want = ref.eta_average_ref(x, xbar, 0.35)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_eta_zero_keeps_xbar(self, rng):
+        x, xbar, _ = _mk(rng, 4, 64)
+        got = consensus.eta_average(jnp.asarray(x), jnp.asarray(xbar), jnp.float32(0.0))
+        np.testing.assert_allclose(np.asarray(got), xbar, atol=0)
+
+    def test_eta_one_is_mean(self, rng):
+        x, xbar, _ = _mk(rng, 4, 64)
+        got = consensus.eta_average(jnp.asarray(x), jnp.asarray(xbar), jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(got), x.mean(axis=0), atol=1e-6)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        j=st.integers(min_value=1, max_value=8),
+        n=st.integers(min_value=1, max_value=100),
+        eta=st.floats(min_value=0.0, max_value=1.0, width=32),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_property_matches_ref(self, j, n, eta, seed):
+        g = np.random.default_rng(seed)
+        x, xbar, _ = _mk(g, j, n)
+        got = consensus.eta_average(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.float32(eta)
+        )
+        want = ref.eta_average_ref(x, xbar, eta)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-4
+        )
+
+
+class TestBlockSelection:
+    def test_block_divides(self):
+        assert consensus._block(256, 128) == 128
+        assert consensus._block(96, 128) == 32
+        assert consensus._block(13, 128) == 1
+        assert consensus._block(128, 64) == 64

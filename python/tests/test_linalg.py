@@ -1,0 +1,161 @@
+"""Pure-HLO linalg (kernels/linalg.py) vs LAPACK oracles.
+
+These are the correctness gates for everything that ends up in an init
+artifact: Householder QR, triangular solves, Gauss-Jordan inverse.
+Hypothesis sweeps shapes; fixed-seed cases pin the numerics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linalg, ref
+
+F32 = np.float32
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(F32)
+
+
+class TestHouseholderQR:
+    @pytest.mark.parametrize("l,n", [(8, 8), (16, 8), (64, 32), (33, 7), (128, 128)])
+    def test_reconstruction(self, rng, l, n):
+        a = _rand(rng, l, n)
+        q1, r = linalg.householder_qr(jnp.asarray(a))
+        np.testing.assert_allclose(np.asarray(q1 @ r), a, atol=5e-5)
+
+    @pytest.mark.parametrize("l,n", [(16, 8), (64, 32), (50, 50)])
+    def test_orthonormal_columns(self, rng, l, n):
+        a = _rand(rng, l, n)
+        q1, _ = linalg.householder_qr(jnp.asarray(a))
+        np.testing.assert_allclose(
+            np.asarray(q1.T @ q1), np.eye(n), atol=5e-5
+        )
+
+    def test_r_upper_triangular(self, rng):
+        a = _rand(rng, 40, 24)
+        _, r = linalg.householder_qr(jnp.asarray(a))
+        r = np.asarray(r)
+        assert np.allclose(r, np.triu(r))
+
+    def test_r_diagonal_matches_lapack_magnitude(self, rng):
+        # R is unique up to column signs; |diag| must match LAPACK's.
+        a = _rand(rng, 32, 16)
+        _, r = linalg.householder_qr(jnp.asarray(a))
+        _, r_ref = ref.qr_ref(a)
+        np.testing.assert_allclose(
+            np.abs(np.diag(np.asarray(r))), np.abs(np.diag(r_ref)), rtol=1e-4
+        )
+
+    def test_rank_deficient_column_no_nan(self):
+        # A zero column must not produce NaNs (guarded reflector).
+        a = np.zeros((10, 4), dtype=F32)
+        a[:, 0] = 1.0
+        a[:, 2] = np.arange(10)
+        q1, r = linalg.householder_qr(jnp.asarray(a))
+        assert np.isfinite(np.asarray(q1)).all()
+        assert np.isfinite(np.asarray(r)).all()
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        l=st.integers(min_value=2, max_value=48),
+        n=st.integers(min_value=1, max_value=24),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_property_reconstruction_and_orthogonality(self, l, n, seed):
+        if l < n:
+            l = n  # tall or square only
+        a = np.random.default_rng(seed).normal(size=(l, n)).astype(F32)
+        q1, r = linalg.householder_qr(jnp.asarray(a))
+        np.testing.assert_allclose(np.asarray(q1 @ r), a, atol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(q1.T @ q1), np.eye(n), atol=1e-3
+        )
+
+
+class TestTriangularSolves:
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 100])
+    def test_back_substitution(self, rng, n):
+        # diagonally dominant => well-conditioned; the oracle comparison
+        # then isolates algorithmic error from f32 conditioning blow-up
+        r = np.triu(_rand(rng, n, n)) / np.sqrt(n) + 3.0 * np.eye(n, dtype=F32)
+        r = r.astype(F32)
+        c = _rand(rng, n)
+        x = linalg.back_substitution(jnp.asarray(r), jnp.asarray(c))
+        np.testing.assert_allclose(
+            np.asarray(x), ref.back_substitution_ref(r, c), atol=1e-4
+        )
+
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 100])
+    def test_forward_substitution(self, rng, n):
+        lo = np.tril(_rand(rng, n, n)) / np.sqrt(n) + 3.0 * np.eye(n, dtype=F32)
+        lo = lo.astype(F32)
+        c = _rand(rng, n)
+        x = linalg.forward_substitution(jnp.asarray(lo), jnp.asarray(c))
+        np.testing.assert_allclose(
+            np.asarray(x), ref.forward_substitution_ref(lo, c), atol=1e-4
+        )
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        n=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_property_residual(self, n, seed):
+        g = np.random.default_rng(seed)
+        r = (np.triu(g.normal(size=(n, n))) / max(np.sqrt(n), 1.0)).astype(
+            F32
+        ) + 2.5 * np.eye(n, dtype=F32)
+        c = g.normal(size=(n,)).astype(F32)
+        x = np.asarray(linalg.back_substitution(jnp.asarray(r), jnp.asarray(c)))
+        assert np.abs(r @ x - c).max() < 1e-2
+
+
+class TestGaussJordanInverse:
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 64])
+    def test_inverse_spd(self, rng, n):
+        a = _rand(rng, n + 4, n)
+        g = a.T @ a + np.eye(n, dtype=F32)
+        gi = linalg.gauss_jordan_inverse(jnp.asarray(g))
+        np.testing.assert_allclose(
+            np.asarray(gi) @ g, np.eye(n), atol=1e-3
+        )
+
+    def test_inverse_needs_pivoting(self):
+        # Zero on the leading diagonal: fails without partial pivoting.
+        a = np.array([[0.0, 1.0], [1.0, 0.0]], dtype=F32)
+        ai = np.asarray(linalg.gauss_jordan_inverse(jnp.asarray(a)))
+        np.testing.assert_allclose(ai, a, atol=1e-6)
+
+    def test_matches_numpy(self, rng):
+        a = _rand(rng, 16, 16) + 4.0 * np.eye(16, dtype=F32)
+        gi = linalg.gauss_jordan_inverse(jnp.asarray(a))
+        np.testing.assert_allclose(
+            np.asarray(gi), ref.inverse_ref(a), rtol=1e-2, atol=1e-3
+        )
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        n=st.integers(min_value=1, max_value=24),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_property_left_right_inverse(self, n, seed):
+        g = np.random.default_rng(seed)
+        a = g.normal(size=(n, n)).astype(F32) + n * np.eye(n, dtype=F32)
+        ai = np.asarray(linalg.gauss_jordan_inverse(jnp.asarray(a)))
+        assert np.abs(ai @ a - np.eye(n)).max() < 5e-2
+        assert np.abs(a @ ai - np.eye(n)).max() < 5e-2
+
+
+class TestReflectorHelpers:
+    def test_apply_reflectors_matches_qt(self, rng):
+        # Q^T b computed via stored reflectors == Q1^T b for square A.
+        n = 12
+        a = _rand(rng, n, n)
+        q1, r = linalg.householder_qr(jnp.asarray(a))
+        b = _rand(rng, n)
+        qtb = np.asarray(q1).T @ b
+        x = linalg.back_substitution(r, jnp.asarray(qtb))
+        np.testing.assert_allclose(a @ np.asarray(x), b, atol=1e-3)

@@ -1,0 +1,185 @@
+"""Layer-2 graph correctness: init variants, consensus rounds, solve loop.
+
+Validates the *algorithm*, not just the kernels: both init variants must
+agree with the oracles; Algorithm 1 must drive the MSE down on a consistent
+augmented system (the paper's Fig. 2 setup, scaled down).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _tall_system(rng, l, n):
+    a = rng.normal(size=(l, n)).astype(F32)
+    x_true = rng.normal(size=(n,)).astype(F32)
+    b = (a @ x_true).astype(F32)
+    return a, b, x_true
+
+
+class TestInitQr:
+    @pytest.mark.parametrize("l,n", [(16, 8), (64, 32), (40, 40)])
+    def test_x0_solves_consistent_system(self, rng, l, n):
+        a, b, x_true = _tall_system(rng, l, n)
+        x0, _ = model.init_qr(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(x0), x_true, atol=1e-2)
+
+    def test_matches_ref(self, rng):
+        a, b, _ = _tall_system(rng, 48, 24)
+        x0, p = model.init_qr(jnp.asarray(a), jnp.asarray(b))
+        x0r, pr = ref.worker_init_qr_ref(a, b)
+        np.testing.assert_allclose(np.asarray(x0), x0r, atol=1e-3)
+        # Tall regime: P = I - Q1^T Q1 is rounding-level noise (paper eq. 4;
+        # see DESIGN.md soundness note) — assert it is small like the ref's.
+        assert np.abs(np.asarray(p)).max() < 1e-4
+        assert np.abs(pr).max() < 1e-4
+
+    def test_projector_symmetric_psd_structure(self, rng):
+        a, b, _ = _tall_system(rng, 32, 16)
+        _, p = model.init_qr(jnp.asarray(a), jnp.asarray(b))
+        p = np.asarray(p)
+        np.testing.assert_allclose(p, p.T, atol=1e-5)
+
+
+class TestInitClassical:
+    @pytest.mark.parametrize("l,n", [(16, 8), (64, 32)])
+    def test_x0_solves_consistent_system(self, rng, l, n):
+        a, b, x_true = _tall_system(rng, l, n)
+        x0, _ = model.init_classical(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(x0), x_true, atol=5e-2)
+
+    def test_matches_ref(self, rng):
+        a, b, _ = _tall_system(rng, 48, 24)
+        x0, p = model.init_classical(jnp.asarray(a), jnp.asarray(b))
+        x0r, _ = ref.worker_init_classical_ref(a, b)
+        np.testing.assert_allclose(np.asarray(x0), x0r, atol=1e-2)
+
+    def test_decomposed_init_mse_ge_classical_is_bounded(self, rng):
+        # Paper §4: 'the decomposed APC MSE of the initial solution should
+        # always be greater than in classical APC' — both must still be tiny
+        # on a consistent system.
+        a, b, x_true = _tall_system(rng, 64, 32)
+        xq, _ = model.init_qr(jnp.asarray(a), jnp.asarray(b))
+        xc, _ = model.init_classical(jnp.asarray(a), jnp.asarray(b))
+        mq = float(np.mean((np.asarray(xq) - x_true) ** 2))
+        mc = float(np.mean((np.asarray(xc) - x_true) ** 2))
+        assert mq < 1e-4 and mc < 1e-2
+
+
+class TestInitFat:
+    def test_min_norm_solution(self, rng):
+        p_rows, n = 12, 32
+        a = rng.normal(size=(p_rows, n)).astype(F32)
+        b = rng.normal(size=(p_rows,)).astype(F32)
+        x0, p = model.init_fat(jnp.asarray(a), jnp.asarray(b))
+        # residual ~ 0 (underdetermined, consistent by construction)
+        np.testing.assert_allclose(a @ np.asarray(x0), b, atol=1e-3)
+        # min-norm: x0 orthogonal to nullspace => P x0 ~ 0
+        np.testing.assert_allclose(np.asarray(p) @ np.asarray(x0), 0, atol=1e-3)
+
+    def test_projector_idempotent(self, rng):
+        a = rng.normal(size=(8, 24)).astype(F32)
+        b = rng.normal(size=(8,)).astype(F32)
+        _, p = model.init_fat(jnp.asarray(a), jnp.asarray(b))
+        p = np.asarray(p)
+        np.testing.assert_allclose(p @ p, p, atol=1e-4)
+        np.testing.assert_allclose(p, p.T, atol=1e-5)
+        # rank = n - p_rows
+        assert abs(np.trace(p) - (24 - 8)) < 1e-2
+
+
+class TestConsensusRound:
+    def test_matches_ref(self, rng):
+        j, n = 3, 40
+        x = rng.normal(size=(j, n)).astype(F32)
+        xbar = rng.normal(size=(n,)).astype(F32)
+        p = rng.normal(size=(j, n, n)).astype(F32) * 0.1
+        xn, xbn = model.consensus_round(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p),
+            jnp.float32(0.6), jnp.float32(0.4),
+        )
+        xr, xbr = ref.consensus_round_ref(x, xbar, p, 0.6, 0.4)
+        np.testing.assert_allclose(np.asarray(xn), np.asarray(xr), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(xbn), np.asarray(xbr), atol=1e-4)
+
+
+class TestSolveLoop:
+    def test_matches_unrolled_ref(self, rng):
+        j, n, t = 2, 24, 7
+        x = rng.normal(size=(j, n)).astype(F32)
+        xbar = rng.normal(size=(n,)).astype(F32)
+        p = (rng.normal(size=(j, n, n)) * 0.05).astype(F32)
+        xs, xbs = model.solve_loop(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p),
+            jnp.float32(0.5), jnp.float32(0.5), jnp.int32(t),
+        )
+        xr, xbr = ref.solve_loop_ref(x, xbar, p, 0.5, 0.5, t)
+        np.testing.assert_allclose(np.asarray(xbs), np.asarray(xbr), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(xs), np.asarray(xr), atol=1e-3)
+
+    def test_zero_epochs_identity(self, rng):
+        j, n = 2, 16
+        x = rng.normal(size=(j, n)).astype(F32)
+        xbar = rng.normal(size=(n,)).astype(F32)
+        p = rng.normal(size=(j, n, n)).astype(F32)
+        xs, xbs = model.solve_loop(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p),
+            jnp.float32(0.5), jnp.float32(0.5), jnp.int32(0),
+        )
+        np.testing.assert_allclose(np.asarray(xs), x, atol=0)
+        np.testing.assert_allclose(np.asarray(xbs), xbar, atol=0)
+
+
+class TestAlgorithmEndToEnd:
+    def test_consensus_converges_on_augmented_system(self, rng):
+        """Paper §4 setup, scaled: square system + augmented rows, J tall
+        partitions; Algorithm 1 must drive MSE(xbar, x_true) to ~0."""
+        n, j = 24, 3
+        a0 = (rng.normal(size=(n, n)) + 3 * np.eye(n)).astype(F32)
+        x_true = rng.normal(size=(n,)).astype(F32)
+        b0 = a0 @ x_true
+        # augment: D_A rows are random combinations of A's rows (paper eq. 8)
+        m_extra = 2 * n
+        c = rng.normal(size=(m_extra, n)).astype(F32)
+        da, db = c @ a0, c @ b0
+        a_full = np.vstack([a0, da])
+        b_full = np.concatenate([b0, db])
+        # J partitions of l = n rows each
+        xs, ps = [], []
+        for jj in range(j):
+            sl = slice(jj * n, (jj + 1) * n)
+            x0, p = model.init_qr(jnp.asarray(a_full[sl]), jnp.asarray(b_full[sl]))
+            xs.append(np.asarray(x0))
+            ps.append(np.asarray(p))
+        x = np.stack(xs)
+        p = np.stack(ps)
+        xbar = x.mean(axis=0)  # eq. (5)
+        mse0 = float(np.mean((xbar - x_true) ** 2))
+        _, xbar_t = model.solve_loop(
+            jnp.asarray(x), jnp.asarray(xbar), jnp.asarray(p),
+            jnp.float32(0.8), jnp.float32(0.9), jnp.int32(40),
+        )
+        mse_t = float(np.mean((np.asarray(xbar_t) - x_true) ** 2))
+        assert mse_t < 1e-6
+        assert mse_t <= mse0 + 1e-12
+
+    def test_dgd_gradient_matches_ref(self, rng):
+        l, n = 20, 10
+        a = rng.normal(size=(l, n)).astype(F32)
+        x = rng.normal(size=(n,)).astype(F32)
+        b = rng.normal(size=(l,)).astype(F32)
+        g = model.dgd_grad(jnp.asarray(a), jnp.asarray(x), jnp.asarray(b))
+        np.testing.assert_allclose(
+            np.asarray(g), ref.dgd_gradient_ref(a, x, b), atol=1e-4
+        )
+
+    def test_mse_graph(self, rng):
+        x = rng.normal(size=(32,)).astype(F32)
+        y = rng.normal(size=(32,)).astype(F32)
+        got = float(model.mse(jnp.asarray(x), jnp.asarray(y)))
+        assert abs(got - float(np.mean((x - y) ** 2))) < 1e-6

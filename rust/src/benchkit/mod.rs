@@ -1,0 +1,146 @@
+//! Custom bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` binaries use [`Bench`] for warmup + timed iterations with
+//! mean/median/p95 reporting, and honor two environment variables:
+//!
+//! * `DAPC_FULL=1`   — run paper-scale shapes (Table 1 sizes);
+//! * `DAPC_QUICK=1`  — minimum iterations, for CI smoke runs.
+
+use std::time::Instant;
+
+use crate::metrics::TimingStats;
+
+/// One benchmark runner with a fixed iteration budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        if quick_mode() {
+            Self { warmup_iters: 1, iters: 3 }
+        } else {
+            Self { warmup_iters: 2, iters: 10 }
+        }
+    }
+}
+
+/// `DAPC_QUICK=1` => smoke-test iteration counts.
+pub fn quick_mode() -> bool {
+    std::env::var("DAPC_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `DAPC_FULL=1` => paper-scale workloads.
+pub fn full_mode() -> bool {
+    std::env::var("DAPC_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A measured result, printable as one bench line.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: TimingStats,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  median {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.stats.mean()),
+            fmt_secs(self.stats.median()),
+            fmt_secs(self.stats.p95()),
+            self.stats.samples.len(),
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Self { warmup_iters, iters }
+    }
+
+    /// Run `f` with warmup, returning timing stats.  `f` should perform
+    /// one complete unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            stats: TimingStats::from_secs(samples),
+        };
+        println!("{}", res.line());
+        res
+    }
+
+    /// Time a single invocation (for long end-to-end runs where repeated
+    /// iterations are impractical, e.g. Table-1 paper-scale rows).
+    pub fn run_once<F: FnOnce()>(&self, name: &str, f: F) -> BenchResult {
+        let t0 = Instant::now();
+        f();
+        let res = BenchResult {
+            name: name.to_string(),
+            stats: TimingStats::from_secs(vec![t0.elapsed().as_secs_f64()]),
+        };
+        println!("{}", res.line());
+        res
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench::new(1, 5);
+        let mut count = 0usize;
+        let res = b.run("noop", || {
+            count += 1;
+        });
+        assert_eq!(count, 6); // warmup + iters
+        assert_eq!(res.stats.samples.len(), 5);
+        assert!(res.line().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn run_once_single_sample() {
+        let res = Bench::default().run_once("one", || {});
+        assert_eq!(res.stats.samples.len(), 1);
+    }
+}

@@ -1,0 +1,171 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands with `--flag value`, `--flag=value` and boolean
+//! `--flag` forms, plus positional arguments; generates usage text from
+//! the declared options.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DapcError, Result};
+
+/// Declared option for usage/validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Debug, Default)]
+pub struct ParsedArgs {
+    pub command: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+                DapcError::Parse(format!("invalid value for --{name}: {s:?}"))
+            }),
+        }
+    }
+}
+
+/// Parse argv (without the program name) against a set of declared specs.
+pub fn parse(args: &[String], specs: &[OptSpec]) -> Result<ParsedArgs> {
+    let mut out = ParsedArgs::default();
+    let mut i = 0;
+    // first non-flag token is the subcommand
+    if i < args.len() && !args[i].starts_with('-') {
+        out.command = Some(args[i].clone());
+        i += 1;
+    }
+    while i < args.len() {
+        let arg = &args[i];
+        if let Some(rest) = arg.strip_prefix("--") {
+            let (name, inline_val) = match rest.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (rest.to_string(), None),
+            };
+            let spec = specs.iter().find(|s| s.name == name).ok_or_else(|| {
+                DapcError::Parse(format!(
+                    "unknown option --{name}\n\n{}",
+                    usage(specs)
+                ))
+            })?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| {
+                                DapcError::Parse(format!(
+                                    "option --{name} requires a value"
+                                ))
+                            })?
+                    }
+                };
+                out.options.insert(name, val);
+            } else {
+                if inline_val.is_some() {
+                    return Err(DapcError::Parse(format!(
+                        "option --{name} does not take a value"
+                    )));
+                }
+                out.flags.push(name);
+            }
+        } else {
+            out.positionals.push(arg.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Render usage text from the declared specs.
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut out = String::from("options:\n");
+    for s in specs {
+        let arg = if s.takes_value {
+            format!("--{} <value>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        out.push_str(&format!("  {:<24} {}\n", arg, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "epochs", help: "T", takes_value: true },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false },
+            OptSpec { name: "eta", help: "mix", takes_value: true },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let p = parse(&sv(&["solve", "--epochs", "80", "--verbose", "data.mtx"]), &specs()).unwrap();
+        assert_eq!(p.command.as_deref(), Some("solve"));
+        assert_eq!(p.get("epochs"), Some("80"));
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positionals, vec!["data.mtx"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = parse(&sv(&["solve", "--eta=0.9"]), &specs()).unwrap();
+        assert_eq!(p.get("eta"), Some("0.9"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let p = parse(&sv(&["x", "--epochs", "12"]), &specs()).unwrap();
+        assert_eq!(p.get_parse::<usize>("epochs").unwrap(), Some(12));
+        assert_eq!(p.get_parse::<usize>("eta").unwrap(), None);
+        let bad = parse(&sv(&["x", "--epochs", "abc"]), &specs()).unwrap();
+        assert!(bad.get_parse::<usize>("epochs").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&sv(&["--epochs"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all() {
+        let u = usage(&specs());
+        assert!(u.contains("--epochs <value>"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Run configuration: hyper-parameters, engine/solver selection, paths.
+//!
+//! Loadable from a JSON file (`--config run.json`) and overridable from
+//! the CLI; validated before a run starts.  JSON parsing is in-repo
+//! ([`json::Json`]) since serde is unavailable offline.
+
+pub mod json;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{DapcError, Result};
+
+pub use json::Json;
+
+/// Which solver algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's decomposed APC (QR + backward substitution).
+    DapcDecomposed,
+    /// Classical APC (Gram inverse init) — Table 1 baseline.
+    ApcClassical,
+    /// Distributed gradient descent — Fig. 2 baseline.
+    Dgd,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dapc" | "decomposed" | "dapc-decomposed" => Ok(Self::DapcDecomposed),
+            "apc" | "classical" | "apc-classical" => Ok(Self::ApcClassical),
+            "dgd" => Ok(Self::Dgd),
+            other => Err(DapcError::Config(format!(
+                "unknown algorithm {other:?} (expected dapc|apc|dgd)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::DapcDecomposed => "dapc-decomposed",
+            Self::ApcClassical => "apc-classical",
+            Self::Dgd => "dgd",
+        }
+    }
+}
+
+/// Which compute engine executes the worker math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native Rust linalg (always available).
+    Native,
+    /// AOT HLO artifacts on the PJRT CPU client (the paper's L1/L2 path).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Ok(Self::Native),
+            "xla" | "pjrt" => Ok(Self::Xla),
+            other => Err(DapcError::Config(format!(
+                "unknown engine {other:?} (expected native|xla)"
+            ))),
+        }
+    }
+}
+
+/// Full run configuration (CLI `solve` command / config file).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub algorithm: Algorithm,
+    pub engine: EngineKind,
+    /// Number of partitions J.
+    pub partitions: usize,
+    /// Number of consensus epochs T.
+    pub epochs: usize,
+    /// Mixing weight eta in (0, 1].
+    pub eta: f32,
+    /// Projection step gamma in (0, 1].
+    pub gamma: f32,
+    /// DGD step size (only used by Algorithm::Dgd).
+    pub dgd_step: f32,
+    /// Artifact directory (manifest.json + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Optional dataset paths (MatrixMarket); synthetic when absent.
+    pub matrix_path: Option<PathBuf>,
+    pub rhs_path: Option<PathBuf>,
+    /// Synthetic problem size when no dataset is given.
+    pub synth_n: usize,
+    /// RNG seed for synthetic data.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: Algorithm::DapcDecomposed,
+            engine: EngineKind::Native,
+            partitions: 2,
+            epochs: 80,
+            eta: 0.9,
+            gamma: 0.9,
+            dgd_step: 1e-3,
+            artifacts_dir: PathBuf::from("artifacts"),
+            matrix_path: None,
+            rhs_path: None,
+            synth_n: 128,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Validate hyper-parameter ranges (paper: eta, gamma in (0, 1)).
+    pub fn validate(&self) -> Result<()> {
+        if self.partitions == 0 {
+            return Err(DapcError::Config("partitions must be >= 1".into()));
+        }
+        if !(self.eta > 0.0 && self.eta <= 1.0) {
+            return Err(DapcError::Config(format!(
+                "eta must be in (0, 1], got {}",
+                self.eta
+            )));
+        }
+        if !(self.gamma > 0.0 && self.gamma <= 1.0) {
+            return Err(DapcError::Config(format!(
+                "gamma must be in (0, 1], got {}",
+                self.gamma
+            )));
+        }
+        if self.matrix_path.is_some() != self.rhs_path.is_some() {
+            return Err(DapcError::Config(
+                "matrix and rhs paths must be given together".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON config file; unknown keys are rejected to catch
+    /// typos early.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| DapcError::Config("config must be an object".into()))?;
+        let mut cfg = Self::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "algorithm" => {
+                    cfg.algorithm = Algorithm::parse(val.as_str().ok_or_else(
+                        || DapcError::Config("algorithm must be a string".into()),
+                    )?)?
+                }
+                "engine" => {
+                    cfg.engine = EngineKind::parse(val.as_str().ok_or_else(
+                        || DapcError::Config("engine must be a string".into()),
+                    )?)?
+                }
+                "partitions" => cfg.partitions = num(val, key)? as usize,
+                "epochs" => cfg.epochs = num(val, key)? as usize,
+                "eta" => cfg.eta = num(val, key)? as f32,
+                "gamma" => cfg.gamma = num(val, key)? as f32,
+                "dgd_step" => cfg.dgd_step = num(val, key)? as f32,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(str_val(val, key)?)
+                }
+                "matrix_path" => {
+                    cfg.matrix_path = Some(PathBuf::from(str_val(val, key)?))
+                }
+                "rhs_path" => {
+                    cfg.rhs_path = Some(PathBuf::from(str_val(val, key)?))
+                }
+                "synth_n" => cfg.synth_n = num(val, key)? as usize,
+                "seed" => cfg.seed = num(val, key)? as u64,
+                other => {
+                    return Err(DapcError::Config(format!(
+                        "unknown config key {other:?}"
+                    )))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn num(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| DapcError::Config(format!("{key} must be a number")))
+}
+
+fn str_val<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| DapcError::Config(format!("{key} must be a string")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = RunConfig::from_json(
+            r#"{"algorithm": "apc", "engine": "xla", "partitions": 4,
+                "epochs": 95, "eta": 0.8, "gamma": 0.75,
+                "artifacts_dir": "artifacts", "synth_n": 512, "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::ApcClassical);
+        assert_eq!(cfg.engine, EngineKind::Xla);
+        assert_eq!(cfg.partitions, 4);
+        assert_eq!(cfg.epochs, 95);
+        assert!((cfg.eta - 0.8).abs() < 1e-6);
+        assert_eq!(cfg.synth_n, 512);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_json(r#"{"eta": 1.5}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"gamma": 0.0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"partitions": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"unknown_key": 1}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"algorithm": "sgd"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"matrix_path": "a.mtx"}"#).is_err());
+        assert!(RunConfig::from_json(r#"[1]"#).is_err());
+    }
+
+    #[test]
+    fn algorithm_and_engine_aliases() {
+        assert_eq!(Algorithm::parse("DAPC").unwrap(), Algorithm::DapcDecomposed);
+        assert_eq!(Algorithm::parse("classical").unwrap(), Algorithm::ApcClassical);
+        assert_eq!(EngineKind::parse("rust").unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("PJRT").unwrap(), EngineKind::Xla);
+    }
+}

@@ -1,0 +1,212 @@
+//! Cluster spawn helpers.
+//!
+//! [`LocalCluster`] — J worker threads over in-process channels (the
+//! default, analogous to a single-host Dask LocalCluster).
+//! [`serve_tcp_worker`] / [`connect_tcp_workers`] — the multi-process
+//! variant: start workers with `dapc worker --listen ADDR`, then point the
+//! leader at them (analogous to the paper's SSHCluster).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::thread::JoinHandle;
+
+use crate::error::{DapcError, Result};
+use crate::solver::ComputeEngine;
+
+use super::leader::Leader;
+use super::transport::{channel_pair, ChannelTransport, TcpTransport};
+use super::worker::run_worker;
+
+/// A leader plus J in-process worker threads.
+pub struct LocalCluster {
+    pub leader: Leader<ChannelTransport>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl LocalCluster {
+    /// Spawn J workers, each building its engine from `make_engine`
+    /// (engines may not be `Send`, e.g. per-thread state, so construction
+    /// happens inside the worker thread).
+    pub fn spawn<E, F>(j: usize, make_engine: F) -> Result<Self>
+    where
+        E: ComputeEngine,
+        F: Fn() -> E + Send + Sync + Clone + 'static,
+    {
+        if j == 0 {
+            return Err(DapcError::Config("cluster needs >= 1 worker".into()));
+        }
+        let mut leader_sides = Vec::with_capacity(j);
+        let mut handles = Vec::with_capacity(j);
+        for i in 0..j {
+            let (leader_side, mut worker_side) = channel_pair();
+            leader_sides.push(leader_side);
+            let mk = make_engine.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dapc-worker-{i}"))
+                    .spawn(move || {
+                        let engine = mk();
+                        // worker errors are reported over the transport;
+                        // a hangup just ends the thread.
+                        let _ = run_worker(&engine, &mut worker_side);
+                    })
+                    .map_err(|e| DapcError::Coordinator(e.to_string()))?,
+            );
+        }
+        Ok(Self { leader: Leader::new(leader_sides), handles })
+    }
+
+    /// Shut down workers and join their threads.
+    pub fn join(mut self) {
+        self.leader.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LocalCluster {
+    fn drop(&mut self) {
+        self.leader.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker side of a TCP cluster: listen on `addr`, accept ONE leader
+/// connection and serve the worker protocol until shutdown.
+pub fn serve_tcp_worker<E: ComputeEngine>(
+    engine: &E,
+    addr: impl ToSocketAddrs,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let (stream, peer) = listener.accept()?;
+    log::info!("worker: leader connected from {peer}");
+    let mut transport = TcpTransport::new(stream)?;
+    run_worker(engine, &mut transport)
+}
+
+/// Leader side of a TCP cluster: connect to every worker address.
+pub fn connect_tcp_workers(
+    addrs: &[String],
+) -> Result<Leader<TcpTransport>> {
+    let mut transports = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            DapcError::Coordinator(format!("connect {addr}: {e}"))
+        })?;
+        transports.push(TcpTransport::new(stream)?);
+    }
+    Ok(Leader::new(transports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{ApcVariant, NativeEngine, SolveOptions, Solver as _};
+    use crate::sparse::generate::GeneratorConfig;
+
+    #[test]
+    fn local_cluster_solves() {
+        let ds = GeneratorConfig::small_demo(24, 3).generate(21);
+        let mut cluster = LocalCluster::spawn(3, NativeEngine::new).unwrap();
+        let report = cluster
+            .leader
+            .solve_apc(
+                &ds.matrix,
+                &ds.rhs,
+                ApcVariant::Decomposed,
+                &SolveOptions {
+                    epochs: 30,
+                    x_true: Some(ds.x_true.clone()),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(report.final_mse(&ds.x_true) < 1e-6);
+        drop(cluster);
+    }
+
+    #[test]
+    fn distributed_matches_single_process() {
+        // the coordinator path must produce the same iterates as the
+        // single-process solver (identical math, different topology)
+        let ds = GeneratorConfig::small_demo(16, 2).generate(22);
+        let opts = SolveOptions { epochs: 10, ..Default::default() };
+
+        let mut cluster = LocalCluster::spawn(2, NativeEngine::new).unwrap();
+        let dist = cluster
+            .leader
+            .solve_apc(&ds.matrix, &ds.rhs, ApcVariant::Decomposed, &opts)
+            .unwrap();
+
+        let local = crate::solver::DapcSolver::new(opts)
+            .solve(&NativeEngine::new(), &ds.matrix, &ds.rhs, 2)
+            .unwrap();
+
+        let diff = crate::linalg::norms::mse(&dist.xbar, &local.xbar);
+        assert!(diff < 1e-10, "distributed vs local diverged: {diff}");
+    }
+
+    #[test]
+    fn local_cluster_dgd() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(23);
+        let mut cluster = LocalCluster::spawn(2, NativeEngine::new).unwrap();
+        let report = cluster
+            .leader
+            .solve_dgd(
+                &ds.matrix,
+                &ds.rhs,
+                1e-3,
+                &SolveOptions {
+                    epochs: 200,
+                    x_true: Some(ds.x_true.clone()),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let tr = report.trace.unwrap();
+        assert!(tr.final_mse().unwrap() < tr.initial_mse().unwrap());
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(LocalCluster::spawn(0, NativeEngine::new).is_err());
+    }
+
+    #[test]
+    fn tcp_cluster_end_to_end() {
+        use std::net::TcpListener;
+        // reserve two ports
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = l1.local_addr().unwrap();
+        let l2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a2 = l2.local_addr().unwrap();
+        drop((l1, l2));
+
+        let w1 = std::thread::spawn(move || {
+            serve_tcp_worker(&NativeEngine::new(), a1).unwrap();
+        });
+        let w2 = std::thread::spawn(move || {
+            serve_tcp_worker(&NativeEngine::new(), a2).unwrap();
+        });
+        // workers need a beat to bind
+        std::thread::sleep(std::time::Duration::from_millis(100));
+
+        let ds = GeneratorConfig::small_demo(16, 2).generate(24);
+        let mut leader =
+            connect_tcp_workers(&[a1.to_string(), a2.to_string()]).unwrap();
+        let report = leader
+            .solve_apc(
+                &ds.matrix,
+                &ds.rhs,
+                ApcVariant::Decomposed,
+                &SolveOptions { epochs: 15, ..Default::default() },
+            )
+            .unwrap();
+        assert!(report.final_mse(&ds.x_true) < 1e-5);
+        leader.shutdown();
+        w1.join().unwrap();
+        w2.join().unwrap();
+    }
+}

@@ -1,0 +1,305 @@
+//! Lazy task-graph representation of Algorithm 1 — the analog of the
+//! paper's Dask computational graph (Figure 1), with topological
+//! scheduling order and Graphviz DOT export.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DapcError, Result};
+
+/// Node id in a task graph.
+pub type NodeId = usize;
+
+/// Task categories mirroring the paper's delayed functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    CreateSubmatrices,
+    QrDecomposition,
+    InitialSolution,
+    Projection,
+    CreateIdentity,
+    AverageInitial,
+    UpdateSolution,
+    AverageSolutions,
+    Output,
+}
+
+impl TaskKind {
+    fn label(&self) -> &'static str {
+        match self {
+            TaskKind::CreateSubmatrices => "create_submatrices",
+            TaskKind::QrDecomposition => "qr_decomposition",
+            TaskKind::InitialSolution => "initial_solution",
+            TaskKind::Projection => "projection",
+            TaskKind::CreateIdentity => "create_identity_matrix",
+            TaskKind::AverageInitial => "average_initial_solutions",
+            TaskKind::UpdateSolution => "update_solution",
+            TaskKind::AverageSolutions => "average_solutions",
+            TaskKind::Output => "output",
+        }
+    }
+}
+
+/// One task node.
+#[derive(Debug, Clone)]
+pub struct TaskNode {
+    pub id: NodeId,
+    pub kind: TaskKind,
+    /// Partition index the task belongs to (None for leader-side tasks).
+    pub partition: Option<usize>,
+    /// Epoch for iterate-phase tasks.
+    pub epoch: Option<usize>,
+    pub deps: Vec<NodeId>,
+}
+
+/// DAG of tasks with scheduling helpers.
+#[derive(Debug, Default)]
+pub struct TaskGraph {
+    nodes: Vec<TaskNode>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(
+        &mut self,
+        kind: TaskKind,
+        partition: Option<usize>,
+        epoch: Option<usize>,
+        deps: &[NodeId],
+    ) -> NodeId {
+        let id = self.nodes.len();
+        for &d in deps {
+            assert!(d < id, "dependency on a future node");
+        }
+        self.nodes.push(TaskNode {
+            id,
+            kind,
+            partition,
+            epoch,
+            deps: deps.to_vec(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &TaskNode {
+        &self.nodes[id]
+    }
+
+    /// Build the Algorithm-1 graph for J partitions and T epochs —
+    /// structurally identical to the paper's Figure 1 (which shows J=2,
+    /// T=1).
+    pub fn algorithm1(j: usize, epochs: usize) -> Self {
+        let mut g = Self::new();
+        let identity = g.add(TaskKind::CreateIdentity, None, None, &[]);
+        let mut x_nodes = Vec::with_capacity(j);
+        let mut p_nodes = Vec::with_capacity(j);
+        for part in 0..j {
+            let sub = g.add(TaskKind::CreateSubmatrices, Some(part), None, &[]);
+            let qr = g.add(TaskKind::QrDecomposition, Some(part), None, &[sub]);
+            let x0 = g.add(TaskKind::InitialSolution, Some(part), None, &[qr, sub]);
+            let p = g.add(TaskKind::Projection, Some(part), None, &[identity, qr]);
+            x_nodes.push(x0);
+            p_nodes.push(p);
+        }
+        let mut avg = g.add(TaskKind::AverageInitial, None, None, &x_nodes);
+        for t in 0..epochs {
+            let mut updated = Vec::with_capacity(j);
+            for part in 0..j {
+                let deps = [x_nodes[part], avg, p_nodes[part]];
+                updated.push(g.add(
+                    TaskKind::UpdateSolution,
+                    Some(part),
+                    Some(t),
+                    &deps,
+                ));
+            }
+            let mut deps = updated.clone();
+            deps.push(avg);
+            avg = g.add(TaskKind::AverageSolutions, None, Some(t), &deps);
+            x_nodes = updated;
+        }
+        g.add(TaskKind::Output, None, None, &[avg]);
+        g
+    }
+
+    /// Kahn topological order; errors on cycles (impossible via `add`, but
+    /// kept for graphs built from external descriptions).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut rev: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for node in &self.nodes {
+            indeg[node.id] = node.deps.len();
+            for &d in &node.deps {
+                rev[d].push(node.id);
+            }
+        }
+        let mut queue: Vec<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &next in &rev[id] {
+                indeg[next] -= 1;
+                if indeg[next] == 0 {
+                    queue.push(next);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(DapcError::Coordinator("task graph has a cycle".into()));
+        }
+        Ok(order)
+    }
+
+    /// Parallel schedule: wave `w` contains every task whose dependencies
+    /// all sit in earlier waves (what Dask's scheduler would co-schedule).
+    pub fn waves(&self) -> Vec<Vec<NodeId>> {
+        let mut level = vec![0usize; self.nodes.len()];
+        for node in &self.nodes {
+            level[node.id] = node
+                .deps
+                .iter()
+                .map(|&d| level[d] + 1)
+                .max()
+                .unwrap_or(0);
+        }
+        let max_level = level.iter().copied().max().unwrap_or(0);
+        let mut waves = vec![Vec::new(); max_level + 1];
+        for node in &self.nodes {
+            waves[level[node.id]].push(node.id);
+        }
+        waves
+    }
+
+    /// Graphviz DOT export (Figure 1 reproduction).
+    pub fn to_dot(&self) -> String {
+        let mut out = String::from("digraph dapc {\n  rankdir=BT;\n");
+        // cluster per partition like the paper's figure
+        let mut by_part: BTreeMap<Option<usize>, Vec<&TaskNode>> =
+            BTreeMap::new();
+        for n in &self.nodes {
+            by_part.entry(n.partition).or_default().push(n);
+        }
+        for (part, nodes) in &by_part {
+            if let Some(p) = part {
+                out.push_str(&format!(
+                    "  subgraph cluster_p{p} {{\n    label=\"partition {p}\";\n"
+                ));
+            }
+            for n in nodes {
+                let extra = n
+                    .epoch
+                    .map(|e| format!("\\n(epoch {e})"))
+                    .unwrap_or_default();
+                out.push_str(&format!(
+                    "    n{} [label=\"{}{}\"];\n",
+                    n.id,
+                    n.kind.label(),
+                    extra
+                ));
+            }
+            if part.is_some() {
+                out.push_str("  }\n");
+            }
+        }
+        for n in &self.nodes {
+            for &d in &n.deps {
+                out.push_str(&format!("  n{d} -> n{};\n", n.id));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_shape() {
+        // paper's Figure 1: J=2 partitions, T=1 epoch
+        let g = TaskGraph::algorithm1(2, 1);
+        // 1 identity + 2*(sub, qr, x0, p) + avg0 + 2 updates + avg1 + output
+        assert_eq!(g.len(), 1 + 8 + 1 + 2 + 1 + 1);
+        let kinds: Vec<_> = (0..g.len()).map(|i| g.node(i).kind).collect();
+        assert_eq!(
+            kinds.iter().filter(|k| **k == TaskKind::UpdateSolution).count(),
+            2
+        );
+        assert_eq!(
+            kinds.iter().filter(|k| **k == TaskKind::QrDecomposition).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let g = TaskGraph::algorithm1(3, 4);
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &id) in order.iter().enumerate() {
+                p[id] = i;
+            }
+            p
+        };
+        for id in 0..g.len() {
+            for &d in &g.node(id).deps {
+                assert!(pos[d] < pos[id], "dep {d} after {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn waves_expose_parallelism() {
+        // with J=4 the per-partition QR tasks all land in the same wave
+        let g = TaskGraph::algorithm1(4, 1);
+        let waves = g.waves();
+        let qr_wave: Vec<usize> = (0..g.len())
+            .filter(|&i| g.node(i).kind == TaskKind::QrDecomposition)
+            .collect();
+        let level_of = |id: usize| {
+            waves.iter().position(|w| w.contains(&id)).unwrap()
+        };
+        let first = level_of(qr_wave[0]);
+        assert!(qr_wave.iter().all(|&id| level_of(id) == first));
+        // updates depend on the averaged initial solution => strictly later
+        let upd = (0..g.len())
+            .find(|&i| g.node(i).kind == TaskKind::UpdateSolution)
+            .unwrap();
+        assert!(level_of(upd) > first);
+    }
+
+    #[test]
+    fn dot_export_wellformed() {
+        let g = TaskGraph::algorithm1(2, 1);
+        let dot = g.to_dot();
+        assert!(dot.starts_with("digraph dapc {"));
+        assert!(dot.contains("subgraph cluster_p0"));
+        assert!(dot.contains("qr_decomposition"));
+        assert!(dot.contains("->"));
+        assert!(dot.trim_end().ends_with('}'));
+        // one node line per task
+        assert_eq!(dot.matches("[label=").count(), g.len());
+    }
+
+    #[test]
+    fn epoch_scaling() {
+        let g1 = TaskGraph::algorithm1(2, 1);
+        let g5 = TaskGraph::algorithm1(2, 5);
+        // each extra epoch adds J updates + 1 average
+        assert_eq!(g5.len() - g1.len(), 4 * (2 + 1));
+    }
+}

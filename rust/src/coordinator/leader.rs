@@ -1,0 +1,235 @@
+//! Leader: drives Algorithm 1 over a set of worker transports.
+//!
+//! The leader owns only n-length vectors; all O(l n) / O(n^2) state stays
+//! on the workers.  Sends are pipelined (all J requests go out before the
+//! first reply is awaited) so workers compute concurrently.
+
+use std::time::Instant;
+
+use crate::error::{DapcError, Result};
+use crate::linalg::norms;
+use crate::metrics::ConvergenceTrace;
+use crate::partition::{PartitionPlan, PartitionRegime};
+use crate::solver::{ApcVariant, InitKind, SolveOptions, SolveReport};
+use crate::sparse::CsrMatrix;
+
+use super::message::Message;
+use super::transport::Transport;
+
+/// Leader over J connected workers.
+pub struct Leader<T: Transport> {
+    workers: Vec<T>,
+}
+
+impl<T: Transport> Leader<T> {
+    pub fn new(workers: Vec<T>) -> Self {
+        Self { workers }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run the APC consensus algorithm distributed over the workers.
+    pub fn solve_apc(
+        &mut self,
+        a: &CsrMatrix,
+        b: &[f32],
+        variant: ApcVariant,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport> {
+        let j = self.workers.len();
+        let (m, n) = a.shape();
+        let plan = PartitionPlan::contiguous(m, n, j)?;
+        let init_kind = match (variant, plan.regime) {
+            (_, PartitionRegime::Fat) => InitKind::Fat,
+            (ApcVariant::Decomposed, _) => InitKind::Qr,
+            (ApcVariant::Classical, _) => InitKind::Classical,
+        };
+
+        // ---- init: scatter partitions, gather x_j(0) --------------------
+        let t0 = Instant::now();
+        for i in 0..j {
+            let (sub, rhs) = plan.extract(a, b, i);
+            self.workers[i].send(&Message::InitPartition {
+                worker_id: i as u32,
+                kind: init_kind.into(),
+                a: sub,
+                b: rhs,
+                n_target: n as u32,
+            })?;
+        }
+        let mut xs: Vec<Vec<f32>> = vec![Vec::new(); j];
+        for i in 0..j {
+            match self.workers[i].recv()? {
+                Message::InitDone { worker_id, x0 } => {
+                    xs[worker_id as usize] = x0;
+                }
+                Message::WorkerError { worker_id, message } => {
+                    return Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} init failed: {message}"
+                    )))
+                }
+                other => {
+                    return Err(DapcError::Coordinator(format!(
+                        "unexpected reply {other:?}"
+                    )))
+                }
+            }
+        }
+        let mut xbar = mean_rows(&xs);
+        let init_time = t0.elapsed();
+
+        // ---- consensus epochs -------------------------------------------
+        let mut trace = opts.x_true.as_ref().map(|xt| {
+            let mut tr = ConvergenceTrace::new("distributed-apc");
+            tr.push(0, norms::mse(&xbar, xt));
+            tr
+        });
+        let t1 = Instant::now();
+        for epoch in 0..opts.epochs {
+            for w in self.workers.iter_mut() {
+                w.send(&Message::RunUpdate {
+                    epoch: epoch as u32,
+                    gamma: opts.gamma,
+                    xbar: xbar.clone(),
+                })?;
+            }
+            for i in 0..j {
+                match self.workers[i].recv()? {
+                    Message::UpdateDone { worker_id, x } => {
+                        xs[worker_id as usize] = x;
+                    }
+                    Message::WorkerError { worker_id, message } => {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} update failed: {message}"
+                        )))
+                    }
+                    other => {
+                        return Err(DapcError::Coordinator(format!(
+                            "unexpected reply {other:?}"
+                        )))
+                    }
+                }
+            }
+            // eq. (7)
+            let mean = mean_rows(&xs);
+            for i in 0..n {
+                xbar[i] = opts.eta * mean[i] + (1.0 - opts.eta) * xbar[i];
+            }
+            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
+                tr.push(epoch + 1, norms::mse(&xbar, xt));
+            }
+        }
+        let iterate_time = t1.elapsed();
+
+        Ok(SolveReport {
+            xbar,
+            x_parts: xs,
+            trace,
+            init_time,
+            iterate_time,
+            algorithm: match variant {
+                ApcVariant::Decomposed => "dapc-decomposed",
+                ApcVariant::Classical => "apc-classical",
+            },
+            engine: "distributed",
+            epochs: opts.epochs,
+        })
+    }
+
+    /// Distributed gradient descent over the same workers.
+    pub fn solve_dgd(
+        &mut self,
+        a: &CsrMatrix,
+        b: &[f32],
+        alpha: f32,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport> {
+        let j = self.workers.len();
+        let (m, n) = a.shape();
+        let plan = PartitionPlan::contiguous(m, n, j)?;
+
+        let t0 = Instant::now();
+        for i in 0..j {
+            let (sub, rhs) = plan.extract(a, b, i);
+            self.workers[i].send(&Message::InitPartition {
+                worker_id: i as u32,
+                kind: InitKind::Qr.into(), // init result unused for DGD
+                a: sub,
+                b: rhs,
+                n_target: n as u32,
+            })?;
+        }
+        for i in 0..j {
+            let _ = self.workers[i].recv()?;
+        }
+        let init_time = t0.elapsed();
+
+        let mut x = vec![0.0f32; n];
+        let mut trace = opts.x_true.as_ref().map(|xt| {
+            let mut tr = ConvergenceTrace::new("distributed-dgd");
+            tr.push(0, norms::mse(&x, xt));
+            tr
+        });
+        let t1 = Instant::now();
+        for epoch in 0..opts.epochs {
+            for w in self.workers.iter_mut() {
+                w.send(&Message::RunGrad { epoch: epoch as u32, x: x.clone() })?;
+            }
+            let mut total = vec![0.0f64; n];
+            for i in 0..j {
+                match self.workers[i].recv()? {
+                    Message::GradDone { grad, .. } => {
+                        for (t, g) in total.iter_mut().zip(&grad) {
+                            *t += *g as f64;
+                        }
+                    }
+                    Message::WorkerError { worker_id, message } => {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} grad failed: {message}"
+                        )))
+                    }
+                    other => {
+                        return Err(DapcError::Coordinator(format!(
+                            "unexpected reply {other:?}"
+                        )))
+                    }
+                }
+            }
+            for (xi, g) in x.iter_mut().zip(&total) {
+                *xi -= alpha * (*g as f32);
+            }
+            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
+                tr.push(epoch + 1, norms::mse(&x, xt));
+            }
+        }
+        let iterate_time = t1.elapsed();
+
+        Ok(SolveReport {
+            xbar: x.clone(),
+            x_parts: vec![x],
+            trace,
+            init_time,
+            iterate_time,
+            algorithm: "dgd",
+            engine: "distributed",
+            epochs: opts.epochs,
+        })
+    }
+
+    /// Send shutdown to all workers (best-effort).
+    pub fn shutdown(&mut self) {
+        for w in self.workers.iter_mut() {
+            let _ = w.send(&Message::Shutdown);
+        }
+    }
+}
+
+fn mean_rows(xs: &[Vec<f32>]) -> Vec<f32> {
+    let j = xs.len() as f64;
+    let n = xs[0].len();
+    (0..n)
+        .map(|i| (xs.iter().map(|x| x[i] as f64).sum::<f64>() / j) as f32)
+        .collect()
+}

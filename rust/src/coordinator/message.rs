@@ -1,0 +1,350 @@
+//! Wire protocol between leader and workers.
+//!
+//! Hand-rolled binary framing (serde unavailable offline):
+//!
+//! ```text
+//! frame   := u32 payload_len (LE) | u8 tag | payload
+//! payload := fields in declaration order
+//! vec<f32>:= u64 len | f32 * len        (LE)
+//! matrix  := u64 rows | u64 cols | f32 * rows*cols (row-major)
+//! string  := u64 len | utf8 bytes
+//! ```
+//!
+//! The protocol is deliberately small: projectors are computed worker-side
+//! and never serialized; per-epoch traffic is one n-vector each way per
+//! worker (the paper's communication pattern).
+
+use crate::error::{DapcError, Result};
+use crate::linalg::Matrix;
+use crate::solver::InitKind;
+
+/// Protocol messages (both directions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Leader -> worker: here is your partition; run init.
+    InitPartition {
+        worker_id: u32,
+        kind: InitKindWire,
+        a: Matrix,
+        b: Vec<f32>,
+        /// Padded solution width the consensus loop runs at.
+        n_target: u32,
+    },
+    /// Worker -> leader: init finished, here is x_j(0).
+    InitDone { worker_id: u32, x0: Vec<f32> },
+    /// Leader -> worker: consensus epoch t with the current average.
+    RunUpdate { epoch: u32, gamma: f32, xbar: Vec<f32> },
+    /// Worker -> leader: updated estimate x_j(t+1).
+    UpdateDone { worker_id: u32, x: Vec<f32> },
+    /// Leader -> worker: DGD gradient request at the current iterate.
+    RunGrad { epoch: u32, x: Vec<f32> },
+    /// Worker -> leader: local gradient.
+    GradDone { worker_id: u32, grad: Vec<f32> },
+    /// Worker -> leader: failure (leader aborts the run).
+    WorkerError { worker_id: u32, message: String },
+    /// Leader -> worker: done, exit the loop.
+    Shutdown,
+}
+
+/// InitKind twin that is wire-encodable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKindWire {
+    Qr = 0,
+    Classical = 1,
+    Fat = 2,
+}
+
+impl From<InitKind> for InitKindWire {
+    fn from(k: InitKind) -> Self {
+        match k {
+            InitKind::Qr => Self::Qr,
+            InitKind::Classical => Self::Classical,
+            InitKind::Fat => Self::Fat,
+        }
+    }
+}
+
+impl From<InitKindWire> for InitKind {
+    fn from(k: InitKindWire) -> Self {
+        match k {
+            InitKindWire::Qr => InitKind::Qr,
+            InitKindWire::Classical => InitKind::Classical,
+            InitKindWire::Fat => InitKind::Fat,
+        }
+    }
+}
+
+// --- encoding ---------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Self { buf: vec![tag] }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn matrix(&mut self, m: &Matrix) {
+        self.buf.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+        self.buf.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+        for x in m.as_slice() {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn string(&mut self, s: &str) {
+        self.buf.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(DapcError::Parse("truncated message".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let len = self.u64()? as usize;
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let bytes = self.take(rows * cols * 4)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u64()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| DapcError::Parse("invalid utf8 in message".into()))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(DapcError::Parse("trailing bytes in message".into()));
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Encode to a tagged payload (no length prefix; transports add it).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Message::InitPartition { worker_id, kind, a, b, n_target } => {
+                let mut e = Enc::new(0);
+                e.u32(*worker_id);
+                e.buf.push(*kind as u8);
+                e.matrix(a);
+                e.vec_f32(b);
+                e.u32(*n_target);
+                e.buf
+            }
+            Message::InitDone { worker_id, x0 } => {
+                let mut e = Enc::new(1);
+                e.u32(*worker_id);
+                e.vec_f32(x0);
+                e.buf
+            }
+            Message::RunUpdate { epoch, gamma, xbar } => {
+                let mut e = Enc::new(2);
+                e.u32(*epoch);
+                e.f32(*gamma);
+                e.vec_f32(xbar);
+                e.buf
+            }
+            Message::UpdateDone { worker_id, x } => {
+                let mut e = Enc::new(3);
+                e.u32(*worker_id);
+                e.vec_f32(x);
+                e.buf
+            }
+            Message::RunGrad { epoch, x } => {
+                let mut e = Enc::new(4);
+                e.u32(*epoch);
+                e.vec_f32(x);
+                e.buf
+            }
+            Message::GradDone { worker_id, grad } => {
+                let mut e = Enc::new(5);
+                e.u32(*worker_id);
+                e.vec_f32(grad);
+                e.buf
+            }
+            Message::WorkerError { worker_id, message } => {
+                let mut e = Enc::new(6);
+                e.u32(*worker_id);
+                e.string(message);
+                e.buf
+            }
+            Message::Shutdown => vec![7],
+        }
+    }
+
+    /// Decode from a tagged payload.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut d = Dec { buf, pos: 0 };
+        let tag = d.u8()?;
+        let msg = match tag {
+            0 => {
+                let worker_id = d.u32()?;
+                let kind = match d.u8()? {
+                    0 => InitKindWire::Qr,
+                    1 => InitKindWire::Classical,
+                    2 => InitKindWire::Fat,
+                    k => {
+                        return Err(DapcError::Parse(format!(
+                            "bad init kind {k}"
+                        )))
+                    }
+                };
+                let a = d.matrix()?;
+                let b = d.vec_f32()?;
+                let n_target = d.u32()?;
+                Message::InitPartition { worker_id, kind, a, b, n_target }
+            }
+            1 => Message::InitDone { worker_id: d.u32()?, x0: d.vec_f32()? },
+            2 => Message::RunUpdate {
+                epoch: d.u32()?,
+                gamma: d.f32()?,
+                xbar: d.vec_f32()?,
+            },
+            3 => Message::UpdateDone { worker_id: d.u32()?, x: d.vec_f32()? },
+            4 => Message::RunGrad { epoch: d.u32()?, x: d.vec_f32()? },
+            5 => Message::GradDone { worker_id: d.u32()?, grad: d.vec_f32()? },
+            6 => Message::WorkerError {
+                worker_id: d.u32()?,
+                message: d.string()?,
+            },
+            7 => Message::Shutdown,
+            other => {
+                return Err(DapcError::Parse(format!("unknown tag {other}")))
+            }
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let enc = m.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Message::InitPartition {
+            worker_id: 3,
+            kind: InitKindWire::Qr,
+            a: Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5),
+            b: vec![1.0, -2.0, 3.0, 0.25],
+            n_target: 3,
+        });
+        roundtrip(Message::InitDone { worker_id: 1, x0: vec![0.1, 0.2] });
+        roundtrip(Message::RunUpdate {
+            epoch: 9,
+            gamma: 0.75,
+            xbar: vec![5.0; 7],
+        });
+        roundtrip(Message::UpdateDone { worker_id: 0, x: vec![] });
+        roundtrip(Message::RunGrad { epoch: 2, x: vec![1.0] });
+        roundtrip(Message::GradDone { worker_id: 4, grad: vec![-1.5, 2.5] });
+        roundtrip(Message::WorkerError {
+            worker_id: 2,
+            message: "qr failed: naïve".into(),
+        });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        // truncated InitDone
+        let mut enc = Message::InitDone { worker_id: 1, x0: vec![1.0, 2.0] }.encode();
+        enc.truncate(enc.len() - 2);
+        assert!(Message::decode(&enc).is_err());
+        // trailing bytes
+        let mut enc2 = Message::Shutdown.encode();
+        enc2.push(0);
+        assert!(Message::decode(&enc2).is_err());
+        // bad init kind
+        let mut enc3 = Message::InitPartition {
+            worker_id: 0,
+            kind: InitKindWire::Qr,
+            a: Matrix::zeros(1, 1),
+            b: vec![0.0],
+            n_target: 1,
+        }
+        .encode();
+        enc3[5] = 9; // kind byte
+        assert!(Message::decode(&enc3).is_err());
+    }
+
+    #[test]
+    fn init_kind_conversion() {
+        for k in [InitKind::Qr, InitKind::Classical, InitKind::Fat] {
+            let w: InitKindWire = k.into();
+            let back: InitKind = w.into();
+            assert_eq!(k, back);
+        }
+    }
+}

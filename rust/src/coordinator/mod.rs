@@ -1,0 +1,24 @@
+//! Distributed coordinator — the Dask-cluster substrate of the paper's
+//! pipeline, rebuilt as a Rust leader/worker runtime.
+//!
+//! * [`message`] — the wire protocol (hand-framed binary; no serde);
+//! * [`transport`] — in-process channels and TCP streams behind one trait;
+//! * [`worker`] — the worker loop: owns its partition, its projector and
+//!   its estimate; only n-length vectors ever cross the wire (the paper's
+//!   key communication property: `P_j` never leaves the worker);
+//! * [`leader`] — drives Algorithm 1 across workers and aggregates;
+//! * [`cluster`] — spawn helpers for local (threaded) and TCP clusters;
+//! * [`graph`] — the lazy task-graph representation + DOT export
+//!   (reproduces the paper's Figure 1).
+
+pub mod cluster;
+pub mod graph;
+pub mod leader;
+pub mod message;
+pub mod transport;
+pub mod worker;
+
+pub use cluster::LocalCluster;
+pub use graph::TaskGraph;
+pub use leader::Leader;
+pub use message::Message;

@@ -1,0 +1,153 @@
+//! Message transports: in-process channels (threaded local cluster) and
+//! length-framed TCP streams (multi-process cluster), behind one trait so
+//! the leader/worker code is transport-agnostic.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+
+use crate::error::{DapcError, Result};
+
+use super::message::Message;
+
+/// Bidirectional message endpoint.
+pub trait Transport: Send {
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    fn recv(&mut self) -> Result<Message>;
+}
+
+// --- in-process -------------------------------------------------------------
+
+/// One side of an in-process duplex channel.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Message>,
+    rx: mpsc::Receiver<Message>,
+}
+
+/// Create a connected pair (leader side, worker side).
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (tx_a, rx_b) = mpsc::channel();
+    let (tx_b, rx_a) = mpsc::channel();
+    (
+        ChannelTransport { tx: tx_a, rx: rx_a },
+        ChannelTransport { tx: tx_b, rx: rx_b },
+    )
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.tx
+            .send(msg.clone())
+            .map_err(|_| DapcError::Coordinator("peer hung up".into()))
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx
+            .recv()
+            .map_err(|_| DapcError::Coordinator("peer hung up".into()))
+    }
+}
+
+// --- TCP --------------------------------------------------------------------
+
+/// Length-framed messages over a TCP stream (`u32 LE length | payload`).
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream
+            .set_nodelay(true)
+            .map_err(|e| DapcError::Coordinator(e.to_string()))?;
+        Ok(Self { stream })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let payload = msg.encode();
+        let len = (payload.len() as u32).to_le_bytes();
+        self.stream.write_all(&len)?;
+        self.stream.write_all(&payload)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let mut len_buf = [0u8; 4];
+        self.stream.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        // guard against absurd frames (corrupted stream)
+        if len > 1 << 30 {
+            return Err(DapcError::Coordinator(format!(
+                "frame length {len} exceeds 1 GiB sanity limit"
+            )));
+        }
+        let mut payload = vec![0u8; len];
+        self.stream.read_exact(&mut payload)?;
+        Message::decode(&payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn channel_pair_duplex() {
+        let (mut a, mut b) = channel_pair();
+        a.send(&Message::Shutdown).unwrap();
+        assert_eq!(b.recv().unwrap(), Message::Shutdown);
+        b.send(&Message::InitDone { worker_id: 1, x0: vec![1.0] }).unwrap();
+        assert_eq!(
+            a.recv().unwrap(),
+            Message::InitDone { worker_id: 1, x0: vec![1.0] }
+        );
+    }
+
+    #[test]
+    fn channel_detects_hangup() {
+        let (mut a, b) = channel_pair();
+        drop(b);
+        assert!(a.send(&Message::Shutdown).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap(); // echo
+        });
+        let mut client =
+            TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let msg = Message::RunUpdate {
+            epoch: 5,
+            gamma: 0.5,
+            xbar: (0..100).map(|i| i as f32).collect(),
+        };
+        client.send(&msg).unwrap();
+        assert_eq!(client.recv().unwrap(), msg);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_detects_closed_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream); // close immediately
+        });
+        let mut client =
+            TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        server.join().unwrap();
+        assert!(client.recv().is_err());
+    }
+}

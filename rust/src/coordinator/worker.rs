@@ -1,0 +1,195 @@
+//! Worker loop: receives a partition, initializes locally (QR/inverse +
+//! projector), then serves consensus-update or gradient requests until
+//! shutdown.  The projector `P_j` and the dense block `A_j` never leave
+//! the worker — only n-length vectors cross the transport.
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::solver::{ComputeEngine, InitKind};
+
+use super::message::Message;
+use super::transport::Transport;
+
+/// Run the worker protocol until `Shutdown`.  Errors are reported to the
+/// leader as `WorkerError` before returning.
+pub fn run_worker<E: ComputeEngine, T: Transport>(
+    engine: &E,
+    transport: &mut T,
+) -> Result<()> {
+    let mut state: Option<WorkerState> = None;
+    let mut my_id: u32 = u32::MAX;
+    loop {
+        let msg = transport.recv()?;
+        let outcome = handle(engine, &mut state, &mut my_id, msg);
+        match outcome {
+            Ok(Some(reply)) => transport.send(&reply)?,
+            Ok(None) => return Ok(()), // shutdown
+            Err(e) => {
+                transport.send(&Message::WorkerError {
+                    worker_id: my_id,
+                    message: e.to_string(),
+                })?;
+                return Err(e);
+            }
+        }
+    }
+}
+
+struct WorkerState {
+    x: Vec<f32>,
+    projector: Matrix,
+    a: Matrix,
+    b: Vec<f32>,
+}
+
+fn handle<E: ComputeEngine>(
+    engine: &E,
+    state: &mut Option<WorkerState>,
+    my_id: &mut u32,
+    msg: Message,
+) -> Result<Option<Message>> {
+    match msg {
+        Message::InitPartition { worker_id, kind, a, b, n_target } => {
+            *my_id = worker_id;
+            let init = engine.init(
+                InitKind::from(kind),
+                &a,
+                &b,
+                n_target as usize,
+            )?;
+            let x0 = init.x0.clone();
+            *state = Some(WorkerState { x: init.x0, projector: init.projector, a, b });
+            Ok(Some(Message::InitDone { worker_id, x0 }))
+        }
+        Message::RunUpdate { epoch: _, gamma, xbar } => {
+            let st = state.as_mut().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunUpdate before InitPartition".into(),
+                )
+            })?;
+            st.x = engine.update(&st.x, &xbar, &st.projector, gamma)?;
+            Ok(Some(Message::UpdateDone { worker_id: *my_id, x: st.x.clone() }))
+        }
+        Message::RunGrad { epoch: _, x } => {
+            let st = state.as_ref().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunGrad before InitPartition".into(),
+                )
+            })?;
+            let grad = engine.dgd_grad(&st.a, &x, &st.b)?;
+            Ok(Some(Message::GradDone { worker_id: *my_id, grad }))
+        }
+        Message::Shutdown => Ok(None),
+        other => Err(crate::error::DapcError::Coordinator(format!(
+            "worker received unexpected message {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::message::InitKindWire;
+    use crate::coordinator::transport::{channel_pair, Transport};
+    use crate::rng::seeded;
+    use crate::solver::NativeEngine;
+
+    fn consistent(l: usize, n: usize, seed: u64) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let mut g = seeded(seed);
+        let a = Matrix::from_fn(l, n, |_, _| g.normal_f32());
+        let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; l];
+        crate::linalg::blas::gemv(&a, &x, &mut b);
+        (a, b, x)
+    }
+
+    #[test]
+    fn init_then_update_protocol() {
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            run_worker(&engine, &mut worker_side)
+        });
+
+        let (a, b, x_true) = consistent(24, 8, 3);
+        leader
+            .send(&Message::InitPartition {
+                worker_id: 5,
+                kind: InitKindWire::Qr,
+                a,
+                b,
+                n_target: 8,
+            })
+            .unwrap();
+        let Message::InitDone { worker_id, x0 } = leader.recv().unwrap() else {
+            panic!("expected InitDone");
+        };
+        assert_eq!(worker_id, 5);
+        for i in 0..8 {
+            assert!((x0[i] - x_true[i]).abs() < 1e-2);
+        }
+
+        // consensus step with xbar = x0 is a fixed point
+        leader
+            .send(&Message::RunUpdate { epoch: 0, gamma: 0.9, xbar: x0.clone() })
+            .unwrap();
+        let Message::UpdateDone { x, .. } = leader.recv().unwrap() else {
+            panic!("expected UpdateDone");
+        };
+        for i in 0..8 {
+            assert!((x[i] - x0[i]).abs() < 1e-4);
+        }
+
+        leader.send(&Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn update_before_init_reports_error() {
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            let _ = run_worker(&engine, &mut worker_side);
+        });
+        leader
+            .send(&Message::RunUpdate { epoch: 0, gamma: 0.5, xbar: vec![0.0] })
+            .unwrap();
+        match leader.recv().unwrap() {
+            Message::WorkerError { message, .. } => {
+                assert!(message.contains("before InitPartition"), "{message}");
+            }
+            other => panic!("expected WorkerError, got {other:?}"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn grad_protocol() {
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            run_worker(&engine, &mut worker_side)
+        });
+        let (a, b, x_true) = consistent(16, 4, 9);
+        leader
+            .send(&Message::InitPartition {
+                worker_id: 0,
+                kind: InitKindWire::Qr,
+                a,
+                b,
+                n_target: 4,
+            })
+            .unwrap();
+        let _ = leader.recv().unwrap();
+        // gradient at the true solution is ~0
+        leader
+            .send(&Message::RunGrad { epoch: 0, x: x_true })
+            .unwrap();
+        let Message::GradDone { grad, .. } = leader.recv().unwrap() else {
+            panic!("expected GradDone");
+        };
+        assert!(crate::linalg::norms::max_abs(&grad) < 1e-3);
+        leader.send(&Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+}

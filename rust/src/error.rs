@@ -1,0 +1,48 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the DAPC library.
+#[derive(Error, Debug)]
+pub enum DapcError {
+    /// Shape/dimension mismatches.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Numerical failures (singular matrices, divergence, NaNs).
+    #[error("numeric error: {0}")]
+    Numeric(String),
+
+    /// Parse failures (MatrixMarket, manifest JSON, config, CLI).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Artifact/manifest lookup failures.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Coordinator/transport failures.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Configuration errors (invalid hyper-parameters etc.).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA/PJRT wrapper.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for DapcError {
+    fn from(e: xla::Error) -> Self {
+        DapcError::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, DapcError>;

@@ -1,0 +1,62 @@
+//! # DAPC — Distributed Accelerated Projection-Based Consensus Decomposition
+//!
+//! A production-grade reproduction of *"Distributed Accelerated
+//! Projection-Based Consensus Decomposition"* (W. Maj, TASK Quarterly
+//! 26(2), 2022; DOI 10.34808/yrfh-s352) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: leader/worker
+//!   consensus runtime, partitioning, scheduling, metrics and CLI.  Python
+//!   is never on the request path.
+//! * **Layer 2** (`python/compile/model.py`) — the per-worker compute
+//!   graphs (QR init, consensus rounds) written in JAX and AOT-lowered to
+//!   HLO text artifacts.
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
+//!   consensus hot path, lowered inside the L2 graphs.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dapc::prelude::*;
+//!
+//! // Generate a small consistent system and solve it with the paper's
+//! // decomposed APC on the native engine.
+//! let ds = dapc::sparse::generate::GeneratorConfig::small_demo(64, 4)
+//!     .generate(42);
+//! let opts = SolveOptions { epochs: 50, ..SolveOptions::default() };
+//! let engine = NativeEngine::new();
+//! let report = DapcSolver::new(opts)
+//!     .solve(&engine, &ds.matrix, &ds.rhs, 4)
+//!     .unwrap();
+//! println!("MSE vs truth: {:.3e}", report.final_mse(&ds.x_true));
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `benches/` for the
+//! reproductions of the paper's Table 1 and Figure 2.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod linalg;
+pub mod metrics;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+
+pub use error::{DapcError, Result};
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::error::{DapcError, Result};
+    pub use crate::linalg::Matrix;
+    pub use crate::partition::{PartitionPlan, PartitionRegime};
+    pub use crate::solver::{
+        ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
+        SolveReport, Solver,
+    };
+    pub use crate::sparse::CsrMatrix;
+}

@@ -1,0 +1,221 @@
+//! Blocked BLAS-like primitives for the native engine.
+//!
+//! gemm uses i-k-j loop order with a register-blocked microkernel over the
+//! contiguous row-major layout; gemv accumulates per-row dot products.  The
+//! perf pass (EXPERIMENTS.md §Perf) tunes `MC`/`KC` against the end-to-end
+//! solver benches.
+
+use super::Matrix;
+
+/// Cache-block sizes (rows of A / depth) for gemm.  Tuned in the perf pass.
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// `y += alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    // 4-way unroll keeps the dependency chain short; LLVM vectorizes this.
+    let chunks = x.len() / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += x[i] as f64 * y[i] as f64;
+        a1 += x[i + 1] as f64 * y[i + 1] as f64;
+        a2 += x[i + 2] as f64 * y[i + 2] as f64;
+        a3 += x[i + 3] as f64 * y[i + 3] as f64;
+    }
+    for i in chunks * 4..x.len() {
+        acc += x[i] as f64 * y[i] as f64;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
+/// `y = A x` for row-major A (rows x cols), x of length cols.
+pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for i in 0..a.rows() {
+        y[i] = dot(a.row(i), x) as f32;
+    }
+}
+
+/// `y = A^T x` for row-major A, x of length rows (avoids materializing A^T).
+pub fn gemv_t(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.fill(0.0);
+    for i in 0..a.rows() {
+        axpy(x[i], a.row(i), y);
+    }
+}
+
+/// `C = A B` (blocked, row-major).
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let crow = c.row_mut(i);
+                // borrow of a.row(i) is fine: a and c are distinct
+                for kk in k0..k1 {
+                    let aik = a[(i, kk)];
+                    if aik != 0.0 {
+                        axpy(aik, &b.row(kk)[..n], crow);
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A^T B` without materializing the transpose.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows());
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let aik = arow[i];
+            if aik != 0.0 {
+                axpy(aik, brow, c.row_mut(i));
+            }
+        }
+    }
+    c
+}
+
+/// Gram matrix `A^T A` exploiting symmetry (classical-APC init cost).
+pub fn gram(a: &Matrix) -> Matrix {
+    let n = a.cols();
+    let mut g = Matrix::zeros(n, n);
+    for r in 0..a.rows() {
+        let row = a.row(r);
+        for i in 0..n {
+            let ri = row[i];
+            if ri != 0.0 {
+                // only the upper triangle
+                for j in i..n {
+                    g[(i, j)] += ri * row[j];
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            g[(i, j)] = g[(j, i)];
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (70, 300, 40)] {
+            let a = randm(m, k, 1);
+            let b = randm(k, n, 2);
+            let c = gemm(&a, &b);
+            assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_explicit_transpose() {
+        let a = randm(20, 12, 3);
+        let b = randm(20, 7, 4);
+        let c = gemm_tn(&a, &b);
+        let want = gemm(&a.transpose(), &b);
+        assert!(c.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gram_matches_gemm() {
+        let a = randm(30, 10, 5);
+        let g = gram(&a);
+        let want = gemm(&a.transpose(), &a);
+        assert!(g.max_abs_diff(&want) < 1e-3);
+        // symmetric
+        assert!(g.max_abs_diff(&g.transpose()) < 1e-9);
+    }
+
+    #[test]
+    fn gemv_both_orientations() {
+        let a = randm(9, 13, 6);
+        let x: Vec<f32> = (0..13).map(|i| i as f32 * 0.1).collect();
+        let mut y = vec![0.0; 9];
+        gemv(&a, &x, &mut y);
+        let xv = Matrix::from_vec(13, 1, x.clone());
+        let want = gemm(&a, &xv);
+        for i in 0..9 {
+            assert!((y[i] - want[(i, 0)]).abs() < 1e-4);
+        }
+
+        let z: Vec<f32> = (0..9).map(|i| 1.0 - i as f32 * 0.2).collect();
+        let mut w = vec![0.0; 13];
+        gemv_t(&a, &z, &mut w);
+        let zv = Matrix::from_vec(9, 1, z);
+        let want_t = gemm(&a.transpose(), &zv);
+        for i in 0..13 {
+            assert!((w[i] - want_t[(i, 0)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_f64_accumulation_stability() {
+        // catastrophic in pure f32: 1e8 + tiny values
+        let x = vec![1.0f32; 4096];
+        let mut y = vec![1e-4f32; 4096];
+        y[0] = 1e8;
+        let d = dot(&x, &y);
+        assert!((d - (1e8 + 4095.0 * 1e-4)).abs() / 1e8 < 1e-9);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Gauss-Jordan elimination with partial pivoting — the O(n^3) inversion
+//! [18] whose cost the paper's decomposition eliminates.  Used by the
+//! native-engine classical-APC baseline and by the init-method ablation.
+
+use super::{blas, Matrix};
+use crate::error::{DapcError, Result};
+
+/// Invert a square matrix via Gauss-Jordan with partial pivoting.
+///
+/// Returns an error on (numerically) singular input.
+pub fn gauss_jordan_inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(DapcError::Shape(format!(
+            "inverse requires square matrix, got {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    // augmented [A | I], eliminated in place
+    let mut aug = Matrix::zeros(n, 2 * n);
+    for i in 0..n {
+        aug.row_mut(i)[..n].copy_from_slice(a.row(i));
+        aug[(i, n + i)] = 1.0;
+    }
+
+    for k in 0..n {
+        // partial pivot
+        let mut piv_row = k;
+        let mut piv_val = aug[(k, k)].abs();
+        for i in k + 1..n {
+            let v = aug[(i, k)].abs();
+            if v > piv_val {
+                piv_val = v;
+                piv_row = i;
+            }
+        }
+        if piv_val < 1e-12 {
+            return Err(DapcError::Numeric(format!(
+                "singular matrix at pivot {k} (|pivot| = {piv_val:e})"
+            )));
+        }
+        if piv_row != k {
+            // swap rows k and piv_row
+            let (lo, hi) = (k.min(piv_row), k.max(piv_row));
+            let cols = 2 * n;
+            let data = aug.as_mut_slice();
+            let (a_part, b_part) = data.split_at_mut(hi * cols);
+            a_part[lo * cols..lo * cols + cols]
+                .swap_with_slice(&mut b_part[..cols]);
+        }
+        let piv = aug[(k, k)];
+        let inv_piv = 1.0 / piv;
+        // columns < k are already eliminated (exact zeros in row k), so
+        // all row operations can start at column k (§Perf, ~25% saved).
+        for v in aug.row_mut(k)[k..].iter_mut() {
+            *v *= inv_piv;
+        }
+        // eliminate column k from all other rows
+        let pivot_row = aug.row(k)[k..].to_vec();
+        for i in 0..n {
+            if i == k {
+                continue;
+            }
+            let factor = aug[(i, k)];
+            if factor != 0.0 {
+                blas::axpy(-factor, &pivot_row, &mut aug.row_mut(i)[k..]);
+                aug[(i, k)] = 0.0; // kill rounding residue
+            }
+        }
+    }
+
+    let mut inv = Matrix::zeros(n, n);
+    for i in 0..n {
+        inv.row_mut(i).copy_from_slice(&aug.row(i)[n..]);
+    }
+    Ok(inv)
+}
+
+/// Moore-Penrose pseudoinverse of a tall full-column-rank matrix via the
+/// normal equations: `A^+ = (A^T A)^{-1} A^T` (classical-APC init path).
+pub fn pinv_tall(a: &Matrix) -> Result<Matrix> {
+    let g = blas::gram(a);
+    let ginv = gauss_jordan_inverse(&g)?;
+    Ok(blas::gemm(&ginv, &a.transpose()))
+}
+
+/// f64 classical-APC init: `x0 = (A^T A)^{-1} A^T b` and the *numerically
+/// evaluated* projector `P = I - (A^T A)^{-1}(A^T A)`, all in double
+/// precision.
+///
+/// The paper's classical baseline runs on NumPy float64; doing the normal
+/// equations in f32 squares the condition number into territory where the
+/// projector noise exceeds 1 and the consensus iteration diverges (see
+/// DESIGN.md §1). Computing in f64 and casting the results back matches
+/// the reference implementation's numerics.
+pub fn classical_init_f64(a: &Matrix, b: &[f32]) -> Result<(Vec<f32>, Matrix)> {
+    let (l, n) = a.shape();
+    if b.len() != l {
+        return Err(DapcError::Shape(format!(
+            "rhs length {} != rows {l}",
+            b.len()
+        )));
+    }
+    // G = A^T A in f64
+    let mut g = vec![0.0f64; n * n];
+    for r in 0..l {
+        let row = a.row(r);
+        for i in 0..n {
+            let ri = row[i] as f64;
+            if ri != 0.0 {
+                for j in i..n {
+                    g[i * n + j] += ri * row[j] as f64;
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            g[i * n + j] = g[j * n + i];
+        }
+    }
+    let ginv = gauss_jordan_inverse_f64(&g, n)?;
+    // x0 = Ginv (A^T b)
+    let mut atb = vec![0.0f64; n];
+    for r in 0..l {
+        let row = a.row(r);
+        let br = b[r] as f64;
+        if br != 0.0 {
+            for i in 0..n {
+                atb[i] += row[i] as f64 * br;
+            }
+        }
+    }
+    let mut x0 = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = 0.0f64;
+        for j in 0..n {
+            s += ginv[i * n + j] * atb[j];
+        }
+        x0[i] = s as f32;
+    }
+    // P = I - Ginv G (numeric noise at f64 scale)
+    let mut p = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for k in 0..n {
+                s += ginv[i * n + k] * g[k * n + j];
+            }
+            let id = if i == j { 1.0 } else { 0.0 };
+            p[(i, j)] = (id - s) as f32;
+        }
+    }
+    Ok((x0, p))
+}
+
+/// Gauss-Jordan inverse over a flat row-major f64 buffer.
+fn gauss_jordan_inverse_f64(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let cols = 2 * n;
+    let mut aug = vec![0.0f64; n * cols];
+    for i in 0..n {
+        aug[i * cols..i * cols + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        aug[i * cols + n + i] = 1.0;
+    }
+    for k in 0..n {
+        let mut piv_row = k;
+        let mut piv_val = aug[k * cols + k].abs();
+        for i in k + 1..n {
+            let v = aug[i * cols + k].abs();
+            if v > piv_val {
+                piv_val = v;
+                piv_row = i;
+            }
+        }
+        if piv_val < 1e-300 {
+            return Err(DapcError::Numeric(format!(
+                "singular matrix at pivot {k}"
+            )));
+        }
+        if piv_row != k {
+            for c in 0..cols {
+                aug.swap(k * cols + c, piv_row * cols + c);
+            }
+        }
+        let inv_piv = 1.0 / aug[k * cols + k];
+        // left-half columns < k of row k are exactly zero (eliminated in
+        // earlier steps), so row operations can start at column k — this
+        // trims ~25% of the elimination work (§Perf).
+        for c in k..cols {
+            aug[k * cols + c] *= inv_piv;
+        }
+        for i in 0..n {
+            if i == k {
+                continue;
+            }
+            let f = aug[i * cols + k];
+            if f != 0.0 {
+                for c in k..cols {
+                    aug[i * cols + c] -= f * aug[k * cols + c];
+                }
+                aug[i * cols + k] = 0.0;
+            }
+        }
+    }
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        inv[i * n..(i + 1) * n]
+            .copy_from_slice(&aug[i * cols + n..i * cols + 2 * n]);
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::gemm;
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    #[test]
+    fn inverse_of_identity() {
+        let inv = gauss_jordan_inverse(&Matrix::eye(8)).unwrap();
+        assert!(inv.max_abs_diff(&Matrix::eye(8)) < 1e-7);
+    }
+
+    #[test]
+    fn inverse_well_conditioned() {
+        for &n in &[1usize, 2, 8, 32, 64] {
+            let mut a = randm(n, n, n as u64);
+            for i in 0..n {
+                a[(i, i)] += n as f32; // diagonally dominant
+            }
+            let inv = gauss_jordan_inverse(&a).unwrap();
+            let prod = gemm(&inv, &a);
+            assert!(prod.max_abs_diff(&Matrix::eye(n)) < 5e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pivoting_required_case() {
+        // [[0,1],[1,0]] breaks non-pivoting elimination
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let inv = gauss_jordan_inverse(&a).unwrap();
+        assert!(inv.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn singular_matrix_errors() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(gauss_jordan_inverse(&a).is_err());
+        let z = Matrix::zeros(3, 3);
+        assert!(gauss_jordan_inverse(&z).is_err());
+    }
+
+    #[test]
+    fn non_square_errors() {
+        let a = Matrix::zeros(3, 4);
+        assert!(gauss_jordan_inverse(&a).is_err());
+    }
+
+    #[test]
+    fn pinv_solves_consistent_system() {
+        let a = randm(24, 8, 3);
+        let mut g = seeded(4);
+        let x_true: Vec<f32> = (0..8).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; 24];
+        crate::linalg::blas::gemv(&a, &x_true, &mut b);
+        let pinv = pinv_tall(&a).unwrap();
+        let mut x = vec![0.0f32; 8];
+        crate::linalg::blas::gemv(&pinv, &b, &mut x);
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "i={i}");
+        }
+    }
+
+    #[test]
+    fn classical_init_f64_solves_and_projector_tiny() {
+        let a = randm(48, 16, 21);
+        let mut g = seeded(22);
+        let x_true: Vec<f32> = (0..16).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; 48];
+        crate::linalg::blas::gemv(&a, &x_true, &mut b);
+        let (x0, p) = classical_init_f64(&a, &b).unwrap();
+        for i in 0..16 {
+            assert!((x0[i] - x_true[i]).abs() < 1e-3, "i={i}");
+        }
+        // f64 projector noise is far below f32 QR noise
+        assert!(crate::linalg::norms::max_abs(p.as_slice()) < 1e-6);
+        // rhs length check
+        assert!(classical_init_f64(&a, &b[..10]).is_err());
+    }
+
+    #[test]
+    fn property_inverse_roundtrip() {
+        let mut g = seeded(77);
+        for case in 0..15 {
+            let n = g.gen_range(1, 32);
+            let mut a = randm(n, n, 2000 + case);
+            for i in 0..n {
+                a[(i, i)] += n as f32 + 1.0;
+            }
+            let inv = gauss_jordan_inverse(&a).unwrap();
+            let left = gemm(&inv, &a);
+            let right = gemm(&a, &inv);
+            assert!(left.max_abs_diff(&Matrix::eye(n)) < 1e-2, "case {case}");
+            assert!(right.max_abs_diff(&Matrix::eye(n)) < 1e-2, "case {case}");
+        }
+    }
+}

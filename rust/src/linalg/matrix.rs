@@ -1,0 +1,259 @@
+//! Row-major dense f32 matrix used throughout the native engine.
+
+use std::fmt;
+
+/// Dense row-major matrix of `f32`.
+///
+/// f32 matches the artifact dtype so native and XLA engines are
+/// bit-comparable; accumulations inside the kernels use f64 where it
+/// matters (norms, reductions).
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size n.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vec. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow the underlying row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let s = i * self.cols;
+        &self.data[s..s + self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let s = i * self.cols;
+        &mut self.data[s..s + self.cols]
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Rows `[start, end)` as a new matrix (the paper's
+    /// `create_submatrices` slicing).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Pad with zero rows up to `rows` (exact for QR — see DESIGN.md §3).
+    pub fn pad_rows(&self, rows: usize) -> Matrix {
+        assert!(rows >= self.rows);
+        let mut data = self.data.clone();
+        data.resize(rows * self.cols, 0.0);
+        Matrix { rows, cols: self.cols, data }
+    }
+
+    /// Block-diagonal extension: append `k` extra columns and `k` extra
+    /// rows holding an identity block (exact n-padding — DESIGN.md §3).
+    pub fn pad_block_identity(&self, k: usize) -> Matrix {
+        let (r, c) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(r + k, c + k);
+        for i in 0..r {
+            out.as_mut_slice()[i * (c + k)..i * (c + k) + c]
+                .copy_from_slice(self.row(i));
+        }
+        for i in 0..k {
+            out[(r + i, c + i)] = 1.0;
+        }
+        out
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij| between two matrices of equal shape.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let vals: Vec<String> =
+                (0..cols).map(|j| format!("{:>10.4}", self[(i, j)])).collect();
+            writeln!(f, "  [{}{}]", vals.join(", "), if self.cols > 8 { ", …" } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+        assert_eq!(m.col(2), vec![0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let e = Matrix::eye(4);
+        assert_eq!(e.transpose(), e);
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t[(2, 1)], m[(1, 2)]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn slice_and_stack_roundtrip() {
+        let m = Matrix::from_fn(6, 2, |i, j| (i * 2 + j) as f32);
+        let top = m.slice_rows(0, 3);
+        let bot = m.slice_rows(3, 6);
+        assert_eq!(top.vstack(&bot), m);
+    }
+
+    #[test]
+    fn pad_rows_appends_zeros() {
+        let m = Matrix::from_fn(2, 2, |i, j| (i + j) as f32 + 1.0);
+        let p = m.pad_rows(4);
+        assert_eq!(p.shape(), (4, 2));
+        assert_eq!(p.row(3), &[0.0, 0.0]);
+        assert_eq!(p.slice_rows(0, 2), m);
+    }
+
+    #[test]
+    fn pad_block_identity_structure() {
+        let m = Matrix::from_fn(3, 2, |_, _| 2.0);
+        let p = m.pad_block_identity(2);
+        assert_eq!(p.shape(), (5, 4));
+        assert_eq!(p[(3, 2)], 1.0);
+        assert_eq!(p[(4, 3)], 1.0);
+        assert_eq!(p[(3, 3)], 0.0);
+        assert_eq!(p[(0, 2)], 0.0);
+        assert_eq!(p[(0, 0)], 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+}

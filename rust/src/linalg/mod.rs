@@ -1,0 +1,26 @@
+//! Dense linear-algebra substrate (native Rust engine + test oracle).
+//!
+//! The paper's workers run QR factorizations, triangular solves and (for
+//! the classical-APC baseline) Gauss-Jordan inversions.  No BLAS/LAPACK
+//! crate is available offline, so this module implements everything the
+//! solvers need from scratch:
+//!
+//! * [`Matrix`] — row-major f32 dense matrix,
+//! * [`blas`] — blocked gemm/gemv/axpy primitives,
+//! * [`qr`] — Householder QR (economy form, paper eq. (1)),
+//! * [`triangular`] — forward/backward substitution (paper eqs. (2)-(3)),
+//! * [`inverse`] — Gauss-Jordan elimination with partial pivoting [18],
+//! * [`norms`] — vector/matrix norms, MSE/MAE helpers used by metrics.
+//!
+//! These mirror `python/compile/kernels/linalg.py` one-for-one; the
+//! integration tests cross-check the two implementations through the PJRT
+//! runtime.
+
+pub mod blas;
+pub mod inverse;
+mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod triangular;
+
+pub use matrix::Matrix;

@@ -1,0 +1,94 @@
+//! Vector norms and error metrics (MSE [23], MAE [25] from the paper).
+
+/// Euclidean norm with f64 accumulation.
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Mean squared error between two equal-length vectors (Fig. 2 y-axis).
+pub fn mse(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (*a as f64) - (*b as f64);
+            d * d
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+/// Mean absolute error (paper §5 uses MAE between the initial solution and
+/// the one-iteration solution).
+pub fn mae(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| ((*a as f64) - (*b as f64)).abs())
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+/// Sample mean.
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+/// Population standard deviation (the paper reports mu/sigma of datasets
+/// and solutions in §5).
+pub fn std_dev(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let m = mean(x);
+    (x.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / x.len() as f64)
+        .sqrt()
+}
+
+/// Max absolute entry.
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm2_pythagorean() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(norm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn mse_mae_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let y = [1.0f32, 0.0, 6.0];
+        assert!((mse(&x, &y) - (0.0 + 4.0 + 9.0) / 3.0).abs() < 1e-12);
+        assert!((mae(&x, &y) - (0.0 + 2.0 + 3.0) / 3.0).abs() < 1e-12);
+        assert_eq!(mse(&x, &x), 0.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let x = [2.0f32, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&x) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&x) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_abs_signs() {
+        assert_eq!(max_abs(&[-3.0, 2.0, 1.0]), 3.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+}

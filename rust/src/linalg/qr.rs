@@ -1,0 +1,195 @@
+//! Householder QR factorization (paper §2, eq. (1)).
+//!
+//! Reduced (economy) form `A = Q1 R` for tall `A` (l x n, l >= n): `Q1` is
+//! (l x n) with orthonormal columns, `R` is (n x n) upper triangular.  This
+//! is the native-engine twin of `kernels/linalg.py::householder_qr` — the
+//! decomposed-APC init is built on it.
+
+use super::{blas, Matrix};
+
+/// Result of a reduced QR factorization.
+pub struct QrFactors {
+    /// (l x n) semi-orthogonal factor.
+    pub q1: Matrix,
+    /// (n x n) upper-triangular factor.
+    pub r: Matrix,
+}
+
+/// Reduced Householder QR of a tall matrix (l >= n).
+///
+/// Reflectors are accumulated in-place over a working copy of A; `Q1` is
+/// recovered by applying them in reverse to the first n identity columns.
+pub fn householder_qr(a: &Matrix) -> QrFactors {
+    let (l, n) = a.shape();
+    assert!(l >= n, "householder_qr requires a tall matrix, got {l}x{n}");
+    let mut work = a.clone();
+    // reflector k lives in vs[k*l .. (k+1)*l]
+    let mut vs = vec![0.0f32; n * l];
+
+    for k in 0..n {
+        // v = masked column k of work (rows >= k)
+        let v = &mut vs[k * l..(k + 1) * l];
+        for i in k..l {
+            v[i] = work[(i, k)];
+        }
+        let sigma = blas::dot(&v[k..], &v[k..]).sqrt();
+        if sigma == 0.0 {
+            // zero column below k: null reflector, leave v = 0
+            v.fill(0.0);
+            continue;
+        }
+        let alpha = if v[k] >= 0.0 { -sigma } else { sigma } as f32;
+        v[k] -= alpha;
+        let vnorm = blas::dot(&v[k..], &v[k..]).sqrt();
+        if vnorm < 1e-30 {
+            v.fill(0.0);
+            continue;
+        }
+        let inv = (1.0 / vnorm) as f32;
+        for vi in v[k..].iter_mut() {
+            *vi *= inv;
+        }
+        // work <- work - 2 v (v^T work); only rows >= k, cols >= k matter
+        // (cols < k are already triangularized: zero below row k).
+        apply_reflector_left(&mut work, v, k, k);
+    }
+
+    // R = upper triangle of the first n rows.
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Q1 = H_0 ... H_{n-1} E, E = first n columns of I_l.
+    let mut q1 = Matrix::from_fn(l, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k * l..(k + 1) * l];
+        // Applying H_{n-1}..H_k to E leaves columns < k untouched (they
+        // are still e_c with support above row k, where v is zero), so the
+        // update can be restricted to cols >= k — this halves the
+        // Q1-recovery cost (§Perf).
+        apply_reflector_left(&mut q1, v, k, k);
+    }
+    QrFactors { q1, r }
+}
+
+/// `m[:, col_start..] <- (I - 2 v v^T) m[:, col_start..]`, skipping the
+/// first `k` rows where v is zero.  Callers guarantee that columns before
+/// `col_start` would be unchanged (their v-weighted sums are zero).
+fn apply_reflector_left(m: &mut Matrix, v: &[f32], k: usize, col_start: usize) {
+    let (rows, cols) = m.shape();
+    debug_assert_eq!(v.len(), rows);
+    // w = m[:, col_start..]^T v, then m[:, col_start..] -= 2 v w^T
+    let mut w = vec![0.0f32; cols - col_start];
+    for i in k..rows {
+        let vi = v[i];
+        if vi != 0.0 {
+            blas::axpy(vi, &m.row(i)[col_start..], &mut w);
+        }
+    }
+    for i in k..rows {
+        let c = -2.0 * v[i];
+        if c != 0.0 {
+            blas::axpy(c, &w, &mut m.row_mut(i)[col_start..]);
+        }
+    }
+}
+
+/// Apply `Q1^T` to a vector of length l, returning length-n `Q1^T b`.
+pub fn qt_mul(f: &QrFactors, b: &[f32]) -> Vec<f32> {
+    let n = f.r.cols();
+    let mut out = vec![0.0f32; n];
+    blas::gemv_t(&f.q1, b, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm, gemm_tn};
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    #[test]
+    fn reconstruction() {
+        for &(l, n) in &[(4, 4), (16, 8), (64, 32), (33, 7), (100, 100)] {
+            let a = randm(l, n, l as u64 * 31 + n as u64);
+            let f = householder_qr(&a);
+            let recon = gemm(&f.q1, &f.r);
+            assert!(recon.max_abs_diff(&a) < 5e-4, "({l},{n})");
+        }
+    }
+
+    #[test]
+    fn orthonormal_columns() {
+        let a = randm(48, 20, 7);
+        let f = householder_qr(&a);
+        let qtq = gemm_tn(&f.q1, &f.q1);
+        assert!(qtq.max_abs_diff(&Matrix::eye(20)) < 5e-5);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let a = randm(30, 12, 9);
+        let f = householder_qr(&a);
+        for i in 0..12 {
+            for j in 0..i {
+                assert_eq!(f.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_no_nan() {
+        let mut a = Matrix::zeros(10, 4);
+        for i in 0..10 {
+            a[(i, 0)] = 1.0;
+            a[(i, 2)] = i as f32;
+        }
+        let f = householder_qr(&a);
+        assert!(f.q1.as_slice().iter().all(|v| v.is_finite()));
+        assert!(f.r.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn padded_rows_leave_r_and_qtb_unchanged() {
+        // QR([A; 0]) must produce the same R and the same Q1^T [b; 0] —
+        // this is what makes shape-bucket padding exact (DESIGN.md §3).
+        let a = randm(20, 8, 13);
+        let mut g = seeded(14);
+        let b: Vec<f32> = (0..20).map(|_| g.normal_f32()).collect();
+        let f = householder_qr(&a);
+        let ap = a.pad_rows(32);
+        let mut bp = b.clone();
+        bp.resize(32, 0.0);
+        let fp = householder_qr(&ap);
+        // R unique up to sign of rows; our sign convention is deterministic
+        assert!(f.r.max_abs_diff(&fp.r) < 1e-4);
+        let qtb = qt_mul(&f, &b);
+        let qtbp = qt_mul(&fp, &bp);
+        for i in 0..8 {
+            assert!((qtb[i] - qtbp[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn property_random_shapes() {
+        // hand-rolled property sweep (no proptest offline)
+        let mut g = seeded(99);
+        for case in 0..25 {
+            let n = g.gen_range(1, 24);
+            let l = n + g.gen_range(0, 24);
+            let a = randm(l, n, 1000 + case);
+            let f = householder_qr(&a);
+            assert!(gemm(&f.q1, &f.r).max_abs_diff(&a) < 2e-3, "case {case} ({l},{n})");
+            let qtq = gemm_tn(&f.q1, &f.q1);
+            assert!(qtq.max_abs_diff(&Matrix::eye(n)) < 2e-3, "case {case}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Triangular solves — the O(n^2) backward substitution at the heart of
+//! the paper's decomposition (eqs. (2)-(3)) plus the forward variant used
+//! by the fat-regime init.
+
+use super::Matrix;
+
+/// Solve `R x = c` for upper-triangular `R` by backward substitution.
+///
+/// Implements paper eqs. (2)-(3): the n-th component first, then each
+/// p-th component from the previously solved ones — O(n^2) total versus
+/// the O(n^3) Gauss-Jordan inversion of classical APC.
+pub fn back_substitute(r: &Matrix, c: &[f32]) -> Vec<f32> {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(c.len(), n);
+    let mut x = vec![0.0f32; n];
+    for p in (0..n).rev() {
+        let row = r.row(p);
+        let mut s = 0.0f64;
+        for k in p + 1..n {
+            s += row[k] as f64 * x[k] as f64;
+        }
+        x[p] = ((c[p] as f64 - s) / row[p] as f64) as f32;
+    }
+    x
+}
+
+/// Solve `L x = c` for lower-triangular `L` by forward substitution.
+pub fn forward_substitute(l: &Matrix, c: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(c.len(), n);
+    let mut x = vec![0.0f32; n];
+    for p in 0..n {
+        let row = l.row(p);
+        let mut s = 0.0f64;
+        for k in 0..p {
+            s += row[k] as f64 * x[k] as f64;
+        }
+        x[p] = ((c[p] as f64 - s) / row[p] as f64) as f32;
+    }
+    x
+}
+
+/// Explicit upper-triangular inverse via the recurrence the paper quotes
+/// (`r*_{c-1,c} ≈ -r_{c-1,c} / (r_{c-1,c-1} r_{c,c})` generalized) —
+/// kept for the init-method ablation; the solvers use back_substitute.
+pub fn upper_triangular_inverse(r: &Matrix) -> Matrix {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    let mut inv = Matrix::zeros(n, n);
+    // column-by-column: solve R x = e_j
+    for j in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[j] = 1.0;
+        let x = back_substitute(r, &e);
+        for i in 0..n {
+            inv[(i, j)] = x[i];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm, gemv};
+    use crate::rng::seeded;
+
+    fn upper(n: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        let scale = 1.0 / (n as f32).sqrt();
+        Matrix::from_fn(n, n, |i, j| {
+            if j > i {
+                g.normal_f32() * scale
+            } else if j == i {
+                3.0 + g.uniform_f32()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn back_substitute_residual() {
+        for &n in &[1usize, 2, 8, 32, 100] {
+            let r = upper(n, n as u64);
+            let mut g = seeded(n as u64 + 1);
+            let c: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+            let x = back_substitute(&r, &c);
+            let mut rx = vec![0.0f32; n];
+            gemv(&r, &x, &mut rx);
+            for i in 0..n {
+                assert!((rx[i] - c[i]).abs() < 1e-4, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_substitute_residual() {
+        for &n in &[1usize, 3, 16, 64] {
+            let l = upper(n, n as u64 * 7).transpose();
+            let mut g = seeded(n as u64 + 2);
+            let c: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+            let x = forward_substitute(&l, &c);
+            let mut lx = vec![0.0f32; n];
+            gemv(&l, &x, &mut lx);
+            for i in 0..n {
+                assert!((lx[i] - c[i]).abs() < 1e-4, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_inverse_is_inverse() {
+        let r = upper(24, 5);
+        let inv = upper_triangular_inverse(&r);
+        let prod = gemm(&r, &inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(24)) < 1e-4);
+        // inverse of upper triangular is upper triangular
+        for i in 0..24 {
+            for j in 0..i {
+                assert!(inv[(i, j)].abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn property_sweep() {
+        let mut g = seeded(123);
+        for case in 0..20 {
+            let n = g.gen_range(1, 48);
+            let r = upper(n, 500 + case);
+            let mut rg = seeded(600 + case);
+            let c: Vec<f32> = (0..n).map(|_| rg.normal_f32()).collect();
+            let x = back_substitute(&r, &c);
+            let mut rx = vec![0.0f32; n];
+            gemv(&r, &x, &mut rx);
+            let err = rx.iter().zip(&c).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(err < 1e-3, "case {case} n={n} err={err}");
+        }
+    }
+}

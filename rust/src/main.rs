@@ -1,0 +1,339 @@
+//! `dapc` CLI — leader entrypoint for the DAPC system.
+//!
+//! Subcommands:
+//!   solve    run a solver on a dataset (MatrixMarket or synthetic)
+//!   worker   serve a TCP worker (multi-process cluster)
+//!   graph    export the Algorithm-1 task graph as Graphviz DOT
+//!   info     list available AOT artifacts
+//!   generate write a synthetic Schenk-like dataset to MatrixMarket files
+
+use std::path::{Path, PathBuf};
+
+use dapc::cli::{self, OptSpec};
+use dapc::config::{Algorithm, EngineKind, RunConfig};
+use dapc::coordinator::cluster;
+use dapc::coordinator::TaskGraph;
+use dapc::error::{DapcError, Result};
+use dapc::linalg::norms;
+use dapc::runtime::executor::XlaExecutorHost;
+use dapc::solver::{
+    ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
+    Solver, XlaEngine,
+};
+use dapc::sparse::{generate::GeneratorConfig, matrix_market, CsrMatrix};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "JSON config file", takes_value: true },
+        OptSpec { name: "algorithm", help: "dapc|apc|dgd", takes_value: true },
+        OptSpec { name: "engine", help: "native|xla", takes_value: true },
+        OptSpec { name: "partitions", help: "number of partitions J", takes_value: true },
+        OptSpec { name: "epochs", help: "consensus epochs T", takes_value: true },
+        OptSpec { name: "eta", help: "mixing weight (0,1]", takes_value: true },
+        OptSpec { name: "gamma", help: "projection step (0,1]", takes_value: true },
+        OptSpec { name: "matrix", help: "MatrixMarket coefficient matrix", takes_value: true },
+        OptSpec { name: "rhs", help: "MatrixMarket rhs vector", takes_value: true },
+        OptSpec { name: "synth-n", help: "synthetic problem size n", takes_value: true },
+        OptSpec { name: "seed", help: "synthetic data seed", takes_value: true },
+        OptSpec { name: "artifacts", help: "artifact directory", takes_value: true },
+        OptSpec { name: "distributed", help: "run over a local worker cluster", takes_value: false },
+        OptSpec { name: "workers", help: "comma-separated worker addrs (TCP leader)", takes_value: true },
+        OptSpec { name: "listen", help: "worker listen address", takes_value: true },
+        OptSpec { name: "out", help: "output path (graph/generate)", takes_value: true },
+        OptSpec { name: "trace", help: "print per-epoch MSE (synthetic only)", takes_value: false },
+        OptSpec { name: "help", help: "show usage", takes_value: false },
+    ]
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let specs = specs();
+    let parsed = cli::parse(args, &specs)?;
+    if parsed.has_flag("help") || parsed.command.is_none() {
+        println!(
+            "dapc — Distributed Accelerated Projection-Based Consensus Decomposition\n\n\
+             usage: dapc <solve|worker|graph|info|generate> [options]\n\n{}",
+            cli::usage(&specs)
+        );
+        return Ok(());
+    }
+    match parsed.command.as_deref().unwrap() {
+        "solve" => cmd_solve(&parsed),
+        "worker" => cmd_worker(&parsed),
+        "graph" => cmd_graph(&parsed),
+        "info" => cmd_info(&parsed),
+        "generate" => cmd_generate(&parsed),
+        other => Err(DapcError::Parse(format!(
+            "unknown command {other:?} (expected solve|worker|graph|info|generate)"
+        ))),
+    }
+}
+
+fn build_config(parsed: &cli::ParsedArgs) -> Result<RunConfig> {
+    let mut cfg = match parsed.get("config") {
+        Some(path) => RunConfig::from_json_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(a) = parsed.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(e) = parsed.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    if let Some(v) = parsed.get_parse::<usize>("partitions")? {
+        cfg.partitions = v;
+    }
+    if let Some(v) = parsed.get_parse::<usize>("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = parsed.get_parse::<f32>("eta")? {
+        cfg.eta = v;
+    }
+    if let Some(v) = parsed.get_parse::<f32>("gamma")? {
+        cfg.gamma = v;
+    }
+    if let Some(v) = parsed.get("matrix") {
+        cfg.matrix_path = Some(PathBuf::from(v));
+    }
+    if let Some(v) = parsed.get("rhs") {
+        cfg.rhs_path = Some(PathBuf::from(v));
+    }
+    if let Some(v) = parsed.get_parse::<usize>("synth-n")? {
+        cfg.synth_n = v;
+    }
+    if let Some(v) = parsed.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = parsed.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(v);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Load the dataset: MatrixMarket pair or synthetic Schenk-like system.
+fn load_data(cfg: &RunConfig) -> Result<(CsrMatrix, Vec<f32>, Option<Vec<f32>>)> {
+    match (&cfg.matrix_path, &cfg.rhs_path) {
+        (Some(mp), Some(rp)) => {
+            let a = matrix_market::read_matrix(mp)?;
+            let b = matrix_market::read_vector(rp)?;
+            if b.len() != a.rows() {
+                return Err(DapcError::Shape(format!(
+                    "rhs length {} != matrix rows {}",
+                    b.len(),
+                    a.rows()
+                )));
+            }
+            Ok((a, b, None))
+        }
+        _ => {
+            let ds = GeneratorConfig::schenk_like(cfg.synth_n)
+                .try_generate(cfg.seed)?;
+            println!(
+                "synthetic dataset: {}x{} ({} nnz, {:.2}% sparse)",
+                ds.matrix.rows(),
+                ds.matrix.cols(),
+                ds.matrix.nnz(),
+                ds.matrix.sparsity_pct()
+            );
+            Ok((ds.matrix, ds.rhs, Some(ds.x_true)))
+        }
+    }
+}
+
+fn cmd_solve(parsed: &cli::ParsedArgs) -> Result<()> {
+    let cfg = build_config(parsed)?;
+    let (a, b, x_true) = load_data(&cfg)?;
+    let opts = SolveOptions {
+        epochs: cfg.epochs,
+        eta: cfg.eta,
+        gamma: cfg.gamma,
+        dgd_step: cfg.dgd_step,
+        x_true: if parsed.has_flag("trace") { x_true.clone() } else { None },
+        ..Default::default()
+    };
+
+    let report = if let Some(workers) = parsed.get("workers") {
+        // TCP leader over remote workers
+        let addrs: Vec<String> =
+            workers.split(',').map(str::to_string).collect();
+        let mut leader = cluster::connect_tcp_workers(&addrs)?;
+        let variant = match cfg.algorithm {
+            Algorithm::DapcDecomposed => dapc::solver::ApcVariant::Decomposed,
+            Algorithm::ApcClassical => dapc::solver::ApcVariant::Classical,
+            Algorithm::Dgd => {
+                let r = leader.solve_dgd(&a, &b, cfg.dgd_step, &opts)?;
+                leader.shutdown();
+                print_report(&r, x_true.as_deref());
+                return Ok(());
+            }
+        };
+        let r = leader.solve_apc(&a, &b, variant, &opts)?;
+        leader.shutdown();
+        r
+    } else if parsed.has_flag("distributed") {
+        run_local_cluster(&cfg, &a, &b, &opts)?
+    } else {
+        run_single(&cfg, &a, &b, &opts)?
+    };
+    print_report(&report, x_true.as_deref());
+    Ok(())
+}
+
+fn run_single(
+    cfg: &RunConfig,
+    a: &CsrMatrix,
+    b: &[f32],
+    opts: &SolveOptions,
+) -> Result<dapc::solver::SolveReport> {
+    match cfg.engine {
+        EngineKind::Native => {
+            let engine = NativeEngine::new();
+            dispatch_solver(cfg, &engine, a, b, opts)
+        }
+        EngineKind::Xla => {
+            let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;
+            let engine = XlaEngine::new(host.executor());
+            dispatch_solver(cfg, &engine, a, b, opts)
+        }
+    }
+}
+
+fn dispatch_solver<E: dapc::solver::ComputeEngine>(
+    cfg: &RunConfig,
+    engine: &E,
+    a: &CsrMatrix,
+    b: &[f32],
+    opts: &SolveOptions,
+) -> Result<dapc::solver::SolveReport> {
+    match cfg.algorithm {
+        Algorithm::DapcDecomposed => {
+            DapcSolver::new(opts.clone()).solve(engine, a, b, cfg.partitions)
+        }
+        Algorithm::ApcClassical => ApcClassicalSolver::new(opts.clone())
+            .solve(engine, a, b, cfg.partitions),
+        Algorithm::Dgd => {
+            DgdSolver::new(opts.clone()).solve(engine, a, b, cfg.partitions)
+        }
+    }
+}
+
+fn run_local_cluster(
+    cfg: &RunConfig,
+    a: &CsrMatrix,
+    b: &[f32],
+    opts: &SolveOptions,
+) -> Result<dapc::solver::SolveReport> {
+    let variant = match cfg.algorithm {
+        Algorithm::DapcDecomposed => dapc::solver::ApcVariant::Decomposed,
+        Algorithm::ApcClassical => dapc::solver::ApcVariant::Classical,
+        Algorithm::Dgd => {
+            let mut c =
+                cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
+            let r = c.leader.solve_dgd(a, b, cfg.dgd_step, opts)?;
+            return Ok(r);
+        }
+    };
+    match cfg.engine {
+        EngineKind::Native => {
+            let mut c =
+                cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
+            c.leader.solve_apc(a, b, variant, opts)
+        }
+        EngineKind::Xla => {
+            let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;
+            let exec = host.executor();
+            let mut c = cluster::LocalCluster::spawn(cfg.partitions, move || {
+                XlaEngine::new(exec.clone())
+            })?;
+            c.leader.solve_apc(a, b, variant, opts)
+        }
+    }
+}
+
+fn print_report(r: &dapc::solver::SolveReport, x_true: Option<&[f32]>) {
+    println!("{}", r.summary());
+    println!(
+        "solution: n={} mu={:.6} sigma={:.6}",
+        r.xbar.len(),
+        norms::mean(&r.xbar),
+        norms::std_dev(&r.xbar)
+    );
+    if let Some(xt) = x_true {
+        println!("MSE vs known solution: {:.3e}", r.final_mse(xt));
+    }
+    if let Some(trace) = &r.trace {
+        for (e, m) in &trace.points {
+            println!("epoch {e}: mse {m:.6e}");
+        }
+    }
+}
+
+fn cmd_worker(parsed: &cli::ParsedArgs) -> Result<()> {
+    let cfg = build_config(parsed)?;
+    let addr = parsed
+        .get("listen")
+        .ok_or_else(|| DapcError::Config("worker requires --listen".into()))?;
+    println!("dapc worker listening on {addr} (engine: {:?})", cfg.engine);
+    match cfg.engine {
+        EngineKind::Native => {
+            cluster::serve_tcp_worker(&NativeEngine::new(), addr)
+        }
+        EngineKind::Xla => {
+            let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;
+            let engine = XlaEngine::new(host.executor());
+            cluster::serve_tcp_worker(&engine, addr)
+        }
+    }
+}
+
+fn cmd_graph(parsed: &cli::ParsedArgs) -> Result<()> {
+    let j = parsed.get_parse::<usize>("partitions")?.unwrap_or(2);
+    let t = parsed.get_parse::<usize>("epochs")?.unwrap_or(1);
+    let dot = TaskGraph::algorithm1(j, t).to_dot();
+    match parsed.get("out") {
+        Some(path) => {
+            std::fs::write(path, &dot)?;
+            println!("wrote {path}");
+        }
+        None => print!("{dot}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(parsed: &cli::ParsedArgs) -> Result<()> {
+    let dir = parsed.get("artifacts").unwrap_or("artifacts");
+    let manifest =
+        dapc::runtime::ArtifactManifest::load(Path::new(dir))?;
+    println!("{} artifacts in {dir}:", manifest.len());
+    for name in manifest.names() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(parsed: &cli::ParsedArgs) -> Result<()> {
+    let cfg = build_config(parsed)?;
+    let out = parsed.get("out").unwrap_or("data");
+    std::fs::create_dir_all(out)?;
+    let ds = GeneratorConfig::schenk_like(cfg.synth_n).try_generate(cfg.seed)?;
+    let dir = Path::new(out);
+    matrix_market::write_matrix(&dir.join("A.mtx"), &ds.matrix)?;
+    matrix_market::write_vector(&dir.join("b.mtx"), &ds.rhs)?;
+    matrix_market::write_vector(&dir.join("x_true.mtx"), &ds.x_true)?;
+    println!(
+        "wrote {}/A.mtx ({}x{}, {} nnz), b.mtx, x_true.mtx",
+        out,
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        ds.matrix.nnz()
+    );
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Metrics and reporting: convergence traces (Fig. 2), wall-clock timing
+//! (Table 1), CSV export and markdown table formatting.
+
+mod table;
+mod timer;
+mod trace;
+
+pub use table::TableBuilder;
+pub use timer::{StopWatch, TimingStats};
+pub use trace::ConvergenceTrace;

@@ -1,0 +1,154 @@
+//! Wall-clock timing utilities for the bench harness and solver reports.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch with named laps.
+#[derive(Debug)]
+pub struct StopWatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for StopWatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StopWatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record a lap since the previous lap (or start).
+    pub fn lap(&mut self, name: impl Into<String>) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.into(), d));
+        d
+    }
+
+    /// Total elapsed since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Sum of laps matching a name.
+    pub fn lap_total(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+}
+
+/// Summary statistics over repeated timing samples (bench harness).
+#[derive(Debug, Clone)]
+pub struct TimingStats {
+    pub samples: Vec<f64>, // seconds
+}
+
+impl TimingStats {
+    pub fn from_secs(samples: Vec<f64>) -> Self {
+        Self { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|s| (s - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = StopWatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("b");
+        sw.lap("a");
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.lap_total("a") >= Duration::from_millis(2));
+        assert!(sw.total() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = TimingStats::from_secs(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.std_dev() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 5.0).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_degenerate() {
+        let e = TimingStats::from_secs(vec![]);
+        assert_eq!(e.mean(), 0.0);
+        assert_eq!(e.median(), 0.0);
+        let one = TimingStats::from_secs(vec![7.0]);
+        assert_eq!(one.median(), 7.0);
+        assert_eq!(one.std_dev(), 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Per-epoch convergence traces — the data behind Figure 2.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// MSE-per-epoch trace for one solver run.
+#[derive(Debug, Clone, Default)]
+pub struct ConvergenceTrace {
+    pub label: String,
+    /// (epoch, mse) samples; epoch 0 is the initial solution.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl ConvergenceTrace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, epoch: usize, mse: f64) {
+        self.points.push((epoch, mse));
+    }
+
+    pub fn final_mse(&self) -> Option<f64> {
+        self.points.last().map(|&(_, m)| m)
+    }
+
+    pub fn initial_mse(&self) -> Option<f64> {
+        self.points.first().map(|&(_, m)| m)
+    }
+
+    /// First epoch at which the trace dips below `threshold` (the "reaches
+    /// its minima" point used for Table 1's T column).
+    pub fn epochs_to_reach(&self, threshold: f64) -> Option<usize> {
+        self.points.iter().find(|&&(_, m)| m <= threshold).map(|&(e, _)| e)
+    }
+
+    /// Whether the trace is (weakly) decreasing within a tolerance factor —
+    /// the paper notes the decomposed variant may wobble after some epoch.
+    pub fn monotone_within(&self, slack: f64) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[1].1 <= w[0].1 * (1.0 + slack) + 1e-30)
+    }
+
+    /// Write several traces as a single CSV: epoch,label1,label2,...
+    pub fn write_csv(path: &Path, traces: &[&ConvergenceTrace]) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "epoch")?;
+        for t in traces {
+            write!(f, ",{}", t.label)?;
+        }
+        writeln!(f)?;
+        let max_len = traces.iter().map(|t| t.points.len()).max().unwrap_or(0);
+        for i in 0..max_len {
+            let epoch = traces
+                .iter()
+                .find_map(|t| t.points.get(i).map(|&(e, _)| e))
+                .unwrap_or(i);
+            write!(f, "{epoch}")?;
+            for t in traces {
+                match t.points.get(i) {
+                    Some(&(_, m)) => write!(f, ",{m:e}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+
+    /// Render traces as an ASCII log-scale chart (Fig. 2 in a terminal).
+    pub fn ascii_chart(traces: &[&ConvergenceTrace], width: usize, height: usize) -> String {
+        let all: Vec<f64> = traces
+            .iter()
+            .flat_map(|t| t.points.iter().map(|&(_, m)| m.max(1e-30)))
+            .collect();
+        if all.is_empty() {
+            return String::from("(no data)\n");
+        }
+        let lo = all.iter().copied().fold(f64::INFINITY, f64::min).ln();
+        let hi = all.iter().copied().fold(f64::NEG_INFINITY, f64::max).ln();
+        let span = (hi - lo).max(1e-12);
+        let max_epoch = traces
+            .iter()
+            .flat_map(|t| t.points.iter().map(|&(e, _)| e))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let marks = ['*', '+', 'o', 'x', '#'];
+        let mut grid = vec![vec![' '; width]; height];
+        for (ti, t) in traces.iter().enumerate() {
+            let mark = marks[ti % marks.len()];
+            for &(e, m) in &t.points {
+                let x = (e * (width - 1)) / max_epoch;
+                let yf = ((m.max(1e-30)).ln() - lo) / span;
+                let y = height - 1 - ((yf * (height - 1) as f64).round() as usize).min(height - 1);
+                grid[y][x] = mark;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("log10(MSE) range [{:.1}, {:.1}]\n", lo / std::f64::consts::LN_10, hi / std::f64::consts::LN_10));
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.extend(std::iter::repeat('-').take(width));
+        out.push_str(&format!("> epochs (0..{max_epoch})\n"));
+        for (ti, t) in traces.iter().enumerate() {
+            out.push_str(&format!("  {} {}\n", marks[ti % marks.len()], t.label));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ConvergenceTrace {
+        let mut t = ConvergenceTrace::new("apc");
+        for e in 0..10 {
+            t.push(e, 1.0 / (1 << e) as f64);
+        }
+        t
+    }
+
+    #[test]
+    fn basics() {
+        let t = sample();
+        assert_eq!(t.initial_mse(), Some(1.0));
+        assert!((t.final_mse().unwrap() - 1.0 / 512.0).abs() < 1e-15);
+        assert_eq!(t.epochs_to_reach(0.1), Some(4));
+        assert_eq!(t.epochs_to_reach(0.0), None);
+        assert!(t.monotone_within(0.0));
+    }
+
+    #[test]
+    fn monotone_slack() {
+        let mut t = ConvergenceTrace::new("x");
+        t.push(0, 1.0);
+        t.push(1, 1.05);
+        assert!(!t.monotone_within(0.0));
+        assert!(t.monotone_within(0.1));
+    }
+
+    #[test]
+    fn csv_format() {
+        let a = sample();
+        let mut b = ConvergenceTrace::new("dgd");
+        b.push(0, 0.5);
+        let dir = std::env::temp_dir().join("dapc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("fig2.csv");
+        ConvergenceTrace::write_csv(&p, &[&a, &b]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "epoch,apc,dgd");
+        let first = lines.next().unwrap();
+        assert!(first.starts_with("0,1e0,5e-1"), "{first}");
+        // ragged rows keep the column count
+        assert_eq!(text.lines().nth(2).unwrap().matches(',').count(), 2);
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let t = sample();
+        let chart = ConvergenceTrace::ascii_chart(&[&t], 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("apc"));
+        assert_eq!(ConvergenceTrace::ascii_chart(&[], 10, 5), "(no data)\n");
+    }
+}

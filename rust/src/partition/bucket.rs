@@ -1,0 +1,160 @@
+//! Shape bucketing: pad a partition block up to the nearest AOT artifact
+//! shape.  Row padding appends zero rows (QR of `[A; 0]` has the same `R`
+//! and `Q1^T [b; 0]`); column padding extends block-diagonally with an
+//! identity whose solution entries stay exactly zero through every
+//! consensus epoch — both exact, see DESIGN.md §3 and the proofs in the
+//! tests below.
+
+use crate::error::{DapcError, Result};
+use crate::linalg::Matrix;
+
+/// A block padded to an artifact bucket shape.
+#[derive(Debug, Clone)]
+pub struct BucketedBlock {
+    /// Padded (l_pad x n_pad) dense block.
+    pub a: Matrix,
+    /// Padded rhs, length l_pad.
+    pub b: Vec<f32>,
+    /// Original (unpadded) rows.
+    pub rows: usize,
+    /// Original (unpadded) columns = true solution length.
+    pub n: usize,
+}
+
+impl BucketedBlock {
+    /// Strip the padding from a padded solution vector.
+    pub fn unpad_solution(&self, x: &[f32]) -> Vec<f32> {
+        x[..self.n].to_vec()
+    }
+}
+
+/// Pad `(a, b)` up to `(l_pad, n_pad)`.
+///
+/// * extra rows: zeros (and zero rhs entries);
+/// * extra columns: block-diagonal identity rows so the padded system is
+///   still full rank with padded-solution entries exactly 0.
+pub fn pad_to_bucket(
+    a: &Matrix,
+    b: &[f32],
+    l_pad: usize,
+    n_pad: usize,
+) -> Result<BucketedBlock> {
+    let (rows, n) = a.shape();
+    if b.len() != rows {
+        return Err(DapcError::Shape(format!(
+            "rhs length {} != rows {}",
+            b.len(),
+            rows
+        )));
+    }
+    if n_pad < n || l_pad < rows + (n_pad - n) {
+        return Err(DapcError::Shape(format!(
+            "bucket ({l_pad}, {n_pad}) too small for block ({rows}, {n}); \
+             need l_pad >= rows + (n_pad - n)"
+        )));
+    }
+    let k = n_pad - n;
+    // block-diagonal identity extension, then zero rows up to l_pad
+    let ext = a.pad_block_identity(k);
+    let padded = ext.pad_rows(l_pad);
+    let mut rhs = b.to_vec();
+    rhs.resize(l_pad, 0.0); // identity rows get b = 0 => x_pad = 0
+    Ok(BucketedBlock { a: padded, b: rhs, rows, n })
+}
+
+/// Choose the smallest bucket from `available` (sorted or not) that fits
+/// `(rows, n)`; returns `(l_pad, n_pad)`.
+pub fn choose_bucket(
+    rows: usize,
+    n: usize,
+    available: &[(usize, usize)],
+) -> Option<(usize, usize)> {
+    available
+        .iter()
+        .copied()
+        .filter(|&(l_pad, n_pad)| {
+            n_pad >= n && l_pad >= rows + (n_pad - n)
+        })
+        .min_by_key(|&(l_pad, n_pad)| (n_pad, l_pad))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::{householder_qr, qt_mul};
+    use crate::linalg::triangular::back_substitute;
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    #[test]
+    fn row_padding_preserves_qr_solution() {
+        let a = randm(20, 8, 1);
+        let mut g = seeded(2);
+        let x_true: Vec<f32> = (0..8).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; 20];
+        crate::linalg::blas::gemv(&a, &x_true, &mut b);
+
+        let blk = pad_to_bucket(&a, &b, 32, 8).unwrap();
+        let f = householder_qr(&blk.a);
+        let x = back_substitute(&f.r, &qt_mul(&f, &blk.b));
+        let x = blk.unpad_solution(&x);
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn column_padding_preserves_solution_with_zero_tail() {
+        let a = randm(24, 6, 3);
+        let mut g = seeded(4);
+        let x_true: Vec<f32> = (0..6).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; 24];
+        crate::linalg::blas::gemv(&a, &x_true, &mut b);
+
+        // pad 6 -> 10 columns, 24 -> 40 rows
+        let blk = pad_to_bucket(&a, &b, 40, 10).unwrap();
+        assert_eq!(blk.a.shape(), (40, 10));
+        let f = householder_qr(&blk.a);
+        let x = back_substitute(&f.r, &qt_mul(&f, &blk.b));
+        // padded entries must be exactly ~0
+        for i in 6..10 {
+            assert!(x[i].abs() < 1e-5, "pad entry {i} = {}", x[i]);
+        }
+        let x = blk.unpad_solution(&x);
+        for i in 0..6 {
+            assert!((x[i] - x_true[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn bucket_too_small_rejected() {
+        let a = randm(10, 4, 5);
+        let b = vec![0.0; 10];
+        assert!(pad_to_bucket(&a, &b, 9, 4).is_err()); // fewer rows
+        assert!(pad_to_bucket(&a, &b, 10, 3).is_err()); // fewer cols
+        // needs l_pad >= rows + (n_pad - n): 10 + 2 = 12 > 11
+        assert!(pad_to_bucket(&a, &b, 11, 6).is_err());
+        assert!(pad_to_bucket(&a, &b, 12, 6).is_ok());
+    }
+
+    #[test]
+    fn rhs_length_checked() {
+        let a = randm(10, 4, 6);
+        assert!(pad_to_bucket(&a, &[0.0; 9], 12, 4).is_err());
+    }
+
+    #[test]
+    fn choose_bucket_smallest_fit() {
+        let avail = [(64, 32), (256, 128), (768, 512)];
+        assert_eq!(choose_bucket(50, 20, &avail), Some((64, 32)));
+        // 60 rows, n=32: 60 + 0 = 60 <= 64 ✓
+        assert_eq!(choose_bucket(60, 32, &avail), Some((64, 32)));
+        // 63 rows, n=20: 63 + 12 = 75 > 64 -> next bucket
+        assert_eq!(choose_bucket(63, 20, &avail), Some((256, 128)));
+        assert_eq!(choose_bucket(1000, 20, &avail), None);
+    }
+}

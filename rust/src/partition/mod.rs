@@ -1,0 +1,9 @@
+//! Row partitioning of `[A; D_A]` into per-worker blocks (Algorithm 1,
+//! step 1) plus the shape-bucketing that maps arbitrary datasets onto the
+//! AOT artifact manifest.
+
+pub mod bucket;
+mod plan;
+
+pub use bucket::{pad_to_bucket, BucketedBlock};
+pub use plan::{PartitionPlan, PartitionRegime, RowBlock};

@@ -1,0 +1,163 @@
+//! Contiguous row partitioner — mirrors the paper's `create_submatrices`
+//! (chunk_size = len(b) // J, last chunk absorbs the remainder).
+
+use crate::error::{DapcError, Result};
+use crate::linalg::Matrix;
+use crate::sparse::CsrMatrix;
+
+/// Which APC regime a partition plan targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionRegime {
+    /// `l >= n` rows per block (this paper's setting: each block is an
+    /// overdetermined/square solvable system; projector is rounding-noise).
+    Tall,
+    /// `l < n` rows per block (the original APC [7] setting: genuine
+    /// nullspace projectors, consensus does real work).
+    Fat,
+}
+
+/// One partition's row range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowBlock {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl RowBlock {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A full partitioning of an (m x n) system into J contiguous row blocks.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub blocks: Vec<RowBlock>,
+    pub n: usize,
+    pub regime: PartitionRegime,
+}
+
+impl PartitionPlan {
+    /// Split `m` rows into `j` contiguous blocks, paper-style: the first
+    /// J-1 blocks get `m / j` rows, the last absorbs the remainder (the
+    /// paper's `create_submatrices` merges the tail into the final chunk).
+    pub fn contiguous(m: usize, n: usize, j: usize) -> Result<Self> {
+        if j == 0 {
+            return Err(DapcError::Config("J must be >= 1".into()));
+        }
+        if m < j {
+            return Err(DapcError::Config(format!(
+                "cannot split {m} rows into {j} partitions"
+            )));
+        }
+        let chunk = m / j;
+        let mut blocks = Vec::with_capacity(j);
+        for i in 0..j {
+            let start = i * chunk;
+            let end = if i == j - 1 { m } else { start + chunk };
+            blocks.push(RowBlock { index: i, start, end });
+        }
+        let min_len = blocks.iter().map(RowBlock::len).min().unwrap();
+        let regime = if min_len >= n {
+            PartitionRegime::Tall
+        } else {
+            PartitionRegime::Fat
+        };
+        Ok(Self { blocks, n, regime })
+    }
+
+    /// Like [`Self::contiguous`] but *requires* the tall regime the paper
+    /// assumes (`(m+n)/J >= n`, §4): errors out otherwise.
+    pub fn contiguous_tall(m: usize, n: usize, j: usize) -> Result<Self> {
+        let plan = Self::contiguous(m, n, j)?;
+        if plan.regime != PartitionRegime::Tall {
+            return Err(DapcError::Config(format!(
+                "partition too fine: {m} rows / {j} blocks gives blocks \
+                 smaller than n = {n} (paper §4 requires (m+n)/J >= n)"
+            )));
+        }
+        Ok(plan)
+    }
+
+    pub fn j(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Densify block `i` of a CSR matrix + rhs (paper's worker step 1).
+    pub fn extract(
+        &self,
+        a: &CsrMatrix,
+        b: &[f32],
+        i: usize,
+    ) -> (Matrix, Vec<f32>) {
+        let blk = self.blocks[i];
+        let sub = a.slice_rows_dense(blk.start, blk.end);
+        let rhs = b[blk.start..blk.end].to_vec();
+        (sub, rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::GeneratorConfig;
+
+    #[test]
+    fn even_split() {
+        let p = PartitionPlan::contiguous(100, 10, 4).unwrap();
+        assert_eq!(p.j(), 4);
+        assert!(p.blocks.iter().all(|b| b.len() == 25));
+        assert_eq!(p.regime, PartitionRegime::Tall);
+    }
+
+    #[test]
+    fn remainder_goes_to_last_block() {
+        let p = PartitionPlan::contiguous(103, 10, 4).unwrap();
+        assert_eq!(p.blocks[0].len(), 25);
+        assert_eq!(p.blocks[3].len(), 28);
+        // blocks tile [0, m) exactly
+        let mut cursor = 0;
+        for b in &p.blocks {
+            assert_eq!(b.start, cursor);
+            cursor = b.end;
+        }
+        assert_eq!(cursor, 103);
+    }
+
+    #[test]
+    fn fat_regime_detected() {
+        let p = PartitionPlan::contiguous(64, 32, 4).unwrap();
+        assert_eq!(p.regime, PartitionRegime::Fat); // 16 rows < n=32
+        assert!(PartitionPlan::contiguous_tall(64, 32, 4).is_err());
+        assert!(PartitionPlan::contiguous_tall(64, 32, 2).is_ok());
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert!(PartitionPlan::contiguous(10, 5, 0).is_err());
+        assert!(PartitionPlan::contiguous(3, 5, 4).is_err());
+        let p = PartitionPlan::contiguous(10, 5, 1).unwrap();
+        assert_eq!(p.blocks[0].len(), 10);
+    }
+
+    #[test]
+    fn extract_matches_source() {
+        let ds = GeneratorConfig::small_demo(8, 2).generate(5);
+        let p = PartitionPlan::contiguous_tall(ds.matrix.rows(), 8, 3).unwrap();
+        let (sub, rhs) = p.extract(&ds.matrix, &ds.rhs, 1);
+        let blk = p.blocks[1];
+        assert_eq!(sub.shape(), (blk.len(), 8));
+        assert_eq!(rhs.len(), blk.len());
+        for r in 0..blk.len() {
+            for c in 0..8 {
+                assert_eq!(sub[(r, c)], ds.matrix.get(blk.start + r, c));
+            }
+            assert_eq!(rhs[r], ds.rhs[blk.start + r]);
+        }
+    }
+}

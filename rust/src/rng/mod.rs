@@ -1,0 +1,93 @@
+//! Deterministic PRNG substrate (no external `rand` crate available
+//! offline): xoshiro256++ with normal/uniform distributions.
+//!
+//! Used by the synthetic dataset generator (`sparse::generate`), the
+//! property-test harness (`benchkit::prop`) and the benches — everything
+//! that needs reproducible randomness across runs and platforms.
+
+mod xoshiro;
+
+pub use xoshiro::Xoshiro256;
+
+/// Convenience: a generator seeded from a u64 via splitmix64.
+pub fn seeded(seed: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from_u64(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = seeded(42);
+        let mut b = seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = seeded(1);
+        let mut b = seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_unit_range_and_moments() {
+        let mut g = seeded(7);
+        let n = 200_000;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for _ in 0..n {
+            let v = g.uniform_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = seeded(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = g.normal_f64();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 1e-2, "mean {mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var {var}");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut g = seeded(3);
+        for _ in 0..10_000 {
+            let v = g.gen_range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+        // degenerate single-value range
+        assert_eq!(g.gen_range(5, 6), 5);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = seeded(9);
+        let mut v: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+}

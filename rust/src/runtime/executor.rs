@@ -1,0 +1,210 @@
+//! Cross-thread PJRT executor.
+//!
+//! The PJRT client cannot leave its thread (`Rc` internals), but the
+//! coordinator runs J worker threads that all need to execute artifacts.
+//! [`XlaExecutor`] spawns one dedicated runtime thread owning a
+//! [`PjrtContext`] and serves execution requests over an mpsc channel;
+//! handles are cheap to clone and `Send`.
+//!
+//! On CPU the per-call channel overhead is ~1µs — negligible against the
+//! O(n^2) matvecs each consensus call performs (measured in §Perf).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{DapcError, Result};
+
+use super::pjrt::PjrtContext;
+use super::tensor::Tensor;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Warm {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    HasArtifact {
+        name: String,
+        reply: mpsc::Sender<bool>,
+    },
+    InitBuckets {
+        kind: String,
+        reply: mpsc::Sender<Vec<(usize, usize)>>,
+    },
+    Shutdown,
+}
+
+/// Clonable, `Send` handle to the PJRT runtime thread.
+#[derive(Clone)]
+pub struct XlaExecutor {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the runtime thread; dropping it shuts the thread down.
+pub struct XlaExecutorHost {
+    executor: XlaExecutor,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl XlaExecutorHost {
+    /// Spawn the runtime thread over an artifact directory.
+    pub fn spawn(artifacts_dir: &Path) -> Result<Self> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        // Creation errors must surface to the caller: the thread sends its
+        // init result back before entering the serve loop.
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("dapc-pjrt".into())
+            .spawn(move || {
+                let ctx = match PjrtContext::new(&dir) {
+                    Ok(c) => {
+                        let _ = init_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                serve(ctx, rx);
+            })
+            .map_err(|e| DapcError::Coordinator(e.to_string()))?;
+        init_rx
+            .recv()
+            .map_err(|_| DapcError::Coordinator("pjrt thread died".into()))??;
+        Ok(Self { executor: XlaExecutor { tx }, handle: Some(handle) })
+    }
+
+    pub fn executor(&self) -> XlaExecutor {
+        self.executor.clone()
+    }
+}
+
+impl Drop for XlaExecutorHost {
+    fn drop(&mut self) {
+        let _ = self.executor.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve(ctx: PjrtContext, rx: mpsc::Receiver<Request>) {
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute { name, inputs, reply } => {
+                let _ = reply.send(ctx.execute(&name, &inputs));
+            }
+            Request::Warm { names, reply } => {
+                let refs: Vec<&str> =
+                    names.iter().map(String::as_str).collect();
+                let _ = reply.send(ctx.warm(&refs));
+            }
+            Request::HasArtifact { name, reply } => {
+                let _ = reply.send(ctx.manifest().contains(&name));
+            }
+            Request::InitBuckets { kind, reply } => {
+                let _ = reply.send(ctx.manifest().init_buckets(&kind));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl XlaExecutor {
+    /// Execute an artifact by name (blocking).
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { name: name.into(), inputs, reply })
+            .map_err(|_| dead())?;
+        rx.recv().map_err(|_| dead())?
+    }
+
+    /// Pre-compile artifacts.
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| dead())?;
+        rx.recv().map_err(|_| dead())?
+    }
+
+    /// Whether the manifest has an artifact.
+    pub fn has_artifact(&self, name: &str) -> Result<bool> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::HasArtifact { name: name.into(), reply })
+            .map_err(|_| dead())?;
+        rx.recv().map_err(|_| dead())
+    }
+
+    /// (l, n) buckets available for an init kind.
+    pub fn init_buckets(&self, kind: &str) -> Result<Vec<(usize, usize)>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::InitBuckets { kind: kind.into(), reply })
+            .map_err(|_| dead())?;
+        rx.recv().map_err(|_| dead())
+    }
+}
+
+fn dead() -> DapcError {
+    DapcError::Coordinator("pjrt executor thread is gone".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn spawn_fails_on_missing_dir() {
+        assert!(XlaExecutorHost::spawn(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn execute_from_multiple_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let host = XlaExecutorHost::spawn(&dir).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let ex = host.executor();
+            joins.push(std::thread::spawn(move || {
+                let x = Tensor::vec1(vec![t as f32; 32]);
+                let y = Tensor::vec1(vec![0.0; 32]);
+                let out = ex.execute("mse_n32", vec![x, y]).unwrap();
+                let v = out[0].f32_data().unwrap()[0];
+                assert!((v - (t as f32).powi(2)).abs() < 1e-5);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn buckets_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let host = XlaExecutorHost::spawn(&dir).unwrap();
+        let ex = host.executor();
+        assert!(ex.has_artifact("update_n32").unwrap());
+        assert!(!ex.has_artifact("bogus").unwrap());
+        let buckets = ex.init_buckets("init_qr").unwrap();
+        assert!(buckets.contains(&(64, 32)));
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  `manifest.json` lists every AOT-lowered graph with its
+//! parameters and I/O signature; this module parses and indexes it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+use crate::error::{DapcError, Result};
+
+/// Metadata for one compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Path to the `.hlo.txt` file (absolute, resolved against the
+    /// manifest directory).
+    pub path: PathBuf,
+    /// Graph kind: init_qr | init_classical | init_fat | update | average
+    /// | round | solve | dgd_grad | mse.
+    pub kind: String,
+    /// Shape parameters (j, l, n — whichever apply to the kind).
+    pub params: BTreeMap<String, usize>,
+    /// Input shapes in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// Indexed view over all artifacts in a directory.
+#[derive(Debug, Default)]
+pub struct ArtifactManifest {
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            DapcError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON with paths resolved against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let arr = root.as_arr().ok_or_else(|| {
+            DapcError::Artifact("manifest must be a JSON array".into())
+        })?;
+        let mut by_name = BTreeMap::new();
+        for entry in arr {
+            let name = entry.req_str("name")?.to_string();
+            let file = entry.req_str("file")?;
+            let params_json = entry.get("params").ok_or_else(|| {
+                DapcError::Artifact(format!("{name}: missing params"))
+            })?;
+            let kind = params_json.req_str("kind")?.to_string();
+            let mut params = BTreeMap::new();
+            for (k, v) in params_json.as_obj().unwrap() {
+                if let Some(u) = v.as_usize() {
+                    params.insert(k.clone(), u);
+                }
+            }
+            let mut input_shapes = Vec::new();
+            if let Some(inputs) = entry.get("inputs").and_then(Json::as_arr) {
+                for inp in inputs {
+                    let shape = inp
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_usize).collect()
+                        })
+                        .unwrap_or_default();
+                    input_shapes.push(shape);
+                }
+            }
+            by_name.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    path: dir.join(file),
+                    kind,
+                    params,
+                    input_shapes,
+                },
+            );
+        }
+        Ok(Self { by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name.get(name).ok_or_else(|| {
+            DapcError::Artifact(format!(
+                "artifact {name:?} not in manifest; available: {:?}",
+                self.names().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(String::as_str)
+    }
+
+    /// All artifacts of a given kind.
+    pub fn of_kind<'a>(
+        &'a self,
+        kind: &'a str,
+    ) -> impl Iterator<Item = &'a ArtifactMeta> {
+        self.by_name.values().filter(move |m| m.kind == kind)
+    }
+
+    /// Available (l, n) buckets for a given init kind — feeds
+    /// `partition::bucket::choose_bucket`.
+    pub fn init_buckets(&self, kind: &str) -> Vec<(usize, usize)> {
+        self.of_kind(kind)
+            .filter_map(|m| Some((m.param("l")?, m.param("n")?)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+      {"name": "init_qr_l64_n32", "file": "init_qr_l64_n32.hlo.txt",
+       "params": {"kind": "init_qr", "l": 64, "n": 32},
+       "inputs": [{"shape": [64, 32], "dtype": "float32"},
+                   {"shape": [64], "dtype": "float32"}],
+       "outputs": [{"shape": [32]}, {"shape": [32, 32]}]},
+      {"name": "update_n32", "file": "update_n32.hlo.txt",
+       "params": {"kind": "update", "n": 32},
+       "inputs": [{"shape": [32]}, {"shape": [32]},
+                   {"shape": [32, 32]}, {"shape": []}]}
+    ]"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let init = m.get("init_qr_l64_n32").unwrap();
+        assert_eq!(init.kind, "init_qr");
+        assert_eq!(init.param("l"), Some(64));
+        assert_eq!(init.param("n"), Some(32));
+        assert_eq!(init.path, Path::new("/tmp/a/init_qr_l64_n32.hlo.txt"));
+        assert_eq!(init.input_shapes, vec![vec![64, 32], vec![64]]);
+        // scalar input has empty shape
+        let upd = m.get("update_n32").unwrap();
+        assert_eq!(upd.input_shapes[3], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("update_n32"), "{err}");
+    }
+
+    #[test]
+    fn kind_filter_and_buckets() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.of_kind("init_qr").count(), 1);
+        assert_eq!(m.init_buckets("init_qr"), vec![(64, 32)]);
+        assert!(m.init_buckets("init_fat").is_empty());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(ArtifactManifest::parse("{}", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse(
+            r#"[{"name": "x"}]"#,
+            Path::new(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercises the actual artifacts/ directory when present (built by
+        // `make artifacts`); skipped otherwise so unit tests stay hermetic.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.contains("update_n32"));
+            assert!(m.get("round_j2_n128").unwrap().path.exists());
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the `xla` crate's CPU
+//! client.  This is the only bridge between Layer 3 and Layers 1/2 —
+//! python never runs at request time.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shape/dtype
+//!   metadata for every compiled graph);
+//! * [`pjrt`] — thread-local context: HLO text -> compile -> execute,
+//!   with an executable cache keyed by artifact name;
+//! * [`executor`] — a `Send + Clone` handle running a dedicated executor
+//!   thread (the PJRT client is `Rc`-based and cannot cross threads), so
+//!   coordinator workers can share one compiled-executable cache;
+//! * [`tensor`] — the plain-data tensor type that crosses the channel.
+
+pub mod executor;
+pub mod manifest;
+pub mod pjrt;
+pub mod tensor;
+
+pub use executor::XlaExecutor;
+pub use manifest::{ArtifactManifest, ArtifactMeta};
+pub use pjrt::PjrtContext;
+pub use tensor::Tensor;

@@ -1,0 +1,179 @@
+//! Plain-data tensors exchanged with the PJRT executor thread.
+
+use crate::error::{DapcError, Result};
+use crate::linalg::Matrix;
+
+/// A host tensor: f32 data of arbitrary rank, or an i32 scalar (the
+/// `solve_*` artifacts take the epoch count as i32[]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32Scalar(i32),
+}
+
+impl Tensor {
+    /// Rank-0 f32 scalar.
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    /// Rank-1 vector.
+    pub fn vec1(data: Vec<f32>) -> Self {
+        Tensor::F32 { shape: vec![data.len()], data }
+    }
+
+    /// Rank-2 from a dense matrix (row-major, matching HLO default layout).
+    pub fn from_matrix(m: &Matrix) -> Self {
+        Tensor::F32 {
+            shape: vec![m.rows(), m.cols()],
+            data: m.as_slice().to_vec(),
+        }
+    }
+
+    /// Rank-3 stack of equally-shaped matrices (J x n x n projector stack).
+    pub fn from_matrices(ms: &[Matrix]) -> Result<Self> {
+        let first = ms
+            .first()
+            .ok_or_else(|| DapcError::Shape("empty matrix stack".into()))?;
+        let (r, c) = first.shape();
+        let mut data = Vec::with_capacity(ms.len() * r * c);
+        for m in ms {
+            if m.shape() != (r, c) {
+                return Err(DapcError::Shape(
+                    "ragged matrix stack".into(),
+                ));
+            }
+            data.extend_from_slice(m.as_slice());
+        }
+        Ok(Tensor::F32 { shape: vec![ms.len(), r, c], data })
+    }
+
+    /// Rank-2 from stacked rows (J x n estimate stack).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Self> {
+        let first = rows
+            .first()
+            .ok_or_else(|| DapcError::Shape("empty row stack".into()))?;
+        let n = first.len();
+        let mut data = Vec::with_capacity(rows.len() * n);
+        for r in rows {
+            if r.len() != n {
+                return Err(DapcError::Shape("ragged row stack".into()));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Tensor::F32 { shape: vec![rows.len(), n], data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } => shape,
+            Tensor::I32Scalar(_) => &[],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32Scalar(_) => 1,
+        }
+    }
+
+    /// Consume into a flat f32 vector.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32Scalar(_) => {
+                Err(DapcError::Shape("expected f32 tensor, got i32".into()))
+            }
+        }
+    }
+
+    /// Borrow the f32 data.
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32Scalar(_) => {
+                Err(DapcError::Shape("expected f32 tensor, got i32".into()))
+            }
+        }
+    }
+
+    /// View a rank-2 tensor as a Matrix (copies).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self {
+            Tensor::F32 { shape, data } if shape.len() == 2 => Ok(
+                Matrix::from_vec(shape[0], shape[1], data.clone()),
+            ),
+            Tensor::F32 { shape, .. } => Err(DapcError::Shape(format!(
+                "expected rank-2 tensor, got rank {}",
+                shape.len()
+            ))),
+            Tensor::I32Scalar(_) => {
+                Err(DapcError::Shape("expected f32 tensor, got i32".into()))
+            }
+        }
+    }
+
+    /// Split a rank-2 (J x n) tensor into J row vectors.
+    pub fn into_rows(self) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Tensor::F32 { shape, data } if shape.len() == 2 => {
+                let (j, n) = (shape[0], shape[1]);
+                Ok((0..j).map(|i| data[i * n..(i + 1) * n].to_vec()).collect())
+            }
+            other => Err(DapcError::Shape(format!(
+                "expected rank-2 tensor, got shape {:?}",
+                other.shape()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_shapes() {
+        assert_eq!(Tensor::scalar_f32(1.0).shape(), &[] as &[usize]);
+        assert_eq!(Tensor::vec1(vec![1.0, 2.0]).shape(), &[2]);
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let t = Tensor::from_matrix(&m);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.to_matrix().unwrap(), m);
+    }
+
+    #[test]
+    fn stacks() {
+        let a = Matrix::eye(2);
+        let b = Matrix::zeros(2, 2);
+        let t = Tensor::from_matrices(&[a, b]).unwrap();
+        assert_eq!(t.shape(), &[2, 2, 2]);
+        assert_eq!(t.f32_data().unwrap(), &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+
+        let rows = Tensor::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(rows.shape(), &[2, 2]);
+        assert_eq!(
+            rows.into_rows().unwrap(),
+            vec![vec![1.0, 2.0], vec![3.0, 4.0]]
+        );
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(Tensor::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(Tensor::from_matrices(&[]).is_err());
+        assert!(
+            Tensor::from_matrices(&[Matrix::eye(2), Matrix::eye(3)]).is_err()
+        );
+    }
+
+    #[test]
+    fn i32_conversions_guarded() {
+        let t = Tensor::I32Scalar(5);
+        assert!(t.f32_data().is_err());
+        assert!(t.clone().into_f32().is_err());
+        assert!(t.to_matrix().is_err());
+        assert_eq!(t.element_count(), 1);
+    }
+}

@@ -1,0 +1,581 @@
+//! Compute engines: who executes the worker math.
+//!
+//! [`NativeEngine`] runs the in-repo linalg (always available, the
+//! reference); [`XlaEngine`] executes the AOT HLO artifacts through the
+//! PJRT runtime — the production path where Layers 1/2 live.  Both expose
+//! the same operations so solvers and the coordinator are engine-generic,
+//! and the integration tests assert they agree numerically.
+
+use crate::error::{DapcError, Result};
+use crate::linalg::{blas, inverse, qr, triangular, Matrix};
+use crate::partition::pad_to_bucket;
+use crate::runtime::{Tensor, XlaExecutor};
+
+/// Which worker initialization to run (Algorithm 1 steps 2-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    /// Paper's decomposition: QR + backward substitution (eqs. (1)-(4)).
+    Qr,
+    /// Classical APC: Gram matrix + Gauss-Jordan inverse.
+    Classical,
+    /// Original-APC fat regime: QR of A^T, genuine projector.
+    Fat,
+}
+
+impl InitKind {
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            InitKind::Qr => "init_qr",
+            InitKind::Classical => "init_classical",
+            InitKind::Fat => "init_fat",
+        }
+    }
+}
+
+/// Worker-side init output: initial estimate + projector.
+#[derive(Debug, Clone)]
+pub struct WorkerInit {
+    pub x0: Vec<f32>,
+    pub projector: Matrix,
+}
+
+/// Engine-agnostic operations used by the solvers and the coordinator.
+pub trait ComputeEngine {
+    /// Initialize one partition (dense block `a`, rhs `b`).
+    ///
+    /// `n_target` is the solution dimension the consensus loop will run at
+    /// (engines that pad to shape buckets return padded outputs of exactly
+    /// this width).
+    fn init(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        b: &[f32],
+        n_target: usize,
+    ) -> Result<WorkerInit>;
+
+    /// Eq. (6) for one partition: `x + gamma * P (xbar - x)`.
+    fn update(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Eq. (7): `eta * mean_j x_j + (1 - eta) * xbar`.
+    fn average(&self, xs: &[Vec<f32>], xbar: &[f32], eta: f32) -> Result<Vec<f32>>;
+
+    /// One fused epoch over all partitions; default = update-all + average.
+    fn round(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let mut new_xs = Vec::with_capacity(xs.len());
+        for (x, p) in xs.iter().zip(ps) {
+            new_xs.push(self.update(x, xbar, p, gamma)?);
+        }
+        let new_xbar = self.average(&new_xs, xbar, eta)?;
+        Ok((new_xs, new_xbar))
+    }
+
+    /// T fused epochs in one call when the engine supports it (the XLA
+    /// engine runs the whole loop inside a single executable); `None`
+    /// means the caller should iterate [`Self::round`].
+    fn solve_loop(
+        &self,
+        _xs: &[Vec<f32>],
+        _xbar: &[f32],
+        _ps: &[Matrix],
+        _gamma: f32,
+        _eta: f32,
+        _epochs: usize,
+    ) -> Result<Option<(Vec<Vec<f32>>, Vec<f32>)>> {
+        Ok(None)
+    }
+
+    /// DGD worker gradient `A^T (A x - b)`.
+    fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>>;
+
+    /// The (l_pad, n_pad) bucket this engine needs for a block of shape
+    /// (rows, n), or `None` when exact shapes are fine.
+    fn init_bucket(
+        &self,
+        _kind: InitKind,
+        _rows: usize,
+        _n: usize,
+    ) -> Result<Option<(usize, usize)>> {
+        Ok(None)
+    }
+
+    /// Engine label for reports.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Native engine
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust engine over `crate::linalg` — the correctness reference.
+#[derive(Debug, Default, Clone)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn init(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        b: &[f32],
+        n_target: usize,
+    ) -> Result<WorkerInit> {
+        let n = a.cols();
+        if n != n_target {
+            return Err(DapcError::Shape(format!(
+                "native engine expects n_target == n ({n_target} != {n})"
+            )));
+        }
+        match kind {
+            InitKind::Qr => {
+                // Paper eqs. (1)-(4): A = Q1 R, x0 = R^{-1} Q1^T b by
+                // backward substitution, P = I - Q1^T Q1.
+                let f = qr::householder_qr(a);
+                let c = qr::qt_mul(&f, b);
+                let x0 = triangular::back_substitute(&f.r, &c);
+                let qtq = blas::gemm_tn(&f.q1, &f.q1);
+                let mut p = Matrix::eye(n);
+                for i in 0..n {
+                    for j in 0..n {
+                        p[(i, j)] -= qtq[(i, j)];
+                    }
+                }
+                Ok(WorkerInit { x0, projector: p })
+            }
+            InitKind::Classical => {
+                // x0 = (A^T A)^{-1} A^T b ; P = I - G^{-1} G (numeric),
+                // in f64 like the paper's NumPy baseline — the normal
+                // equations square kappa(A), which in f32 makes the
+                // projector noise large enough to diverge (DESIGN.md §1).
+                let (x0, p) = inverse::classical_init_f64(a, b)?;
+                Ok(WorkerInit { x0, projector: p })
+            }
+            InitKind::Fat => {
+                // A^T = Q R; x0 = Q R^{-T} b; P = I - Q Q^T.
+                let at = a.transpose();
+                let f = qr::householder_qr(&at);
+                let c = triangular::forward_substitute(&f.r.transpose(), b);
+                let mut x0 = vec![0.0f32; n];
+                blas::gemv(&f.q1, &c, &mut x0);
+                let qqt = blas::gemm(&f.q1, &f.q1.transpose());
+                let mut p = Matrix::eye(n);
+                for i in 0..n {
+                    for j in 0..n {
+                        p[(i, j)] -= qqt[(i, j)];
+                    }
+                }
+                Ok(WorkerInit { x0, projector: p })
+            }
+        }
+    }
+
+    fn update(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let n = x.len();
+        let d: Vec<f32> = xbar.iter().zip(x).map(|(a, b)| a - b).collect();
+        let mut pd = vec![0.0f32; n];
+        blas::gemv(p, &d, &mut pd);
+        Ok(x.iter().zip(&pd).map(|(xi, pi)| xi + gamma * pi).collect())
+    }
+
+    fn average(&self, xs: &[Vec<f32>], xbar: &[f32], eta: f32) -> Result<Vec<f32>> {
+        let j = xs.len() as f64;
+        let n = xbar.len();
+        let mut out = vec![0.0f32; n];
+        for i in 0..n {
+            let mean: f64 =
+                xs.iter().map(|x| x[i] as f64).sum::<f64>() / j;
+            out[i] = (eta as f64 * mean + (1.0 - eta as f64) * xbar[i] as f64)
+                as f32;
+        }
+        Ok(out)
+    }
+
+    fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let mut ax = vec![0.0f32; a.rows()];
+        blas::gemv(a, x, &mut ax);
+        for (axi, bi) in ax.iter_mut().zip(b) {
+            *axi -= bi;
+        }
+        let mut g = vec![0.0f32; a.cols()];
+        blas::gemv_t(a, &ax, &mut g);
+        Ok(g)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA engine
+// ---------------------------------------------------------------------------
+
+/// Engine executing AOT HLO artifacts through the PJRT runtime (the
+/// Layer-1/2 production path).  Blocks are padded to manifest buckets;
+/// padding is exact (DESIGN.md §3).
+#[derive(Clone)]
+pub struct XlaEngine {
+    exec: XlaExecutor,
+    /// Use the per-epoch fused `round_*` artifacts when available.
+    pub fused_rounds: bool,
+    /// Use the whole-loop `solve_*` artifacts when available.
+    pub fused_loop: bool,
+}
+
+impl XlaEngine {
+    pub fn new(exec: XlaExecutor) -> Self {
+        Self { exec, fused_rounds: true, fused_loop: false }
+    }
+
+    pub fn executor(&self) -> &XlaExecutor {
+        &self.exec
+    }
+
+    fn n_of(&self, xbar: &[f32]) -> usize {
+        xbar.len()
+    }
+}
+
+impl ComputeEngine for XlaEngine {
+    fn init(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        b: &[f32],
+        n_target: usize,
+    ) -> Result<WorkerInit> {
+        let akind = kind.artifact_kind();
+        // pad to the bucket whose n equals n_target
+        let buckets = self.exec.init_buckets(akind)?;
+        let (rows, n) = a.shape();
+        let (l_pad, n_pad) = buckets
+            .iter()
+            .copied()
+            .filter(|&(l, np)| np == n_target && l >= rows + (np - n))
+            .min_by_key(|&(l, _)| l)
+            .ok_or_else(|| {
+                DapcError::Artifact(format!(
+                    "no {akind} artifact with n={n_target} fitting {rows}x{n}; \
+                     available buckets: {buckets:?} (rebuild with \
+                     `make artifacts` and a matching shape manifest)"
+                ))
+            })?;
+        let blk = pad_to_bucket(a, b, l_pad, n_pad)?;
+        let name = format!("{akind}_l{l_pad}_n{n_pad}");
+        let out = self.exec.execute(
+            &name,
+            vec![Tensor::from_matrix(&blk.a), Tensor::vec1(blk.b.clone())],
+        )?;
+        let [x0, p]: [Tensor; 2] = out.try_into().map_err(|_| {
+            DapcError::Artifact(format!("{name}: expected 2 outputs"))
+        })?;
+        Ok(WorkerInit { x0: x0.into_f32()?, projector: p.to_matrix()? })
+    }
+
+    fn update(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let n = self.n_of(xbar);
+        let name = format!("update_n{n}");
+        let out = self.exec.execute(
+            &name,
+            vec![
+                Tensor::vec1(x.to_vec()),
+                Tensor::vec1(xbar.to_vec()),
+                Tensor::from_matrix(p),
+                Tensor::scalar_f32(gamma),
+            ],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| DapcError::Artifact(format!("{name}: no output")))?
+            .into_f32()
+    }
+
+    fn average(&self, xs: &[Vec<f32>], xbar: &[f32], eta: f32) -> Result<Vec<f32>> {
+        let (j, n) = (xs.len(), self.n_of(xbar));
+        let name = format!("average_j{j}_n{n}");
+        if !self.exec.has_artifact(&name)? {
+            // eq. (7) is a leader-side O(Jn) reduction; when no artifact
+            // was AOT-built for this J we compute it natively — exactly
+            // what the distributed leader does on its side of the wire.
+            return NativeEngine::new().average(xs, xbar, eta);
+        }
+        let out = self.exec.execute(
+            &name,
+            vec![
+                Tensor::from_rows(xs)?,
+                Tensor::vec1(xbar.to_vec()),
+                Tensor::scalar_f32(eta),
+            ],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| DapcError::Artifact(format!("{name}: no output")))?
+            .into_f32()
+    }
+
+    fn round(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let (j, n) = (xs.len(), self.n_of(xbar));
+        let name = format!("round_j{j}_n{n}");
+        if !self.fused_rounds || !self.exec.has_artifact(&name)? {
+            // fall back to per-op path
+            let mut new_xs = Vec::with_capacity(xs.len());
+            for (x, p) in xs.iter().zip(ps) {
+                new_xs.push(self.update(x, xbar, p, gamma)?);
+            }
+            let new_xbar = self.average(&new_xs, xbar, eta)?;
+            return Ok((new_xs, new_xbar));
+        }
+        let out = self.exec.execute(
+            &name,
+            vec![
+                Tensor::from_rows(xs)?,
+                Tensor::vec1(xbar.to_vec()),
+                Tensor::from_matrices(ps)?,
+                Tensor::scalar_f32(gamma),
+                Tensor::scalar_f32(eta),
+            ],
+        )?;
+        let [xs_t, xbar_t]: [Tensor; 2] = out.try_into().map_err(|_| {
+            DapcError::Artifact(format!("{name}: expected 2 outputs"))
+        })?;
+        Ok((xs_t.into_rows()?, xbar_t.into_f32()?))
+    }
+
+    fn solve_loop(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        epochs: usize,
+    ) -> Result<Option<(Vec<Vec<f32>>, Vec<f32>)>> {
+        let (j, n) = (xs.len(), self.n_of(xbar));
+        let name = format!("solve_j{j}_n{n}");
+        if !self.fused_loop || !self.exec.has_artifact(&name)? {
+            return Ok(None);
+        }
+        let out = self.exec.execute(
+            &name,
+            vec![
+                Tensor::from_rows(xs)?,
+                Tensor::vec1(xbar.to_vec()),
+                Tensor::from_matrices(ps)?,
+                Tensor::scalar_f32(gamma),
+                Tensor::scalar_f32(eta),
+                Tensor::I32Scalar(epochs as i32),
+            ],
+        )?;
+        let [xs_t, xbar_t]: [Tensor; 2] = out.try_into().map_err(|_| {
+            DapcError::Artifact(format!("{name}: expected 2 outputs"))
+        })?;
+        Ok(Some((xs_t.into_rows()?, xbar_t.into_f32()?)))
+    }
+
+    fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (rows, n) = a.shape();
+        // pad to the nearest dgd_grad bucket: zero rows contribute nothing
+        // to A^T (A x - b) (b padded with zeros), identity-extended columns
+        // produce zero gradient entries which we truncate below.
+        let buckets = self.exec.init_buckets("dgd_grad")?;
+        let (l_pad, n_pad) =
+            crate::partition::bucket::choose_bucket(rows, n, &buckets)
+                .ok_or_else(|| {
+                    DapcError::Artifact(format!(
+                        "no dgd_grad artifact fits {rows}x{n}; buckets: \
+                         {buckets:?}"
+                    ))
+                })?;
+        let blk = pad_to_bucket(a, b, l_pad, n_pad)?;
+        let mut x_pad = x.to_vec();
+        x_pad.resize(n_pad, 0.0);
+        let name = format!("dgd_grad_l{l_pad}_n{n_pad}");
+        let out = self.exec.execute(
+            &name,
+            vec![
+                Tensor::from_matrix(&blk.a),
+                Tensor::vec1(x_pad),
+                Tensor::vec1(blk.b.clone()),
+            ],
+        )?;
+        let mut g = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| DapcError::Artifact(format!("{name}: no output")))?
+            .into_f32()?;
+        g.truncate(n);
+        Ok(g)
+    }
+
+    fn init_bucket(
+        &self,
+        kind: InitKind,
+        rows: usize,
+        n: usize,
+    ) -> Result<Option<(usize, usize)>> {
+        let buckets = self.exec.init_buckets(kind.artifact_kind())?;
+        Ok(crate::partition::bucket::choose_bucket(rows, n, &buckets))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::bucket;
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    fn consistent(l: usize, n: usize, seed: u64) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let a = randm(l, n, seed);
+        let mut g = seeded(seed + 1);
+        let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; l];
+        blas::gemv(&a, &x, &mut b);
+        (a, b, x)
+    }
+
+    #[test]
+    fn native_init_qr_solves() {
+        let (a, b, x_true) = consistent(48, 16, 1);
+        let e = NativeEngine::new();
+        let init = e.init(InitKind::Qr, &a, &b, 16).unwrap();
+        for i in 0..16 {
+            assert!((init.x0[i] - x_true[i]).abs() < 1e-2, "i={i}");
+        }
+        // tall regime: projector is rounding noise
+        assert!(crate::linalg::norms::max_abs(init.projector.as_slice()) < 1e-3);
+    }
+
+    #[test]
+    fn native_init_classical_solves() {
+        let (a, b, x_true) = consistent(48, 16, 2);
+        let e = NativeEngine::new();
+        let init = e.init(InitKind::Classical, &a, &b, 16).unwrap();
+        for i in 0..16 {
+            assert!((init.x0[i] - x_true[i]).abs() < 5e-2, "i={i}");
+        }
+    }
+
+    #[test]
+    fn native_init_fat_min_norm() {
+        let (a, b, _) = consistent(8, 24, 3);
+        let e = NativeEngine::new();
+        let init = e.init(InitKind::Fat, &a, &b, 24).unwrap();
+        // residual ~ 0
+        let mut ax = vec![0.0f32; 8];
+        blas::gemv(&a, &init.x0, &mut ax);
+        for i in 0..8 {
+            assert!((ax[i] - b[i]).abs() < 1e-3);
+        }
+        // projector idempotent with trace = n - l
+        let pp = blas::gemm(&init.projector, &init.projector);
+        assert!(pp.max_abs_diff(&init.projector) < 1e-3);
+        let tr: f32 = (0..24).map(|i| init.projector[(i, i)]).sum();
+        assert!((tr - 16.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn native_update_and_average_semantics() {
+        let e = NativeEngine::new();
+        let x = vec![1.0f32, 2.0];
+        let xbar = vec![3.0f32, 4.0];
+        let p = Matrix::eye(2);
+        // gamma 0.5, P = I: x + 0.5 (xbar - x) = midpoint
+        let up = e.update(&x, &xbar, &p, 0.5).unwrap();
+        assert_eq!(up, vec![2.0, 3.0]);
+        // eta = 1: plain mean
+        let avg = e
+            .average(&[vec![0.0, 0.0], vec![2.0, 4.0]], &xbar, 1.0)
+            .unwrap();
+        assert_eq!(avg, vec![1.0, 2.0]);
+        // eta = 0: keep xbar
+        let keep = e
+            .average(&[vec![9.0, 9.0]], &xbar, 0.0)
+            .unwrap();
+        assert_eq!(keep, xbar);
+    }
+
+    #[test]
+    fn native_round_consistent_with_parts() {
+        let e = NativeEngine::new();
+        let mut g = seeded(5);
+        let n = 12;
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let ps: Vec<Matrix> =
+            (0..3).map(|i| randm(n, n, 40 + i)).collect();
+        let (xs2, xbar2) = e.round(&xs, &xbar, &ps, 0.7, 0.4).unwrap();
+        // manual
+        let mut manual = Vec::new();
+        for (x, p) in xs.iter().zip(&ps) {
+            manual.push(e.update(x, &xbar, p, 0.7).unwrap());
+        }
+        let manual_avg = e.average(&manual, &xbar, 0.4).unwrap();
+        assert_eq!(xs2, manual);
+        assert_eq!(xbar2, manual_avg);
+    }
+
+    #[test]
+    fn native_dgd_grad_zero_at_solution() {
+        let (a, b, x_true) = consistent(20, 8, 7);
+        let e = NativeEngine::new();
+        let g = e.dgd_grad(&a, &x_true, &b).unwrap();
+        assert!(crate::linalg::norms::max_abs(&g) < 1e-3);
+    }
+
+    #[test]
+    fn bucket_helper_exposed() {
+        // choose_bucket re-export sanity
+        assert_eq!(
+            bucket::choose_bucket(10, 4, &[(16, 4)]),
+            Some((16, 4))
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Solvers: the paper's decomposed APC, the classical APC baseline and
+//! distributed gradient descent, all generic over a [`ComputeEngine`]
+//! (native Rust linalg or AOT HLO artifacts on PJRT).
+//!
+//! The single-process path lives here (used by benches and most examples);
+//! the multi-worker leader/worker path in [`crate::coordinator`] reuses
+//! the same engines and produces identical iterates.
+
+mod consensus;
+mod dgd;
+mod engine;
+mod report;
+
+pub use consensus::{ApcClassicalSolver, ApcVariant, DapcSolver};
+pub use dgd::DgdSolver;
+pub use engine::{ComputeEngine, InitKind, NativeEngine, XlaEngine};
+pub use report::{SolveOptions, SolveReport};
+
+use crate::error::Result;
+use crate::sparse::CsrMatrix;
+
+/// Common interface over all three algorithms.
+pub trait Solver {
+    /// Solve `A x = b` split into `j` partitions, returning the averaged
+    /// solution and run metadata.
+    fn solve<E: ComputeEngine>(
+        &self,
+        engine: &E,
+        a: &CsrMatrix,
+        b: &[f32],
+        j: usize,
+    ) -> Result<SolveReport>;
+
+    /// Human-readable name for reports/tables.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,120 @@
+//! Solve options and the report returned by every solver.
+
+use std::time::Duration;
+
+use crate::linalg::norms;
+use crate::metrics::ConvergenceTrace;
+
+/// Hyper-parameters and run controls shared by all solvers.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Consensus epochs T (or gradient steps for DGD).
+    pub epochs: usize,
+    /// Eq. (7) mixing weight.
+    pub eta: f32,
+    /// Eq. (6) projection step.
+    pub gamma: f32,
+    /// DGD step size.
+    pub dgd_step: f32,
+    /// Record a per-epoch MSE trace against `x_true` (Fig. 2); requires
+    /// `x_true`.
+    pub x_true: Option<Vec<f32>>,
+    /// Try the engine's whole-loop fused path (single executable for all
+    /// T epochs). Ignored when a trace is requested.
+    pub fused_loop: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            epochs: 80,
+            eta: 0.9,
+            gamma: 0.9,
+            dgd_step: 1e-3,
+            x_true: None,
+            fused_loop: false,
+        }
+    }
+}
+
+/// Result of a solver run.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// Averaged solution vector (paper's output, eq. (7) at epoch T).
+    pub xbar: Vec<f32>,
+    /// Per-partition final estimates.
+    pub x_parts: Vec<Vec<f32>>,
+    /// MSE-per-epoch trace when `x_true` was provided.
+    pub trace: Option<ConvergenceTrace>,
+    /// Initialization wall time (QR / inversion phase).
+    pub init_time: Duration,
+    /// Consensus-iteration wall time.
+    pub iterate_time: Duration,
+    /// Algorithm label.
+    pub algorithm: &'static str,
+    /// Engine label.
+    pub engine: &'static str,
+    /// Epochs actually run.
+    pub epochs: usize,
+}
+
+impl SolveReport {
+    /// Total solver wall time.
+    pub fn total_time(&self) -> Duration {
+        self.init_time + self.iterate_time
+    }
+
+    /// MSE of the averaged solution against a reference.
+    pub fn final_mse(&self, x_true: &[f32]) -> f64 {
+        norms::mse(&self.xbar, x_true)
+    }
+
+    /// MAE between two successive solutions (paper §5 sanity check).
+    pub fn mae_against(&self, other: &[f32]) -> f64 {
+        norms::mae(&self.xbar, other)
+    }
+
+    /// One summary line for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] epochs={} init={:.3}s iterate={:.3}s total={:.3}s",
+            self.algorithm,
+            self.engine,
+            self.epochs,
+            self.init_time.as_secs_f64(),
+            self.iterate_time.as_secs_f64(),
+            self.total_time().as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let o = SolveOptions::default();
+        assert!(o.eta > 0.0 && o.eta <= 1.0);
+        assert!(o.gamma > 0.0 && o.gamma <= 1.0);
+        assert!(o.epochs > 0);
+    }
+
+    #[test]
+    fn report_accessors() {
+        let r = SolveReport {
+            xbar: vec![1.0, 1.0],
+            x_parts: vec![],
+            trace: None,
+            init_time: Duration::from_millis(500),
+            iterate_time: Duration::from_millis(1500),
+            algorithm: "dapc-decomposed",
+            engine: "native",
+            epochs: 10,
+        };
+        assert_eq!(r.total_time(), Duration::from_secs(2));
+        assert!((r.final_mse(&[0.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((r.mae_against(&[0.0, 2.0]) - 1.0).abs() < 1e-12);
+        assert!(r.summary().contains("dapc-decomposed"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Coordinate-format sparse matrix (assembly format; converts to CSR).
+
+use crate::error::{DapcError, Result};
+
+use super::CsrMatrix;
+
+/// COO triplet storage. Duplicate entries are summed on conversion to CSR
+/// (MatrixMarket semantics).
+#[derive(Debug, Clone, Default)]
+pub struct CooMatrix {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(usize, usize, f32)>,
+}
+
+impl CooMatrix {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored triplets (before duplicate summing).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Append one entry; bounds-checked.
+    pub fn push(&mut self, row: usize, col: usize, value: f32) -> Result<()> {
+        if row >= self.rows || col >= self.cols {
+            return Err(DapcError::Shape(format!(
+                "entry ({row},{col}) out of bounds for {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        self.entries.push((row, col, value));
+        Ok(())
+    }
+
+    /// Borrow the raw triplets.
+    pub fn entries(&self) -> &[(usize, usize, f32)] {
+        &self.entries
+    }
+
+    /// Convert to CSR, summing duplicates and dropping explicit zeros.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut sorted = self.entries.clone();
+        sorted.sort_unstable_by_key(|&(r, c, _)| (r, c));
+
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::with_capacity(sorted.len());
+        let mut values = Vec::with_capacity(sorted.len());
+        indptr.push(0usize);
+
+        let mut cur_row = 0usize;
+        let mut i = 0usize;
+        while i < sorted.len() {
+            let (r, c, _) = sorted[i];
+            while cur_row < r {
+                indptr.push(indices.len());
+                cur_row += 1;
+            }
+            // sum duplicates at (r, c)
+            let mut v = 0.0f32;
+            while i < sorted.len() && sorted[i].0 == r && sorted[i].1 == c {
+                v += sorted[i].2;
+                i += 1;
+            }
+            if v != 0.0 {
+                indices.push(c);
+                values.push(v);
+            }
+        }
+        while cur_row < self.rows {
+            indptr.push(indices.len());
+            cur_row += 1;
+        }
+        CsrMatrix::from_raw(self.rows, self.cols, indptr, indices, values)
+            .expect("COO->CSR conversion produced invalid structure")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_convert() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0).unwrap();
+        m.push(2, 1, 5.0).unwrap();
+        m.push(1, 2, -2.0).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.get(0, 0), 1.0);
+        assert_eq!(csr.get(2, 1), 5.0);
+        assert_eq!(csr.get(1, 2), -2.0);
+        assert_eq!(csr.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn duplicates_summed_zeros_dropped() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 0, 1.5).unwrap();
+        m.push(0, 0, 2.5).unwrap();
+        m.push(1, 1, 3.0).unwrap();
+        m.push(1, 1, -3.0).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.get(0, 0), 4.0);
+        assert_eq!(csr.nnz(), 1); // the cancelled entry is dropped
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut m = CooMatrix::new(2, 2);
+        assert!(m.push(2, 0, 1.0).is_err());
+        assert!(m.push(0, 2, 1.0).is_err());
+    }
+
+    #[test]
+    fn empty_rows_have_empty_ranges() {
+        let mut m = CooMatrix::new(4, 4);
+        m.push(3, 3, 1.0).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.row_nnz(0), 0);
+        assert_eq!(csr.row_nnz(1), 0);
+        assert_eq!(csr.row_nnz(3), 1);
+    }
+}

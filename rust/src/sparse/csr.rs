@@ -1,0 +1,299 @@
+//! Compressed Sparse Row matrix — the storage format the paper's pipeline
+//! keeps `A` in between partitioning steps (scipy `csr_matrix` analog).
+
+use crate::error::{DapcError, Result};
+use crate::linalg::Matrix;
+
+/// CSR sparse matrix over f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR arrays, validating the structure.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 {
+            return Err(DapcError::Shape(format!(
+                "indptr length {} != rows+1 = {}",
+                indptr.len(),
+                rows + 1
+            )));
+        }
+        if indices.len() != values.len() {
+            return Err(DapcError::Shape(
+                "indices/values length mismatch".into(),
+            ));
+        }
+        if *indptr.last().unwrap_or(&0) != indices.len() {
+            return Err(DapcError::Shape(
+                "indptr tail does not match nnz".into(),
+            ));
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(DapcError::Shape("indptr not monotone".into()));
+        }
+        if indices.iter().any(|&c| c >= cols) {
+            return Err(DapcError::Shape("column index out of bounds".into()));
+        }
+        Ok(Self { rows, cols, indptr, indices, values })
+    }
+
+    /// Build from a dense matrix, keeping nonzeros.
+    pub fn from_dense(m: &Matrix) -> Self {
+        let (rows, cols) = m.shape();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Nonzeros in row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Sparsity percentage (the paper quotes 99.85 for c-27).
+    pub fn sparsity_pct(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.nnz() as f64 / total)
+    }
+
+    /// Value at (i, j) — O(log nnz_row) binary search.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        match self.indices[lo..hi].binary_search(&j) {
+            Ok(k) => self.values[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row `i` as (indices, values) slices.
+    pub fn row(&self, i: usize) -> (&[usize], &[f32]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Sparse mat-vec `y = A x`.
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let mut acc = 0.0f64;
+            for (&j, &v) in idx.iter().zip(vals) {
+                acc += v as f64 * x[j] as f64;
+            }
+            y[i] = acc as f32;
+        }
+    }
+
+    /// Rows `[start, end)` densified — the paper's `create_submatrices`
+    /// does exactly this (`A[lo:hi, :].toarray()`).
+    pub fn slice_rows_dense(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        let mut out = Matrix::zeros(end - start, self.cols);
+        for i in start..end {
+            let (idx, vals) = self.row(i);
+            let row = out.row_mut(i - start);
+            for (&j, &v) in idx.iter().zip(vals) {
+                row[j] = v;
+            }
+        }
+        out
+    }
+
+    /// Full densification.
+    pub fn to_dense(&self) -> Matrix {
+        self.slice_rows_dense(0, self.rows)
+    }
+
+    /// Vertically stack two CSR matrices (used to build `[A; D_A]`, eq. 8).
+    pub fn vstack(&self, other: &CsrMatrix) -> Result<CsrMatrix> {
+        if self.cols != other.cols {
+            return Err(DapcError::Shape(format!(
+                "vstack column mismatch: {} vs {}",
+                self.cols, other.cols
+            )));
+        }
+        let mut indptr = self.indptr.clone();
+        let offset = *indptr.last().unwrap();
+        indptr.extend(other.indptr[1..].iter().map(|&p| p + offset));
+        let mut indices = self.indices.clone();
+        indices.extend_from_slice(&other.indices);
+        let mut values = self.values.clone();
+        values.extend_from_slice(&other.values);
+        CsrMatrix::from_raw(self.rows + other.rows, self.cols, indptr, indices, values)
+    }
+
+    /// Structural rank lower bound: rows with at least one nonzero.
+    /// (Cheap sanity check used by the partitioner; exact numeric rank is
+    /// established by the QR init itself.)
+    pub fn nonempty_rows(&self) -> usize {
+        (0..self.rows).filter(|&i| self.row_nnz(i) > 0).count()
+    }
+
+    /// Mean of stored values (paper §5 reports dataset mu/sigma over the
+    /// full dense matrix, zeros included).
+    pub fn dense_mean(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.values.iter().map(|&v| v as f64).sum::<f64>() / total
+    }
+
+    /// Std-dev of the dense view (zeros included).
+    pub fn dense_std(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let mean = self.dense_mean();
+        let sq: f64 = self.values.iter().map(|&v| (v as f64).powi(2)).sum();
+        // E[x^2] - mean^2 over the dense entries (zeros contribute 0 to sq)
+        (sq / total - mean * mean).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::seeded;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2], [0, 0, 0], [3, 4, 0]]
+        CsrMatrix::from_raw(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn structure_validation() {
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 2], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn get_and_row() {
+        let m = sample();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(2, 1), 4.0);
+        let (idx, vals) = m.row(2);
+        assert_eq!(idx, &[0, 1]);
+        assert_eq!(vals, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [0.0f32; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 0.0, 11.0]);
+        let d = m.to_dense();
+        let mut yd = [0.0f32; 3];
+        crate::linalg::blas::gemv(&d, &x, &mut yd);
+        assert_eq!(y, yd);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut g = seeded(8);
+        let d = Matrix::from_fn(10, 6, |_, _| {
+            if g.uniform_f64() < 0.2 {
+                g.normal_f32()
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMatrix::from_dense(&d);
+        assert_eq!(csr.to_dense(), d);
+    }
+
+    #[test]
+    fn slice_rows_matches_paper_semantics() {
+        let m = sample();
+        let sl = m.slice_rows_dense(1, 3);
+        assert_eq!(sl.shape(), (2, 3));
+        assert_eq!(sl.row(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(sl.row(1), &[3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn vstack_layout() {
+        let m = sample();
+        let s = m.vstack(&m).unwrap();
+        assert_eq!(s.shape(), (6, 3));
+        assert_eq!(s.get(3, 0), 1.0);
+        assert_eq!(s.get(5, 1), 4.0);
+        assert_eq!(s.nnz(), 8);
+        // mismatched cols
+        let other = CsrMatrix::from_raw(1, 2, vec![0, 0], vec![], vec![]).unwrap();
+        assert!(m.vstack(&other).is_err());
+    }
+
+    #[test]
+    fn sparsity_stats() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert!((m.sparsity_pct() - 100.0 * (1.0 - 4.0 / 9.0)).abs() < 1e-9);
+        assert_eq!(m.nonempty_rows(), 2);
+        assert!((m.dense_mean() - 10.0 / 9.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,293 @@
+//! MatrixMarket (.mtx) reader/writer.
+//!
+//! Supports the subset the SuiteSparse `c-*` datasets use: `matrix
+//! coordinate real {general|symmetric}` plus `array` format for dense
+//! vectors (the paper reads both `A` and `b` with `scipy.io.mmread`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::error::{DapcError, Result};
+
+use super::{CooMatrix, CsrMatrix};
+
+/// Parsed header of a MatrixMarket file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MmHeader {
+    pub format: MmFormat,
+    pub symmetric: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmFormat {
+    Coordinate,
+    Array,
+}
+
+fn parse_header(line: &str) -> Result<MmHeader> {
+    let lower = line.to_ascii_lowercase();
+    let toks: Vec<&str> = lower.split_whitespace().collect();
+    if toks.len() < 4 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
+        return Err(DapcError::Parse(format!(
+            "invalid MatrixMarket header: {line:?}"
+        )));
+    }
+    let format = match toks[2] {
+        "coordinate" => MmFormat::Coordinate,
+        "array" => MmFormat::Array,
+        other => {
+            return Err(DapcError::Parse(format!(
+                "unsupported MatrixMarket format {other:?}"
+            )))
+        }
+    };
+    match toks[3] {
+        "real" | "integer" | "double" => {}
+        other => {
+            return Err(DapcError::Parse(format!(
+                "unsupported MatrixMarket field {other:?}"
+            )))
+        }
+    }
+    let symmetric = match toks.get(4).copied().unwrap_or("general") {
+        "general" => false,
+        "symmetric" => true,
+        other => {
+            return Err(DapcError::Parse(format!(
+                "unsupported MatrixMarket symmetry {other:?}"
+            )))
+        }
+    };
+    Ok(MmHeader { format, symmetric })
+}
+
+/// Read a sparse matrix from a MatrixMarket file.
+pub fn read_matrix(path: &Path) -> Result<CsrMatrix> {
+    let file = std::fs::File::open(path)?;
+    read_matrix_from(BufReader::new(file))
+}
+
+/// Read a sparse matrix from any buffered reader (unit-testable).
+pub fn read_matrix_from<R: BufRead>(reader: R) -> Result<CsrMatrix> {
+    let mut lines = reader.lines();
+    let header_line = lines
+        .next()
+        .ok_or_else(|| DapcError::Parse("empty MatrixMarket file".into()))??;
+    let header = parse_header(&header_line)?;
+
+    let mut data_lines = lines
+        .filter_map(|l| l.ok())
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('%'));
+
+    let size_line = data_lines
+        .next()
+        .ok_or_else(|| DapcError::Parse("missing size line".into()))?;
+    let dims: Vec<&str> = size_line.split_whitespace().collect();
+
+    match header.format {
+        MmFormat::Coordinate => {
+            if dims.len() != 3 {
+                return Err(DapcError::Parse(format!(
+                    "bad coordinate size line: {size_line:?}"
+                )));
+            }
+            let rows: usize = dims[0].parse().map_err(|_| bad_num(dims[0]))?;
+            let cols: usize = dims[1].parse().map_err(|_| bad_num(dims[1]))?;
+            let nnz: usize = dims[2].parse().map_err(|_| bad_num(dims[2]))?;
+            let mut coo = CooMatrix::new(rows, cols);
+            let mut count = 0usize;
+            for line in data_lines {
+                let t: Vec<&str> = line.split_whitespace().collect();
+                if t.len() < 2 {
+                    return Err(DapcError::Parse(format!("bad entry: {line:?}")));
+                }
+                let r: usize = t[0].parse().map_err(|_| bad_num(t[0]))?;
+                let c: usize = t[1].parse().map_err(|_| bad_num(t[1]))?;
+                let v: f32 = if t.len() > 2 {
+                    t[2].parse().map_err(|_| bad_num(t[2]))?
+                } else {
+                    1.0 // pattern matrices
+                };
+                if r == 0 || c == 0 {
+                    return Err(DapcError::Parse(
+                        "MatrixMarket indices are 1-based; got 0".into(),
+                    ));
+                }
+                coo.push(r - 1, c - 1, v)?;
+                if header.symmetric && r != c {
+                    coo.push(c - 1, r - 1, v)?;
+                }
+                count += 1;
+            }
+            if count != nnz {
+                return Err(DapcError::Parse(format!(
+                    "expected {nnz} entries, found {count}"
+                )));
+            }
+            Ok(coo.to_csr())
+        }
+        MmFormat::Array => {
+            if dims.len() != 2 {
+                return Err(DapcError::Parse(format!(
+                    "bad array size line: {size_line:?}"
+                )));
+            }
+            let rows: usize = dims[0].parse().map_err(|_| bad_num(dims[0]))?;
+            let cols: usize = dims[1].parse().map_err(|_| bad_num(dims[1]))?;
+            let mut vals = Vec::with_capacity(rows * cols);
+            for line in data_lines {
+                for tok in line.split_whitespace() {
+                    vals.push(tok.parse::<f32>().map_err(|_| bad_num(tok))?);
+                }
+            }
+            if vals.len() != rows * cols {
+                return Err(DapcError::Parse(format!(
+                    "expected {} array values, found {}",
+                    rows * cols,
+                    vals.len()
+                )));
+            }
+            // array format is column-major; transpose into row-major dense
+            let mut coo = CooMatrix::new(rows, cols);
+            for c in 0..cols {
+                for r in 0..rows {
+                    let v = vals[c * rows + r];
+                    if v != 0.0 {
+                        coo.push(r, c, v)?;
+                    }
+                }
+            }
+            Ok(coo.to_csr())
+        }
+    }
+}
+
+/// Read a dense vector (m x 1 matrix in either format).
+pub fn read_vector(path: &Path) -> Result<Vec<f32>> {
+    let m = read_matrix(path)?;
+    if m.cols() != 1 {
+        return Err(DapcError::Parse(format!(
+            "expected a column vector, got {}x{}",
+            m.rows(),
+            m.cols()
+        )));
+    }
+    let mut v = vec![0.0f32; m.rows()];
+    for i in 0..m.rows() {
+        v[i] = m.get(i, 0);
+    }
+    Ok(v)
+}
+
+fn bad_num(tok: &str) -> DapcError {
+    DapcError::Parse(format!("invalid number {tok:?}"))
+}
+
+/// Write a CSR matrix in coordinate format.
+pub fn write_matrix(path: &Path, m: &CsrMatrix) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% generated by dapc (synthetic Schenk_IBMNA-like dataset)")?;
+    writeln!(f, "{} {} {}", m.rows(), m.cols(), m.nnz())?;
+    for i in 0..m.rows() {
+        let (idx, vals) = m.row(i);
+        for (&j, &v) in idx.iter().zip(vals) {
+            writeln!(f, "{} {} {}", i + 1, j + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a dense vector in array format.
+pub fn write_vector(path: &Path, v: &[f32]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix array real general")?;
+    writeln!(f, "{} 1", v.len())?;
+    for x in v {
+        writeln!(f, "{x}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_coordinate_general() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 2\n\
+                    1 1 2.5\n\
+                    3 2 -1.0\n";
+        let m = read_matrix_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.shape(), (3, 3));
+        assert_eq!(m.get(0, 0), 2.5);
+        assert_eq!(m.get(2, 1), -1.0);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors_entries() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 1.0\n\
+                    2 1 5.0\n";
+        let m = read_matrix_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 1), 5.0);
+        assert_eq!(m.get(1, 0), 5.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_array_column_major() {
+        let text = "%%MatrixMarket matrix array real general\n\
+                    2 2\n1\n2\n3\n4\n";
+        let m = read_matrix_from(Cursor::new(text)).unwrap();
+        // column-major: [[1,3],[2,4]]
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn reject_malformed() {
+        assert!(read_matrix_from(Cursor::new("garbage\n")).is_err());
+        assert!(read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 0\n"
+        ))
+        .is_err());
+        // nnz mismatch
+        assert!(read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"
+        ))
+        .is_err());
+        // 0-based index
+        assert!(read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_files() {
+        let dir = std::env::temp_dir().join("dapc_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut coo = CooMatrix::new(4, 3);
+        coo.push(0, 0, 1.25).unwrap();
+        coo.push(3, 2, -0.5).unwrap();
+        coo.push(1, 1, 7.0).unwrap();
+        let m = coo.to_csr();
+        let mp = dir.join("a.mtx");
+        write_matrix(&mp, &m).unwrap();
+        let back = read_matrix(&mp).unwrap();
+        assert_eq!(back, m);
+
+        let vp = dir.join("b.mtx");
+        let v = vec![1.0f32, -2.0, 3.5];
+        write_vector(&vp, &v).unwrap();
+        assert_eq!(read_vector(&vp).unwrap(), v);
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse-matrix substrate: COO/CSR storage, MatrixMarket I/O and the
+//! synthetic Schenk_IBMNA-like dataset generator (the paper's evaluation
+//! datasets are SuiteSparse `c-*` matrices; DESIGN.md §2 documents the
+//! substitution).
+//!
+//! The paper's pipeline stores `A` compressed (CSR), slices row blocks per
+//! partition and *densifies* them on the workers (`.toarray()` in the
+//! paper's `create_submatrices`) — [`CsrMatrix::slice_rows_dense`] mirrors
+//! that exactly.
+
+mod coo;
+mod csr;
+pub mod generate;
+pub mod matrix_market;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;

@@ -1,0 +1,306 @@
+//! Cross-layer integration tests: the XLA engine (AOT HLO artifacts from
+//! python/compile, executed via PJRT) must agree with the native Rust
+//! engine on every operation and on full solver runs, and the distributed
+//! coordinator must agree with the single-process path.
+//!
+//! These tests require `make artifacts` to have been run; they are skipped
+//! (not failed) when `artifacts/manifest.json` is absent so unit-level CI
+//! stays hermetic.
+
+use std::path::{Path, PathBuf};
+
+use dapc::linalg::{norms, Matrix};
+use dapc::rng::seeded;
+use dapc::runtime::executor::XlaExecutorHost;
+use dapc::solver::{
+    ApcClassicalSolver, ApcVariant, ComputeEngine, DapcSolver, DgdSolver,
+    InitKind, NativeEngine, SolveOptions, Solver, XlaEngine,
+};
+use dapc::sparse::generate::GeneratorConfig;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn xla_engine(dir: &Path) -> (XlaExecutorHost, XlaEngine) {
+    let host = XlaExecutorHost::spawn(dir).expect("spawn pjrt executor");
+    let engine = XlaEngine::new(host.executor());
+    (host, engine)
+}
+
+fn consistent_block(l: usize, n: usize, seed: u64) -> (Matrix, Vec<f32>, Vec<f32>) {
+    let mut g = seeded(seed);
+    let a = Matrix::from_fn(l, n, |_, _| g.normal_f32());
+    let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+    let mut b = vec![0.0f32; l];
+    dapc::linalg::blas::gemv(&a, &x, &mut b);
+    (a, b, x)
+}
+
+#[test]
+fn xla_init_qr_matches_native() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    let (a, b, x_true) = consistent_block(48, 32, 1);
+
+    let wx = xla.init(InitKind::Qr, &a, &b, 32).unwrap();
+    let wn = native.init(InitKind::Qr, &a, &b, 32).unwrap();
+    // both solve the consistent system
+    for i in 0..32 {
+        assert!((wx.x0[i] - x_true[i]).abs() < 1e-2, "xla x0[{i}]");
+        assert!((wx.x0[i] - wn.x0[i]).abs() < 1e-2, "xla vs native x0[{i}]");
+    }
+    // tall-regime projector is rounding noise in both engines
+    assert!(norms::max_abs(wx.projector.as_slice()) < 1e-3);
+    assert!(norms::max_abs(wn.projector.as_slice()) < 1e-3);
+}
+
+#[test]
+fn xla_init_classical_matches_native() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    let (a, b, _) = consistent_block(40, 32, 2);
+    let wx = xla.init(InitKind::Classical, &a, &b, 32).unwrap();
+    let wn = native.init(InitKind::Classical, &a, &b, 32).unwrap();
+    for i in 0..32 {
+        assert!((wx.x0[i] - wn.x0[i]).abs() < 5e-2, "x0[{i}]");
+    }
+}
+
+#[test]
+fn xla_init_fat_matches_native() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    // fat bucket in the default manifest: (l=32, n=128)
+    let (a, b, _) = consistent_block(32, 128, 3);
+    let wx = xla.init(InitKind::Fat, &a, &b, 128).unwrap();
+    let wn = native.init(InitKind::Fat, &a, &b, 128).unwrap();
+    // min-norm solutions agree
+    for i in 0..128 {
+        assert!((wx.x0[i] - wn.x0[i]).abs() < 1e-2, "x0[{i}]");
+    }
+    // genuine projectors agree
+    assert!(wx.projector.max_abs_diff(&wn.projector) < 1e-2);
+}
+
+#[test]
+fn xla_update_average_round_match_native() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    let mut g = seeded(4);
+    let n = 32;
+    let j = 2;
+    let xs: Vec<Vec<f32>> = (0..j)
+        .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+        .collect();
+    let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+    let ps: Vec<Matrix> = (0..j)
+        .map(|k| Matrix::from_fn(n, n, |_, _| 0.05 * (k as f32 + 1.0) * g.normal_f32()))
+        .collect();
+
+    let ux = xla.update(&xs[0], &xbar, &ps[0], 0.7).unwrap();
+    let un = native.update(&xs[0], &xbar, &ps[0], 0.7).unwrap();
+    assert!(norms::mae(&ux, &un) < 1e-5, "update mismatch");
+
+    let ax = xla.average(&xs, &xbar, 0.4).unwrap();
+    let an = native.average(&xs, &xbar, 0.4).unwrap();
+    assert!(norms::mae(&ax, &an) < 1e-6, "average mismatch");
+
+    let (rx, rbx) = xla.round(&xs, &xbar, &ps, 0.7, 0.4).unwrap();
+    let (rn, rbn) = native.round(&xs, &xbar, &ps, 0.7, 0.4).unwrap();
+    for k in 0..j {
+        assert!(norms::mae(&rx[k], &rn[k]) < 1e-5, "round x[{k}]");
+    }
+    assert!(norms::mae(&rbx, &rbn) < 1e-5, "round xbar");
+}
+
+#[test]
+fn xla_fused_loop_matches_iterated_rounds() {
+    let dir = require_artifacts!();
+    let (_host, mut xla) = xla_engine(&dir);
+    xla.fused_loop = true;
+    let native = NativeEngine::new();
+    let mut g = seeded(5);
+    let (n, j, t) = (32, 2, 9);
+    let xs: Vec<Vec<f32>> = (0..j)
+        .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+        .collect();
+    let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+    let ps: Vec<Matrix> =
+        (0..j).map(|_| Matrix::from_fn(n, n, |_, _| 0.05 * g.normal_f32())).collect();
+
+    let fused = xla
+        .solve_loop(&xs, &xbar, &ps, 0.6, 0.5, t)
+        .unwrap()
+        .expect("solve artifact available");
+    let mut ns = xs.clone();
+    let mut nb = xbar.clone();
+    for _ in 0..t {
+        let (a, b2) = native.round(&ns, &nb, &ps, 0.6, 0.5).unwrap();
+        ns = a;
+        nb = b2;
+    }
+    assert!(norms::mae(&fused.1, &nb) < 1e-4, "fused loop diverged");
+}
+
+#[test]
+fn xla_dgd_grad_matches_native_with_padding() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    // 42x30 does NOT match any artifact exactly -> exercises pad path
+    let (a, b, _) = consistent_block(42, 30, 6);
+    let mut g = seeded(7);
+    let x: Vec<f32> = (0..30).map(|_| g.normal_f32()).collect();
+    let gx = xla.dgd_grad(&a, &x, &b).unwrap();
+    let gn = native.dgd_grad(&a, &x, &b).unwrap();
+    assert_eq!(gx.len(), 30);
+    assert!(norms::mae(&gx, &gn) < 1e-3);
+}
+
+#[test]
+fn full_dapc_solve_on_xla_engine() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    // n=32 so blocks pad into the (64, 32) init bucket
+    let ds = GeneratorConfig::small_demo(32, 3).generate(11);
+    let solver = DapcSolver::new(SolveOptions {
+        epochs: 30,
+        x_true: Some(ds.x_true.clone()),
+        ..Default::default()
+    });
+    let report = solver.solve(&xla, &ds.matrix, &ds.rhs, 3).unwrap();
+    assert_eq!(report.engine, "xla");
+    let mse = report.final_mse(&ds.x_true);
+    assert!(mse < 1e-5, "mse {mse}");
+}
+
+#[test]
+fn xla_and_native_solvers_agree_end_to_end() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let native = NativeEngine::new();
+    let ds = GeneratorConfig::small_demo(32, 2).generate(12);
+    let opts = SolveOptions { epochs: 20, ..Default::default() };
+
+    let rx = DapcSolver::new(opts.clone())
+        .solve(&xla, &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    let rn = DapcSolver::new(opts)
+        .solve(&native, &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    assert!(
+        norms::mse(&rx.xbar, &rn.xbar) < 1e-8,
+        "engines diverged: {:e}",
+        norms::mse(&rx.xbar, &rn.xbar)
+    );
+}
+
+#[test]
+fn classical_solver_on_xla_engine() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let ds = GeneratorConfig::small_demo(32, 2).generate(13);
+    let report = ApcClassicalSolver::new(SolveOptions {
+        epochs: 20,
+        ..Default::default()
+    })
+    .solve(&xla, &ds.matrix, &ds.rhs, 2)
+    .unwrap();
+    assert!(report.final_mse(&ds.x_true) < 1e-4);
+}
+
+#[test]
+fn dgd_solver_on_xla_engine() {
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let ds = GeneratorConfig::small_demo(32, 2).generate(14);
+    let report = DgdSolver::new(SolveOptions {
+        epochs: 150,
+        dgd_step: 0.0,
+        x_true: Some(ds.x_true.clone()),
+        ..Default::default()
+    })
+    .solve(&xla, &ds.matrix, &ds.rhs, 2)
+    .unwrap();
+    let tr = report.trace.unwrap();
+    assert!(tr.final_mse().unwrap() < tr.initial_mse().unwrap() * 0.5);
+}
+
+#[test]
+fn distributed_cluster_with_xla_engine() {
+    let dir = require_artifacts!();
+    let host = XlaExecutorHost::spawn(&dir).unwrap();
+    let exec = host.executor();
+    let ds = GeneratorConfig::small_demo(32, 2).generate(15);
+    let mut cluster = dapc::coordinator::LocalCluster::spawn(2, move || {
+        XlaEngine::new(exec.clone())
+    })
+    .unwrap();
+    let report = cluster
+        .leader
+        .solve_apc(
+            &ds.matrix,
+            &ds.rhs,
+            ApcVariant::Decomposed,
+            &SolveOptions { epochs: 20, ..Default::default() },
+        )
+        .unwrap();
+    assert!(report.final_mse(&ds.x_true) < 1e-5);
+}
+
+#[test]
+fn convergence_shape_matches_figure2() {
+    // Fig. 2 qualitative shape on either engine: decomposed starts no
+    // better than classical, both reach the same plateau, DGD is slower.
+    let dir = require_artifacts!();
+    let (_host, xla) = xla_engine(&dir);
+    let ds = GeneratorConfig::small_demo(32, 2).generate(16);
+    let t = 30;
+    let mk = |x_true: &Vec<f32>| SolveOptions {
+        epochs: t,
+        x_true: Some(x_true.clone()),
+        ..Default::default()
+    };
+    let dec = DapcSolver::new(mk(&ds.x_true))
+        .solve(&xla, &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    let cls = ApcClassicalSolver::new(mk(&ds.x_true))
+        .solve(&xla, &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    let dgd = DgdSolver::new(SolveOptions {
+        epochs: t,
+        dgd_step: 0.0,
+        x_true: Some(ds.x_true.clone()),
+        ..Default::default()
+    })
+    .solve(&xla, &ds.matrix, &ds.rhs, 2)
+    .unwrap();
+
+    let d = dec.trace.unwrap();
+    let c = cls.trace.unwrap();
+    let gtrace = dgd.trace.unwrap();
+    // both APC variants converge to ~the same minima (paper §4)
+    let df = d.final_mse().unwrap();
+    let cf = c.final_mse().unwrap();
+    assert!(df < 1e-6 && cf < 1e-4, "df={df:e} cf={cf:e}");
+    // DGD is far from the APC plateau at the same epoch budget
+    assert!(gtrace.final_mse().unwrap() > df * 10.0);
+}
