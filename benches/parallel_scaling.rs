@@ -1,0 +1,111 @@
+//! Parallel-engine scaling bench: decomposed-APC solve wall time,
+//! sequential `NativeEngine` vs `ParallelEngine`, on a Table-1-shaped
+//! system at J ∈ {2, 4, 8} partitions.
+//!
+//! Shapes follow the paper's smallest Table-1 row (9308 x 2327):
+//! `DAPC_QUICK=1` runs 1/8 scale (CI smoke), default 1/4, `DAPC_FULL=1`
+//! the exact published shape.  Besides wall times the bench verifies the
+//! two engines produce *identical* solutions (the parallel engine is
+//! deterministic by construction) and writes machine-readable results to
+//! `BENCH_parallel_scaling.json`.
+
+use dapc::benchkit::{full_mode, quick_mode, Bench, JsonReport};
+use dapc::linalg::norms;
+use dapc::metrics::TableBuilder;
+use dapc::parallel::default_threads;
+use dapc::prelude::*;
+use dapc::sparse::generate::GeneratorConfig;
+
+fn main() {
+    let (scale, epochs) = if full_mode() {
+        (1, 80)
+    } else if quick_mode() {
+        (8, 15)
+    } else {
+        (4, 40)
+    };
+    let (m, n) = (9308 / scale, 2327 / scale);
+    let shape = format!("{m}x{n}");
+    let ds = GeneratorConfig::table1(m, n).generate(2327);
+    let bench = Bench::default();
+    let mut report = JsonReport::new("parallel_scaling");
+
+    let mut thread_counts = vec![2usize, 4];
+    let avail = default_threads();
+    if avail > 4 {
+        thread_counts.push(avail);
+    }
+
+    println!(
+        "=== parallel scaling: decomposed APC, {shape}, T={epochs}, \
+         J in {{2,4,8}}, threads {thread_counts:?} (avail {avail}) ==="
+    );
+    let mut headers: Vec<String> = vec!["J".into(), "sequential".into()];
+    for &t in &thread_counts {
+        headers.push(format!("{t} threads"));
+    }
+    headers.push("best speedup".into());
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = TableBuilder::new(&header_refs);
+
+    for &j in &[2usize, 4, 8] {
+        let opts = SolveOptions { epochs, ..Default::default() };
+        let seq_engine = NativeEngine::new();
+        let mut seq_xbar: Vec<f32> = Vec::new();
+        let rs = bench.run_once(&format!("sequential   J={j}"), || {
+            let r = DapcSolver::new(opts.clone())
+                .solve(&seq_engine, &ds.matrix, &ds.rhs, j)
+                .expect("sequential solve");
+            seq_xbar = r.xbar;
+        });
+        report.add(
+            &rs,
+            &[("threads", 1.0), ("j", j as f64), ("epochs", epochs as f64)],
+            &[("shape", shape.as_str()), ("engine", "native")],
+        );
+
+        let mut row = vec![format!("{j}"), format!("{:.3}s", rs.stats.mean())];
+        let mut best_speedup = 0.0f64;
+        for &t in &thread_counts {
+            let engine = ParallelEngine::new(t);
+            let mut par_xbar: Vec<f32> = Vec::new();
+            let rp = bench.run_once(&format!("parallel t={t} J={j}"), || {
+                let r = DapcSolver::new(opts.clone())
+                    .solve(&engine, &ds.matrix, &ds.rhs, j)
+                    .expect("parallel solve");
+                par_xbar = r.xbar;
+            });
+            // the parallel engine runs the same kernels in the same
+            // order as the reference; anything above f32-ULP noise on a
+            // handful of elements means a real divergence
+            let drift = norms::mse(&seq_xbar, &par_xbar);
+            assert!(
+                drift < 1e-12,
+                "parallel engine diverged from sequential at J={j}, \
+                 t={t}: mse {drift:e}"
+            );
+            let speedup = rs.stats.mean() / rp.stats.mean();
+            best_speedup = best_speedup.max(speedup);
+            println!("  -> J={j} threads={t}: speedup {speedup:.2}x");
+            report.add(
+                &rp,
+                &[
+                    ("threads", t as f64),
+                    ("j", j as f64),
+                    ("epochs", epochs as f64),
+                    ("speedup_vs_sequential", speedup),
+                ],
+                &[("shape", shape.as_str()), ("engine", "parallel")],
+            );
+            row.push(format!("{:.3}s ({speedup:.2}x)", rp.stats.mean()));
+        }
+        row.push(format!("{best_speedup:.2}x"));
+        table.row(&row);
+    }
+
+    println!("\n{}", table.render());
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

@@ -5,7 +5,12 @@
 //!
 //! * `DAPC_FULL=1`   — run paper-scale shapes (Table 1 sizes);
 //! * `DAPC_QUICK=1`  — minimum iterations, for CI smoke runs.
+//!
+//! [`JsonReport`] additionally writes machine-readable results
+//! (`BENCH_<name>.json`, or under `$DAPC_BENCH_DIR` when set) so the
+//! repo's perf trajectory accumulates across PRs.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::metrics::TimingStats;
@@ -114,6 +119,115 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable results
+// ---------------------------------------------------------------------------
+
+/// Accumulates [`BenchResult`]s plus per-record metadata (threads, shape,
+/// J, ...) and writes them as `BENCH_<name>.json` at bench exit.  JSON is
+/// emitted by hand — serde is unavailable offline — and is parseable by
+/// the in-repo [`crate::config::json::Json`] reader (round-trip tested).
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    name: String,
+    records: Vec<String>,
+}
+
+impl JsonReport {
+    /// Report named `name` -> file `BENCH_<name>.json`.
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), records: Vec::new() }
+    }
+
+    /// Append one result.  `nums` / `strs` are extra metadata fields
+    /// (e.g. `("threads", 4.0)`, `("shape", "1163x290")`).
+    pub fn add(
+        &mut self,
+        res: &BenchResult,
+        nums: &[(&str, f64)],
+        strs: &[(&str, &str)],
+    ) {
+        let mut fields = vec![
+            format!("\"name\": {}", json_str(&res.name)),
+            format!("\"mean_s\": {}", json_num(res.stats.mean())),
+            format!("\"median_s\": {}", json_num(res.stats.median())),
+            format!("\"p95_s\": {}", json_num(res.stats.p95())),
+            format!("\"min_s\": {}", json_num(res.stats.min())),
+            format!("\"max_s\": {}", json_num(res.stats.max())),
+            format!("\"samples\": {}", res.stats.samples.len()),
+        ];
+        for (k, v) in nums {
+            fields.push(format!("{}: {}", json_str(k), json_num(*v)));
+        }
+        for (k, v) in strs {
+            fields.push(format!("{}: {}", json_str(k), json_str(v)));
+        }
+        self.records.push(format!("    {{{}}}", fields.join(", ")));
+    }
+
+    /// Number of accumulated records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Destination path: `$DAPC_BENCH_DIR` (or the working directory)
+    /// joined with `BENCH_<name>.json`.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("DAPC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Render the full JSON document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\n  \"bench\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_str(&self.name),
+            self.records.join(",\n")
+        )
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite JSON number (NaN/inf have no JSON form; clamp to 0).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "0".into()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +256,48 @@ mod tests {
     fn run_once_single_sample() {
         let res = Bench::default().run_once("one", || {});
         assert_eq!(res.stats.samples.len(), 1);
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_repo_parser() {
+        use crate::config::json::Json;
+        let mut rep = JsonReport::new("unit_test");
+        let res = BenchResult {
+            name: "solve \"quoted\" (1163x290)".into(),
+            stats: TimingStats::from_secs(vec![0.5, 1.0, 1.5]),
+        };
+        rep.add(&res, &[("threads", 4.0), ("j", 8.0)], &[("shape", "1163x290")]);
+        assert_eq!(rep.len(), 1);
+        let doc = Json::parse(&rep.render()).expect("valid json");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit_test"));
+        let results = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        let r0 = &results[0];
+        assert_eq!(
+            r0.get("name").and_then(Json::as_str),
+            Some("solve \"quoted\" (1163x290)")
+        );
+        assert!((r0.get("mean_s").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-12);
+        assert!((r0.get("threads").and_then(Json::as_f64).unwrap() - 4.0).abs() < 1e-12);
+        assert_eq!(r0.get("shape").and_then(Json::as_str), Some("1163x290"));
+        assert_eq!(r0.get("samples").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn json_report_writes_to_bench_dir() {
+        let dir = std::env::temp_dir().join("dapc_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rep = JsonReport::new("write_test");
+        rep.add(
+            &Bench::new(0, 1).run_once("noop", || {}),
+            &[],
+            &[],
+        );
+        // path honors DAPC_BENCH_DIR; write explicitly to the temp copy
+        let path = dir.join("BENCH_write_test.json");
+        std::fs::write(&path, rep.render()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"write_test\""));
+        let _ = std::fs::remove_file(&path);
     }
 }

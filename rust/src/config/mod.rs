@@ -72,6 +72,10 @@ pub struct RunConfig {
     pub engine: EngineKind,
     /// Number of partitions J.
     pub partitions: usize,
+    /// Worker threads for the native engine's parallel path: 1 = the
+    /// sequential reference engine, 0 = one thread per hardware thread,
+    /// N > 1 = a pool of N (`--threads`).
+    pub threads: usize,
     /// Number of consensus epochs T.
     pub epochs: usize,
     /// Mixing weight eta in (0, 1].
@@ -97,6 +101,7 @@ impl Default for RunConfig {
             algorithm: Algorithm::DapcDecomposed,
             engine: EngineKind::Native,
             partitions: 2,
+            threads: 1,
             epochs: 80,
             eta: 0.9,
             gamma: 0.9,
@@ -163,6 +168,7 @@ impl RunConfig {
                     )?)?
                 }
                 "partitions" => cfg.partitions = num(val, key)? as usize,
+                "threads" => cfg.threads = num(val, key)? as usize,
                 "epochs" => cfg.epochs = num(val, key)? as usize,
                 "eta" => cfg.eta = num(val, key)? as f32,
                 "gamma" => cfg.gamma = num(val, key)? as f32,
@@ -213,13 +219,14 @@ mod tests {
     fn parse_full_config() {
         let cfg = RunConfig::from_json(
             r#"{"algorithm": "apc", "engine": "xla", "partitions": 4,
-                "epochs": 95, "eta": 0.8, "gamma": 0.75,
+                "epochs": 95, "eta": 0.8, "gamma": 0.75, "threads": 8,
                 "artifacts_dir": "artifacts", "synth_n": 512, "seed": 7}"#,
         )
         .unwrap();
         assert_eq!(cfg.algorithm, Algorithm::ApcClassical);
         assert_eq!(cfg.engine, EngineKind::Xla);
         assert_eq!(cfg.partitions, 4);
+        assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.epochs, 95);
         assert!((cfg.eta - 0.8).abs() < 1e-6);
         assert_eq!(cfg.synth_n, 512);

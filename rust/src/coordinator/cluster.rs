@@ -81,7 +81,7 @@ pub fn serve_tcp_worker<E: ComputeEngine>(
 ) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let (stream, peer) = listener.accept()?;
-    log::info!("worker: leader connected from {peer}");
+    eprintln!("worker: leader connected from {peer}");
     let mut transport = TcpTransport::new(stream)?;
     run_worker(engine, &mut transport)
 }

@@ -10,7 +10,9 @@ use crate::error::{DapcError, Result};
 use crate::linalg::norms;
 use crate::metrics::ConvergenceTrace;
 use crate::partition::{PartitionPlan, PartitionRegime};
-use crate::solver::{ApcVariant, InitKind, SolveOptions, SolveReport};
+use crate::solver::{
+    residual_norm, ApcVariant, InitKind, SolveOptions, SolveReport,
+};
 use crate::sparse::CsrMatrix;
 
 use super::message::Message;
@@ -122,11 +124,13 @@ impl<T: Transport> Leader<T> {
             }
         }
         let iterate_time = t1.elapsed();
+        let residual = residual_norm(a, b, &xbar);
 
         Ok(SolveReport {
             xbar,
             x_parts: xs,
             trace,
+            residual: Some(residual),
             init_time,
             iterate_time,
             algorithm: match variant {
@@ -205,11 +209,13 @@ impl<T: Transport> Leader<T> {
             }
         }
         let iterate_time = t1.elapsed();
+        let residual = residual_norm(a, b, &x);
 
         Ok(SolveReport {
             xbar: x.clone(),
             x_parts: vec![x],
             trace,
+            residual: Some(residual),
             init_time,
             iterate_time,
             algorithm: "dgd",

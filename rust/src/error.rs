@@ -1,43 +1,69 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — no `thiserror` (the build is
+//! fully offline, zero registry dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the DAPC library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DapcError {
     /// Shape/dimension mismatches.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Numerical failures (singular matrices, divergence, NaNs).
-    #[error("numeric error: {0}")]
     Numeric(String),
 
     /// Parse failures (MatrixMarket, manifest JSON, config, CLI).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Artifact/manifest lookup failures.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Coordinator/transport failures.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Configuration errors (invalid hyper-parameters etc.).
-    #[error("config error: {0}")]
     Config(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// XLA/PJRT wrapper.
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
+impl fmt::Display for DapcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DapcError::Shape(m) => write!(f, "shape error: {m}"),
+            DapcError::Numeric(m) => write!(f, "numeric error: {m}"),
+            DapcError::Parse(m) => write!(f, "parse error: {m}"),
+            DapcError::Artifact(m) => write!(f, "artifact error: {m}"),
+            DapcError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            DapcError::Config(m) => write!(f, "config error: {m}"),
+            DapcError::Io(e) => write!(f, "io error: {e}"),
+            DapcError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DapcError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DapcError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DapcError {
+    fn from(e: std::io::Error) -> Self {
+        DapcError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for DapcError {
     fn from(e: xla::Error) -> Self {
         DapcError::Xla(e.to_string())
@@ -46,3 +72,27 @@ impl From<xla::Error> for DapcError {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, DapcError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            DapcError::Shape("3 != 4".into()).to_string(),
+            "shape error: 3 != 4"
+        );
+        assert!(DapcError::Config("bad".into())
+            .to_string()
+            .starts_with("config"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e: DapcError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

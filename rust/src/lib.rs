@@ -41,6 +41,7 @@ pub mod coordinator;
 pub mod error;
 pub mod linalg;
 pub mod metrics;
+pub mod parallel;
 pub mod partition;
 pub mod rng;
 pub mod runtime;
@@ -54,6 +55,7 @@ pub mod prelude {
     pub use crate::error::{DapcError, Result};
     pub use crate::linalg::Matrix;
     pub use crate::partition::{PartitionPlan, PartitionRegime};
+    pub use crate::parallel::ParallelEngine;
     pub use crate::solver::{
         ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
         SolveReport, Solver,

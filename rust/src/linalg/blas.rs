@@ -1,20 +1,54 @@
 //! Blocked BLAS-like primitives for the native engine.
 //!
-//! gemm uses i-k-j loop order with a register-blocked microkernel over the
-//! contiguous row-major layout; gemv accumulates per-row dot products.  The
-//! perf pass (EXPERIMENTS.md §Perf) tunes `MC`/`KC` against the end-to-end
-//! solver benches.
+//! `gemm` follows the BLIS/GotoBLAS decomposition: the operand matrices
+//! are *packed* into contiguous panels sized to the cache hierarchy, and
+//! an `MR x NR` register-tiled microkernel does all the flops over the
+//! packed panels.  `gemv` accumulates per-row dot products (with a pooled
+//! row-chunk-parallel variant for the consensus hot path).
+//!
+//! # Block-size tuning (`MC`/`KC`/`NC`)
+//!
+//! The three cache block sizes map onto the cache hierarchy:
+//!
+//! * `KC x NR` slivers of the packed B panel are streamed from L1 by the
+//!   microkernel, so `KC` is chosen to keep one `MC x KC` A panel
+//!   resident in L2: `MC * KC * 4 bytes` ≈ 64 KiB at the defaults —
+//!   half of a typical 128-512 KiB L2, leaving room for the B sliver
+//!   and C tile;
+//! * `KC * NC * 4 bytes` (the packed B panel) targets L3 (512 KiB at the
+//!   defaults);
+//! * `MR x NR` (4 x 8) keeps the accumulator tile in registers: 32 f32
+//!   accumulators = 4 vector registers of 8 lanes, which LLVM reliably
+//!   vectorizes on AVX2-class hardware without explicit intrinsics.
+//!
+//! Methodology: sweep one constant at a time against
+//! `cargo bench --bench microbench_linalg` (the gemm GFLOP/s line) and
+//! then confirm on `benches/parallel_scaling.rs` end-to-end — init-phase
+//! QR is gemm-shaped, so end-to-end gains track the microbench.  Values
+//! below were chosen for a generic x86-64 container; re-tune when the
+//! deployment hardware is known (see ROADMAP "Performance").
 
 use super::Matrix;
+use crate::parallel::ThreadPool;
 
-/// Cache-block sizes (rows of A / depth) for gemm.  Tuned in the perf pass.
+/// Rows of the packed A panel (L2 block).
 const MC: usize = 64;
+/// Shared (depth) dimension of both packed panels (L1/L2 block).
 const KC: usize = 256;
+/// Columns of the packed B panel (L3 block).
+const NC: usize = 512;
+/// Microkernel tile rows (register block).
+const MR: usize = 4;
+/// Microkernel tile columns (register block; one 8-lane f32 vector).
+const NR: usize = 8;
 
 /// `y += alpha * x` (axpy).
+///
+/// Checked in release builds too: a silent length mismatch here would
+/// read past the unrolled loop's assumptions in every caller.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
@@ -23,7 +57,7 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// Dot product with f64 accumulation.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
     let mut acc = 0.0f64;
     // 4-way unroll keeps the dependency chain short; LLVM vectorizes this.
     let chunks = x.len() / 4;
@@ -50,6 +84,33 @@ pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// `y = A x` with the row range split across pool workers.
+///
+/// Bitwise-identical to [`gemv`] for any thread count: each output row is
+/// an independent [`dot`] over the same operands in the same order, so
+/// parallelism never reorders a reduction.  Must not be called from
+/// inside another scope on the same pool (the pool does not nest).
+pub fn gemv_pooled(pool: &ThreadPool, a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    let rows = a.rows();
+    if rows == 0 {
+        return;
+    }
+    let parts = pool.size().min(rows).max(1);
+    let chunk = (rows + parts - 1) / parts;
+    pool.scope(|s| {
+        for (ci, yc) in y.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            s.spawn(move || {
+                for (r, yi) in yc.iter_mut().enumerate() {
+                    *yi = dot(a.row(lo + r), x) as f32;
+                }
+            });
+        }
+    });
+}
+
 /// `y = A^T x` for row-major A, x of length rows (avoids materializing A^T).
 pub fn gemv_t(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.rows(), x.len());
@@ -60,28 +121,151 @@ pub fn gemv_t(a: &Matrix, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `C = A B` (blocked, row-major).
+/// `C = A B` (packed panels + register-tiled microkernel, row-major).
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C = A B` into a caller-provided output (overwritten).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dimension mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm output rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "gemm output cols mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                let crow = c.row_mut(i);
-                // borrow of a.row(i) is fine: a and c are distinct
-                for kk in k0..k1 {
-                    let aik = a[(i, kk)];
-                    if aik != 0.0 {
-                        axpy(aik, &b.row(kk)[..n], crow);
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+
+    // pack buffers sized to the largest panel this problem needs
+    let kc_max = KC.min(k);
+    let mc_max = round_up(MC.min(m), MR);
+    let nc_max = round_up(NC.min(n), NR);
+    let mut a_pack = vec![0.0f32; mc_max * kc_max];
+    let mut b_pack = vec![0.0f32; kc_max * nc_max];
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let col_panels = (nc + NR - 1) / NR;
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, pc, jc, kc, nc, &mut b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let row_panels = (mc + MR - 1) / MR;
+                pack_a(a, ic, pc, mc, kc, &mut a_pack);
+                for q in 0..col_panels {
+                    let jr = q * NR;
+                    let nr = NR.min(nc - jr);
+                    let bp = &b_pack[q * kc * NR..(q + 1) * kc * NR];
+                    for t in 0..row_panels {
+                        let ir = t * MR;
+                        let mr = MR.min(mc - ir);
+                        let ap = &a_pack[t * kc * MR..(t + 1) * kc * MR];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        microkernel(kc, ap, bp, &mut acc);
+                        // fringe lanes were zero-padded in the packs, so
+                        // the full tile is valid; write only the live part
+                        for i in 0..mr {
+                            let crow = c.row_mut(ic + ir + i);
+                            for (j, &v) in acc[i][..nr].iter().enumerate() {
+                                crow[jc + jr + j] += v;
+                            }
+                        }
                     }
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+#[inline]
+fn round_up(x: usize, m: usize) -> usize {
+    (x + m - 1) / m * m
+}
+
+/// Pack an `mc x kc` block of A into MR-row panels, k-major inside each
+/// panel: `buf[q*kc*MR + p*MR + i] = A[ic + q*MR + i, pc + p]` (zero
+/// padding for the ragged last panel).
+fn pack_a(
+    a: &Matrix,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    buf: &mut [f32],
+) {
+    let panels = (mc + MR - 1) / MR;
+    for q in 0..panels {
+        let r0 = q * MR;
+        let rows = MR.min(mc - r0);
+        let base = q * kc * MR;
+        for i in 0..MR {
+            if i < rows {
+                let row = &a.row(ic + r0 + i)[pc..pc + kc];
+                for (p, &v) in row.iter().enumerate() {
+                    buf[base + p * MR + i] = v;
+                }
+            } else {
+                for p in 0..kc {
+                    buf[base + p * MR + i] = 0.0;
                 }
             }
         }
     }
-    c
+}
+
+/// Pack a `kc x nc` block of B into NR-column panels, k-major inside each
+/// panel: `buf[q*kc*NR + p*NR + j] = B[pc + p, jc + q*NR + j]` (zero
+/// padding for the ragged last panel).
+fn pack_b(
+    b: &Matrix,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    buf: &mut [f32],
+) {
+    let panels = (nc + NR - 1) / NR;
+    for p in 0..kc {
+        let brow = b.row(pc + p);
+        for q in 0..panels {
+            let c0 = q * NR;
+            let cols = NR.min(nc - c0);
+            let off = q * kc * NR + p * NR;
+            buf[off..off + cols]
+                .copy_from_slice(&brow[jc + c0..jc + c0 + cols]);
+            for j in cols..NR {
+                buf[off + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// The register-tiled inner kernel: `acc += Ap * Bp` over the shared `kc`
+/// dimension, where `Ap` is an `MR x kc` panel (k-major) and `Bp` a
+/// `kc x NR` panel (k-major).  All indices are panel-local, so LLVM sees
+/// constant-length inner loops and keeps `acc` in vector registers.
+#[inline]
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for p in 0..kc {
+        let av = &ap[p * MR..p * MR + MR];
+        let bv = &bp[p * NR..p * NR + NR];
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bv[j];
+            }
+        }
+    }
 }
 
 /// `C = A^T B` without materializing the transpose.
@@ -161,6 +345,36 @@ mod tests {
     }
 
     #[test]
+    fn gemm_fringe_and_blocking_shapes() {
+        // shapes straddling every blocking boundary: the MR/NR fringes,
+        // multi-panel MC/KC/NC loops, and exact multiples
+        for &(m, k, n) in &[
+            (4, 8, 8),     // exact single tile
+            (5, 9, 11),    // all fringes
+            (64, 256, 8),  // exact MC x KC panel
+            (65, 257, 9),  // one past every L2 block edge
+            (130, 70, 17), // several row panels, ragged everywhere
+        ] {
+            let a = randm(m, k, (m * 1000 + n) as u64);
+            let b = randm(k, n, (k * 7 + 3) as u64);
+            let c = gemm(&a, &b);
+            assert!(
+                c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-3,
+                "({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_into_overwrites_dirty_output() {
+        let a = randm(6, 5, 10);
+        let b = randm(5, 7, 11);
+        let mut c = Matrix::from_fn(6, 7, |_, _| 123.0);
+        gemm_into(&a, &b, &mut c);
+        assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-3);
+    }
+
+    #[test]
     fn gemm_tn_matches_explicit_transpose() {
         let a = randm(20, 12, 3);
         let b = randm(20, 7, 4);
@@ -202,6 +416,22 @@ mod tests {
     }
 
     #[test]
+    fn gemv_pooled_bitwise_matches_serial() {
+        let pool = ThreadPool::new(3);
+        // rows chosen to leave a ragged last chunk
+        for &(rows, cols) in &[(1, 5), (7, 16), (64, 33), (101, 29)] {
+            let a = randm(rows, cols, rows as u64 + 50);
+            let mut g = seeded(rows as u64 + 51);
+            let x: Vec<f32> = (0..cols).map(|_| g.normal_f32()).collect();
+            let mut y_serial = vec![0.0f32; rows];
+            let mut y_pooled = vec![0.0f32; rows];
+            gemv(&a, &x, &mut y_serial);
+            gemv_pooled(&pool, &a, &x, &mut y_pooled);
+            assert_eq!(y_serial, y_pooled, "({rows},{cols})");
+        }
+    }
+
+    #[test]
     fn dot_f64_accumulation_stability() {
         // catastrophic in pure f32: 1e8 + tiny values
         let x = vec![1.0f32; 4096];
@@ -217,5 +447,19 @@ mod tests {
         let mut y = [1.0f32, 1.0, 1.0];
         axpy(2.0, &x, &mut y);
         assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics_in_release_too() {
+        let x = [1.0f32, 2.0];
+        let mut y = [0.0f32; 3];
+        axpy(1.0, &x, &mut y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_length_mismatch_panics_in_release_too() {
+        let _ = dot(&[1.0, 2.0], &[1.0]);
     }
 }

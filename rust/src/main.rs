@@ -17,8 +17,8 @@ use dapc::error::{DapcError, Result};
 use dapc::linalg::norms;
 use dapc::runtime::executor::XlaExecutorHost;
 use dapc::solver::{
-    ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
-    Solver, XlaEngine,
+    ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, ParallelEngine,
+    SolveOptions, Solver, XlaEngine,
 };
 use dapc::sparse::{generate::GeneratorConfig, matrix_market, CsrMatrix};
 
@@ -28,6 +28,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "algorithm", help: "dapc|apc|dgd", takes_value: true },
         OptSpec { name: "engine", help: "native|xla", takes_value: true },
         OptSpec { name: "partitions", help: "number of partitions J", takes_value: true },
+        OptSpec { name: "threads", help: "native-engine worker threads (1 = sequential, 0 = auto)", takes_value: true },
         OptSpec { name: "epochs", help: "consensus epochs T", takes_value: true },
         OptSpec { name: "eta", help: "mixing weight (0,1]", takes_value: true },
         OptSpec { name: "gamma", help: "projection step (0,1]", takes_value: true },
@@ -89,6 +90,9 @@ fn build_config(parsed: &cli::ParsedArgs) -> Result<RunConfig> {
     }
     if let Some(v) = parsed.get_parse::<usize>("partitions")? {
         cfg.partitions = v;
+    }
+    if let Some(v) = parsed.get_parse::<usize>("threads")? {
+        cfg.threads = v;
     }
     if let Some(v) = parsed.get_parse::<usize>("epochs")? {
         cfg.epochs = v;
@@ -194,8 +198,14 @@ fn run_single(
     opts: &SolveOptions,
 ) -> Result<dapc::solver::SolveReport> {
     match cfg.engine {
-        EngineKind::Native => {
+        EngineKind::Native if cfg.threads == 1 => {
             let engine = NativeEngine::new();
+            dispatch_solver(cfg, &engine, a, b, opts)
+        }
+        EngineKind::Native => {
+            // 0 = one worker per hardware thread (pool default)
+            let engine = ParallelEngine::new(cfg.threads);
+            println!("parallel native engine: {} threads", engine.threads());
             dispatch_solver(cfg, &engine, a, b, opts)
         }
         EngineKind::Xla => {
@@ -283,8 +293,11 @@ fn cmd_worker(parsed: &cli::ParsedArgs) -> Result<()> {
         .ok_or_else(|| DapcError::Config("worker requires --listen".into()))?;
     println!("dapc worker listening on {addr} (engine: {:?})", cfg.engine);
     match cfg.engine {
-        EngineKind::Native => {
+        EngineKind::Native if cfg.threads == 1 => {
             cluster::serve_tcp_worker(&NativeEngine::new(), addr)
+        }
+        EngineKind::Native => {
+            cluster::serve_tcp_worker(&ParallelEngine::new(cfg.threads), addr)
         }
         EngineKind::Xla => {
             let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;

@@ -1,0 +1,380 @@
+//! [`ParallelEngine`]: the native engine's math fanned out over the
+//! persistent thread pool.
+//!
+//! Parallelism is *structured for determinism*: every scalar operation
+//! happens in the same order as on the sequential [`NativeEngine`], so
+//! the two engines produce bit-identical iterates at any thread count.
+//!
+//! * eq. (6) updates are independent per partition — one pool job each;
+//! * eq. (7) averaging splits the index range into contiguous chunks;
+//!   within a chunk each output element still sums over partitions in
+//!   fixed order j = 0..J;
+//! * worker init (QR / Gram factorizations) is embarrassingly parallel
+//!   across partitions ([`ComputeEngine::init_all`]);
+//! * the DGD forward product `A x` is row-chunk parallel
+//!   ([`crate::linalg::blas::gemv_pooled`]); the transposed reduction
+//!   `A^T r` stays sequential because parallelizing it would reorder
+//!   floating-point sums.
+//!
+//! Jobs never nest scopes on the pool (that would deadlock a fully
+//! occupied pool), which is why the per-partition round jobs call the
+//! *serial* kernels.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::linalg::{blas, Matrix};
+use crate::solver::engine::{
+    average_chunk_kernel, check_average_shapes, check_dgd_shapes,
+    check_round_shapes, check_update_shapes, update_kernel, ComputeEngine,
+    InitKind, NativeEngine, RoundWorkspace, WorkerInit,
+};
+
+use super::pool::ThreadPool;
+
+/// Thread-pooled native engine (see module docs).
+pub struct ParallelEngine {
+    inner: NativeEngine,
+    pool: Arc<ThreadPool>,
+}
+
+impl ParallelEngine {
+    /// Engine over a fresh pool of `threads` workers (0 = one per
+    /// available hardware thread).
+    pub fn new(threads: usize) -> Self {
+        Self::with_pool(Arc::new(ThreadPool::new(threads)))
+    }
+
+    /// Engine over a shared pool (e.g. one pool for several solvers).
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        Self { inner: NativeEngine::new(), pool }
+    }
+
+    /// Worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The underlying pool, for sharing with other components.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// Chunked-parallel eq. (7); shapes must be pre-validated.
+    fn average_chunks(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        eta: f32,
+        acc: &mut [f64],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let acc = &mut acc[..n];
+        let parts = self.pool.size().min(n).max(1);
+        let chunk = (n + parts - 1) / parts;
+        self.pool.scope(|s| {
+            for (ci, (acc_c, out_c)) in
+                acc.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+            {
+                let lo = ci * chunk;
+                s.spawn(move || {
+                    average_chunk_kernel(xs, xbar, eta, lo, acc_c, out_c)
+                });
+            }
+        });
+    }
+}
+
+impl std::fmt::Debug for ParallelEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelEngine")
+            .field("threads", &self.pool.size())
+            .finish()
+    }
+}
+
+impl ComputeEngine for ParallelEngine {
+    fn init(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        b: &[f32],
+        n_target: usize,
+    ) -> Result<WorkerInit> {
+        self.inner.init(kind, a, b, n_target)
+    }
+
+    fn init_all(
+        &self,
+        kind: InitKind,
+        j: usize,
+        extract: &(dyn Fn(usize) -> (Matrix, Vec<f32>) + Sync),
+        n_target: usize,
+    ) -> Result<Vec<WorkerInit>> {
+        let mut slots: Vec<Option<Result<WorkerInit>>> = Vec::new();
+        slots.resize_with(j, || None);
+        let inner = &self.inner;
+        self.pool.scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                s.spawn(move || {
+                    // densify inside the job too: at most `threads` dense
+                    // blocks are ever live at once
+                    let (a, b) = extract(i);
+                    *slot = Some(inner.init(kind, &a, &b, n_target));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|r| r.expect("init job completed"))
+            .collect()
+    }
+
+    fn update(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let n = x.len();
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        self.update_into(x, xbar, p, gamma, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    fn update_into(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+        scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_update_shapes(x, xbar, p, scratch.len(), out.len())?;
+        // the single-update entry point is leader-side, outside any
+        // scope, so the pooled matvec cannot nest
+        for ((d, &xb), &xi) in scratch.iter_mut().zip(xbar).zip(x) {
+            *d = xb - xi;
+        }
+        blas::gemv_pooled(&self.pool, p, scratch, out);
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = xi + gamma * *o;
+        }
+        Ok(())
+    }
+
+    fn average(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        eta: f32,
+    ) -> Result<Vec<f32>> {
+        let n = xbar.len();
+        let mut acc = vec![0.0f64; n];
+        let mut out = vec![0.0f32; n];
+        self.average_into(xs, xbar, eta, &mut acc, &mut out)?;
+        Ok(out)
+    }
+
+    fn average_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        eta: f32,
+        acc: &mut [f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_average_shapes(xs, xbar.len(), acc.len(), out.len())?;
+        self.average_chunks(xs, xbar, eta, acc, out);
+        Ok(())
+    }
+
+    fn round(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let mut out_xs: Vec<Vec<f32>> =
+            xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
+        let mut out_xbar = vec![0.0f32; xbar.len()];
+        let mut ws = RoundWorkspace::for_shape(xs.len(), xbar.len());
+        self.round_into(
+            xs,
+            xbar,
+            ps,
+            gamma,
+            eta,
+            &mut ws,
+            &mut out_xs,
+            &mut out_xbar,
+        )?;
+        Ok((out_xs, out_xbar))
+    }
+
+    fn round_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<f32>],
+        out_xbar: &mut [f32],
+    ) -> Result<()> {
+        let j = xs.len();
+        let n = xbar.len();
+        check_round_shapes(xs, ps, out_xs, n)?;
+        ws.ensure(j, n);
+        // eq. (6): one pool job per partition, each writing its own
+        // scratch + output buffers (disjoint by construction)
+        let scratches = &mut ws.scratch[..j];
+        self.pool.scope(|s| {
+            for (((x, p), scratch), out) in xs
+                .iter()
+                .zip(ps)
+                .zip(scratches.iter_mut())
+                .zip(out_xs.iter_mut())
+            {
+                s.spawn(move || {
+                    update_kernel(x, xbar, p, gamma, scratch, out)
+                });
+            }
+        });
+        // eq. (7): chunked over the index range
+        self.average_chunks(&*out_xs, xbar, eta, &mut ws.acc, out_xbar);
+        Ok(())
+    }
+
+    fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let mut ax = vec![0.0f32; a.rows()];
+        let mut g = vec![0.0f32; a.cols()];
+        self.dgd_grad_into(a, x, b, &mut ax, &mut g)?;
+        Ok(g)
+    }
+
+    fn dgd_grad_into(
+        &self,
+        a: &Matrix,
+        x: &[f32],
+        b: &[f32],
+        ax_scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_dgd_shapes(a, x, b, ax_scratch.len(), out.len())?;
+        blas::gemv_pooled(&self.pool, a, x, ax_scratch);
+        for (axi, bi) in ax_scratch.iter_mut().zip(b) {
+            *axi -= bi;
+        }
+        blas::gemv_t(a, ax_scratch, out);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::seeded;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut g = seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut g = seeded(seed);
+        (0..n).map(|_| g.normal_f32()).collect()
+    }
+
+    #[test]
+    fn round_bitwise_matches_native() {
+        let native = NativeEngine::new();
+        for &(j, n) in &[(1usize, 8usize), (3, 19), (4, 64), (5, 37)] {
+            let par = ParallelEngine::new(3);
+            let xs: Vec<Vec<f32>> =
+                (0..j).map(|i| randv(n, 100 + i as u64)).collect();
+            let xbar = randv(n, 200);
+            let ps: Vec<Matrix> =
+                (0..j).map(|i| randm(n, n, 300 + i as u64)).collect();
+            let (nx, nb) = native.round(&xs, &xbar, &ps, 0.7, 0.6).unwrap();
+            let (px, pb) = par.round(&xs, &xbar, &ps, 0.7, 0.6).unwrap();
+            assert_eq!(nx, px, "(j={j}, n={n})");
+            assert_eq!(nb, pb, "(j={j}, n={n})");
+        }
+    }
+
+    #[test]
+    fn average_and_update_bitwise_match_native() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(4);
+        let (j, n) = (3, 41); // n indivisible by any chunking
+        let xs: Vec<Vec<f32>> =
+            (0..j).map(|i| randv(n, 10 + i as u64)).collect();
+        let xbar = randv(n, 20);
+        let p = randm(n, n, 21);
+        assert_eq!(
+            native.average(&xs, &xbar, 0.85).unwrap(),
+            par.average(&xs, &xbar, 0.85).unwrap()
+        );
+        assert_eq!(
+            native.update(&xs[0], &xbar, &p, 0.9).unwrap(),
+            par.update(&xs[0], &xbar, &p, 0.9).unwrap()
+        );
+    }
+
+    #[test]
+    fn dgd_grad_bitwise_matches_native() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(2);
+        let a = randm(23, 9, 31);
+        let x = randv(9, 32);
+        let b = randv(23, 33);
+        assert_eq!(
+            native.dgd_grad(&a, &x, &b).unwrap(),
+            par.dgd_grad(&a, &x, &b).unwrap()
+        );
+    }
+
+    #[test]
+    fn init_all_parallel_matches_serial() {
+        let par = ParallelEngine::new(3);
+        let blocks: Vec<(Matrix, Vec<f32>)> = (0..4)
+            .map(|i| (randm(20, 6, 50 + i as u64), randv(20, 60 + i as u64)))
+            .collect();
+        let extract = |i: usize| blocks[i].clone();
+        let native = NativeEngine::new();
+        let serial = native.init_all(InitKind::Qr, 4, &extract, 6).unwrap();
+        let parallel = par.init_all(InitKind::Qr, 4, &extract, 6).unwrap();
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.x0, p.x0);
+            assert_eq!(
+                s.projector.as_slice(),
+                p.projector.as_slice()
+            );
+        }
+    }
+
+    #[test]
+    fn init_error_propagates_from_pool_jobs() {
+        let par = ParallelEngine::new(2);
+        let block = (randm(8, 4, 70), randv(8, 71));
+        // n_target mismatch is a reported error, not a panic
+        assert!(par
+            .init_all(InitKind::Qr, 1, &|_| block.clone(), 5)
+            .is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Persistent scoped thread pool — std-only (rayon/crossbeam are
+//! unavailable offline).
+//!
+//! The consensus epoch loop runs thousands of rounds; spawning OS threads
+//! per round would dominate the per-round cost at Table-1 shapes.  The
+//! pool keeps its workers alive for the engine's lifetime and hands out
+//! *scopes*: [`ThreadPool::scope`] lets callers spawn closures that borrow
+//! non-`'static` data (partition slices, workspace buffers) and guarantees
+//! every spawned job has finished before `scope` returns — the same
+//! contract as `std::thread::scope`, without re-spawning threads.
+//!
+//! Soundness of the lifetime-erasing transmute in [`Scope::spawn`] rests
+//! on exactly two invariants, both enforced here:
+//!
+//! 1. `scope` does not return (even by panic — see [`WaitGuard`]) until
+//!    the pending-job count is zero, so borrows can never dangle;
+//! 2. `'env` is a free lifetime parameter of `scope`, so the borrow
+//!    checker rejects spawning closures that borrow locals of the scope
+//!    body itself (a free region is required to outlive the closure).
+//!
+//! This is the crossbeam-utils `scope` design reduced to what the engine
+//! needs.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool; cheap to share behind an `Arc`.
+pub struct ThreadPool {
+    /// `Mutex` (not bare `Sender`) so the pool is `Sync` on every
+    /// supported toolchain; spawning locks it briefly per job.
+    injector: Mutex<Option<Sender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers; `0` means one per available
+    /// hardware thread.
+    pub fn new(threads: usize) -> Self {
+        let size = if threads == 0 {
+            default_threads()
+        } else {
+            threads
+        };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dapc-pool-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self {
+            injector: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
+            size,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f` with a [`Scope`]; every job spawned on the scope completes
+    /// before this returns.  Panics from jobs are re-raised here (after
+    /// all sibling jobs finish) so failures are not silently swallowed.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let tx = self
+            .injector
+            .lock()
+            .expect("pool injector poisoned")
+            .as_ref()
+            .expect("pool is shut down")
+            .clone();
+        let pending = Arc::new(Pending::default());
+        let scope = Scope { tx, pending, _env: PhantomData };
+        let guard = WaitGuard(&scope.pending);
+        let out = f(&scope);
+        drop(guard); // blocks until pending == 0, panic-safe
+        if scope.pending.panicked.load(Ordering::SeqCst) {
+            panic!("dapc thread pool: a scoped job panicked");
+        }
+        out
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // closing the channel ends every worker's recv loop
+        if let Ok(mut inj) = self.injector.lock() {
+            inj.take();
+        }
+        if let Ok(mut workers) = self.workers.lock() {
+            for h in workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+    }
+}
+
+/// One hardware thread per worker by default (capped: the consensus round
+/// fans out over J <= a few dozen partitions; more threads only add
+/// wakeup latency).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // hold the lock only while dequeuing, never while running a job
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // channel closed: pool dropped
+        }
+    }
+}
+
+/// Outstanding-job counter a scope waits on.
+#[derive(Default)]
+struct Pending {
+    count: Mutex<usize>,
+    zero: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Pending {
+    fn inc(&self) {
+        *self.count.lock().expect("pending poisoned") += 1;
+    }
+
+    fn dec(&self) {
+        let mut c = self.count.lock().expect("pending poisoned");
+        *c -= 1;
+        if *c == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut c = self.count.lock().expect("pending poisoned");
+        while *c > 0 {
+            c = self.zero.wait(c).expect("pending poisoned");
+        }
+    }
+}
+
+/// Waits for the scope's jobs even when the scope body unwinds — the
+/// borrows held by in-flight jobs must not outlive the caller's frame.
+struct WaitGuard<'a>(&'a Arc<Pending>);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait_zero();
+    }
+}
+
+/// Spawn handle passed to the closure given to [`ThreadPool::scope`].
+pub struct Scope<'env> {
+    tx: Sender<Job>,
+    pending: Arc<Pending>,
+    /// Invariant over `'env` (mirrors `std::thread::Scope`).
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue `f` on the pool.  `f` may borrow anything that outlives the
+    /// enclosing `scope` call; it runs on an arbitrary pool worker.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.pending.inc();
+        let pending = Arc::clone(&self.pending);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            if result.is_err() {
+                pending.panicked.store(true, Ordering::SeqCst);
+            }
+            pending.dec();
+        });
+        // SAFETY: the job is only erased to 'static, never extended in
+        // use: `scope` (via WaitGuard even on unwind) blocks until this
+        // job has run to completion, so every borrow in `f` is live for
+        // the job's whole execution.  Box<dyn FnOnce> has identical
+        // layout regardless of the trait object's lifetime bound.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        self.tx.send(job).expect("pool workers are gone");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_all_jobs_and_waits() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..64 {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // scope returned => every job observed complete
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn jobs_can_borrow_and_mutate_disjoint_slices() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 10];
+        pool.scope(|s| {
+            for (i, slot) in data.iter_mut().enumerate() {
+                s.spawn(move || {
+                    *slot = i * i;
+                });
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn scope_reusable_and_returns_value() {
+        let pool = ThreadPool::new(2);
+        let mut out = [0usize; 2];
+        for round in 0..5 {
+            // borrows must come from outside the scope body
+            let (a, b) = out.split_at_mut(1);
+            let (a0, b0) = (&mut a[0], &mut b[0]);
+            let got = pool.scope(|s| {
+                s.spawn(move || *a0 = round);
+                s.spawn(move || *b0 = round + 1);
+                42
+            });
+            assert_eq!(got, 42);
+            assert_eq!(out, [round, round + 1]);
+        }
+    }
+
+    #[test]
+    fn empty_scope_is_fine() {
+        let pool = ThreadPool::new(1);
+        let v = pool.scope(|_| 7);
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_scope_caller() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                pool.scope(|s| {
+                    s.spawn(|| panic!("boom"));
+                });
+            },
+        ));
+        assert!(caught.is_err());
+        // the pool survives a job panic
+        let ok = AtomicUsize::new(0);
+        pool.scope(|s| {
+            s.spawn(|| {
+                ok.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn zero_threads_means_auto() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.size() >= 1);
+    }
+}

@@ -3,135 +3,213 @@
 //!
 //! NOT `Send` (the xla crate's client is `Rc`-based) — cross-thread access
 //! goes through [`super::executor::XlaExecutor`].
+//!
+//! The real implementation needs the vendored `xla` crate and is compiled
+//! only with `--features xla`.  The default (offline) build gets a stub
+//! with the same surface: it still reads the artifact manifest — so
+//! `has_artifact` / `init_buckets` queries and `dapc info` work — but
+//! `execute`/`warm` return [`crate::error::DapcError::Xla`].
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod real {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use crate::error::{DapcError, Result};
+    use crate::error::{DapcError, Result};
 
-use super::manifest::ArtifactManifest;
-use super::tensor::Tensor;
+    use super::super::manifest::ArtifactManifest;
+    use super::super::tensor::Tensor;
 
-/// Owns the PJRT CPU client, the artifact manifest and a compiled
-/// executable cache keyed by artifact name.
-pub struct PjrtContext {
-    client: xla::PjRtClient,
-    manifest: ArtifactManifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl PjrtContext {
-    /// Create a CPU-client context over an artifact directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = ArtifactManifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    /// Owns the PJRT CPU client, the artifact manifest and a compiled
+    /// executable cache keyed by artifact name.
+    pub struct PjrtContext {
+        client: xla::PjRtClient,
+        manifest: ArtifactManifest,
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) an artifact by name.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
+    impl PjrtContext {
+        /// Create a CPU-client context over an artifact directory.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
         }
-        let meta = self.manifest.get(name)?;
-        let proto =
-            xla::HloModuleProto::from_text_file(&meta.path).map_err(|e| {
-                DapcError::Artifact(format!(
-                    "failed to parse {}: {e}",
-                    meta.path.display()
-                ))
-            })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Pre-compile a set of artifacts (warmup before the timed region).
-    pub fn warm(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.ensure_compiled(n)?;
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
         }
-        Ok(())
-    }
 
-    /// Execute an artifact with host tensors; returns the decomposed
-    /// output tuple as host tensors.
-    ///
-    /// Every aot.py artifact is lowered with `return_tuple=True`, so the
-    /// single output literal is always a tuple (possibly of one element).
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(name)?;
-        let meta = self.manifest.get(name)?;
-        if meta.input_shapes.len() != inputs.len() {
-            return Err(DapcError::Shape(format!(
-                "{name}: expected {} inputs, got {}",
-                meta.input_shapes.len(),
-                inputs.len()
-            )));
+        /// Compile (or fetch from cache) an artifact by name.
+        fn ensure_compiled(&self, name: &str) -> Result<()> {
+            if self.cache.borrow().contains_key(name) {
+                return Ok(());
+            }
+            let meta = self.manifest.get(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&meta.path)
+                .map_err(|e| {
+                    DapcError::Artifact(format!(
+                        "failed to parse {}: {e}",
+                        meta.path.display()
+                    ))
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+            Ok(())
         }
-        for (i, (t, want)) in inputs.iter().zip(&meta.input_shapes).enumerate()
-        {
-            if t.shape() != want.as_slice() {
+
+        /// Number of compiled executables currently cached.
+        pub fn cached_count(&self) -> usize {
+            self.cache.borrow().len()
+        }
+
+        /// Pre-compile a set of artifacts (warmup before the timed region).
+        pub fn warm(&self, names: &[&str]) -> Result<()> {
+            for n in names {
+                self.ensure_compiled(n)?;
+            }
+            Ok(())
+        }
+
+        /// Execute an artifact with host tensors; returns the decomposed
+        /// output tuple as host tensors.
+        ///
+        /// Every aot.py artifact is lowered with `return_tuple=True`, so
+        /// the single output literal is always a tuple (possibly of one
+        /// element).
+        pub fn execute(
+            &self,
+            name: &str,
+            inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            self.ensure_compiled(name)?;
+            let meta = self.manifest.get(name)?;
+            if meta.input_shapes.len() != inputs.len() {
                 return Err(DapcError::Shape(format!(
-                    "{name}: input {i} shape {:?} != manifest {:?}",
-                    t.shape(),
-                    want
+                    "{name}: expected {} inputs, got {}",
+                    meta.input_shapes.len(),
+                    inputs.len()
                 )));
             }
-        }
-
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(to_literal).collect::<Result<_>>()?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("compiled above");
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let out = result[0][0].to_literal_sync()?;
-        let elems = out.to_tuple()?;
-        elems.into_iter().map(|l| from_literal(&l)).collect()
-    }
-}
-
-/// Host tensor -> XLA literal.
-fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    match t {
-        Tensor::F32 { shape, data } => {
-            let lit = xla::Literal::vec1(data);
-            if shape.len() == 1 {
-                Ok(lit)
-            } else {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                Ok(lit.reshape(&dims)?)
+            for (i, (t, want)) in
+                inputs.iter().zip(&meta.input_shapes).enumerate()
+            {
+                if t.shape() != want.as_slice() {
+                    return Err(DapcError::Shape(format!(
+                        "{name}: input {i} shape {:?} != manifest {:?}",
+                        t.shape(),
+                        want
+                    )));
+                }
             }
+
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(to_literal).collect::<Result<_>>()?;
+            let cache = self.cache.borrow();
+            let exe = cache.get(name).expect("compiled above");
+            let result = exe.execute::<xla::Literal>(&literals)?;
+            let out = result[0][0].to_literal_sync()?;
+            let elems = out.to_tuple()?;
+            elems.into_iter().map(|l| from_literal(&l)).collect()
         }
-        Tensor::I32Scalar(v) => Ok(xla::Literal::scalar(*v)),
+    }
+
+    /// Host tensor -> XLA literal.
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        match t {
+            Tensor::F32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> =
+                        shape.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                }
+            }
+            Tensor::I32Scalar(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+
+    /// XLA literal -> host tensor (f32 only; all artifact outputs are f32).
+    fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+        let shape = l.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = l.to_vec::<f32>()?;
+        Ok(Tensor::F32 { shape: dims, data })
     }
 }
 
-/// XLA literal -> host tensor (f32 only; all artifact outputs are f32).
-fn from_literal(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>()?;
-    Ok(Tensor::F32 { shape: dims, data })
+#[cfg(feature = "xla")]
+pub use real::PjrtContext;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::error::{DapcError, Result};
+
+    use super::super::manifest::ArtifactManifest;
+    use super::super::tensor::Tensor;
+
+    /// Offline stub: manifest queries work, execution does not.
+    pub struct PjrtContext {
+        manifest: ArtifactManifest,
+    }
+
+    fn unavailable(what: &str) -> DapcError {
+        DapcError::Xla(format!(
+            "{what} requires the PJRT runtime; this build has no `xla` \
+             feature (rebuild with `--features xla` and the vendored xla \
+             crate, or use the native engine)"
+        ))
+    }
+
+    impl PjrtContext {
+        /// Load the manifest only; the PJRT client is unavailable.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(artifacts_dir)?;
+            Ok(Self { manifest })
+        }
+
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
+
+        /// Always 0: nothing can be compiled without PJRT.
+        pub fn cached_count(&self) -> usize {
+            0
+        }
+
+        /// Errors: compilation needs the real runtime.
+        pub fn warm(&self, _names: &[&str]) -> Result<()> {
+            Err(unavailable("artifact warmup"))
+        }
+
+        /// Errors: execution needs the real runtime.
+        pub fn execute(
+            &self,
+            name: &str,
+            _inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            Err(unavailable(&format!("executing artifact {name:?}")))
+        }
+    }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::PjrtContext;
 
 #[cfg(test)]
 mod tests {
     //! Hermetic tests use the real artifacts/ directory when present —
     //! they are the integration gate between aot.py and this runtime.
+    //! Execution tests additionally need the `xla` feature.
     use super::*;
-    use std::path::PathBuf;
+    use std::path::{Path, PathBuf};
 
     fn artifacts_dir() -> Option<PathBuf> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -139,46 +217,67 @@ mod tests {
     }
 
     #[test]
-    fn execute_mse_artifact() {
-        let Some(dir) = artifacts_dir() else { return };
-        let ctx = PjrtContext::new(&dir).unwrap();
-        let x = Tensor::vec1(vec![1.0; 32]);
-        let y = Tensor::vec1(vec![0.0; 32]);
-        let out = ctx.execute("mse_n32", &[x, y]).unwrap();
-        assert_eq!(out.len(), 1);
-        let v = out[0].f32_data().unwrap();
-        assert!((v[0] - 1.0).abs() < 1e-6);
+    fn missing_manifest_rejected() {
+        assert!(PjrtContext::new(Path::new("/nonexistent/xyz")).is_err());
     }
 
+    #[cfg(not(feature = "xla"))]
     #[test]
-    fn input_validation() {
-        let Some(dir) = artifacts_dir() else { return };
-        let ctx = PjrtContext::new(&dir).unwrap();
-        // wrong arity
-        assert!(ctx
-            .execute("mse_n32", &[Tensor::vec1(vec![0.0; 32])])
-            .is_err());
-        // wrong shape
-        assert!(ctx
-            .execute(
-                "mse_n32",
-                &[Tensor::vec1(vec![0.0; 16]), Tensor::vec1(vec![0.0; 32])]
-            )
-            .is_err());
-        // unknown artifact
-        assert!(ctx.execute("nope", &[]).is_err());
-    }
-
-    #[test]
-    fn executable_cache_reused() {
+    fn stub_reports_unavailable() {
         let Some(dir) = artifacts_dir() else { return };
         let ctx = PjrtContext::new(&dir).unwrap();
         assert_eq!(ctx.cached_count(), 0);
-        let x = Tensor::vec1(vec![1.0; 32]);
-        let y = Tensor::vec1(vec![2.0; 32]);
-        ctx.execute("mse_n32", &[x.clone(), y.clone()]).unwrap();
-        assert_eq!(ctx.cached_count(), 1);
-        ctx.execute("mse_n32", &[x, y]).unwrap();
-        assert_eq!(ctx.cached_count(), 1);
+        let err = ctx.execute("mse_n32", &[]).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[cfg(feature = "xla")]
+    mod with_runtime {
+        use super::*;
+        use crate::runtime::tensor::Tensor;
+
+        #[test]
+        fn execute_mse_artifact() {
+            let Some(dir) = artifacts_dir() else { return };
+            let ctx = PjrtContext::new(&dir).unwrap();
+            let x = Tensor::vec1(vec![1.0; 32]);
+            let y = Tensor::vec1(vec![0.0; 32]);
+            let out = ctx.execute("mse_n32", &[x, y]).unwrap();
+            assert_eq!(out.len(), 1);
+            let v = out[0].f32_data().unwrap();
+            assert!((v[0] - 1.0).abs() < 1e-6);
+        }
+
+        #[test]
+        fn input_validation() {
+            let Some(dir) = artifacts_dir() else { return };
+            let ctx = PjrtContext::new(&dir).unwrap();
+            // wrong arity
+            assert!(ctx
+                .execute("mse_n32", &[Tensor::vec1(vec![0.0; 32])])
+                .is_err());
+            // wrong shape
+            assert!(ctx
+                .execute(
+                    "mse_n32",
+                    &[Tensor::vec1(vec![0.0; 16]), Tensor::vec1(vec![0.0; 32])]
+                )
+                .is_err());
+            // unknown artifact
+            assert!(ctx.execute("nope", &[]).is_err());
+        }
+
+        #[test]
+        fn executable_cache_reused() {
+            let Some(dir) = artifacts_dir() else { return };
+            let ctx = PjrtContext::new(&dir).unwrap();
+            assert_eq!(ctx.cached_count(), 0);
+            let x = Tensor::vec1(vec![1.0; 32]);
+            let y = Tensor::vec1(vec![2.0; 32]);
+            ctx.execute("mse_n32", &[x.clone(), y.clone()]).unwrap();
+            assert_eq!(ctx.cached_count(), 1);
+            ctx.execute("mse_n32", &[x, y]).unwrap();
+            assert_eq!(ctx.cached_count(), 1);
+        }
     }
 }

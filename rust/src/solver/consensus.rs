@@ -12,8 +12,8 @@ use crate::metrics::ConvergenceTrace;
 use crate::partition::{PartitionPlan, PartitionRegime};
 use crate::sparse::CsrMatrix;
 
-use super::engine::{ComputeEngine, InitKind, WorkerInit};
-use super::report::{SolveOptions, SolveReport};
+use super::engine::{ComputeEngine, InitKind, RoundWorkspace};
+use super::report::{residual_norm, SolveOptions, SolveReport};
 use super::Solver;
 
 /// Which APC initialization a consensus solver uses.
@@ -106,17 +106,21 @@ pub fn run_apc<E: ComputeEngine>(
 
     // ---- init phase (Algorithm 1 steps 1-4) -----------------------------
     let t0 = Instant::now();
-    let mut inits: Vec<WorkerInit> = Vec::with_capacity(j);
     // engines may pad to a bucket; all partitions must agree on n_target
     let max_rows = plan.blocks.iter().map(|b| b.len()).max().unwrap();
     let n_target = engine
         .init_bucket(init_kind, max_rows, n)?
         .map(|(_, np)| np)
         .unwrap_or(n);
-    for i in 0..j {
-        let (sub, rhs) = plan.extract(a, b, i);
-        inits.push(engine.init(init_kind, &sub, &rhs, n_target)?);
-    }
+    // blocks are densified on demand inside init_all: the sequential
+    // engine holds one at a time (unchanged peak memory), the parallel
+    // engine extracts + factorizes partitions concurrently
+    let inits = engine.init_all(
+        init_kind,
+        j,
+        &|i| plan.extract(a, b, i),
+        n_target,
+    )?;
     let mut xs: Vec<Vec<f32>> = inits.iter().map(|w| w.x0.clone()).collect();
     let ps: Vec<_> = inits.into_iter().map(|w| w.projector).collect();
     // eq. (5): xbar(0) = mean of initial estimates
@@ -146,11 +150,26 @@ pub fn run_apc<E: ComputeEngine>(
         }
     }
     if !done_fused {
+        // steady-state loop: double-buffered estimates + a warmed
+        // workspace, so every epoch is allocation-free on engines that
+        // implement `round_into` in place (native and parallel both do)
+        let mut ws = RoundWorkspace::for_shape(j, xbar.len());
+        let mut next_xs: Vec<Vec<f32>> =
+            xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
+        let mut next_xbar = vec![0.0f32; xbar.len()];
         for t in 0..opts.epochs {
-            let (new_xs, new_xbar) =
-                engine.round(&xs, &xbar, &ps, opts.gamma, opts.eta)?;
-            xs = new_xs;
-            xbar = new_xbar;
+            engine.round_into(
+                &xs,
+                &xbar,
+                &ps,
+                opts.gamma,
+                opts.eta,
+                &mut ws,
+                &mut next_xs,
+                &mut next_xbar,
+            )?;
+            std::mem::swap(&mut xs, &mut next_xs);
+            std::mem::swap(&mut xbar, &mut next_xbar);
             if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
                 tr.push(t + 1, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
             }
@@ -163,11 +182,13 @@ pub fn run_apc<E: ComputeEngine>(
     for x in &mut xs {
         x.truncate(n);
     }
+    let residual = residual_norm(a, b, &xbar);
 
     Ok(SolveReport {
         xbar,
         x_parts: xs,
         trace,
+        residual: Some(residual),
         init_time,
         iterate_time,
         algorithm: match variant {

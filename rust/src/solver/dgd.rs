@@ -14,7 +14,7 @@ use crate::partition::PartitionPlan;
 use crate::sparse::CsrMatrix;
 
 use super::engine::ComputeEngine;
-use super::report::{SolveOptions, SolveReport};
+use super::report::{residual_norm, SolveOptions, SolveReport};
 use super::Solver;
 
 /// DGD solver over the same partition layout as APC.
@@ -81,11 +81,17 @@ impl Solver for DgdSolver {
         });
 
         let t1 = Instant::now();
+        // steady-state buffers, allocated once: per-block `A_j x` scratch
+        // (block row counts differ), one gradient output, one f64 total
+        let mut ax_ws: Vec<Vec<f32>> =
+            blocks.iter().map(|(sub, _)| vec![0.0f32; sub.rows()]).collect();
+        let mut grad = vec![0.0f32; n];
+        let mut total_grad = vec![0.0f64; n];
         for t in 0..opts.epochs {
-            let mut total_grad = vec![0.0f64; n];
-            for (sub, rhs) in &blocks {
-                let g = engine.dgd_grad(sub, &x, rhs)?;
-                for (tg, gi) in total_grad.iter_mut().zip(&g) {
+            total_grad.iter_mut().for_each(|v| *v = 0.0);
+            for ((sub, rhs), ax) in blocks.iter().zip(ax_ws.iter_mut()) {
+                engine.dgd_grad_into(sub, &x, rhs, ax, &mut grad)?;
+                for (tg, gi) in total_grad.iter_mut().zip(&grad) {
                     *tg += *gi as f64;
                 }
             }
@@ -97,11 +103,13 @@ impl Solver for DgdSolver {
             }
         }
         let iterate_time = t1.elapsed();
+        let residual = residual_norm(a, b, &x);
 
         Ok(SolveReport {
             xbar: x.clone(),
             x_parts: vec![x],
             trace,
+            residual: Some(residual),
             init_time,
             iterate_time,
             algorithm: "dgd",

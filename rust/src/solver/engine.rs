@@ -39,6 +39,90 @@ pub struct WorkerInit {
     pub projector: Matrix,
 }
 
+/// Reusable buffers for the workspace-reuse round path
+/// ([`ComputeEngine::round_into`]): once warmed to a (J, n) shape the
+/// steady-state epoch loop performs no heap allocations.
+#[derive(Debug, Default, Clone)]
+pub struct RoundWorkspace {
+    /// One n-length scratch per partition (eq. (6) direction buffer).
+    pub scratch: Vec<Vec<f32>>,
+    /// n-length f64 accumulator for the eq. (7) reduction.
+    pub acc: Vec<f64>,
+}
+
+impl RoundWorkspace {
+    /// Workspace pre-sized for a (J, n) round.
+    pub fn for_shape(j: usize, n: usize) -> Self {
+        let mut ws = Self::default();
+        ws.ensure(j, n);
+        ws
+    }
+
+    /// Grow to fit a (J, n) round; a no-op once warmed to the shape.
+    pub fn ensure(&mut self, j: usize, n: usize) {
+        if self.scratch.len() < j {
+            self.scratch.resize_with(j, Vec::new);
+        }
+        for s in &mut self.scratch[..j] {
+            if s.len() != n {
+                s.resize(n, 0.0);
+            }
+        }
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
+        }
+    }
+}
+
+/// Eq. (6) into caller buffers: `out = x + gamma * P (xbar - x)`.
+/// `scratch` and `out` must be exactly `x.len()` long.  Shared by the
+/// native and parallel engines so their iterates are bit-identical.
+pub(crate) fn update_kernel(
+    x: &[f32],
+    xbar: &[f32],
+    p: &Matrix,
+    gamma: f32,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    for ((d, &xb), &xi) in scratch.iter_mut().zip(xbar).zip(x) {
+        *d = xb - xi;
+    }
+    blas::gemv(p, scratch, out);
+    for (o, &xi) in out.iter_mut().zip(x) {
+        *o = xi + gamma * *o;
+    }
+}
+
+/// Eq. (7) over the index range `[lo, lo + out.len())`: sweeps each `x_j`
+/// contiguously (cache-friendly) instead of walking all J vectors per
+/// index.  Summation order over j is fixed, so chunking the range across
+/// threads cannot change a single output bit.
+pub(crate) fn average_chunk_kernel(
+    xs: &[Vec<f32>],
+    xbar: &[f32],
+    eta: f32,
+    lo: usize,
+    acc: &mut [f64],
+    out: &mut [f32],
+) {
+    let j = xs.len() as f64;
+    let len = out.len();
+    let eta = eta as f64;
+    for a in acc.iter_mut() {
+        *a = 0.0;
+    }
+    for x in xs {
+        for (a, &v) in acc.iter_mut().zip(&x[lo..lo + len]) {
+            *a += v as f64;
+        }
+    }
+    for ((o, &a), &xb) in out.iter_mut().zip(acc.iter()).zip(&xbar[lo..lo + len])
+    {
+        *o = (eta * (a / j) + (1.0 - eta) * xb as f64) as f32;
+    }
+}
+
 /// Engine-agnostic operations used by the solvers and the coordinator.
 pub trait ComputeEngine {
     /// Initialize one partition (dense block `a`, rhs `b`).
@@ -83,6 +167,88 @@ pub trait ComputeEngine {
         Ok((new_xs, new_xbar))
     }
 
+    /// Eq. (6) into caller-provided buffers (`scratch` and `out` of
+    /// length `x.len()`), allocating nothing.  Default copies through
+    /// [`Self::update`]; allocation-free engines override.
+    fn update_into(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+        scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let v = self.update(x, xbar, p, gamma)?;
+        out.copy_from_slice(&v);
+        let _ = scratch;
+        Ok(())
+    }
+
+    /// Eq. (7) into caller-provided buffers (`acc` of length >= n, `out`
+    /// of length n).  Default copies through [`Self::average`];
+    /// allocation-free engines override.
+    fn average_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        eta: f32,
+        acc: &mut [f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let v = self.average(xs, xbar, eta)?;
+        out.copy_from_slice(&v);
+        let _ = acc;
+        Ok(())
+    }
+
+    /// One fused epoch written into caller-provided buffers — the
+    /// steady-state path [`crate::solver::DapcSolver`] iterates, so a
+    /// warmed workspace makes the epoch loop allocation-free on engines
+    /// that override this.  The default delegates to [`Self::round`]
+    /// (preserving engine-specific fused paths, e.g. the XLA `round_*`
+    /// artifacts) and moves the results into the output buffers.
+    fn round_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<f32>],
+        out_xbar: &mut [f32],
+    ) -> Result<()> {
+        let (new_xs, new_xbar) = self.round(xs, xbar, ps, gamma, eta)?;
+        for (o, v) in out_xs.iter_mut().zip(new_xs) {
+            *o = v;
+        }
+        out_xbar.copy_from_slice(&new_xbar);
+        let _ = ws;
+        Ok(())
+    }
+
+    /// Initialize every partition (Algorithm 1 steps 2-3 across all J
+    /// blocks).  `extract(i)` densifies block `i` on demand, so the
+    /// serial default holds only ONE dense block at a time (same peak
+    /// memory as extracting inline); engines with a thread pool override
+    /// to extract + factorize partitions concurrently — init is
+    /// embarrassingly parallel across partitions.
+    fn init_all(
+        &self,
+        kind: InitKind,
+        j: usize,
+        extract: &(dyn Fn(usize) -> (Matrix, Vec<f32>) + Sync),
+        n_target: usize,
+    ) -> Result<Vec<WorkerInit>> {
+        (0..j)
+            .map(|i| {
+                let (a, b) = extract(i);
+                self.init(kind, &a, &b, n_target)
+            })
+            .collect()
+    }
+
     /// T fused epochs in one call when the engine supports it (the XLA
     /// engine runs the whole loop inside a single executable); `None`
     /// means the caller should iterate [`Self::round`].
@@ -100,6 +266,23 @@ pub trait ComputeEngine {
 
     /// DGD worker gradient `A^T (A x - b)`.
     fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>>;
+
+    /// [`Self::dgd_grad`] into caller buffers: `ax_scratch` of length
+    /// `a.rows()`, `out` of length `a.cols()`.  Default copies through
+    /// `dgd_grad`; allocation-free engines override.
+    fn dgd_grad_into(
+        &self,
+        a: &Matrix,
+        x: &[f32],
+        b: &[f32],
+        ax_scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let g = self.dgd_grad(a, x, b)?;
+        out.copy_from_slice(&g);
+        let _ = ax_scratch;
+        Ok(())
+    }
 
     /// The (l_pad, n_pad) bucket this engine needs for a block of shape
     /// (rows, n), or `None` when exact shapes are fine.
@@ -195,39 +378,232 @@ impl ComputeEngine for NativeEngine {
         gamma: f32,
     ) -> Result<Vec<f32>> {
         let n = x.len();
-        let d: Vec<f32> = xbar.iter().zip(x).map(|(a, b)| a - b).collect();
-        let mut pd = vec![0.0f32; n];
-        blas::gemv(p, &d, &mut pd);
-        Ok(x.iter().zip(&pd).map(|(xi, pi)| xi + gamma * pi).collect())
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        self.update_into(x, xbar, p, gamma, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    fn update_into(
+        &self,
+        x: &[f32],
+        xbar: &[f32],
+        p: &Matrix,
+        gamma: f32,
+        scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_update_shapes(x, xbar, p, scratch.len(), out.len())?;
+        update_kernel(x, xbar, p, gamma, scratch, out);
+        Ok(())
     }
 
     fn average(&self, xs: &[Vec<f32>], xbar: &[f32], eta: f32) -> Result<Vec<f32>> {
-        let j = xs.len() as f64;
         let n = xbar.len();
+        let mut acc = vec![0.0f64; n];
         let mut out = vec![0.0f32; n];
-        for i in 0..n {
-            let mean: f64 =
-                xs.iter().map(|x| x[i] as f64).sum::<f64>() / j;
-            out[i] = (eta as f64 * mean + (1.0 - eta as f64) * xbar[i] as f64)
-                as f32;
-        }
+        self.average_into(xs, xbar, eta, &mut acc, &mut out)?;
         Ok(out)
+    }
+
+    fn average_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        eta: f32,
+        acc: &mut [f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = xbar.len();
+        check_average_shapes(xs, n, acc.len(), out.len())?;
+        average_chunk_kernel(xs, xbar, eta, 0, &mut acc[..n], out);
+        Ok(())
+    }
+
+    fn round_into(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<f32>],
+        out_xbar: &mut [f32],
+    ) -> Result<()> {
+        let j = xs.len();
+        check_round_shapes(xs, ps, out_xs, xbar.len())?;
+        ws.ensure(j, xbar.len());
+        for i in 0..j {
+            self.update_into(
+                &xs[i],
+                xbar,
+                &ps[i],
+                gamma,
+                &mut ws.scratch[i],
+                &mut out_xs[i],
+            )?;
+        }
+        self.average_into(&*out_xs, xbar, eta, &mut ws.acc, out_xbar)
+    }
+
+    fn round(
+        &self,
+        xs: &[Vec<f32>],
+        xbar: &[f32],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let mut out_xs: Vec<Vec<f32>> =
+            xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
+        let mut out_xbar = vec![0.0f32; xbar.len()];
+        let mut ws = RoundWorkspace::for_shape(xs.len(), xbar.len());
+        self.round_into(
+            xs,
+            xbar,
+            ps,
+            gamma,
+            eta,
+            &mut ws,
+            &mut out_xs,
+            &mut out_xbar,
+        )?;
+        Ok((out_xs, out_xbar))
     }
 
     fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         let mut ax = vec![0.0f32; a.rows()];
-        blas::gemv(a, x, &mut ax);
-        for (axi, bi) in ax.iter_mut().zip(b) {
+        let mut g = vec![0.0f32; a.cols()];
+        self.dgd_grad_into(a, x, b, &mut ax, &mut g)?;
+        Ok(g)
+    }
+
+    fn dgd_grad_into(
+        &self,
+        a: &Matrix,
+        x: &[f32],
+        b: &[f32],
+        ax_scratch: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_dgd_shapes(a, x, b, ax_scratch.len(), out.len())?;
+        blas::gemv(a, x, ax_scratch);
+        for (axi, bi) in ax_scratch.iter_mut().zip(b) {
             *axi -= bi;
         }
-        let mut g = vec![0.0f32; a.cols()];
-        blas::gemv_t(a, &ax, &mut g);
-        Ok(g)
+        blas::gemv_t(a, ax_scratch, out);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
         "native"
     }
+}
+
+/// Shared shape validation for the update paths (native + parallel).
+pub(crate) fn check_update_shapes(
+    x: &[f32],
+    xbar: &[f32],
+    p: &Matrix,
+    scratch_len: usize,
+    out_len: usize,
+) -> Result<()> {
+    let n = x.len();
+    if xbar.len() != n || scratch_len != n || out_len != n {
+        return Err(DapcError::Shape(format!(
+            "update_into buffer lengths ({}, {scratch_len}, {out_len}) \
+             != n = {n}",
+            xbar.len()
+        )));
+    }
+    if p.shape() != (n, n) {
+        return Err(DapcError::Shape(format!(
+            "projector shape {:?} != ({n}, {n})",
+            p.shape()
+        )));
+    }
+    Ok(())
+}
+
+/// Shared shape validation for the average paths (native + parallel).
+pub(crate) fn check_average_shapes(
+    xs: &[Vec<f32>],
+    n: usize,
+    acc_len: usize,
+    out_len: usize,
+) -> Result<()> {
+    if xs.is_empty() {
+        return Err(DapcError::Shape("average over zero partitions".into()));
+    }
+    if acc_len < n || out_len != n {
+        return Err(DapcError::Shape(format!(
+            "average_into buffers (acc {acc_len}, out {out_len}) \
+             incompatible with n = {n}"
+        )));
+    }
+    if let Some(bad) = xs.iter().find(|x| x.len() < n) {
+        return Err(DapcError::Shape(format!(
+            "estimate length {} < n = {n}",
+            bad.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Shared shape validation for the round paths (native + parallel).
+pub(crate) fn check_round_shapes(
+    xs: &[Vec<f32>],
+    ps: &[Matrix],
+    out_xs: &[Vec<f32>],
+    n: usize,
+) -> Result<()> {
+    let j = xs.len();
+    if ps.len() != j || out_xs.len() != j {
+        return Err(DapcError::Shape(format!(
+            "round over {j} partitions got {} projectors / {} outputs",
+            ps.len(),
+            out_xs.len()
+        )));
+    }
+    for (x, o) in xs.iter().zip(out_xs) {
+        if x.len() != n || o.len() != n {
+            return Err(DapcError::Shape(format!(
+                "round estimate/output lengths ({}, {}) != n = {n}",
+                x.len(),
+                o.len()
+            )));
+        }
+    }
+    for p in ps {
+        if p.shape() != (n, n) {
+            return Err(DapcError::Shape(format!(
+                "projector shape {:?} != ({n}, {n})",
+                p.shape()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Shared shape validation for the DGD gradient paths.
+pub(crate) fn check_dgd_shapes(
+    a: &Matrix,
+    x: &[f32],
+    b: &[f32],
+    ax_len: usize,
+    out_len: usize,
+) -> Result<()> {
+    let (l, n) = a.shape();
+    if x.len() != n || b.len() != l || ax_len != l || out_len != n {
+        return Err(DapcError::Shape(format!(
+            "dgd_grad_into shapes (x {}, b {}, ax {ax_len}, out {out_len}) \
+             incompatible with A {l}x{n}",
+            x.len(),
+            b.len()
+        )));
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -577,5 +953,112 @@ mod tests {
             bucket::choose_bucket(10, 4, &[(16, 4)]),
             Some((16, 4))
         );
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_exactly() {
+        let e = NativeEngine::new();
+        let mut g = seeded(77);
+        let n = 19; // odd on purpose: exercises unaligned lengths
+        let j = 3;
+        let xs: Vec<Vec<f32>> = (0..j)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let ps: Vec<Matrix> = (0..j)
+            .map(|i| randm(n, n, 400 + i as u64))
+            .collect();
+
+        // update_into == update
+        let want = e.update(&xs[0], &xbar, &ps[0], 0.8).unwrap();
+        let mut scratch = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        e.update_into(&xs[0], &xbar, &ps[0], 0.8, &mut scratch, &mut got)
+            .unwrap();
+        assert_eq!(want, got);
+
+        // average_into == average
+        let want = e.average(&xs, &xbar, 0.7).unwrap();
+        let mut acc = vec![0.0f64; n];
+        let mut got = vec![0.0f32; n];
+        e.average_into(&xs, &xbar, 0.7, &mut acc, &mut got).unwrap();
+        assert_eq!(want, got);
+
+        // round_into == round, workspace reused across epochs
+        let mut ws = RoundWorkspace::for_shape(j, n);
+        let mut out_xs: Vec<Vec<f32>> = vec![vec![0.0; n]; j];
+        let mut out_xbar = vec![0.0f32; n];
+        let (want_xs, want_xbar) = e.round(&xs, &xbar, &ps, 0.7, 0.4).unwrap();
+        e.round_into(
+            &xs, &xbar, &ps, 0.7, 0.4, &mut ws, &mut out_xs, &mut out_xbar,
+        )
+        .unwrap();
+        assert_eq!(want_xs, out_xs);
+        assert_eq!(want_xbar, out_xbar);
+
+        // second epoch through the same workspace
+        let (want_xs2, want_xbar2) =
+            e.round(&out_xs, &out_xbar, &ps, 0.7, 0.4).unwrap();
+        let mut out_xs2: Vec<Vec<f32>> = vec![vec![0.0; n]; j];
+        let mut out_xbar2 = vec![0.0f32; n];
+        e.round_into(
+            &out_xs, &out_xbar, &ps, 0.7, 0.4, &mut ws, &mut out_xs2,
+            &mut out_xbar2,
+        )
+        .unwrap();
+        assert_eq!(want_xs2, out_xs2);
+        assert_eq!(want_xbar2, out_xbar2);
+    }
+
+    #[test]
+    fn dgd_grad_into_matches_and_validates() {
+        let (a, b, x_true) = consistent(20, 8, 7);
+        let e = NativeEngine::new();
+        let want = e.dgd_grad(&a, &x_true, &b).unwrap();
+        let mut ax = vec![0.0f32; 20];
+        let mut got = vec![0.0f32; 8];
+        e.dgd_grad_into(&a, &x_true, &b, &mut ax, &mut got).unwrap();
+        assert_eq!(want, got);
+        // bad buffer lengths are rejected, not UB
+        let mut short = vec![0.0f32; 3];
+        assert!(e
+            .dgd_grad_into(&a, &x_true, &b, &mut ax, &mut short)
+            .is_err());
+    }
+
+    #[test]
+    fn init_all_matches_per_partition_init() {
+        let e = NativeEngine::new();
+        let blocks: Vec<(Matrix, Vec<f32>)> = (0..3)
+            .map(|i| {
+                let (a, b, _) = consistent(24, 8, 30 + i);
+                (a, b)
+            })
+            .collect();
+        let all = e
+            .init_all(InitKind::Qr, 3, &|i| blocks[i].clone(), 8)
+            .unwrap();
+        assert_eq!(all.len(), 3);
+        for (w, (a, b)) in all.iter().zip(&blocks) {
+            let single = e.init(InitKind::Qr, a, b, 8).unwrap();
+            assert_eq!(w.x0, single.x0);
+        }
+    }
+
+    #[test]
+    fn bad_round_shapes_rejected() {
+        let e = NativeEngine::new();
+        let xs = vec![vec![0.0f32; 4]];
+        let xbar = vec![0.0f32; 4];
+        let ps = vec![Matrix::eye(3)]; // wrong projector shape
+        let mut ws = RoundWorkspace::default();
+        let mut out_xs = vec![vec![0.0f32; 4]];
+        let mut out_xbar = vec![0.0f32; 4];
+        assert!(e
+            .round_into(
+                &xs, &xbar, &ps, 0.5, 0.5, &mut ws, &mut out_xs,
+                &mut out_xbar
+            )
+            .is_err());
     }
 }

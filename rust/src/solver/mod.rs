@@ -8,13 +8,18 @@
 
 mod consensus;
 mod dgd;
-mod engine;
+pub(crate) mod engine;
 mod report;
 
 pub use consensus::{ApcClassicalSolver, ApcVariant, DapcSolver};
 pub use dgd::DgdSolver;
-pub use engine::{ComputeEngine, InitKind, NativeEngine, XlaEngine};
-pub use report::{SolveOptions, SolveReport};
+pub use engine::{
+    ComputeEngine, InitKind, NativeEngine, RoundWorkspace, WorkerInit,
+    XlaEngine,
+};
+pub use report::{residual_norm, SolveOptions, SolveReport};
+
+pub use crate::parallel::ParallelEngine;
 
 use crate::error::Result;
 use crate::sparse::CsrMatrix;

@@ -4,6 +4,22 @@ use std::time::Duration;
 
 use crate::linalg::norms;
 use crate::metrics::ConvergenceTrace;
+use crate::sparse::CsrMatrix;
+
+/// `||A x - b||_2` through the allocation-free CSR
+/// [`CsrMatrix::spmv_into`] path (one scratch vector, reused internally).
+pub fn residual_norm(a: &CsrMatrix, b: &[f32], x: &[f32]) -> f64 {
+    let mut ax = vec![0.0f32; a.rows()];
+    a.spmv_into(x, &mut ax);
+    ax.iter()
+        .zip(b)
+        .map(|(axi, bi)| {
+            let d = (*axi as f64) - (*bi as f64);
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
 
 /// Hyper-parameters and run controls shared by all solvers.
 #[derive(Debug, Clone)]
@@ -46,6 +62,8 @@ pub struct SolveReport {
     pub x_parts: Vec<Vec<f32>>,
     /// MSE-per-epoch trace when `x_true` was provided.
     pub trace: Option<ConvergenceTrace>,
+    /// Final residual `||A xbar - b||_2` when the solver computed it.
+    pub residual: Option<f64>,
     /// Initialization wall time (QR / inversion phase).
     pub init_time: Duration,
     /// Consensus-iteration wall time.
@@ -76,14 +94,19 @@ impl SolveReport {
 
     /// One summary line for logs.
     pub fn summary(&self) -> String {
+        let residual = match self.residual {
+            Some(r) => format!(" residual={r:.3e}"),
+            None => String::new(),
+        };
         format!(
-            "{} [{}] epochs={} init={:.3}s iterate={:.3}s total={:.3}s",
+            "{} [{}] epochs={} init={:.3}s iterate={:.3}s total={:.3}s{}",
             self.algorithm,
             self.engine,
             self.epochs,
             self.init_time.as_secs_f64(),
             self.iterate_time.as_secs_f64(),
             self.total_time().as_secs_f64(),
+            residual,
         )
     }
 }
@@ -106,6 +129,7 @@ mod tests {
             xbar: vec![1.0, 1.0],
             x_parts: vec![],
             trace: None,
+            residual: None,
             init_time: Duration::from_millis(500),
             iterate_time: Duration::from_millis(1500),
             algorithm: "dapc-decomposed",
@@ -116,5 +140,25 @@ mod tests {
         assert!((r.final_mse(&[0.0, 0.0]) - 1.0).abs() < 1e-12);
         assert!((r.mae_against(&[0.0, 2.0]) - 1.0).abs() < 1e-12);
         assert!(r.summary().contains("dapc-decomposed"));
+        assert!(!r.summary().contains("residual"));
+        let with_res = SolveReport { residual: Some(1e-5), ..r };
+        assert!(with_res.summary().contains("residual=1.000e-5"));
+    }
+
+    #[test]
+    fn residual_norm_zero_at_solution() {
+        use crate::linalg::Matrix;
+        // A = [[2, 0], [0, 3], [1, 1]], x = [1, 2] => b = [2, 6, 3]
+        let a = CsrMatrix::from_dense(&Matrix::from_vec(
+            3,
+            2,
+            vec![2.0, 0.0, 0.0, 3.0, 1.0, 1.0],
+        ));
+        let x = [1.0f32, 2.0];
+        let b = [2.0f32, 6.0, 3.0];
+        assert!(residual_norm(&a, &b, &x) < 1e-12);
+        // off-by-one in the last component => residual exactly 1
+        let b_off = [2.0f32, 6.0, 4.0];
+        assert!((residual_norm(&a, &b_off, &x) - 1.0).abs() < 1e-9);
     }
 }

@@ -121,8 +121,10 @@ impl CsrMatrix {
         (&self.indices[lo..hi], &self.values[lo..hi])
     }
 
-    /// Sparse mat-vec `y = A x`.
-    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+    /// Sparse mat-vec `y = A x` into a caller-provided buffer — the
+    /// allocation-free entry point the solvers' steady-state loops use
+    /// (gradient and residual evaluation reuse one scratch vector).
+    pub fn spmv_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         for i in 0..self.rows {
@@ -133,6 +135,12 @@ impl CsrMatrix {
             }
             y[i] = acc as f32;
         }
+    }
+
+    /// Sparse mat-vec `y = A x` (alias of [`Self::spmv_into`], kept for
+    /// existing callers).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        self.spmv_into(x, y);
     }
 
     /// Rows `[start, end)` densified — the paper's `create_submatrices`

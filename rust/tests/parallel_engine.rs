@@ -1,0 +1,196 @@
+//! Property and determinism tests for the parallel execution subsystem:
+//! `ParallelEngine` must agree with the sequential `NativeEngine` on
+//! every operation (within 1e-6; in practice bit-exactly) across random
+//! shapes — including J=1, ragged last partitions and index ranges that
+//! do not divide evenly into chunks — and must be deterministic across
+//! thread counts.
+
+use dapc::linalg::{norms, Matrix};
+use dapc::parallel::ParallelEngine;
+use dapc::rng::seeded;
+use dapc::solver::{
+    ComputeEngine, DapcSolver, DgdSolver, NativeEngine, RoundWorkspace,
+    SolveOptions, Solver,
+};
+use dapc::sparse::generate::GeneratorConfig;
+
+fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut g = seeded(seed);
+    Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+}
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut g = seeded(seed);
+    (0..n).map(|_| g.normal_f32()).collect()
+}
+
+/// Random (J, n) cases: J=1, odd n, n smaller and larger than typical
+/// chunk sizes, J not dividing n.
+fn round_cases() -> Vec<(usize, usize)> {
+    vec![(1, 1), (1, 17), (2, 7), (3, 31), (4, 64), (5, 37), (8, 129)]
+}
+
+#[test]
+fn prop_round_matches_native_across_shapes() {
+    let native = NativeEngine::new();
+    for (case, &(j, n)) in round_cases().iter().enumerate() {
+        let seed = 1000 + case as u64 * 10;
+        let par = ParallelEngine::new(1 + case % 5);
+        let xs: Vec<Vec<f32>> =
+            (0..j).map(|i| randv(n, seed + i as u64)).collect();
+        let xbar = randv(n, seed + 100);
+        let ps: Vec<Matrix> =
+            (0..j).map(|i| randm(n, n, seed + 200 + i as u64)).collect();
+
+        let (nx, nb) = native.round(&xs, &xbar, &ps, 0.8, 0.7).unwrap();
+        let (px, pb) = par.round(&xs, &xbar, &ps, 0.8, 0.7).unwrap();
+        for (a, b) in nx.iter().zip(&px) {
+            assert!(norms::mae(a, b) < 1e-6, "round x (j={j}, n={n})");
+        }
+        assert!(norms::mae(&nb, &pb) < 1e-6, "round xbar (j={j}, n={n})");
+    }
+}
+
+#[test]
+fn prop_average_matches_native_across_shapes() {
+    let native = NativeEngine::new();
+    for (case, &(j, n)) in round_cases().iter().enumerate() {
+        let seed = 2000 + case as u64 * 10;
+        let par = ParallelEngine::new(2 + case % 4);
+        let xs: Vec<Vec<f32>> =
+            (0..j).map(|i| randv(n, seed + i as u64)).collect();
+        let xbar = randv(n, seed + 100);
+        let na = native.average(&xs, &xbar, 0.65).unwrap();
+        let pa = par.average(&xs, &xbar, 0.65).unwrap();
+        assert!(norms::mae(&na, &pa) < 1e-6, "average (j={j}, n={n})");
+    }
+}
+
+#[test]
+fn prop_dgd_grad_matches_native_across_shapes() {
+    let native = NativeEngine::new();
+    for (case, &(l, n)) in
+        [(1usize, 1usize), (5, 3), (23, 9), (64, 33), (101, 29)]
+            .iter()
+            .enumerate()
+    {
+        let seed = 3000 + case as u64 * 10;
+        let par = ParallelEngine::new(1 + case % 4);
+        let a = randm(l, n, seed);
+        let x = randv(n, seed + 1);
+        let b = randv(l, seed + 2);
+        let ng = native.dgd_grad(&a, &x, &b).unwrap();
+        let pg = par.dgd_grad(&a, &x, &b).unwrap();
+        assert!(norms::mae(&ng, &pg) < 1e-6, "dgd_grad ({l}x{n})");
+    }
+}
+
+#[test]
+fn determinism_same_seed_identical_across_thread_counts() {
+    // same inputs, thread counts 1/2/3/8: identical bits out
+    let (j, n) = (5, 53);
+    let xs: Vec<Vec<f32>> = (0..j).map(|i| randv(n, 40 + i as u64)).collect();
+    let xbar = randv(n, 90);
+    let ps: Vec<Matrix> =
+        (0..j).map(|i| randm(n, n, 60 + i as u64)).collect();
+
+    let reference = ParallelEngine::new(1)
+        .round(&xs, &xbar, &ps, 0.9, 0.8)
+        .unwrap();
+    for threads in [2usize, 3, 8] {
+        let got = ParallelEngine::new(threads)
+            .round(&xs, &xbar, &ps, 0.9, 0.8)
+            .unwrap();
+        assert_eq!(reference.0, got.0, "xs diverged at {threads} threads");
+        assert_eq!(reference.1, got.1, "xbar diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn full_solve_matches_native_with_ragged_last_partition() {
+    // m = 4n + remainder rows so the last partition absorbs a ragged tail
+    let n = 48;
+    let mut cfg = GeneratorConfig::small_demo(n, 3);
+    cfg.m_total = 4 * n + 7;
+    let ds = cfg.generate(7);
+    let opts = SolveOptions { epochs: 25, ..Default::default() };
+
+    let native_report = DapcSolver::new(opts.clone())
+        .solve(&NativeEngine::new(), &ds.matrix, &ds.rhs, 3)
+        .unwrap();
+    for threads in [1usize, 4] {
+        let par_report = DapcSolver::new(opts.clone())
+            .solve(&ParallelEngine::new(threads), &ds.matrix, &ds.rhs, 3)
+            .unwrap();
+        assert_eq!(par_report.engine, "parallel");
+        let diff = norms::mse(&native_report.xbar, &par_report.xbar);
+        assert!(diff < 1e-12, "solve diverged at {threads} threads: {diff:e}");
+    }
+    // and it actually solves the system
+    assert!(native_report.final_mse(&ds.x_true) < 1e-6);
+}
+
+#[test]
+fn full_dgd_solve_matches_native() {
+    let ds = GeneratorConfig::small_demo(24, 2).generate(11);
+    let opts = SolveOptions {
+        epochs: 60,
+        dgd_step: 0.0,
+        ..Default::default()
+    };
+    let n_report = DgdSolver::new(opts.clone())
+        .solve(&NativeEngine::new(), &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    let p_report = DgdSolver::new(opts)
+        .solve(&ParallelEngine::new(3), &ds.matrix, &ds.rhs, 2)
+        .unwrap();
+    assert!(norms::mse(&n_report.xbar, &p_report.xbar) < 1e-12);
+    // dgd now reports a residual through the spmv_into path
+    assert!(n_report.residual.is_some());
+}
+
+#[test]
+fn round_into_is_reusable_and_matches_round_on_parallel_engine() {
+    let par = ParallelEngine::new(3);
+    let (j, n) = (4, 33);
+    let mut xs: Vec<Vec<f32>> =
+        (0..j).map(|i| randv(n, 500 + i as u64)).collect();
+    let mut xbar = randv(n, 600);
+    let ps: Vec<Matrix> =
+        (0..j).map(|i| randm(n, n, 700 + i as u64)).collect();
+
+    let mut ws = RoundWorkspace::for_shape(j, n);
+    let mut next_xs: Vec<Vec<f32>> = vec![vec![0.0; n]; j];
+    let mut next_xbar = vec![0.0f32; n];
+    for _ in 0..5 {
+        let (want_xs, want_xbar) =
+            par.round(&xs, &xbar, &ps, 0.7, 0.6).unwrap();
+        par.round_into(
+            &xs, &xbar, &ps, 0.7, 0.6, &mut ws, &mut next_xs, &mut next_xbar,
+        )
+        .unwrap();
+        assert_eq!(want_xs, next_xs);
+        assert_eq!(want_xbar, next_xbar);
+        std::mem::swap(&mut xs, &mut next_xs);
+        std::mem::swap(&mut xbar, &mut next_xbar);
+    }
+}
+
+#[test]
+fn parallel_engine_in_local_cluster() {
+    // engines are built inside worker threads; share-nothing pools
+    let ds = GeneratorConfig::small_demo(16, 2).generate(21);
+    let mut cluster =
+        dapc::coordinator::LocalCluster::spawn(2, || ParallelEngine::new(2))
+            .unwrap();
+    let report = cluster
+        .leader
+        .solve_apc(
+            &ds.matrix,
+            &ds.rhs,
+            dapc::solver::ApcVariant::Decomposed,
+            &SolveOptions { epochs: 20, ..Default::default() },
+        )
+        .unwrap();
+    assert!(report.final_mse(&ds.x_true) < 1e-6);
+}
