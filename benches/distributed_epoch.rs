@@ -1,0 +1,110 @@
+//! Distributed epoch cost: per-epoch wall time and wire bytes for the
+//! threaded channel cluster at J ∈ {2, 4, 8}, through the unified
+//! consensus driver.
+//!
+//! Wire traffic is counted by the `Transport` byte counters (framing
+//! included).  Each J is run at three epoch budgets on fresh clusters;
+//! total bytes must be EXACTLY affine in the epoch count
+//! (`init_bytes + T * per_epoch_bytes`) — any super-linear growth would
+//! mean the leader's per-epoch traffic (or retained buffers feeding it)
+//! grows with T.  The bench asserts this flatness and records it in
+//! `BENCH_distributed_epoch.json`.
+
+use dapc::benchkit::{quick_mode, Bench, JsonReport};
+use dapc::coordinator::LocalCluster;
+use dapc::prelude::*;
+use dapc::solver::{drive_apc, ApcVariant};
+use dapc::sparse::generate::GeneratorConfig;
+
+fn main() {
+    // m = 16n keeps every J in {2,4,8} in the paper's tall regime
+    let n = if quick_mode() { 64 } else { 256 };
+    let m = 16 * n;
+    let shape = format!("{m}x{n}");
+    let ds = GeneratorConfig::table1(m, n).generate(2327);
+    let bench = Bench::new(0, 1);
+    let mut report = JsonReport::new("distributed_epoch");
+    let budgets: [usize; 3] = if quick_mode() { [4, 8, 16] } else { [10, 20, 40] };
+
+    println!(
+        "=== distributed epoch cost: decomposed APC over the channel \
+         cluster, {shape}, J in {{2,4,8}}, T in {budgets:?} ==="
+    );
+    for &j in &[2usize, 4, 8] {
+        // (epochs, total wire bytes, iterate seconds)
+        let mut runs: Vec<(usize, u64, f64)> = Vec::new();
+        for &epochs in &budgets {
+            let opts = SolveOptions { epochs, ..Default::default() };
+            let mut wire_total = 0u64;
+            let mut iterate_s = 0.0f64;
+            let res = bench.run_once(&format!("J={j} T={epochs}"), || {
+                let mut cluster = LocalCluster::spawn(j, NativeEngine::new)
+                    .expect("cluster");
+                let r = drive_apc(
+                    cluster.leader.backend_mut(),
+                    &ds.matrix,
+                    &ds.rhs,
+                    ApcVariant::Decomposed,
+                    &opts,
+                )
+                .expect("solve");
+                // read counters BEFORE shutdown frames are sent
+                let (sent, received) = cluster.leader.wire_bytes();
+                wire_total = sent + received;
+                iterate_s = r.iterate_time.as_secs_f64();
+                cluster.join();
+            });
+            runs.push((epochs, wire_total, iterate_s));
+            report.add(
+                &res,
+                &[
+                    ("j", j as f64),
+                    ("epochs", epochs as f64),
+                    ("iterate_s", iterate_s),
+                    ("per_epoch_s", iterate_s / epochs as f64),
+                    ("wire_bytes_total", wire_total as f64),
+                ],
+                &[("shape", shape.as_str()), ("backend", "cluster-channel")],
+            );
+        }
+
+        // flatness: total bytes must be affine in T with one slope
+        let (t0, b0, _) = runs[0];
+        let (t1, b1, _) = runs[1];
+        let (t2, b2, _) = runs[2];
+        assert_eq!(
+            (b1 - b0) % (t1 - t0) as u64,
+            0,
+            "J={j}: wire bytes not an integer multiple of epochs"
+        );
+        let per_epoch = (b1 - b0) / (t1 - t0) as u64;
+        let init_bytes = b0 - t0 as u64 * per_epoch;
+        assert_eq!(
+            b2,
+            init_bytes + t2 as u64 * per_epoch,
+            "J={j}: per-epoch wire bytes are NOT flat in epoch count \
+             (leader traffic grows with T)"
+        );
+        let (_, _, iter_s) = runs[2];
+        println!(
+            "  -> J={j}: init {init_bytes} B, {per_epoch} B/epoch (flat \
+             across T={budgets:?}), {:.3} ms/epoch",
+            1e3 * iter_s / t2 as f64
+        );
+        report.add(
+            &bench.run_once(&format!("J={j} summary"), || {}),
+            &[
+                ("j", j as f64),
+                ("wire_bytes_per_epoch", per_epoch as f64),
+                ("wire_bytes_init", init_bytes as f64),
+                ("flat_in_epoch_count", 1.0),
+            ],
+            &[("shape", shape.as_str()), ("backend", "cluster-channel")],
+        );
+    }
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

@@ -4,16 +4,19 @@
 //!
 //! Shapes follow the paper's smallest Table-1 row (9308 x 2327):
 //! `DAPC_QUICK=1` runs 1/8 scale (CI smoke), default 1/4, `DAPC_FULL=1`
-//! the exact published shape.  Besides wall times the bench verifies the
-//! two engines produce *identical* solutions (the parallel engine is
-//! deterministic by construction) and writes machine-readable results to
-//! `BENCH_parallel_scaling.json`.
+//! the exact published shape.  Both engines run through the unified
+//! consensus driver (`drive_apc` over an `InProcessBackend` — the same
+//! loop the distributed cluster uses).  Besides wall times the bench
+//! verifies the two engines produce *identical* solutions (the parallel
+//! engine is deterministic by construction) and writes machine-readable
+//! results to `BENCH_parallel_scaling.json`.
 
 use dapc::benchkit::{full_mode, quick_mode, Bench, JsonReport};
 use dapc::linalg::norms;
 use dapc::metrics::TableBuilder;
 use dapc::parallel::default_threads;
 use dapc::prelude::*;
+use dapc::solver::{drive_apc, ApcVariant, InProcessBackend};
 use dapc::sparse::generate::GeneratorConfig;
 
 fn main() {
@@ -53,9 +56,15 @@ fn main() {
         let seq_engine = NativeEngine::new();
         let mut seq_xbar: Vec<f32> = Vec::new();
         let rs = bench.run_once(&format!("sequential   J={j}"), || {
-            let r = DapcSolver::new(opts.clone())
-                .solve(&seq_engine, &ds.matrix, &ds.rhs, j)
-                .expect("sequential solve");
+            let mut backend = InProcessBackend::new(&seq_engine, j);
+            let r = drive_apc(
+                &mut backend,
+                &ds.matrix,
+                &ds.rhs,
+                ApcVariant::Decomposed,
+                &opts,
+            )
+            .expect("sequential solve");
             seq_xbar = r.xbar;
         });
         report.add(
@@ -70,9 +79,15 @@ fn main() {
             let engine = ParallelEngine::new(t);
             let mut par_xbar: Vec<f32> = Vec::new();
             let rp = bench.run_once(&format!("parallel t={t} J={j}"), || {
-                let r = DapcSolver::new(opts.clone())
-                    .solve(&engine, &ds.matrix, &ds.rhs, j)
-                    .expect("parallel solve");
+                let mut backend = InProcessBackend::new(&engine, j);
+                let r = drive_apc(
+                    &mut backend,
+                    &ds.matrix,
+                    &ds.rhs,
+                    ApcVariant::Decomposed,
+                    &opts,
+                )
+                .expect("parallel solve");
                 par_xbar = r.xbar;
             });
             // the parallel engine runs the same kernels in the same

@@ -1,6 +1,9 @@
 //! Multi-process-style distributed run: workers serve the DAPC protocol
-//! over real TCP sockets, the leader connects and drives Algorithm 1 —
-//! the analog of the paper's Dask SSHCluster deployment.
+//! over real TCP sockets, the leader connects and drives Algorithm 1
+//! through the unified consensus driver (`solver::drive_apc`) over a
+//! `ClusterBackend` — the analog of the paper's Dask SSHCluster
+//! deployment, on the exact same epoch loop the single-process solvers
+//! use.
 //!
 //! This example hosts the workers in-process threads for self-containment;
 //! the identical code path runs across machines via the CLI:
@@ -14,7 +17,7 @@ use std::net::TcpListener;
 
 use dapc::coordinator::cluster::{connect_tcp_workers, serve_tcp_worker};
 use dapc::prelude::*;
-use dapc::solver::ApcVariant;
+use dapc::solver::{drive_apc, ApcVariant};
 use dapc::sparse::generate::GeneratorConfig;
 
 fn main() -> Result<()> {
@@ -50,18 +53,28 @@ fn main() -> Result<()> {
 
     let addr_strings: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
     let mut leader = connect_tcp_workers(&addr_strings)?;
-    let report = leader.solve_apc(
+    // the same drive_apc the in-process solvers run — only the backend
+    // (where each round executes) differs
+    let report = drive_apc(
+        leader.backend_mut(),
         &ds.matrix,
         &ds.rhs,
         ApcVariant::Decomposed,
         &SolveOptions { epochs: 60, ..Default::default() },
     )?;
+    let (sent, received) = leader.wire_bytes();
     leader.shutdown();
     for h in handles {
         h.join().expect("worker thread")?;
     }
 
     println!("{}", report.summary());
+    println!(
+        "wire traffic: {:.2} MiB out, {:.2} MiB in ({} epochs)",
+        sent as f64 / (1024.0 * 1024.0),
+        received as f64 / (1024.0 * 1024.0),
+        report.epochs,
+    );
     println!("MSE vs known solution: {:.3e}", report.final_mse(&ds.x_true));
     assert!(report.final_mse(&ds.x_true) < 1e-5);
     println!("distributed_tcp OK");

@@ -8,7 +8,9 @@
 //!   2. round-trip it through MatrixMarket files (the paper's input path);
 //!   3. solve with decomposed APC on the **XLA engine** (AOT Pallas/JAX
 //!      artifacts via PJRT — Layers 1+2) across a **local worker cluster**
-//!      (Layer 3 coordinator);
+//!      (Layer 3 coordinator; `Leader::solve_apc` runs the same unified
+//!      `solver::drive_apc` loop as the single-process solvers, over a
+//!      `ClusterBackend`);
 //!   4. solve with classical APC for the acceleration factor (Table 1);
 //!   5. report §5's statistics: solution mu/sigma, MAE(init, 1 epoch),
 //!      MSE vs the known solution, wall times.
@@ -75,7 +77,15 @@ fn main() -> Result<()> {
     );
     let decomposed = if native {
         let mut cluster = LocalCluster::spawn(j, NativeEngine::new)?;
-        cluster.leader.solve_apc(&a, &b, ApcVariant::Decomposed, &opts)?
+        let r =
+            cluster.leader.solve_apc(&a, &b, ApcVariant::Decomposed, &opts)?;
+        let (sent, received) = cluster.leader.wire_bytes();
+        println!(
+            "  wire traffic: {:.2} MiB out, {:.2} MiB in",
+            sent as f64 / (1024.0 * 1024.0),
+            received as f64 / (1024.0 * 1024.0)
+        );
+        r
     } else {
         let host = XlaExecutorHost::spawn(Path::new("artifacts"))?;
         let exec = host.executor();

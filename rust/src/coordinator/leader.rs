@@ -1,35 +1,396 @@
-//! Leader: drives Algorithm 1 over a set of worker transports.
+//! The distributed consensus backend and the leader facade.
+//!
+//! The epoch loop itself lives in [`crate::solver::driver`] — this module
+//! only implements *where* the rounds execute: [`ClusterBackend`]
+//! scatters each round over `Vec<Transport>` (pipelined: all J requests
+//! go out before the first reply is awaited), gathers replies
+//! out-of-order keyed on the embedded `worker_id` (a straggler in slot 0
+//! no longer serializes reply processing), and streams the fixed-order
+//! f64 accumulation the driver's eq. (7) mixing consumes.
 //!
 //! The leader owns only n-length vectors; all O(l n) / O(n^2) state stays
-//! on the workers.  Sends are pipelined (all J requests go out before the
-//! first reply is awaited) so workers compute concurrently.
-
-use std::time::Instant;
+//! on the workers.  Per-worker estimate slots are reused across epochs,
+//! so steady-state leader traffic causes no per-epoch memory growth.
 
 use crate::error::{DapcError, Result};
-use crate::linalg::norms;
-use crate::metrics::ConvergenceTrace;
-use crate::partition::{PartitionPlan, PartitionRegime};
+use crate::partition::PartitionPlan;
+use crate::solver::driver::{accumulate_sum, ConsensusBackend, RoundOutcome};
 use crate::solver::{
-    residual_norm, ApcVariant, InitKind, SolveOptions, SolveReport,
+    drive_apc, drive_dgd, ApcVariant, InitKind, SolveOptions, SolveReport,
 };
 use crate::sparse::CsrMatrix;
 
-use super::message::Message;
+use super::message::{InitKindWire, Message};
 use super::transport::Transport;
 
-/// Leader over J connected workers.
-pub struct Leader<T: Transport> {
-    workers: Vec<T>,
+/// Fruitless polling passes over all pending workers before the gather
+/// falls back to a blocking receive on the first straggler (avoids a
+/// busy-wait on quiet TCP links while keeping the common case lock-step
+/// free).
+const GATHER_SPIN_PASSES: usize = 256;
+
+/// Every reply slot must be claimed by a DISTINCT worker id: a duplicate
+/// would silently clobber one slot and leave another holding the previous
+/// epoch's stale estimate — wrong results with no error.
+fn mark_seen(seen: &mut [bool], wid: usize) -> Result<()> {
+    if wid >= seen.len() {
+        return Err(DapcError::Coordinator(format!(
+            "reply from unknown worker id {wid} (cluster has {})",
+            seen.len()
+        )));
+    }
+    if seen[wid] {
+        return Err(DapcError::Coordinator(format!(
+            "duplicate reply for worker id {wid}: two connections claim \
+             the same worker (same address listed twice?)"
+        )));
+    }
+    seen[wid] = true;
+    Ok(())
 }
 
-impl<T: Transport> Leader<T> {
-    pub fn new(workers: Vec<T>) -> Self {
-        Self { workers }
+/// Poll every pending worker, dispatching replies in ARRIVAL order; the
+/// caller's `on_msg` keys state on the reply's own `worker_id` and
+/// returns it so each id is verified to answer exactly once.  Falls back
+/// to a blocking receive once nothing has arrived for a while.
+fn gather<T, F>(
+    workers: &mut [T],
+    done: &mut Vec<bool>,
+    seen: &mut Vec<bool>,
+    mut on_msg: F,
+) -> Result<()>
+where
+    T: Transport,
+    F: FnMut(Message) -> Result<u32>,
+{
+    let j = workers.len();
+    done.clear();
+    done.resize(j, false);
+    seen.clear();
+    seen.resize(j, false);
+    let mut remaining = j;
+    let mut idle_passes = 0usize;
+    while remaining > 0 {
+        let mut progressed = false;
+        for (i, w) in workers.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            if let Some(msg) = w.try_recv()? {
+                let wid = on_msg(msg)?;
+                mark_seen(seen, wid as usize)?;
+                done[i] = true;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        if remaining == 0 {
+            break;
+        }
+        if progressed {
+            idle_passes = 0;
+            continue;
+        }
+        idle_passes += 1;
+        if idle_passes < GATHER_SPIN_PASSES {
+            std::thread::yield_now();
+            continue;
+        }
+        // nothing arriving: block on the first pending worker; whoever
+        // finished meanwhile is drained by the next polling pass
+        let i = done.iter().position(|d| !d).expect("remaining > 0");
+        let msg = workers[i].recv()?;
+        let wid = on_msg(msg)?;
+        mark_seen(seen, wid as usize)?;
+        done[i] = true;
+        remaining -= 1;
+        idle_passes = 0;
+    }
+    Ok(())
+}
+
+/// [`ConsensusBackend`] over J connected worker transports.
+pub struct ClusterBackend<T: Transport> {
+    workers: Vec<T>,
+    /// Per-worker estimate slots, reused across epochs (the only
+    /// per-worker state the leader holds).
+    xs: Vec<Vec<f32>>,
+    /// Reused gather bookkeeping (per-transport completion, per-id
+    /// uniqueness).
+    done: Vec<bool>,
+    seen: Vec<bool>,
+    epoch: u32,
+    n_target: usize,
+}
+
+impl<T: Transport> ClusterBackend<T> {
+    /// Backend over the given worker connections; rejects an empty
+    /// cluster up front (every later step would need `J >= 1`).
+    pub fn new(workers: Vec<T>) -> Result<Self> {
+        if workers.is_empty() {
+            return Err(DapcError::Coordinator(
+                "cluster needs at least one worker (got 0): there is no \
+                 worker to hold a partition"
+                    .into(),
+            ));
+        }
+        let j = workers.len();
+        Ok(Self {
+            workers,
+            xs: vec![Vec::new(); j],
+            done: Vec::new(),
+            seen: Vec::new(),
+            epoch: 0,
+            n_target: 0,
+        })
     }
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Total wire traffic so far as `(bytes_sent, bytes_received)`,
+    /// summed over all worker links (framing included).
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.workers.iter().fold((0, 0), |(s, r), w| {
+            (s + w.bytes_sent(), r + w.bytes_received())
+        })
+    }
+
+    /// Send shutdown to all workers (best-effort).
+    pub fn shutdown(&mut self) {
+        for w in self.workers.iter_mut() {
+            let _ = w.send(&Message::Shutdown);
+        }
+    }
+
+    /// Pipelined scatter of per-worker partition blocks.
+    fn scatter_blocks(
+        &mut self,
+        kind: InitKindWire,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+    ) -> Result<()> {
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let (sub, rhs) = plan.extract(a, b, i);
+            w.send(&Message::InitPartition {
+                worker_id: i as u32,
+                kind,
+                a: sub,
+                b: rhs,
+                n_target: plan.n as u32,
+            })?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
+    fn partitions(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn init_partitions(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+        acc: &mut Vec<f64>,
+    ) -> Result<usize> {
+        let n = plan.n;
+        self.n_target = n;
+        self.scatter_blocks(kind.into(), plan, a, b)?;
+        let xs = &mut self.xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::InitDone { worker_id, x0 } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "InitDone from unknown worker {worker_id}"
+                            ))
+                        })?;
+                    if x0.len() != n {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} returned x0 of length {} \
+                             != n = {n}",
+                            x0.len()
+                        )));
+                    }
+                    *slot = x0;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} init failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        acc.clear();
+        acc.resize(n, 0.0);
+        accumulate_sum(&self.xs, acc);
+        Ok(n)
+    }
+
+    fn run_round(
+        &mut self,
+        gamma: f32,
+        _eta: f32,
+        xbar: &mut [f32],
+        acc: &mut [f64],
+    ) -> Result<RoundOutcome> {
+        let msg = Message::RunUpdate {
+            epoch: self.epoch,
+            gamma,
+            xbar: xbar.to_vec(),
+        };
+        self.epoch = self.epoch.wrapping_add(1);
+        // pipelined scatter: workers compute eq. (6) concurrently
+        for w in self.workers.iter_mut() {
+            w.send(&msg)?;
+        }
+        let n = self.n_target;
+        let xs = &mut self.xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::UpdateDone { worker_id, x } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "UpdateDone from unknown worker {worker_id}"
+                            ))
+                        })?;
+                    if x.len() != n {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} returned estimate of \
+                             length {} != n = {n}",
+                            x.len()
+                        )));
+                    }
+                    *slot = x;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} update failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        // fixed-order f64 reduction; the driver applies eq. (7)
+        accumulate_sum(&self.xs, acc);
+        Ok(RoundOutcome::Accumulated)
+    }
+
+    fn init_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+    ) -> Result<()> {
+        self.n_target = plan.n;
+        // GradOnly: workers store their block and skip the (for DGD
+        // useless) O(l n^2) factorization entirely
+        self.scatter_blocks(InitKindWire::GradOnly, plan, a, b)?;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::InitDone { worker_id, .. } => Ok(worker_id),
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} init failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })
+    }
+
+    fn grad_round(&mut self, x: &[f32], acc: &mut [f64]) -> Result<()> {
+        let msg = Message::RunGrad { epoch: self.epoch, x: x.to_vec() };
+        self.epoch = self.epoch.wrapping_add(1);
+        for w in self.workers.iter_mut() {
+            w.send(&msg)?;
+        }
+        let n = self.n_target;
+        let xs = &mut self.xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::GradDone { worker_id, grad } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "GradDone from unknown worker {worker_id}"
+                            ))
+                        })?;
+                    if grad.len() != n {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} returned gradient of \
+                             length {} != n = {n}",
+                            grad.len()
+                        )));
+                    }
+                    *slot = grad;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} grad failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        accumulate_sum(&self.xs, acc);
+        Ok(())
+    }
+
+    fn x_parts(&mut self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.xs.clone())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "distributed"
+    }
+}
+
+/// Leader over J connected workers — an ergonomic facade that runs the
+/// shared driver over a [`ClusterBackend`].
+pub struct Leader<T: Transport> {
+    backend: ClusterBackend<T>,
+}
+
+impl<T: Transport> Leader<T> {
+    /// Leader over the given worker connections (`J >= 1`).
+    pub fn new(workers: Vec<T>) -> Result<Self> {
+        Ok(Self { backend: ClusterBackend::new(workers)? })
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.backend.worker_count()
+    }
+
+    /// The underlying backend, for driving
+    /// [`crate::solver::drive_apc`]/[`crate::solver::drive_dgd`] directly.
+    pub fn backend_mut(&mut self) -> &mut ClusterBackend<T> {
+        &mut self.backend
+    }
+
+    /// Total `(sent, received)` wire bytes across all worker links.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.backend.wire_bytes()
     }
 
     /// Run the APC consensus algorithm distributed over the workers.
@@ -40,202 +401,76 @@ impl<T: Transport> Leader<T> {
         variant: ApcVariant,
         opts: &SolveOptions,
     ) -> Result<SolveReport> {
-        let j = self.workers.len();
-        let (m, n) = a.shape();
-        let plan = PartitionPlan::contiguous(m, n, j)?;
-        let init_kind = match (variant, plan.regime) {
-            (_, PartitionRegime::Fat) => InitKind::Fat,
-            (ApcVariant::Decomposed, _) => InitKind::Qr,
-            (ApcVariant::Classical, _) => InitKind::Classical,
-        };
-
-        // ---- init: scatter partitions, gather x_j(0) --------------------
-        let t0 = Instant::now();
-        for i in 0..j {
-            let (sub, rhs) = plan.extract(a, b, i);
-            self.workers[i].send(&Message::InitPartition {
-                worker_id: i as u32,
-                kind: init_kind.into(),
-                a: sub,
-                b: rhs,
-                n_target: n as u32,
-            })?;
-        }
-        let mut xs: Vec<Vec<f32>> = vec![Vec::new(); j];
-        for i in 0..j {
-            match self.workers[i].recv()? {
-                Message::InitDone { worker_id, x0 } => {
-                    xs[worker_id as usize] = x0;
-                }
-                Message::WorkerError { worker_id, message } => {
-                    return Err(DapcError::Coordinator(format!(
-                        "worker {worker_id} init failed: {message}"
-                    )))
-                }
-                other => {
-                    return Err(DapcError::Coordinator(format!(
-                        "unexpected reply {other:?}"
-                    )))
-                }
-            }
-        }
-        let mut xbar = mean_rows(&xs);
-        let init_time = t0.elapsed();
-
-        // ---- consensus epochs -------------------------------------------
-        let mut trace = opts.x_true.as_ref().map(|xt| {
-            let mut tr = ConvergenceTrace::new("distributed-apc");
-            tr.push(0, norms::mse(&xbar, xt));
-            tr
-        });
-        let t1 = Instant::now();
-        for epoch in 0..opts.epochs {
-            for w in self.workers.iter_mut() {
-                w.send(&Message::RunUpdate {
-                    epoch: epoch as u32,
-                    gamma: opts.gamma,
-                    xbar: xbar.clone(),
-                })?;
-            }
-            for i in 0..j {
-                match self.workers[i].recv()? {
-                    Message::UpdateDone { worker_id, x } => {
-                        xs[worker_id as usize] = x;
-                    }
-                    Message::WorkerError { worker_id, message } => {
-                        return Err(DapcError::Coordinator(format!(
-                            "worker {worker_id} update failed: {message}"
-                        )))
-                    }
-                    other => {
-                        return Err(DapcError::Coordinator(format!(
-                            "unexpected reply {other:?}"
-                        )))
-                    }
-                }
-            }
-            // eq. (7)
-            let mean = mean_rows(&xs);
-            for i in 0..n {
-                xbar[i] = opts.eta * mean[i] + (1.0 - opts.eta) * xbar[i];
-            }
-            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
-                tr.push(epoch + 1, norms::mse(&xbar, xt));
-            }
-        }
-        let iterate_time = t1.elapsed();
-        let residual = residual_norm(a, b, &xbar);
-
-        Ok(SolveReport {
-            xbar,
-            x_parts: xs,
-            trace,
-            residual: Some(residual),
-            init_time,
-            iterate_time,
-            algorithm: match variant {
-                ApcVariant::Decomposed => "dapc-decomposed",
-                ApcVariant::Classical => "apc-classical",
-            },
-            engine: "distributed",
-            epochs: opts.epochs,
-        })
+        drive_apc(&mut self.backend, a, b, variant, opts)
     }
 
-    /// Distributed gradient descent over the same workers.
+    /// Distributed gradient descent over the same workers (step size
+    /// from [`SolveOptions::dgd_step`]; `<= 0` selects the automatic
+    /// Gershgorin bound).
     pub fn solve_dgd(
         &mut self,
         a: &CsrMatrix,
         b: &[f32],
-        alpha: f32,
         opts: &SolveOptions,
     ) -> Result<SolveReport> {
-        let j = self.workers.len();
-        let (m, n) = a.shape();
-        let plan = PartitionPlan::contiguous(m, n, j)?;
-
-        let t0 = Instant::now();
-        for i in 0..j {
-            let (sub, rhs) = plan.extract(a, b, i);
-            self.workers[i].send(&Message::InitPartition {
-                worker_id: i as u32,
-                kind: InitKind::Qr.into(), // init result unused for DGD
-                a: sub,
-                b: rhs,
-                n_target: n as u32,
-            })?;
-        }
-        for i in 0..j {
-            let _ = self.workers[i].recv()?;
-        }
-        let init_time = t0.elapsed();
-
-        let mut x = vec![0.0f32; n];
-        let mut trace = opts.x_true.as_ref().map(|xt| {
-            let mut tr = ConvergenceTrace::new("distributed-dgd");
-            tr.push(0, norms::mse(&x, xt));
-            tr
-        });
-        let t1 = Instant::now();
-        for epoch in 0..opts.epochs {
-            for w in self.workers.iter_mut() {
-                w.send(&Message::RunGrad { epoch: epoch as u32, x: x.clone() })?;
-            }
-            let mut total = vec![0.0f64; n];
-            for i in 0..j {
-                match self.workers[i].recv()? {
-                    Message::GradDone { grad, .. } => {
-                        for (t, g) in total.iter_mut().zip(&grad) {
-                            *t += *g as f64;
-                        }
-                    }
-                    Message::WorkerError { worker_id, message } => {
-                        return Err(DapcError::Coordinator(format!(
-                            "worker {worker_id} grad failed: {message}"
-                        )))
-                    }
-                    other => {
-                        return Err(DapcError::Coordinator(format!(
-                            "unexpected reply {other:?}"
-                        )))
-                    }
-                }
-            }
-            for (xi, g) in x.iter_mut().zip(&total) {
-                *xi -= alpha * (*g as f32);
-            }
-            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
-                tr.push(epoch + 1, norms::mse(&x, xt));
-            }
-        }
-        let iterate_time = t1.elapsed();
-        let residual = residual_norm(a, b, &x);
-
-        Ok(SolveReport {
-            xbar: x.clone(),
-            x_parts: vec![x],
-            trace,
-            residual: Some(residual),
-            init_time,
-            iterate_time,
-            algorithm: "dgd",
-            engine: "distributed",
-            epochs: opts.epochs,
-        })
+        drive_dgd(&mut self.backend, a, b, opts)
     }
 
     /// Send shutdown to all workers (best-effort).
     pub fn shutdown(&mut self) {
-        for w in self.workers.iter_mut() {
-            let _ = w.send(&Message::Shutdown);
-        }
+        self.backend.shutdown()
     }
 }
 
-fn mean_rows(xs: &[Vec<f32>]) -> Vec<f32> {
-    let j = xs.len() as f64;
-    let n = xs[0].len();
-    (0..n)
-        .map(|i| (xs.iter().map(|x| x[i] as f64).sum::<f64>() / j) as f32)
-        .collect()
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{channel_pair, ChannelTransport};
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn duplicate_worker_ids_rejected() {
+        // two connections claiming the same worker id would silently
+        // leave one slot stale; the gather must refuse instead
+        let (l0, mut w0) = channel_pair();
+        let (l1, mut w1) = channel_pair();
+        let n = 4;
+        w0.send(&Message::InitDone { worker_id: 0, x0: vec![0.0; n] })
+            .unwrap();
+        w1.send(&Message::InitDone { worker_id: 0, x0: vec![0.0; n] })
+            .unwrap();
+
+        let mut backend = ClusterBackend::new(vec![l0, l1]).unwrap();
+        let a = CsrMatrix::from_dense(&Matrix::from_fn(8, n, |i, j| {
+            (i + j) as f32 + 1.0
+        }));
+        let b = vec![1.0f32; 8];
+        let plan = PartitionPlan::contiguous(8, n, 2).unwrap();
+        let mut acc = Vec::new();
+        let err = backend
+            .init_partitions(InitKind::Qr, &plan, &a, &b, &mut acc)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("duplicate reply"),
+            "unexpected error: {err}"
+        );
+        drop((w0, w1));
+    }
+
+    #[test]
+    fn zero_worker_cluster_rejected_with_coordinator_error() {
+        // used to panic deep inside the solve (`xs[0]` on an empty vec);
+        // now both entry points refuse up front with a clear message
+        for result in [
+            ClusterBackend::<ChannelTransport>::new(vec![]).map(|_| ()),
+            Leader::<ChannelTransport>::new(vec![]).map(|_| ()),
+        ] {
+            match result {
+                Err(DapcError::Coordinator(msg)) => {
+                    assert!(msg.contains("at least one worker"), "{msg}")
+                }
+                other => panic!("expected Coordinator error, got {other:?}"),
+            }
+        }
+    }
 }

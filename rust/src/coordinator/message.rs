@@ -3,20 +3,34 @@
 //! Hand-rolled binary framing (serde unavailable offline):
 //!
 //! ```text
-//! frame   := u32 payload_len (LE) | u8 tag | payload
-//! payload := fields in declaration order
+//! frame   := u32 header (LE) | u32 payload_len (LE) | payload
+//! header  := 0x4450_0000 | WIRE_VERSION   ("DP" magic + version)
+//! payload := u8 tag | fields in declaration order
 //! vec<f32>:= u64 len | f32 * len        (LE)
 //! matrix  := u64 rows | u64 cols | f32 * rows*cols (row-major)
 //! string  := u64 len | utf8 bytes
 //! ```
 //!
+//! The frame header is added by stream transports (see
+//! [`super::transport`]); it makes old/new peer mixes fail LOUDLY at the
+//! first frame instead of mis-decoding each other's bytes.  Bump
+//! [`WIRE_VERSION`] whenever the payload encoding changes.
+//!
 //! The protocol is deliberately small: projectors are computed worker-side
 //! and never serialized; per-epoch traffic is one n-vector each way per
-//! worker (the paper's communication pattern).
+//! worker (the paper's communication pattern).  DGD initialization uses
+//! [`InitKindWire::GradOnly`], which ships the block but skips the
+//! worker-side factorization entirely.
 
 use crate::error::{DapcError, Result};
 use crate::linalg::Matrix;
 use crate::solver::InitKind;
+
+/// Version of the payload encoding; carried in every stream frame header.
+///
+/// v1 was the unversioned PR-0 framing (`u32 len | payload`); v2 added the
+/// magic/version header and `InitKindWire::GradOnly`.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Protocol messages (both directions).
 #[derive(Debug, Clone, PartialEq)]
@@ -30,7 +44,8 @@ pub enum Message {
         /// Padded solution width the consensus loop runs at.
         n_target: u32,
     },
-    /// Worker -> leader: init finished, here is x_j(0).
+    /// Worker -> leader: init finished, here is x_j(0) (empty for
+    /// [`InitKindWire::GradOnly`] — DGD starts from x = 0).
     InitDone { worker_id: u32, x0: Vec<f32> },
     /// Leader -> worker: consensus epoch t with the current average.
     RunUpdate { epoch: u32, gamma: f32, xbar: Vec<f32> },
@@ -46,12 +61,29 @@ pub enum Message {
     Shutdown,
 }
 
-/// InitKind twin that is wire-encodable.
+/// InitKind twin that is wire-encodable, plus the gradient-only mode that
+/// has no engine-side factorization at all.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InitKindWire {
     Qr = 0,
     Classical = 1,
     Fat = 2,
+    /// Store the block for DGD gradients only: no QR, no Gram inverse,
+    /// no projector — worker init is O(nnz) instead of O(l n^2).
+    GradOnly = 3,
+}
+
+impl InitKindWire {
+    /// The engine-side factorization this wire kind requests, or `None`
+    /// for [`Self::GradOnly`] (the worker stores the block and returns).
+    pub fn engine_kind(self) -> Option<InitKind> {
+        match self {
+            Self::Qr => Some(InitKind::Qr),
+            Self::Classical => Some(InitKind::Classical),
+            Self::Fat => Some(InitKind::Fat),
+            Self::GradOnly => None,
+        }
+    }
 }
 
 impl From<InitKind> for InitKindWire {
@@ -64,25 +96,16 @@ impl From<InitKind> for InitKindWire {
     }
 }
 
-impl From<InitKindWire> for InitKind {
-    fn from(k: InitKindWire) -> Self {
-        match k {
-            InitKindWire::Qr => InitKind::Qr,
-            InitKindWire::Classical => InitKind::Classical,
-            InitKindWire::Fat => InitKind::Fat,
-        }
-    }
-}
-
 // --- encoding ---------------------------------------------------------------
 
-struct Enc {
-    buf: Vec<u8>,
+struct Enc<'a> {
+    buf: &'a mut Vec<u8>,
 }
 
-impl Enc {
-    fn new(tag: u8) -> Self {
-        Self { buf: vec![tag] }
+impl<'a> Enc<'a> {
+    fn new(buf: &'a mut Vec<u8>, tag: u8) -> Self {
+        buf.push(tag);
+        Self { buf }
     }
 
     fn u32(&mut self, v: u32) {
@@ -180,57 +203,90 @@ impl<'a> Dec<'a> {
     }
 }
 
+const VEC_HEADER: usize = 8; // u64 length prefix
+const MAT_HEADER: usize = 16; // u64 rows + u64 cols
+
 impl Message {
-    /// Encode to a tagged payload (no length prefix; transports add it).
-    pub fn encode(&self) -> Vec<u8> {
+    /// Append the tagged payload (no frame header) to `buf` — the
+    /// transports' reused-send-buffer path.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
         match self {
             Message::InitPartition { worker_id, kind, a, b, n_target } => {
-                let mut e = Enc::new(0);
+                let mut e = Enc::new(buf, 0);
                 e.u32(*worker_id);
                 e.buf.push(*kind as u8);
                 e.matrix(a);
                 e.vec_f32(b);
                 e.u32(*n_target);
-                e.buf
             }
             Message::InitDone { worker_id, x0 } => {
-                let mut e = Enc::new(1);
+                let mut e = Enc::new(buf, 1);
                 e.u32(*worker_id);
                 e.vec_f32(x0);
-                e.buf
             }
             Message::RunUpdate { epoch, gamma, xbar } => {
-                let mut e = Enc::new(2);
+                let mut e = Enc::new(buf, 2);
                 e.u32(*epoch);
                 e.f32(*gamma);
                 e.vec_f32(xbar);
-                e.buf
             }
             Message::UpdateDone { worker_id, x } => {
-                let mut e = Enc::new(3);
+                let mut e = Enc::new(buf, 3);
                 e.u32(*worker_id);
                 e.vec_f32(x);
-                e.buf
             }
             Message::RunGrad { epoch, x } => {
-                let mut e = Enc::new(4);
+                let mut e = Enc::new(buf, 4);
                 e.u32(*epoch);
                 e.vec_f32(x);
-                e.buf
             }
             Message::GradDone { worker_id, grad } => {
-                let mut e = Enc::new(5);
+                let mut e = Enc::new(buf, 5);
                 e.u32(*worker_id);
                 e.vec_f32(grad);
-                e.buf
             }
             Message::WorkerError { worker_id, message } => {
-                let mut e = Enc::new(6);
+                let mut e = Enc::new(buf, 6);
                 e.u32(*worker_id);
                 e.string(message);
-                e.buf
             }
-            Message::Shutdown => vec![7],
+            Message::Shutdown => buf.push(7),
+        }
+    }
+
+    /// Encode to a fresh tagged payload (no frame header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Exact payload size [`Self::encode`] produces, without encoding —
+    /// used for wire-byte accounting on in-process transports.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Message::InitPartition { a, b, .. } => {
+                1 + 4
+                    + 1
+                    + MAT_HEADER
+                    + 4 * a.rows() * a.cols()
+                    + VEC_HEADER
+                    + 4 * b.len()
+                    + 4
+            }
+            Message::InitDone { x0, .. } => 1 + 4 + VEC_HEADER + 4 * x0.len(),
+            Message::RunUpdate { xbar, .. } => {
+                1 + 4 + 4 + VEC_HEADER + 4 * xbar.len()
+            }
+            Message::UpdateDone { x, .. } => 1 + 4 + VEC_HEADER + 4 * x.len(),
+            Message::RunGrad { x, .. } => 1 + 4 + VEC_HEADER + 4 * x.len(),
+            Message::GradDone { grad, .. } => {
+                1 + 4 + VEC_HEADER + 4 * grad.len()
+            }
+            Message::WorkerError { message, .. } => {
+                1 + 4 + VEC_HEADER + message.len()
+            }
+            Message::Shutdown => 1,
         }
     }
 
@@ -245,6 +301,7 @@ impl Message {
                     0 => InitKindWire::Qr,
                     1 => InitKindWire::Classical,
                     2 => InitKindWire::Fat,
+                    3 => InitKindWire::GradOnly,
                     k => {
                         return Err(DapcError::Parse(format!(
                             "bad init kind {k}"
@@ -283,35 +340,58 @@ impl Message {
 mod tests {
     use super::*;
 
-    fn roundtrip(m: Message) {
-        let enc = m.encode();
-        let dec = Message::decode(&enc).unwrap();
-        assert_eq!(m, dec);
+    fn variants() -> Vec<Message> {
+        vec![
+            Message::InitPartition {
+                worker_id: 3,
+                kind: InitKindWire::Qr,
+                a: Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5),
+                b: vec![1.0, -2.0, 3.0, 0.25],
+                n_target: 3,
+            },
+            Message::InitPartition {
+                worker_id: 1,
+                kind: InitKindWire::GradOnly,
+                a: Matrix::from_fn(2, 2, |i, j| (i + j) as f32),
+                b: vec![1.0, 2.0],
+                n_target: 2,
+            },
+            Message::InitDone { worker_id: 1, x0: vec![0.1, 0.2] },
+            Message::RunUpdate { epoch: 9, gamma: 0.75, xbar: vec![5.0; 7] },
+            Message::UpdateDone { worker_id: 0, x: vec![] },
+            Message::RunGrad { epoch: 2, x: vec![1.0] },
+            Message::GradDone { worker_id: 4, grad: vec![-1.5, 2.5] },
+            Message::WorkerError {
+                worker_id: 2,
+                message: "qr failed: naïve".into(),
+            },
+            Message::Shutdown,
+        ]
     }
 
     #[test]
     fn all_variants_roundtrip() {
-        roundtrip(Message::InitPartition {
-            worker_id: 3,
-            kind: InitKindWire::Qr,
-            a: Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5),
-            b: vec![1.0, -2.0, 3.0, 0.25],
-            n_target: 3,
-        });
-        roundtrip(Message::InitDone { worker_id: 1, x0: vec![0.1, 0.2] });
-        roundtrip(Message::RunUpdate {
-            epoch: 9,
-            gamma: 0.75,
-            xbar: vec![5.0; 7],
-        });
-        roundtrip(Message::UpdateDone { worker_id: 0, x: vec![] });
-        roundtrip(Message::RunGrad { epoch: 2, x: vec![1.0] });
-        roundtrip(Message::GradDone { worker_id: 4, grad: vec![-1.5, 2.5] });
-        roundtrip(Message::WorkerError {
-            worker_id: 2,
-            message: "qr failed: naïve".into(),
-        });
-        roundtrip(Message::Shutdown);
+        for m in variants() {
+            let enc = m.encode();
+            let dec = Message::decode(&enc).unwrap();
+            assert_eq!(m, dec);
+        }
+    }
+
+    #[test]
+    fn encoded_len_is_exact() {
+        for m in variants() {
+            assert_eq!(m.encoded_len(), m.encode().len(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn encode_into_appends() {
+        let m = Message::RunGrad { epoch: 2, x: vec![1.0] };
+        let mut buf = vec![0xAA, 0xBB];
+        m.encode_into(&mut buf);
+        assert_eq!(&buf[..2], &[0xAA, 0xBB]);
+        assert_eq!(Message::decode(&buf[2..]).unwrap(), m);
     }
 
     #[test]
@@ -343,8 +423,8 @@ mod tests {
     fn init_kind_conversion() {
         for k in [InitKind::Qr, InitKind::Classical, InitKind::Fat] {
             let w: InitKindWire = k.into();
-            let back: InitKind = w.into();
-            assert_eq!(k, back);
+            assert_eq!(w.engine_kind(), Some(k));
         }
+        assert_eq!(InitKindWire::GradOnly.engine_kind(), None);
     }
 }

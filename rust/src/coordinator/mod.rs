@@ -1,15 +1,42 @@
 //! Distributed coordinator — the Dask-cluster substrate of the paper's
 //! pipeline, rebuilt as a Rust leader/worker runtime.
 //!
-//! * [`message`] — the wire protocol (hand-framed binary; no serde);
-//! * [`transport`] — in-process channels and TCP streams behind one trait;
+//! # Architecture: backend under the shared driver
+//!
+//! The consensus epoch loop is NOT here: it lives once, in
+//! [`crate::solver::driver`], and this module supplies its distributed
+//! backend:
+//!
+//! ```text
+//!   solver::drive_apc / drive_dgd       (the algorithm, topology-free)
+//!        |
+//!   leader::ClusterBackend              (pipelined scatter, out-of-order
+//!        |                               gather keyed on worker_id,
+//!        v                               fixed-order f64 accumulation)
+//!   transport::{ChannelTransport, TcpTransport}
+//!        |                               frame := header | len | payload
+//!        v                               header = "DP" magic | WIRE_VERSION
+//!   worker::run_worker                  (owns A_j, b_j, P_j, x_j)
+//! ```
+//!
+//! * [`message`] — the wire protocol (hand-framed binary; no serde),
+//!   versioned via `message::WIRE_VERSION` (currently v2) so old/new
+//!   peer mixes fail loudly at the first frame;
+//! * [`transport`] — in-process channels and TCP streams behind one
+//!   trait, with wire-byte counters and a non-blocking receive path;
 //! * [`worker`] — the worker loop: owns its partition, its projector and
 //!   its estimate; only n-length vectors ever cross the wire (the paper's
-//!   key communication property: `P_j` never leaves the worker);
-//! * [`leader`] — drives Algorithm 1 across workers and aggregates;
+//!   key communication property: `P_j` never leaves the worker).  DGD
+//!   workers initialize with `InitKindWire::GradOnly` and never pay for a
+//!   factorization;
+//! * [`leader`] — [`ClusterBackend`] (the `ConsensusBackend` impl) plus
+//!   the [`Leader`] facade that runs the shared driver over it;
 //! * [`cluster`] — spawn helpers for local (threaded) and TCP clusters;
 //! * [`graph`] — the lazy task-graph representation + DOT export
 //!   (reproduces the paper's Figure 1).
+//!
+//! `tests/distributed_equivalence.rs` pins the backend to bit-identical
+//! results with the in-process backend for APC (both variants) and DGD.
 
 pub mod cluster;
 pub mod graph;
@@ -20,5 +47,5 @@ pub mod worker;
 
 pub use cluster::LocalCluster;
 pub use graph::TaskGraph;
-pub use leader::Leader;
+pub use leader::{ClusterBackend, Leader};
 pub use message::Message;

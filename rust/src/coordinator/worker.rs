@@ -1,11 +1,12 @@
 //! Worker loop: receives a partition, initializes locally (QR/inverse +
-//! projector), then serves consensus-update or gradient requests until
-//! shutdown.  The projector `P_j` and the dense block `A_j` never leave
-//! the worker — only n-length vectors cross the transport.
+//! projector, or nothing at all for gradient-only DGD service), then
+//! serves consensus-update or gradient requests until shutdown.  The
+//! projector `P_j` and the dense block `A_j` never leave the worker —
+//! only n-length vectors cross the transport.
 
 use crate::error::Result;
 use crate::linalg::Matrix;
-use crate::solver::{ComputeEngine, InitKind};
+use crate::solver::ComputeEngine;
 
 use super::message::Message;
 use super::transport::Transport;
@@ -37,7 +38,9 @@ pub fn run_worker<E: ComputeEngine, T: Transport>(
 
 struct WorkerState {
     x: Vec<f32>,
-    projector: Matrix,
+    /// `None` after a `GradOnly` init: the worker serves gradients only
+    /// and never paid for a factorization.
+    projector: Option<Matrix>,
     a: Matrix,
     b: Vec<f32>,
 }
@@ -51,15 +54,32 @@ fn handle<E: ComputeEngine>(
     match msg {
         Message::InitPartition { worker_id, kind, a, b, n_target } => {
             *my_id = worker_id;
-            let init = engine.init(
-                InitKind::from(kind),
-                &a,
-                &b,
-                n_target as usize,
-            )?;
-            let x0 = init.x0.clone();
-            *state = Some(WorkerState { x: init.x0, projector: init.projector, a, b });
-            Ok(Some(Message::InitDone { worker_id, x0 }))
+            match kind.engine_kind() {
+                Some(engine_kind) => {
+                    let init =
+                        engine.init(engine_kind, &a, &b, n_target as usize)?;
+                    let x0 = init.x0.clone();
+                    *state = Some(WorkerState {
+                        x: init.x0,
+                        projector: Some(init.projector),
+                        a,
+                        b,
+                    });
+                    Ok(Some(Message::InitDone { worker_id, x0 }))
+                }
+                None => {
+                    // GradOnly: store the block, skip the O(l n^2)
+                    // factorization entirely; DGD starts from x = 0 so
+                    // there is no estimate to return either
+                    *state = Some(WorkerState {
+                        x: Vec::new(),
+                        projector: None,
+                        a,
+                        b,
+                    });
+                    Ok(Some(Message::InitDone { worker_id, x0: Vec::new() }))
+                }
+            }
         }
         Message::RunUpdate { epoch: _, gamma, xbar } => {
             let st = state.as_mut().ok_or_else(|| {
@@ -67,7 +87,14 @@ fn handle<E: ComputeEngine>(
                     "RunUpdate before InitPartition".into(),
                 )
             })?;
-            st.x = engine.update(&st.x, &xbar, &st.projector, gamma)?;
+            let p = st.projector.as_ref().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunUpdate on a grad-only (GradOnly/DGD) worker: no \
+                     projector was initialized"
+                        .into(),
+                )
+            })?;
+            st.x = engine.update(&st.x, &xbar, p, gamma)?;
             Ok(Some(Message::UpdateDone { worker_id: *my_id, x: st.x.clone() }))
         }
         Message::RunGrad { epoch: _, x } => {
@@ -191,5 +218,58 @@ mod tests {
         assert!(crate::linalg::norms::max_abs(&grad) < 1e-3);
         leader.send(&Message::Shutdown).unwrap();
         handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn grad_only_init_skips_factorization() {
+        // timing-independent proof that GradOnly does no init work: the
+        // worker returns an EMPTY x0 (a factorizing init always returns
+        // an n_target-length estimate) and holds no projector, so a
+        // consensus update is impossible while gradients still work.
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            let _ = run_worker(&engine, &mut worker_side);
+        });
+        let (a, b, x_true) = consistent(16, 4, 10);
+        leader
+            .send(&Message::InitPartition {
+                worker_id: 2,
+                kind: InitKindWire::GradOnly,
+                a,
+                b,
+                n_target: 4,
+            })
+            .unwrap();
+        let Message::InitDone { worker_id, x0 } = leader.recv().unwrap() else {
+            panic!("expected InitDone");
+        };
+        assert_eq!(worker_id, 2);
+        assert!(x0.is_empty(), "GradOnly must not compute an initial solve");
+
+        // gradients are served from the stored block
+        leader
+            .send(&Message::RunGrad { epoch: 0, x: x_true })
+            .unwrap();
+        let Message::GradDone { grad, .. } = leader.recv().unwrap() else {
+            panic!("expected GradDone");
+        };
+        assert!(crate::linalg::norms::max_abs(&grad) < 1e-3);
+
+        // no projector exists -> consensus updates are rejected loudly
+        leader
+            .send(&Message::RunUpdate {
+                epoch: 0,
+                gamma: 0.5,
+                xbar: vec![0.0; 4],
+            })
+            .unwrap();
+        match leader.recv().unwrap() {
+            Message::WorkerError { message, .. } => {
+                assert!(message.contains("grad-only"), "{message}");
+            }
+            other => panic!("expected WorkerError, got {other:?}"),
+        }
+        handle.join().unwrap();
     }
 }

@@ -98,7 +98,7 @@ pub fn gemv_pooled(pool: &ThreadPool, a: &Matrix, x: &[f32], y: &mut [f32]) {
         return;
     }
     let parts = pool.size().min(rows).max(1);
-    let chunk = (rows + parts - 1) / parts;
+    let chunk = rows.div_ceil(parts);
     pool.scope(|s| {
         for (ci, yc) in y.chunks_mut(chunk).enumerate() {
             let lo = ci * chunk;
@@ -149,7 +149,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let mut jc = 0;
     while jc < n {
         let nc = NC.min(n - jc);
-        let col_panels = (nc + NR - 1) / NR;
+        let col_panels = nc.div_ceil(NR);
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
@@ -157,7 +157,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
-                let row_panels = (mc + MR - 1) / MR;
+                let row_panels = mc.div_ceil(MR);
                 pack_a(a, ic, pc, mc, kc, &mut a_pack);
                 for q in 0..col_panels {
                     let jr = q * NR;
@@ -189,7 +189,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 #[inline]
 fn round_up(x: usize, m: usize) -> usize {
-    (x + m - 1) / m * m
+    x.div_ceil(m) * m
 }
 
 /// Pack an `mc x kc` block of A into MR-row panels, k-major inside each
@@ -203,7 +203,7 @@ fn pack_a(
     kc: usize,
     buf: &mut [f32],
 ) {
-    let panels = (mc + MR - 1) / MR;
+    let panels = mc.div_ceil(MR);
     for q in 0..panels {
         let r0 = q * MR;
         let rows = MR.min(mc - r0);
@@ -234,7 +234,7 @@ fn pack_b(
     nc: usize,
     buf: &mut [f32],
 ) {
-    let panels = (nc + NR - 1) / NR;
+    let panels = nc.div_ceil(NR);
     for p in 0..kc {
         let brow = b.row(pc + p);
         for q in 0..panels {

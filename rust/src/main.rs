@@ -173,7 +173,7 @@ fn cmd_solve(parsed: &cli::ParsedArgs) -> Result<()> {
             Algorithm::DapcDecomposed => dapc::solver::ApcVariant::Decomposed,
             Algorithm::ApcClassical => dapc::solver::ApcVariant::Classical,
             Algorithm::Dgd => {
-                let r = leader.solve_dgd(&a, &b, cfg.dgd_step, &opts)?;
+                let r = leader.solve_dgd(&a, &b, &opts)?;
                 leader.shutdown();
                 print_report(&r, x_true.as_deref());
                 return Ok(());
@@ -247,7 +247,7 @@ fn run_local_cluster(
         Algorithm::Dgd => {
             let mut c =
                 cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
-            let r = c.leader.solve_dgd(a, b, cfg.dgd_step, opts)?;
+            let r = c.leader.solve_dgd(a, b, opts)?;
             return Ok(r);
         }
     };

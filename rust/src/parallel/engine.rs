@@ -75,7 +75,7 @@ impl ParallelEngine {
         }
         let acc = &mut acc[..n];
         let parts = self.pool.size().min(n).max(1);
-        let chunk = (n + parts - 1) / parts;
+        let chunk = n.div_ceil(parts);
         self.pool.scope(|s| {
             for (ci, (acc_c, out_c)) in
                 acc.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()

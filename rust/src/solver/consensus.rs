@@ -1,19 +1,16 @@
-//! The shared consensus driver (Algorithm 1) and the two APC solvers.
+//! The two APC solver facades over the unified consensus driver.
 //!
-//! Both variants run the identical epoch loop (eqs. (5)-(7)); they differ
-//! only in the worker initialization: QR + backward substitution for the
-//! paper's decomposed variant, Gram inverse for classical APC.
+//! Both variants run the identical epoch loop (eqs. (5)-(7)) — which
+//! lives once, in [`super::driver`] — and differ only in the worker
+//! initialization: QR + backward substitution for the paper's decomposed
+//! variant, Gram inverse for classical APC.
 
-use std::time::Instant;
-
-use crate::error::{DapcError, Result};
-use crate::linalg::norms;
-use crate::metrics::ConvergenceTrace;
-use crate::partition::{PartitionPlan, PartitionRegime};
+use crate::error::Result;
 use crate::sparse::CsrMatrix;
 
-use super::engine::{ComputeEngine, InitKind, RoundWorkspace};
-use super::report::{residual_norm, SolveOptions, SolveReport};
+use super::driver::{drive_apc, InProcessBackend};
+use super::engine::ComputeEngine;
+use super::report::{SolveOptions, SolveReport};
 use super::Solver;
 
 /// Which APC initialization a consensus solver uses.
@@ -57,7 +54,8 @@ impl Solver for DapcSolver {
         b: &[f32],
         j: usize,
     ) -> Result<SolveReport> {
-        run_apc(engine, a, b, j, ApcVariant::Decomposed, &self.options)
+        let mut backend = InProcessBackend::new(engine, j);
+        drive_apc(&mut backend, a, b, ApcVariant::Decomposed, &self.options)
     }
 
     fn name(&self) -> &'static str {
@@ -73,7 +71,8 @@ impl Solver for ApcClassicalSolver {
         b: &[f32],
         j: usize,
     ) -> Result<SolveReport> {
-        run_apc(engine, a, b, j, ApcVariant::Classical, &self.options)
+        let mut backend = InProcessBackend::new(engine, j);
+        drive_apc(&mut backend, a, b, ApcVariant::Classical, &self.options)
     }
 
     fn name(&self) -> &'static str {
@@ -81,136 +80,10 @@ impl Solver for ApcClassicalSolver {
     }
 }
 
-/// Full Algorithm 1 on a single process: partition -> init -> consensus.
-pub fn run_apc<E: ComputeEngine>(
-    engine: &E,
-    a: &CsrMatrix,
-    b: &[f32],
-    j: usize,
-    variant: ApcVariant,
-    opts: &SolveOptions,
-) -> Result<SolveReport> {
-    let (m, n) = a.shape();
-    if b.len() != m {
-        return Err(DapcError::Shape(format!(
-            "rhs length {} != matrix rows {m}",
-            b.len()
-        )));
-    }
-    let plan = PartitionPlan::contiguous(m, n, j)?;
-    let init_kind = match (variant, plan.regime) {
-        (_, PartitionRegime::Fat) => InitKind::Fat,
-        (ApcVariant::Decomposed, PartitionRegime::Tall) => InitKind::Qr,
-        (ApcVariant::Classical, PartitionRegime::Tall) => InitKind::Classical,
-    };
-
-    // ---- init phase (Algorithm 1 steps 1-4) -----------------------------
-    let t0 = Instant::now();
-    // engines may pad to a bucket; all partitions must agree on n_target
-    let max_rows = plan.blocks.iter().map(|b| b.len()).max().unwrap();
-    let n_target = engine
-        .init_bucket(init_kind, max_rows, n)?
-        .map(|(_, np)| np)
-        .unwrap_or(n);
-    // blocks are densified on demand inside init_all: the sequential
-    // engine holds one at a time (unchanged peak memory), the parallel
-    // engine extracts + factorizes partitions concurrently
-    let inits = engine.init_all(
-        init_kind,
-        j,
-        &|i| plan.extract(a, b, i),
-        n_target,
-    )?;
-    let mut xs: Vec<Vec<f32>> = inits.iter().map(|w| w.x0.clone()).collect();
-    let ps: Vec<_> = inits.into_iter().map(|w| w.projector).collect();
-    // eq. (5): xbar(0) = mean of initial estimates
-    let mut xbar = mean_rows(&xs);
-    let init_time = t0.elapsed();
-
-    // ---- iterate phase (steps 5-8) --------------------------------------
-    let t1 = Instant::now();
-    let mut trace = opts.x_true.as_ref().map(|xt| {
-        let mut tr = ConvergenceTrace::new(match variant {
-            ApcVariant::Decomposed => "dapc-decomposed",
-            ApcVariant::Classical => "apc-classical",
-        });
-        tr.push(0, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
-        tr
-    });
-
-    let fused = opts.fused_loop && trace.is_none();
-    let mut done_fused = false;
-    if fused {
-        if let Some((new_xs, new_xbar)) = engine
-            .solve_loop(&xs, &xbar, &ps, opts.gamma, opts.eta, opts.epochs)?
-        {
-            xs = new_xs;
-            xbar = new_xbar;
-            done_fused = true;
-        }
-    }
-    if !done_fused {
-        // steady-state loop: double-buffered estimates + a warmed
-        // workspace, so every epoch is allocation-free on engines that
-        // implement `round_into` in place (native and parallel both do)
-        let mut ws = RoundWorkspace::for_shape(j, xbar.len());
-        let mut next_xs: Vec<Vec<f32>> =
-            xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
-        let mut next_xbar = vec![0.0f32; xbar.len()];
-        for t in 0..opts.epochs {
-            engine.round_into(
-                &xs,
-                &xbar,
-                &ps,
-                opts.gamma,
-                opts.eta,
-                &mut ws,
-                &mut next_xs,
-                &mut next_xbar,
-            )?;
-            std::mem::swap(&mut xs, &mut next_xs);
-            std::mem::swap(&mut xbar, &mut next_xbar);
-            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
-                tr.push(t + 1, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
-            }
-        }
-    }
-    let iterate_time = t1.elapsed();
-
-    // strip any bucket padding
-    xbar.truncate(n);
-    for x in &mut xs {
-        x.truncate(n);
-    }
-    let residual = residual_norm(a, b, &xbar);
-
-    Ok(SolveReport {
-        xbar,
-        x_parts: xs,
-        trace,
-        residual: Some(residual),
-        init_time,
-        iterate_time,
-        algorithm: match variant {
-            ApcVariant::Decomposed => "dapc-decomposed",
-            ApcVariant::Classical => "apc-classical",
-        },
-        engine: engine.name(),
-        epochs: opts.epochs,
-    })
-}
-
-fn mean_rows(xs: &[Vec<f32>]) -> Vec<f32> {
-    let j = xs.len() as f64;
-    let n = xs[0].len();
-    (0..n)
-        .map(|i| (xs.iter().map(|x| x[i] as f64).sum::<f64>() / j) as f32)
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::norms;
     use crate::solver::engine::NativeEngine;
     use crate::sparse::generate::GeneratorConfig;
 

@@ -1,23 +1,24 @@
 //! Distributed Gradient Descent baseline (Fig. 2's third curve, [5]).
 //!
 //! Each partition computes its local least-squares gradient
-//! `g_j = A_j^T (A_j x - b_j)`; the leader applies
-//! `x <- x - alpha * sum_j g_j`.  Same partitioning and engine interface
-//! as the APC solvers so the comparison is apples-to-apples.
+//! `g_j = A_j^T (A_j x - b_j)`; the driver applies
+//! `x <- x - alpha * sum_j g_j`.  The epoch loop itself lives in
+//! [`super::driver::drive_dgd`] (shared with the distributed cluster);
+//! this facade runs it over an [`InProcessBackend`] with the same
+//! partitioning and engine interface as the APC solvers so the comparison
+//! is apples-to-apples.
 
-use std::time::Instant;
-
-use crate::error::{DapcError, Result};
-use crate::linalg::{norms, Matrix};
-use crate::metrics::ConvergenceTrace;
-use crate::partition::PartitionPlan;
+use crate::error::Result;
 use crate::sparse::CsrMatrix;
 
+use super::driver::{drive_dgd, InProcessBackend};
 use super::engine::ComputeEngine;
-use super::report::{residual_norm, SolveOptions, SolveReport};
+use super::report::{SolveOptions, SolveReport};
 use super::Solver;
 
-/// DGD solver over the same partition layout as APC.
+/// DGD solver over the same partition layout as APC.  A step size of
+/// `options.dgd_step <= 0` selects the driver's conservative Gershgorin
+/// bound ([`super::driver::auto_dgd_step`]).
 #[derive(Debug, Clone)]
 pub struct DgdSolver {
     pub options: SolveOptions,
@@ -26,26 +27,6 @@ pub struct DgdSolver {
 impl DgdSolver {
     pub fn new(options: SolveOptions) -> Self {
         Self { options }
-    }
-
-    /// A conservative step size from the Gershgorin bound on
-    /// `sum_j A_j^T A_j` when `options.dgd_step <= 0`.
-    fn step_size(&self, blocks: &[(Matrix, Vec<f32>)]) -> f32 {
-        if self.options.dgd_step > 0.0 {
-            return self.options.dgd_step;
-        }
-        // bound lambda_max(A^T A) <= max_i sum_j |G_ij| via column norms
-        let n = blocks[0].0.cols();
-        let mut colsq = vec![0.0f64; n];
-        for (a, _) in blocks {
-            for r in 0..a.rows() {
-                for (c, v) in a.row(r).iter().enumerate() {
-                    colsq[c] += (*v as f64) * (*v as f64);
-                }
-            }
-        }
-        let total: f64 = colsq.iter().sum();
-        (1.0 / total.max(1e-12)) as f32
     }
 }
 
@@ -57,65 +38,8 @@ impl Solver for DgdSolver {
         b: &[f32],
         j: usize,
     ) -> Result<SolveReport> {
-        let (m, n) = a.shape();
-        if b.len() != m {
-            return Err(DapcError::Shape(format!(
-                "rhs length {} != matrix rows {m}",
-                b.len()
-            )));
-        }
-        let opts = &self.options;
-        let plan = PartitionPlan::contiguous(m, n, j)?;
-
-        let t0 = Instant::now();
-        let blocks: Vec<(Matrix, Vec<f32>)> =
-            (0..j).map(|i| plan.extract(a, b, i)).collect();
-        let alpha = self.step_size(&blocks);
-        let mut x = vec![0.0f32; n];
-        let init_time = t0.elapsed();
-
-        let mut trace = opts.x_true.as_ref().map(|xt| {
-            let mut tr = ConvergenceTrace::new("dgd");
-            tr.push(0, norms::mse(&x, xt));
-            tr
-        });
-
-        let t1 = Instant::now();
-        // steady-state buffers, allocated once: per-block `A_j x` scratch
-        // (block row counts differ), one gradient output, one f64 total
-        let mut ax_ws: Vec<Vec<f32>> =
-            blocks.iter().map(|(sub, _)| vec![0.0f32; sub.rows()]).collect();
-        let mut grad = vec![0.0f32; n];
-        let mut total_grad = vec![0.0f64; n];
-        for t in 0..opts.epochs {
-            total_grad.iter_mut().for_each(|v| *v = 0.0);
-            for ((sub, rhs), ax) in blocks.iter().zip(ax_ws.iter_mut()) {
-                engine.dgd_grad_into(sub, &x, rhs, ax, &mut grad)?;
-                for (tg, gi) in total_grad.iter_mut().zip(&grad) {
-                    *tg += *gi as f64;
-                }
-            }
-            for (xi, g) in x.iter_mut().zip(&total_grad) {
-                *xi -= alpha * (*g as f32);
-            }
-            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
-                tr.push(t + 1, norms::mse(&x, xt));
-            }
-        }
-        let iterate_time = t1.elapsed();
-        let residual = residual_norm(a, b, &x);
-
-        Ok(SolveReport {
-            xbar: x.clone(),
-            x_parts: vec![x],
-            trace,
-            residual: Some(residual),
-            init_time,
-            iterate_time,
-            algorithm: "dgd",
-            engine: engine.name(),
-            epochs: opts.epochs,
-        })
+        let mut backend = InProcessBackend::new(engine, j);
+        drive_dgd(&mut backend, a, b, &self.options)
     }
 
     fn name(&self) -> &'static str {

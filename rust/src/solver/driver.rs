@@ -1,0 +1,587 @@
+//! The unified consensus driver: ONE epoch loop for every deployment
+//! topology.
+//!
+//! The paper's algorithm (eqs. (5)-(7)) is topology-independent: the same
+//! iteration runs on a laptop and on a cluster, only *where* the per-
+//! partition work executes changes.  This module encodes that split:
+//!
+//! * [`ConsensusBackend`] — the topology: where partitions live and how a
+//!   round's estimates come back.  [`InProcessBackend`] executes on a
+//!   [`ComputeEngine`] in this process through the allocation-free
+//!   `round_into`/[`RoundWorkspace`] path; `coordinator::ClusterBackend`
+//!   scatters over transports to remote workers.
+//! * [`drive_apc`] / [`drive_dgd`] — the algorithm: eq. (5) seeding,
+//!   eq. (7) mixing, the DGD step, convergence tracing, phase timing and
+//!   [`SolveReport`] assembly live HERE, once.  Backends never duplicate
+//!   the epoch loop.
+//!
+//! Numerical contract: a backend either returns its round through the
+//! streaming f64 accumulator (`acc[i] = sum_j x_j[i]`, partitions summed
+//! in fixed order `j = 0..J`) and lets the driver apply eq. (7), or mixes
+//! in place via an engine whose averaging kernel is the *same* fixed-order
+//! f64 reduction (`engine::average_chunk_kernel`).  Either way
+//! every backend produces bit-identical iterates — the property
+//! `tests/distributed_equivalence.rs` locks in.
+
+use std::time::Instant;
+
+use crate::error::{DapcError, Result};
+use crate::linalg::{norms, Matrix};
+use crate::metrics::ConvergenceTrace;
+use crate::partition::{PartitionPlan, PartitionRegime};
+use crate::sparse::CsrMatrix;
+
+use super::consensus::ApcVariant;
+use super::engine::{ComputeEngine, InitKind, RoundWorkspace};
+use super::report::{residual_norm, SolveOptions, SolveReport};
+
+/// How a backend returned the consensus round to the driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// `acc` holds `sum_j x_j(t+1)` (fixed order `j = 0..J`, f64); the
+    /// driver applies the eq. (7) mixing.
+    Accumulated,
+    /// The backend already wrote `xbar(t+1)` in place through an engine
+    /// whose fused round includes the identical eq. (7) reduction.
+    Mixed,
+}
+
+/// Where the per-partition work of Algorithm 1 executes.
+///
+/// Implementations hold all per-partition state (estimates, projectors or
+/// the dense blocks) so the driver only ever owns n-length vectors — the
+/// paper's leader-side memory guarantee.
+pub trait ConsensusBackend {
+    /// Number of partitions / workers J this backend drives.
+    fn partitions(&self) -> usize;
+
+    /// Algorithm 1 steps 1-4: distribute the `plan`'s blocks, run the
+    /// per-partition init (`kind`), and leave `acc[i] = sum_j x_j(0)[i]`
+    /// (fixed order, f64).  Returns the solution width the consensus loop
+    /// runs at (`>= plan.n` when the engine pads to shape buckets);
+    /// `acc` is resized to that width.
+    fn init_partitions(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+        acc: &mut Vec<f64>,
+    ) -> Result<usize>;
+
+    /// One eq. (6) round at the current `xbar` across all partitions.
+    /// On [`RoundOutcome::Accumulated`] the backend has overwritten `acc`
+    /// with the fixed-order sum of the updated estimates; on
+    /// [`RoundOutcome::Mixed`] it has written `xbar(t+1)` into `xbar`.
+    fn run_round(
+        &mut self,
+        gamma: f32,
+        eta: f32,
+        xbar: &mut [f32],
+        acc: &mut [f64],
+    ) -> Result<RoundOutcome>;
+
+    /// Run all `epochs` rounds in one fused call when the backend's
+    /// engine supports it (e.g. the XLA whole-loop artifact), writing the
+    /// final average into `xbar`.  `Ok(false)` = not supported, drive the
+    /// per-round loop instead.
+    fn try_solve_loop(
+        &mut self,
+        _gamma: f32,
+        _eta: f32,
+        _epochs: usize,
+        _xbar: &mut [f32],
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// DGD setup: distribute the `plan`'s blocks withOUT any
+    /// factorization (workers only need `A_j`, `b_j` for gradients).
+    fn init_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+    ) -> Result<()>;
+
+    /// One DGD gradient round at `x`: overwrite `acc` with
+    /// `sum_j A_j^T (A_j x - b_j)` (fixed order, f64).
+    fn grad_round(&mut self, x: &[f32], acc: &mut [f64]) -> Result<()>;
+
+    /// Per-partition estimates after the last round (only called when
+    /// [`SolveOptions::collect_x_parts`] asks for them).
+    fn x_parts(&mut self) -> Result<Vec<Vec<f32>>>;
+
+    /// Engine label for [`SolveReport::engine`].
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Overwrite `acc` with the fixed-order f64 sum of the estimates.  This
+/// is the first half of `engine::average_chunk_kernel`; keeping the
+/// identical j-order keeps backends bit-identical.
+pub(crate) fn accumulate_sum(xs: &[Vec<f32>], acc: &mut [f64]) {
+    for a in acc.iter_mut() {
+        *a = 0.0;
+    }
+    for x in xs {
+        for (a, &v) in acc.iter_mut().zip(x.iter()) {
+            *a += v as f64;
+        }
+    }
+}
+
+/// Eq. (7) in place: `xbar[i] = eta * (acc[i] / J) + (1 - eta) * xbar[i]`
+/// — the second half of `engine::average_chunk_kernel`, same f64
+/// arithmetic, so driver-side mixing is bit-identical to engine-side.
+fn mix_into(acc: &[f64], j: usize, eta: f32, xbar: &mut [f32]) {
+    let jf = j as f64;
+    let eta = eta as f64;
+    for (xb, &a) in xbar.iter_mut().zip(acc.iter()) {
+        *xb = (eta * (a / jf) + (1.0 - eta) * *xb as f64) as f32;
+    }
+}
+
+/// Eq. (5) from the init accumulator: `xbar(0)[i] = acc[i] / J`.
+fn mean_from_acc(acc: &[f64], j: usize) -> Vec<f32> {
+    let jf = j as f64;
+    acc.iter().map(|&s| (s / jf) as f32).collect()
+}
+
+fn apc_label(variant: ApcVariant) -> &'static str {
+    match variant {
+        ApcVariant::Decomposed => "dapc-decomposed",
+        ApcVariant::Classical => "apc-classical",
+    }
+}
+
+fn check_shapes(a: &CsrMatrix, b: &[f32], j: usize) -> Result<(usize, usize)> {
+    if j == 0 {
+        return Err(DapcError::Coordinator(
+            "consensus driver needs at least one partition/worker (got 0)"
+                .into(),
+        ));
+    }
+    let (m, n) = a.shape();
+    if b.len() != m {
+        return Err(DapcError::Shape(format!(
+            "rhs length {} != matrix rows {m}",
+            b.len()
+        )));
+    }
+    Ok((m, n))
+}
+
+/// Full Algorithm 1 over any backend: partition -> init -> consensus.
+///
+/// This is THE apc epoch loop — `DapcSolver`/`ApcClassicalSolver` run it
+/// over [`InProcessBackend`], `coordinator::Leader` over
+/// `ClusterBackend`.
+pub fn drive_apc<B: ConsensusBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    b: &[f32],
+    variant: ApcVariant,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let j = backend.partitions();
+    let (m, n) = check_shapes(a, b, j)?;
+    let plan = PartitionPlan::contiguous(m, n, j)?;
+    let init_kind = match (variant, plan.regime) {
+        (_, PartitionRegime::Fat) => InitKind::Fat,
+        (ApcVariant::Decomposed, PartitionRegime::Tall) => InitKind::Qr,
+        (ApcVariant::Classical, PartitionRegime::Tall) => InitKind::Classical,
+    };
+
+    // ---- init phase (Algorithm 1 steps 1-4) -----------------------------
+    let t0 = Instant::now();
+    let mut acc: Vec<f64> = Vec::new();
+    let n_target = backend.init_partitions(init_kind, &plan, a, b, &mut acc)?;
+    debug_assert_eq!(acc.len(), n_target);
+    // eq. (5): xbar(0) = mean of initial estimates
+    let mut xbar = mean_from_acc(&acc, j);
+    let init_time = t0.elapsed();
+
+    // ---- iterate phase (steps 5-8) --------------------------------------
+    let algorithm = apc_label(variant);
+    let t1 = Instant::now();
+    let mut trace = opts.x_true.as_ref().map(|xt| {
+        let mut tr = ConvergenceTrace::new(algorithm);
+        tr.push(0, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
+        tr
+    });
+
+    let fused = opts.fused_loop
+        && trace.is_none()
+        && backend.try_solve_loop(opts.gamma, opts.eta, opts.epochs, &mut xbar)?;
+    if !fused {
+        for t in 0..opts.epochs {
+            match backend.run_round(opts.gamma, opts.eta, &mut xbar, &mut acc)? {
+                RoundOutcome::Accumulated => {
+                    mix_into(&acc, j, opts.eta, &mut xbar)
+                }
+                RoundOutcome::Mixed => {}
+            }
+            if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
+                tr.push(t + 1, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
+            }
+        }
+    }
+    let iterate_time = t1.elapsed();
+
+    // strip any bucket padding
+    xbar.truncate(n);
+    let residual = residual_norm(a, b, &xbar);
+    let x_parts = if opts.collect_x_parts {
+        let mut parts = backend.x_parts()?;
+        for x in &mut parts {
+            x.truncate(n);
+        }
+        parts
+    } else {
+        Vec::new()
+    };
+
+    Ok(SolveReport {
+        xbar,
+        x_parts,
+        trace,
+        residual: Some(residual),
+        init_time,
+        iterate_time,
+        algorithm,
+        engine: backend.backend_name(),
+        epochs: opts.epochs,
+    })
+}
+
+/// Conservative DGD step from the Gershgorin-style bound on
+/// `lambda_max(A^T A)` via column squared norms — one implementation for
+/// every backend (the leader always holds the CSR matrix).
+pub fn auto_dgd_step(a: &CsrMatrix) -> f32 {
+    let (m, n) = a.shape();
+    let mut colsq = vec![0.0f64; n];
+    for r in 0..m {
+        let (cols, vals) = a.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            colsq[*c] += (*v as f64) * (*v as f64);
+        }
+    }
+    let total: f64 = colsq.iter().sum();
+    (1.0 / total.max(1e-12)) as f32
+}
+
+/// Distributed gradient descent over any backend — the same partition
+/// layout and gather as APC so the Fig. 2 comparison is apples-to-apples.
+pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    b: &[f32],
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let j = backend.partitions();
+    let (m, n) = check_shapes(a, b, j)?;
+    let plan = PartitionPlan::contiguous(m, n, j)?;
+
+    let t0 = Instant::now();
+    backend.init_grad(&plan, a, b)?;
+    let alpha = if opts.dgd_step > 0.0 {
+        opts.dgd_step
+    } else {
+        auto_dgd_step(a)
+    };
+    let mut x = vec![0.0f32; n];
+    let init_time = t0.elapsed();
+
+    let mut trace = opts.x_true.as_ref().map(|xt| {
+        let mut tr = ConvergenceTrace::new("dgd");
+        tr.push(0, norms::mse(&x, xt));
+        tr
+    });
+
+    let t1 = Instant::now();
+    let mut acc = vec![0.0f64; n];
+    for t in 0..opts.epochs {
+        backend.grad_round(&x, &mut acc)?;
+        for (xi, g) in x.iter_mut().zip(&acc) {
+            *xi -= alpha * (*g as f32);
+        }
+        if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
+            tr.push(t + 1, norms::mse(&x, xt));
+        }
+    }
+    let iterate_time = t1.elapsed();
+    let residual = residual_norm(a, b, &x);
+
+    let x_parts = if opts.collect_x_parts {
+        vec![x.clone()]
+    } else {
+        Vec::new()
+    };
+    Ok(SolveReport {
+        xbar: x,
+        x_parts,
+        trace,
+        residual: Some(residual),
+        init_time,
+        iterate_time,
+        algorithm: "dgd",
+        engine: backend.backend_name(),
+        epochs: opts.epochs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// In-process backend
+// ---------------------------------------------------------------------------
+
+/// Backend executing every partition on a [`ComputeEngine`] in this
+/// process.
+///
+/// The consensus path goes through the engine's
+/// [`ComputeEngine::round_into`] with a warmed [`RoundWorkspace`] and
+/// double-buffered estimates, so the steady-state epoch loop performs no
+/// heap allocations — exactly the PR-1 hot path, now reachable from the
+/// shared driver.
+pub struct InProcessBackend<'e, E: ComputeEngine> {
+    engine: &'e E,
+    j: usize,
+    // consensus state (filled by init_partitions)
+    xs: Vec<Vec<f32>>,
+    next_xs: Vec<Vec<f32>>,
+    ps: Vec<Matrix>,
+    ws: RoundWorkspace,
+    next_xbar: Vec<f32>,
+    // dgd state (filled by init_grad)
+    blocks: Vec<(Matrix, Vec<f32>)>,
+    ax: Vec<Vec<f32>>,
+    grad: Vec<f32>,
+}
+
+impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
+    /// Backend over `engine` splitting the system into `j` partitions.
+    pub fn new(engine: &'e E, j: usize) -> Self {
+        Self {
+            engine,
+            j,
+            xs: Vec::new(),
+            next_xs: Vec::new(),
+            ps: Vec::new(),
+            ws: RoundWorkspace::default(),
+            next_xbar: Vec::new(),
+            blocks: Vec::new(),
+            ax: Vec::new(),
+            grad: Vec::new(),
+        }
+    }
+}
+
+impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
+    fn partitions(&self) -> usize {
+        self.j
+    }
+
+    fn init_partitions(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+        acc: &mut Vec<f64>,
+    ) -> Result<usize> {
+        let j = self.j;
+        // engines may pad to a bucket; all partitions must agree on the
+        // target width
+        let max_rows = plan.blocks.iter().map(|blk| blk.len()).max().unwrap();
+        let n_target = self
+            .engine
+            .init_bucket(kind, max_rows, plan.n)?
+            .map(|(_, np)| np)
+            .unwrap_or(plan.n);
+        // blocks are densified on demand inside init_all: the sequential
+        // engine holds one at a time (unchanged peak memory), the parallel
+        // engine extracts + factorizes partitions concurrently
+        let inits =
+            self.engine
+                .init_all(kind, j, &|i| plan.extract(a, b, i), n_target)?;
+        self.xs = inits.iter().map(|w| w.x0.clone()).collect();
+        self.ps = inits.into_iter().map(|w| w.projector).collect();
+        self.next_xs =
+            self.xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
+        self.next_xbar = vec![0.0f32; n_target];
+        self.ws.ensure(j, n_target);
+        acc.clear();
+        acc.resize(n_target, 0.0);
+        accumulate_sum(&self.xs, acc);
+        Ok(n_target)
+    }
+
+    fn run_round(
+        &mut self,
+        gamma: f32,
+        eta: f32,
+        xbar: &mut [f32],
+        _acc: &mut [f64],
+    ) -> Result<RoundOutcome> {
+        // allocation-free: warmed workspace + double-buffered estimates
+        self.engine.round_into(
+            &self.xs,
+            xbar,
+            &self.ps,
+            gamma,
+            eta,
+            &mut self.ws,
+            &mut self.next_xs,
+            &mut self.next_xbar,
+        )?;
+        std::mem::swap(&mut self.xs, &mut self.next_xs);
+        xbar.copy_from_slice(&self.next_xbar);
+        Ok(RoundOutcome::Mixed)
+    }
+
+    fn try_solve_loop(
+        &mut self,
+        gamma: f32,
+        eta: f32,
+        epochs: usize,
+        xbar: &mut [f32],
+    ) -> Result<bool> {
+        match self
+            .engine
+            .solve_loop(&self.xs, xbar, &self.ps, gamma, eta, epochs)?
+        {
+            Some((new_xs, new_xbar)) => {
+                self.xs = new_xs;
+                xbar.copy_from_slice(&new_xbar);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    fn init_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+        b: &[f32],
+    ) -> Result<()> {
+        self.blocks = (0..self.j).map(|i| plan.extract(a, b, i)).collect();
+        self.ax = self
+            .blocks
+            .iter()
+            .map(|(sub, _)| vec![0.0f32; sub.rows()])
+            .collect();
+        self.grad = vec![0.0f32; plan.n];
+        Ok(())
+    }
+
+    fn grad_round(&mut self, x: &[f32], acc: &mut [f64]) -> Result<()> {
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        for ((sub, rhs), ax) in self.blocks.iter().zip(self.ax.iter_mut()) {
+            self.engine.dgd_grad_into(sub, x, rhs, ax, &mut self.grad)?;
+            for (a, g) in acc.iter_mut().zip(&self.grad) {
+                *a += *g as f64;
+            }
+        }
+        Ok(())
+    }
+
+    fn x_parts(&mut self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.xs.clone())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.engine.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::engine::NativeEngine;
+    use crate::sparse::generate::GeneratorConfig;
+
+    #[test]
+    fn zero_partitions_rejected_with_coordinator_error() {
+        let e = NativeEngine::new();
+        let ds = GeneratorConfig::small_demo(8, 1).generate(1);
+        let mut backend = InProcessBackend::new(&e, 0);
+        for r in [
+            drive_apc(
+                &mut backend,
+                &ds.matrix,
+                &ds.rhs,
+                ApcVariant::Decomposed,
+                &SolveOptions::default(),
+            ),
+            drive_dgd(&mut backend, &ds.matrix, &ds.rhs, &SolveOptions::default()),
+        ] {
+            match r {
+                Err(DapcError::Coordinator(msg)) => {
+                    assert!(msg.contains("at least one"), "{msg}")
+                }
+                other => panic!("expected Coordinator error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn driver_mix_matches_engine_average_bitwise() {
+        // driver-side eq. (7) must be bit-identical to the engine kernel
+        let e = NativeEngine::new();
+        let mut g = crate::rng::seeded(9);
+        let (j, n) = (3usize, 23usize);
+        let xs: Vec<Vec<f32>> = (0..j)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbar: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let want = e.average(&xs, &xbar, 0.85).unwrap();
+
+        let mut acc = vec![0.0f64; n];
+        accumulate_sum(&xs, &mut acc);
+        let mut got = xbar.clone();
+        mix_into(&acc, j, 0.85, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn x_parts_collected_only_on_request() {
+        let ds = GeneratorConfig::small_demo(16, 2).generate(3);
+        let e = NativeEngine::new();
+        let base = SolveOptions { epochs: 5, ..Default::default() };
+
+        let mut b1 = InProcessBackend::new(&e, 2);
+        let without =
+            drive_apc(&mut b1, &ds.matrix, &ds.rhs, ApcVariant::Decomposed, &base)
+                .unwrap();
+        assert!(without.x_parts.is_empty());
+
+        let mut b2 = InProcessBackend::new(&e, 2);
+        let with = drive_apc(
+            &mut b2,
+            &ds.matrix,
+            &ds.rhs,
+            ApcVariant::Decomposed,
+            &SolveOptions { collect_x_parts: true, ..base },
+        )
+        .unwrap();
+        assert_eq!(with.x_parts.len(), 2);
+        assert_eq!(with.xbar, without.xbar);
+    }
+
+    #[test]
+    fn auto_step_matches_dense_column_norms() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(4);
+        let dense = ds.matrix.to_dense();
+        let mut colsq = vec![0.0f64; dense.cols()];
+        for r in 0..dense.rows() {
+            for (c, v) in dense.row(r).iter().enumerate() {
+                colsq[c] += (*v as f64) * (*v as f64);
+            }
+        }
+        let total: f64 = colsq.iter().sum();
+        let want = (1.0 / total.max(1e-12)) as f32;
+        assert_eq!(auto_dgd_step(&ds.matrix), want);
+    }
+}

@@ -2,17 +2,39 @@
 //! distributed gradient descent, all generic over a [`ComputeEngine`]
 //! (native Rust linalg or AOT HLO artifacts on PJRT).
 //!
-//! The single-process path lives here (used by benches and most examples);
-//! the multi-worker leader/worker path in [`crate::coordinator`] reuses
-//! the same engines and produces identical iterates.
+//! # Architecture: one driver, many backends
+//!
+//! The epoch loop of Algorithm 1 exists exactly once, in [`driver`]:
+//!
+//! ```text
+//!   drive_apc / drive_dgd            (eq. (7) mixing, tracing, timing,
+//!        |                            SolveReport assembly)
+//!        v
+//!   ConsensusBackend  ---- InProcessBackend  -> ComputeEngine
+//!                     \                         (native | parallel | xla)
+//!                      --- ClusterBackend    -> Vec<Transport> -> workers
+//!                          (crate::coordinator)
+//! ```
+//!
+//! [`InProcessBackend`] executes partitions on an engine in this process
+//! through the allocation-free `round_into`/[`RoundWorkspace`] path;
+//! `coordinator::ClusterBackend` scatters them over message transports.
+//! Both produce bit-identical iterates (`tests/distributed_equivalence`),
+//! so any new algorithm variant written against the driver runs unchanged
+//! from a laptop to a cluster.
 
 mod consensus;
 mod dgd;
+pub mod driver;
 pub(crate) mod engine;
 mod report;
 
 pub use consensus::{ApcClassicalSolver, ApcVariant, DapcSolver};
 pub use dgd::DgdSolver;
+pub use driver::{
+    auto_dgd_step, drive_apc, drive_dgd, ConsensusBackend, InProcessBackend,
+    RoundOutcome,
+};
 pub use engine::{
     ComputeEngine, InitKind, NativeEngine, RoundWorkspace, WorkerInit,
     XlaEngine,

@@ -38,6 +38,10 @@ pub struct SolveOptions {
     /// Try the engine's whole-loop fused path (single executable for all
     /// T epochs). Ignored when a trace is requested.
     pub fused_loop: bool,
+    /// Copy the per-partition final estimates into
+    /// [`SolveReport::x_parts`].  Off by default: the driver then never
+    /// retains J extra n-vectors on the leader.
+    pub collect_x_parts: bool,
 }
 
 impl Default for SolveOptions {
@@ -49,6 +53,7 @@ impl Default for SolveOptions {
             dgd_step: 1e-3,
             x_true: None,
             fused_loop: false,
+            collect_x_parts: false,
         }
     }
 }
@@ -58,7 +63,8 @@ impl Default for SolveOptions {
 pub struct SolveReport {
     /// Averaged solution vector (paper's output, eq. (7) at epoch T).
     pub xbar: Vec<f32>,
-    /// Per-partition final estimates.
+    /// Per-partition final estimates; empty unless
+    /// [`SolveOptions::collect_x_parts`] was set.
     pub x_parts: Vec<Vec<f32>>,
     /// MSE-per-epoch trace when `x_true` was provided.
     pub trace: Option<ConvergenceTrace>,

@@ -1,0 +1,173 @@
+//! Backend equivalence: the distributed `ClusterBackend` (over a local
+//! channel cluster) must produce BIT-IDENTICAL results to the in-process
+//! backend for every algorithm, partition count and regime.
+//!
+//! This is the contract that makes the unified driver safe: eq. (7) runs
+//! as a fixed-order f64 reduction on both sides of the topology split
+//! (engine kernel in-process, driver-side mixing over the streamed
+//! accumulator for the cluster), so `assert_eq!` on the f32 outputs —
+//! not a tolerance — is the right check.
+
+use dapc::coordinator::LocalCluster;
+use dapc::linalg::Matrix;
+use dapc::rng::seeded;
+use dapc::solver::{
+    drive_apc, drive_dgd, ApcVariant, InProcessBackend, NativeEngine,
+    SolveOptions, SolveReport,
+};
+use dapc::sparse::CsrMatrix;
+
+/// A consistent system `A x = b` with a few exact zeros so the CSR is
+/// genuinely sparse-ish.
+fn consistent_system(m: usize, n: usize, seed: u64) -> (CsrMatrix, Vec<f32>) {
+    let mut g = seeded(seed);
+    let dense = Matrix::from_fn(m, n, |i, j| {
+        if (i + j) % 7 == 0 {
+            0.0
+        } else {
+            g.normal_f32()
+        }
+    });
+    let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+    let mut b = vec![0.0f32; m];
+    dapc::linalg::blas::gemv(&dense, &x, &mut b);
+    (CsrMatrix::from_dense(&dense), b)
+}
+
+fn in_process_apc(
+    a: &CsrMatrix,
+    b: &[f32],
+    j: usize,
+    variant: ApcVariant,
+    opts: &SolveOptions,
+) -> SolveReport {
+    let engine = NativeEngine::new();
+    let mut backend = InProcessBackend::new(&engine, j);
+    drive_apc(&mut backend, a, b, variant, opts).expect("in-process solve")
+}
+
+fn cluster_apc(
+    a: &CsrMatrix,
+    b: &[f32],
+    j: usize,
+    variant: ApcVariant,
+    opts: &SolveOptions,
+) -> SolveReport {
+    let mut cluster =
+        LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    drive_apc(cluster.leader.backend_mut(), a, b, variant, opts)
+        .expect("cluster solve")
+}
+
+fn assert_apc_equivalent(m: usize, n: usize, j: usize, seed: u64) {
+    let (a, b) = consistent_system(m, n, seed);
+    for variant in [ApcVariant::Decomposed, ApcVariant::Classical] {
+        let opts = SolveOptions {
+            epochs: 25,
+            collect_x_parts: true,
+            ..Default::default()
+        };
+        let local = in_process_apc(&a, &b, j, variant, &opts);
+        let dist = cluster_apc(&a, &b, j, variant, &opts);
+        assert_eq!(
+            local.xbar, dist.xbar,
+            "xbar diverged: {m}x{n} J={j} {variant:?}"
+        );
+        assert_eq!(
+            local.x_parts, dist.x_parts,
+            "x_parts diverged: {m}x{n} J={j} {variant:?}"
+        );
+        assert_eq!(local.algorithm, dist.algorithm);
+        // residual is computed leader-side from identical xbar
+        assert_eq!(local.residual, dist.residual);
+    }
+}
+
+#[test]
+fn apc_bit_identical_even_split() {
+    // m divisible by every J: uniform blocks
+    assert_apc_equivalent(96, 10, 1, 1);
+    assert_apc_equivalent(96, 10, 3, 2);
+    assert_apc_equivalent(96, 10, 4, 3);
+}
+
+#[test]
+fn apc_bit_identical_ragged_partitions() {
+    // m = 103: the last block absorbs the remainder (28 rows at J=4,
+    // 35 at J=3) — tall regime since every block has >= n = 10 rows
+    assert_apc_equivalent(103, 10, 1, 4);
+    assert_apc_equivalent(103, 10, 3, 5);
+    assert_apc_equivalent(103, 10, 4, 6);
+}
+
+#[test]
+fn apc_bit_identical_fat_regime() {
+    // blocks of 15 rows < n = 32: genuine nullspace projectors, the
+    // consensus loop does real work (original-APC setting)
+    assert_apc_equivalent(60, 32, 4, 7);
+    // and a ragged fat split
+    assert_apc_equivalent(65, 32, 3, 8);
+}
+
+#[test]
+fn dgd_bit_identical_across_backends() {
+    for &(m, n, j, seed) in
+        &[(96usize, 10usize, 1usize, 10u64), (103, 10, 3, 11), (103, 10, 4, 12)]
+    {
+        let (a, b) = consistent_system(m, n, seed);
+        // auto step (dgd_step <= 0) exercises the shared driver-side
+        // Gershgorin bound on both backends
+        let opts = SolveOptions {
+            epochs: 40,
+            dgd_step: 0.0,
+            collect_x_parts: true,
+            ..Default::default()
+        };
+
+        let engine = NativeEngine::new();
+        let mut local_backend = InProcessBackend::new(&engine, j);
+        let local =
+            drive_dgd(&mut local_backend, &a, &b, &opts).expect("local dgd");
+
+        let mut cluster =
+            LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+        let dist = drive_dgd(cluster.leader.backend_mut(), &a, &b, &opts)
+            .expect("cluster dgd");
+
+        assert_eq!(local.xbar, dist.xbar, "dgd diverged: {m}x{n} J={j}");
+        assert_eq!(local.residual, dist.residual);
+    }
+}
+
+#[test]
+fn traces_match_point_for_point() {
+    // per-epoch MSE traces are computed by the one driver, from
+    // bit-identical iterates -> identical floats at every epoch
+    let (a, b) = consistent_system(96, 10, 20);
+    let mut g = seeded(21);
+    let x_true: Vec<f32> = (0..10).map(|_| g.normal_f32()).collect();
+    // x_true here is only a trace reference, not the system's solution
+    let opts = SolveOptions {
+        epochs: 15,
+        x_true: Some(x_true),
+        ..Default::default()
+    };
+    let local = in_process_apc(&a, &b, 3, ApcVariant::Decomposed, &opts);
+    let dist = cluster_apc(&a, &b, 3, ApcVariant::Decomposed, &opts);
+    let lt = local.trace.expect("local trace");
+    let dt = dist.trace.expect("cluster trace");
+    assert_eq!(lt.points, dt.points);
+}
+
+#[test]
+fn solver_facades_match_driver() {
+    // DapcSolver is a facade over the same driver + in-process backend
+    use dapc::solver::{DapcSolver, Solver};
+    let (a, b) = consistent_system(96, 10, 30);
+    let opts = SolveOptions { epochs: 20, ..Default::default() };
+    let via_facade = DapcSolver::new(opts.clone())
+        .solve(&NativeEngine::new(), &a, &b, 3)
+        .unwrap();
+    let via_driver = in_process_apc(&a, &b, 3, ApcVariant::Decomposed, &opts);
+    assert_eq!(via_facade.xbar, via_driver.xbar);
+}
