@@ -1,0 +1,167 @@
+//! Solve-service throughput: cold one-shot solves vs warm-session solves
+//! vs column-blocked batched solves at k in {1, 8, 32}.
+//!
+//! The session registers the matrix once (workers factorize and retain
+//! `A_j`/`P_j`/QR state), so a warm solve pays only O(l n + n^2) seeding
+//! plus the epoch loop — the O(l n^2) per-partition factorization is
+//! amortized across the whole stream.  The batched path additionally
+//! shares each projector-row sweep (and its f32->f64 widening) across
+//! all k columns.  The bench asserts the amortization ladder the service
+//! layer exists for:
+//!
+//!   batched k=32 per-RHS  <  warm single per-RHS  <  cold per-solve
+//!
+//! and records everything in `BENCH_service_throughput.json`.
+
+use dapc::benchkit::{quick_mode, Bench, JsonReport};
+use dapc::prelude::*;
+use dapc::rng::seeded;
+use dapc::solver::{drive_apc, ApcVariant, InProcessBackend};
+use dapc::sparse::generate::GeneratorConfig;
+
+const STREAM: usize = 32;
+
+fn main() {
+    // J = 2 keeps per-partition projectors large (n x n each): the
+    // regime where the batched row-sharing actually pays
+    let n = if quick_mode() { 256 } else { 512 };
+    let m = 16 * n;
+    let j = 2usize;
+    let epochs = if quick_mode() { 20 } else { 40 };
+    let shape = format!("{m}x{n}");
+    let ds = GeneratorConfig::table1(m, n).generate(4181);
+    let opts = SolveOptions { epochs, ..Default::default() };
+    let engine = NativeEngine::new();
+    let bench = Bench::default();
+    let mut report = JsonReport::new("service_throughput");
+
+    // the request stream: STREAM consistent rhs against the one matrix
+    let bs: Vec<Vec<f32>> = (0..STREAM)
+        .map(|i| {
+            let mut g = seeded(9000 + i as u64);
+            let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+            let mut b = vec![0.0f32; m];
+            ds.matrix.spmv_into(&x, &mut b);
+            b
+        })
+        .collect();
+
+    println!(
+        "=== solve-service throughput: {shape}, J = {j}, T = {epochs}, \
+         stream of {STREAM} rhs ==="
+    );
+
+    // cold: every solve pays partition + QR + epochs
+    let mut req = 0usize;
+    let cold = bench.run("cold one-shot solve", || {
+        let mut backend = InProcessBackend::new(&engine, j);
+        drive_apc(
+            &mut backend,
+            &ds.matrix,
+            &bs[req % STREAM],
+            ApcVariant::Decomposed,
+            &opts,
+        )
+        .expect("cold solve");
+        req += 1;
+    });
+    report.add(
+        &cold,
+        &[("j", j as f64), ("epochs", epochs as f64)],
+        &[("shape", shape.as_str()), ("mode", "cold")],
+    );
+    let cold_s = cold.stats.mean();
+
+    // warm session: register once, then stream
+    let mut backend = InProcessBackend::new(&engine, j);
+    let mut session = SolverSession::register(
+        &mut backend,
+        ds.matrix.clone(),
+        SessionAlgorithm::Apc(ApcVariant::Decomposed),
+        opts.clone(),
+    )
+    .expect("register");
+    let register_s = session.stats().register_time.as_secs_f64();
+    println!("registration (cold init, paid once): {register_s:.4}s");
+
+    let mut req = 0usize;
+    let warm = bench.run("warm solve (k=1)", || {
+        session.solve(&bs[req % STREAM]).expect("warm solve");
+        req += 1;
+    });
+    let warm_s = warm.stats.mean();
+    report.add(
+        &warm,
+        &[
+            ("j", j as f64),
+            ("epochs", epochs as f64),
+            ("per_rhs_s", warm_s),
+            ("register_s", register_s),
+        ],
+        &[("shape", shape.as_str()), ("mode", "warm-single")],
+    );
+
+    // batched: one epoch loop drives k columns
+    let mut batch_per_rhs = Vec::new();
+    for &k in &[1usize, 8, 32] {
+        let res = bench.run(&format!("warm batch k={k}"), || {
+            session.solve_batch(&bs[..k]).expect("batched solve");
+        });
+        let per_rhs = res.stats.mean() / k as f64;
+        println!("  -> k={k}: {:.6}s per rhs", per_rhs);
+        report.add(
+            &res,
+            &[
+                ("j", j as f64),
+                ("epochs", epochs as f64),
+                ("k", k as f64),
+                ("per_rhs_s", per_rhs),
+            ],
+            &[("shape", shape.as_str()), ("mode", "warm-batch")],
+        );
+        batch_per_rhs.push((k, per_rhs));
+    }
+
+    let amortized = session
+        .stats()
+        .amortized_per_rhs()
+        .expect("served rhs")
+        .as_secs_f64();
+    println!("{}", session.stats().summary());
+    println!(
+        "cold {cold_s:.6}s | warm single {warm_s:.6}s ({:.1}x) | batch k=32 \
+         {:.6}s per rhs ({:.1}x)",
+        cold_s / warm_s,
+        batch_per_rhs[2].1,
+        cold_s / batch_per_rhs[2].1,
+    );
+    report.add(
+        &Bench::new(0, 1).run_once("summary", || {}),
+        &[
+            ("cold_solve_s", cold_s),
+            ("warm_per_solve_s", warm_s),
+            ("batch32_per_rhs_s", batch_per_rhs[2].1),
+            ("register_s", register_s),
+            ("amortized_per_rhs_s", amortized),
+        ],
+        &[("shape", shape.as_str()), ("mode", "summary")],
+    );
+
+    // the amortization ladder this subsystem exists for
+    assert!(
+        warm_s < cold_s,
+        "warm per-solve ({warm_s:.6}s) must beat the cold solve \
+         ({cold_s:.6}s): factorization reuse is broken"
+    );
+    assert!(
+        batch_per_rhs[2].1 < warm_s,
+        "batched k=32 per-rhs ({:.6}s) must beat the single-rhs warm solve \
+         ({warm_s:.6}s): column blocking is broken",
+        batch_per_rhs[2].1
+    );
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

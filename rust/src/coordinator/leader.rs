@@ -14,9 +14,12 @@
 
 use crate::error::{DapcError, Result};
 use crate::partition::PartitionPlan;
-use crate::solver::driver::{accumulate_sum, ConsensusBackend, RoundOutcome};
+use crate::solver::driver::{
+    accumulate_sum, accumulate_sum_batch, ConsensusBackend, RoundOutcome,
+};
 use crate::solver::{
-    drive_apc, drive_dgd, ApcVariant, InitKind, SolveOptions, SolveReport,
+    drive_apc, drive_dgd, ApcVariant, InitKind, SessionBackend, SolveOptions,
+    SolveReport,
 };
 use crate::sparse::CsrMatrix;
 
@@ -109,12 +112,36 @@ where
     Ok(())
 }
 
+/// Validate a worker's batched session reply: exactly `k` columns, each
+/// of width `n` — shared by every v3 gather so the error shape (and any
+/// future tightening) lives once.
+fn check_reply_columns(
+    worker_id: u32,
+    what: &str,
+    cols: &[Vec<f32>],
+    k: usize,
+    n: usize,
+) -> Result<()> {
+    if cols.len() != k || cols.iter().any(|c| c.len() != n) {
+        return Err(DapcError::Coordinator(format!(
+            "worker {worker_id} returned {} {what} columns (lengths {:?}) \
+             != {k} columns of n = {n}",
+            cols.len(),
+            cols.iter().map(Vec::len).collect::<Vec<_>>()
+        )));
+    }
+    Ok(())
+}
+
 /// [`ConsensusBackend`] over J connected worker transports.
 pub struct ClusterBackend<T: Transport> {
     workers: Vec<T>,
     /// Per-worker estimate slots, reused across epochs (the only
     /// per-worker state the leader holds).
     xs: Vec<Vec<f32>>,
+    /// Per-worker per-column estimate slots for batched session solves
+    /// (`batch_xs[worker][column]`), reused across epochs.
+    batch_xs: Vec<Vec<Vec<f32>>>,
     /// Reused gather bookkeeping (per-transport completion, per-id
     /// uniqueness).
     done: Vec<bool>,
@@ -138,6 +165,7 @@ impl<T: Transport> ClusterBackend<T> {
         Ok(Self {
             workers,
             xs: vec![Vec::new(); j],
+            batch_xs: vec![Vec::new(); j],
             done: Vec::new(),
             seen: Vec::new(),
             epoch: 0,
@@ -181,6 +209,73 @@ impl<T: Transport> ClusterBackend<T> {
                 b: rhs,
                 n_target: plan.n as u32,
             })?;
+        }
+        Ok(())
+    }
+
+    /// Session registration: scatter `RegisterMatrix` blocks (workers
+    /// factorize once and keep the state) and gather the acks.
+    fn register_wire(
+        &mut self,
+        kind: InitKindWire,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<()> {
+        self.n_target = plan.n;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let blk = plan.blocks[i];
+            let sub = a.slice_rows_dense(blk.start, blk.end);
+            w.send(&Message::RegisterMatrix {
+                worker_id: i as u32,
+                kind,
+                a: sub,
+                n_target: plan.n as u32,
+            })?;
+        }
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::MatrixRegistered { worker_id } => Ok(worker_id),
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} registration failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })
+    }
+
+    /// Pipelined scatter of per-worker rhs column slices: one
+    /// `SolveRhs` frame for a single rhs, one `SolveBatch` for k > 1.
+    fn scatter_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+    ) -> Result<()> {
+        let m = plan.blocks.last().map(|b| b.end).unwrap_or(0);
+        for b in bs {
+            if b.len() != m {
+                return Err(DapcError::Shape(format!(
+                    "rhs length {} != matrix rows {m}",
+                    b.len()
+                )));
+            }
+        }
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let blk = plan.blocks[i];
+            if let [b] = bs {
+                w.send(&Message::SolveRhs {
+                    b: b[blk.start..blk.end].to_vec(),
+                })?;
+            } else {
+                let cols: Vec<Vec<f32>> = bs
+                    .iter()
+                    .map(|b| b[blk.start..blk.end].to_vec())
+                    .collect();
+                w.send(&Message::SolveBatch { bs: cols })?;
+            }
         }
         Ok(())
     }
@@ -363,6 +458,193 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
 
     fn backend_name(&self) -> &'static str {
         "distributed"
+    }
+}
+
+impl<T: Transport> SessionBackend for ClusterBackend<T> {
+    fn register_matrix(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<usize> {
+        self.register_wire(kind.into(), plan, a)?;
+        Ok(plan.n)
+    }
+
+    fn register_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<()> {
+        self.register_wire(InitKindWire::GradOnly, plan, a)
+    }
+
+    fn seed_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()> {
+        let n = self.n_target;
+        let k = bs.len();
+        self.scatter_rhs(plan, bs)?;
+        let xs = &mut self.batch_xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::RhsSeeded { worker_id, x0s } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "RhsSeeded from unknown worker {worker_id}"
+                            ))
+                        })?;
+                    check_reply_columns(worker_id, "seeded", &x0s, k, n)?;
+                    *slot = x0s;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} seed failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        for acc in accs.iter_mut() {
+            acc.clear();
+            acc.resize(n, 0.0);
+        }
+        accumulate_sum_batch(&self.batch_xs, accs);
+        Ok(())
+    }
+
+    fn seed_grad_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+    ) -> Result<()> {
+        let k = bs.len();
+        self.scatter_rhs(plan, bs)?;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::RhsSeeded { worker_id, x0s } => {
+                    // gradient-only sessions return k empty columns
+                    if x0s.len() != k {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} acknowledged {} rhs \
+                             columns, expected {k}",
+                            x0s.len()
+                        )));
+                    }
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} seed failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })
+    }
+
+    fn run_round_batch(
+        &mut self,
+        gamma: f32,
+        _eta: f32,
+        xbars: &mut [Vec<f32>],
+        accs: &mut [Vec<f64>],
+    ) -> Result<RoundOutcome> {
+        let msg = Message::RunUpdateBatch {
+            epoch: self.epoch,
+            gamma,
+            xbars: xbars.to_vec(),
+        };
+        self.epoch = self.epoch.wrapping_add(1);
+        for w in self.workers.iter_mut() {
+            w.send(&msg)?;
+        }
+        let n = self.n_target;
+        let k = xbars.len();
+        let xs = &mut self.batch_xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::UpdateBatchDone { worker_id, xs: cols } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "UpdateBatchDone from unknown worker \
+                                 {worker_id}"
+                            ))
+                        })?;
+                    check_reply_columns(worker_id, "estimate", &cols, k, n)?;
+                    *slot = cols;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} batched update failed: \
+                         {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        // fixed-order f64 reduction per column; the driver mixes eq. (7)
+        accumulate_sum_batch(&self.batch_xs, accs);
+        Ok(RoundOutcome::Accumulated)
+    }
+
+    fn grad_round_batch(
+        &mut self,
+        xs_cols: &[Vec<f32>],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()> {
+        let msg = Message::RunGradBatch {
+            epoch: self.epoch,
+            xs: xs_cols.to_vec(),
+        };
+        self.epoch = self.epoch.wrapping_add(1);
+        for w in self.workers.iter_mut() {
+            w.send(&msg)?;
+        }
+        let n = self.n_target;
+        let k = xs_cols.len();
+        let xs = &mut self.batch_xs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+            match msg {
+                Message::GradBatchDone { worker_id, grads } => {
+                    let slot =
+                        xs.get_mut(worker_id as usize).ok_or_else(|| {
+                            DapcError::Coordinator(format!(
+                                "GradBatchDone from unknown worker \
+                                 {worker_id}"
+                            ))
+                        })?;
+                    check_reply_columns(worker_id, "gradient", &grads, k, n)?;
+                    *slot = grads;
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} batched gradient failed: \
+                         {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        accumulate_sum_batch(&self.batch_xs, accs);
+        Ok(())
     }
 }
 

@@ -21,6 +21,18 @@
 //! worker (the paper's communication pattern).  DGD initialization uses
 //! [`InitKindWire::GradOnly`], which ships the block but skips the
 //! worker-side factorization entirely.
+//!
+//! # Sessions (wire v3)
+//!
+//! The solve-service frames separate the RHS-independent registration
+//! from per-RHS serving: [`Message::RegisterMatrix`] ships a block ONCE
+//! (the worker factorizes and keeps `A_j`/`P_j`/seed state across
+//! solves), then any number of [`Message::SolveRhs`] /
+//! [`Message::SolveBatch`] frames stream right-hand sides through the
+//! retained factorization.  Batched epochs run over
+//! [`Message::RunUpdateBatch`] / [`Message::RunGradBatch`], carrying k
+//! n-vectors per frame.  A worker that receives an RHS before a
+//! registration rejects it loudly with a [`Message::WorkerError`].
 
 use crate::error::{DapcError, Result};
 use crate::linalg::Matrix;
@@ -29,8 +41,10 @@ use crate::solver::InitKind;
 /// Version of the payload encoding; carried in every stream frame header.
 ///
 /// v1 was the unversioned PR-0 framing (`u32 len | payload`); v2 added the
-/// magic/version header and `InitKindWire::GradOnly`.
-pub const WIRE_VERSION: u32 = 2;
+/// magic/version header and `InitKindWire::GradOnly`; v3 added the
+/// solve-service session frames (`RegisterMatrix`, `SolveRhs`,
+/// `SolveBatch` and the batched round/gradient frames).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Protocol messages (both directions).
 #[derive(Debug, Clone, PartialEq)]
@@ -59,6 +73,37 @@ pub enum Message {
     WorkerError { worker_id: u32, message: String },
     /// Leader -> worker: done, exit the loop.
     Shutdown,
+    /// Leader -> worker (v3): register this block for session service —
+    /// factorize once, retain `A_j`/`P_j`/seed state across solves
+    /// ([`InitKindWire::GradOnly`] stores the block only).
+    RegisterMatrix {
+        worker_id: u32,
+        kind: InitKindWire,
+        a: Matrix,
+        /// Padded solution width the consensus loop runs at.
+        n_target: u32,
+    },
+    /// Worker -> leader (v3): registration finished; the factorization
+    /// is resident and ready to serve right-hand sides.
+    MatrixRegistered { worker_id: u32 },
+    /// Leader -> worker (v3): seed ONE fresh rhs slice through the
+    /// retained factorization.  Rejected loudly before `RegisterMatrix`.
+    SolveRhs { b: Vec<f32> },
+    /// Leader -> worker (v3): seed k fresh rhs slices (one batched
+    /// solve).  Rejected loudly before `RegisterMatrix`.
+    SolveBatch { bs: Vec<Vec<f32>> },
+    /// Worker -> leader (v3): per-column initial estimates `x_j(0)`
+    /// (empty columns for gradient-only sessions — DGD starts at 0).
+    RhsSeeded { worker_id: u32, x0s: Vec<Vec<f32>> },
+    /// Leader -> worker (v3): one batched eq. (6) round at the current
+    /// per-column averages.
+    RunUpdateBatch { epoch: u32, gamma: f32, xbars: Vec<Vec<f32>> },
+    /// Worker -> leader (v3): updated estimates for every column.
+    UpdateBatchDone { worker_id: u32, xs: Vec<Vec<f32>> },
+    /// Leader -> worker (v3): one batched DGD gradient round.
+    RunGradBatch { epoch: u32, xs: Vec<Vec<f32>> },
+    /// Worker -> leader (v3): per-column local gradients.
+    GradBatchDone { worker_id: u32, grads: Vec<Vec<f32>> },
 }
 
 /// InitKind twin that is wire-encodable, plus the gradient-only mode that
@@ -123,6 +168,14 @@ impl<'a> Enc<'a> {
         }
     }
 
+    /// `u64 count | vec<f32> * count` — the v3 batched-column encoding.
+    fn vec2_f32(&mut self, vs: &[Vec<f32>]) {
+        self.buf.extend_from_slice(&(vs.len() as u64).to_le_bytes());
+        for v in vs {
+            self.vec_f32(v);
+        }
+    }
+
     fn matrix(&mut self, m: &Matrix) {
         self.buf.extend_from_slice(&(m.rows() as u64).to_le_bytes());
         self.buf.extend_from_slice(&(m.cols() as u64).to_le_bytes());
@@ -168,8 +221,20 @@ impl<'a> Dec<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Bytes left in the payload — the upper bound every decoded length
+    /// field must respect BEFORE any size arithmetic, so hostile lengths
+    /// can neither overflow a multiplication nor over-allocate.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn vec_f32(&mut self) -> Result<Vec<f32>> {
         let len = self.u64()? as usize;
+        if len > self.remaining() / 4 {
+            return Err(DapcError::Parse(format!(
+                "vector length {len} exceeds remaining payload"
+            )));
+        }
         let bytes = self.take(len * 4)?;
         Ok(bytes
             .chunks_exact(4)
@@ -177,10 +242,34 @@ impl<'a> Dec<'a> {
             .collect())
     }
 
+    fn vec2_f32(&mut self) -> Result<Vec<Vec<f32>>> {
+        let count = self.u64()? as usize;
+        // every counted column needs at least its u64 length prefix
+        if count > self.remaining() / 8 {
+            return Err(DapcError::Parse(format!(
+                "batch count {count} exceeds remaining payload"
+            )));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.vec_f32()?);
+        }
+        Ok(out)
+    }
+
     fn matrix(&mut self) -> Result<Matrix> {
         let rows = self.u64()? as usize;
         let cols = self.u64()? as usize;
-        let bytes = self.take(rows * cols * 4)?;
+        let max_elems = self.remaining() / 4;
+        let elems = match rows.checked_mul(cols) {
+            Some(e) if e <= max_elems => e,
+            _ => {
+                return Err(DapcError::Parse(format!(
+                    "matrix shape {rows}x{cols} exceeds remaining payload"
+                )))
+            }
+        };
+        let bytes = self.take(elems * 4)?;
         let data = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -205,6 +294,12 @@ impl<'a> Dec<'a> {
 
 const VEC_HEADER: usize = 8; // u64 length prefix
 const MAT_HEADER: usize = 16; // u64 rows + u64 cols
+
+/// Encoded size of a `vec2_f32` column batch.
+fn vec2_len(vs: &[Vec<f32>]) -> usize {
+    VEC_HEADER
+        + vs.iter().map(|v| VEC_HEADER + 4 * v.len()).sum::<usize>()
+}
 
 impl Message {
     /// Append the tagged payload (no frame header) to `buf` — the
@@ -251,6 +346,51 @@ impl Message {
                 e.string(message);
             }
             Message::Shutdown => buf.push(7),
+            Message::RegisterMatrix { worker_id, kind, a, n_target } => {
+                let mut e = Enc::new(buf, 8);
+                e.u32(*worker_id);
+                e.buf.push(*kind as u8);
+                e.matrix(a);
+                e.u32(*n_target);
+            }
+            Message::MatrixRegistered { worker_id } => {
+                let mut e = Enc::new(buf, 9);
+                e.u32(*worker_id);
+            }
+            Message::SolveRhs { b } => {
+                let mut e = Enc::new(buf, 10);
+                e.vec_f32(b);
+            }
+            Message::SolveBatch { bs } => {
+                let mut e = Enc::new(buf, 11);
+                e.vec2_f32(bs);
+            }
+            Message::RhsSeeded { worker_id, x0s } => {
+                let mut e = Enc::new(buf, 12);
+                e.u32(*worker_id);
+                e.vec2_f32(x0s);
+            }
+            Message::RunUpdateBatch { epoch, gamma, xbars } => {
+                let mut e = Enc::new(buf, 13);
+                e.u32(*epoch);
+                e.f32(*gamma);
+                e.vec2_f32(xbars);
+            }
+            Message::UpdateBatchDone { worker_id, xs } => {
+                let mut e = Enc::new(buf, 14);
+                e.u32(*worker_id);
+                e.vec2_f32(xs);
+            }
+            Message::RunGradBatch { epoch, xs } => {
+                let mut e = Enc::new(buf, 15);
+                e.u32(*epoch);
+                e.vec2_f32(xs);
+            }
+            Message::GradBatchDone { worker_id, grads } => {
+                let mut e = Enc::new(buf, 16);
+                e.u32(*worker_id);
+                e.vec2_f32(grads);
+            }
         }
     }
 
@@ -287,6 +427,19 @@ impl Message {
                 1 + 4 + VEC_HEADER + message.len()
             }
             Message::Shutdown => 1,
+            Message::RegisterMatrix { a, .. } => {
+                1 + 4 + 1 + MAT_HEADER + 4 * a.rows() * a.cols() + 4
+            }
+            Message::MatrixRegistered { .. } => 1 + 4,
+            Message::SolveRhs { b } => 1 + VEC_HEADER + 4 * b.len(),
+            Message::SolveBatch { bs } => 1 + vec2_len(bs),
+            Message::RhsSeeded { x0s, .. } => 1 + 4 + vec2_len(x0s),
+            Message::RunUpdateBatch { xbars, .. } => {
+                1 + 4 + 4 + vec2_len(xbars)
+            }
+            Message::UpdateBatchDone { xs, .. } => 1 + 4 + vec2_len(xs),
+            Message::RunGradBatch { xs, .. } => 1 + 4 + vec2_len(xs),
+            Message::GradBatchDone { grads, .. } => 1 + 4 + vec2_len(grads),
         }
     }
 
@@ -297,17 +450,7 @@ impl Message {
         let msg = match tag {
             0 => {
                 let worker_id = d.u32()?;
-                let kind = match d.u8()? {
-                    0 => InitKindWire::Qr,
-                    1 => InitKindWire::Classical,
-                    2 => InitKindWire::Fat,
-                    3 => InitKindWire::GradOnly,
-                    k => {
-                        return Err(DapcError::Parse(format!(
-                            "bad init kind {k}"
-                        )))
-                    }
-                };
+                let kind = decode_kind(d.u8()?)?;
                 let a = d.matrix()?;
                 let b = d.vec_f32()?;
                 let n_target = d.u32()?;
@@ -327,12 +470,53 @@ impl Message {
                 message: d.string()?,
             },
             7 => Message::Shutdown,
+            8 => {
+                let worker_id = d.u32()?;
+                let kind = decode_kind(d.u8()?)?;
+                let a = d.matrix()?;
+                let n_target = d.u32()?;
+                Message::RegisterMatrix { worker_id, kind, a, n_target }
+            }
+            9 => Message::MatrixRegistered { worker_id: d.u32()? },
+            10 => Message::SolveRhs { b: d.vec_f32()? },
+            11 => Message::SolveBatch { bs: d.vec2_f32()? },
+            12 => Message::RhsSeeded {
+                worker_id: d.u32()?,
+                x0s: d.vec2_f32()?,
+            },
+            13 => Message::RunUpdateBatch {
+                epoch: d.u32()?,
+                gamma: d.f32()?,
+                xbars: d.vec2_f32()?,
+            },
+            14 => Message::UpdateBatchDone {
+                worker_id: d.u32()?,
+                xs: d.vec2_f32()?,
+            },
+            15 => Message::RunGradBatch {
+                epoch: d.u32()?,
+                xs: d.vec2_f32()?,
+            },
+            16 => Message::GradBatchDone {
+                worker_id: d.u32()?,
+                grads: d.vec2_f32()?,
+            },
             other => {
                 return Err(DapcError::Parse(format!("unknown tag {other}")))
             }
         };
         d.finish()?;
         Ok(msg)
+    }
+}
+
+fn decode_kind(byte: u8) -> Result<InitKindWire> {
+    match byte {
+        0 => Ok(InitKindWire::Qr),
+        1 => Ok(InitKindWire::Classical),
+        2 => Ok(InitKindWire::Fat),
+        3 => Ok(InitKindWire::GradOnly),
+        k => Err(DapcError::Parse(format!("bad init kind {k}"))),
     }
 }
 
@@ -366,6 +550,35 @@ mod tests {
                 message: "qr failed: naïve".into(),
             },
             Message::Shutdown,
+            Message::RegisterMatrix {
+                worker_id: 7,
+                kind: InitKindWire::Qr,
+                a: Matrix::from_fn(3, 2, |i, j| (i + 2 * j) as f32),
+                n_target: 2,
+            },
+            Message::MatrixRegistered { worker_id: 7 },
+            Message::SolveRhs { b: vec![0.5, -1.5, 2.0] },
+            Message::SolveBatch {
+                bs: vec![vec![1.0, 2.0], vec![], vec![3.0]],
+            },
+            Message::RhsSeeded {
+                worker_id: 1,
+                x0s: vec![vec![0.25, 0.5], vec![]],
+            },
+            Message::RunUpdateBatch {
+                epoch: 4,
+                gamma: 0.9,
+                xbars: vec![vec![1.0; 3], vec![2.0; 3]],
+            },
+            Message::UpdateBatchDone {
+                worker_id: 3,
+                xs: vec![vec![0.0; 3], vec![-1.0; 3]],
+            },
+            Message::RunGradBatch { epoch: 6, xs: vec![vec![1.0, 2.0]] },
+            Message::GradBatchDone {
+                worker_id: 0,
+                grads: vec![vec![-0.5, 0.5]],
+            },
         ]
     }
 
@@ -417,6 +630,34 @@ mod tests {
         .encode();
         enc3[5] = 9; // kind byte
         assert!(Message::decode(&enc3).is_err());
+    }
+
+    #[test]
+    fn hostile_batch_count_rejected() {
+        // a SolveBatch whose count claims more columns than the payload
+        // could hold must fail cleanly, not over-allocate
+        let mut enc = Message::SolveBatch { bs: vec![vec![1.0]] }.encode();
+        // overwrite the u64 count (right after the tag byte)
+        enc[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&enc).is_err());
+
+        // hostile inner vector length: must error, not wrap the
+        // length * 4 multiplication into a tiny read
+        let mut enc = Message::SolveRhs { b: vec![1.0, 2.0] }.encode();
+        enc[1..9].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(Message::decode(&enc).is_err());
+
+        // hostile matrix dims (rows * cols overflows usize)
+        let mut enc = Message::RegisterMatrix {
+            worker_id: 0,
+            kind: InitKindWire::Qr,
+            a: Matrix::zeros(1, 1),
+            n_target: 1,
+        }
+        .encode();
+        // rows u64 sits after tag (1) + worker_id (4) + kind (1)
+        enc[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&enc).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! ```
 //!
 //! * [`message`] — the wire protocol (hand-framed binary; no serde),
-//!   versioned via `message::WIRE_VERSION` (currently v2) so old/new
+//!   versioned via `message::WIRE_VERSION` (currently v3) so old/new
 //!   peer mixes fail loudly at the first frame;
 //! * [`transport`] — in-process channels and TCP streams behind one
 //!   trait, with wire-byte counters and a non-blocking receive path;

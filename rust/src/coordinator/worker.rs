@@ -3,10 +3,16 @@
 //! serves consensus-update or gradient requests until shutdown.  The
 //! projector `P_j` and the dense block `A_j` never leave the worker —
 //! only n-length vectors cross the transport.
+//!
+//! Wire-v3 sessions: a `RegisterMatrix` frame factorizes ONCE and keeps
+//! the seed state resident; any number of `SolveRhs`/`SolveBatch` frames
+//! then re-seed estimates for fresh right-hand sides at O(l n + n^2)
+//! each.  An RHS frame arriving before a registration is rejected loudly
+//! with a `WorkerError` — it would otherwise silently serve stale state.
 
 use crate::error::Result;
 use crate::linalg::Matrix;
-use crate::solver::ComputeEngine;
+use crate::solver::{ComputeEngine, SeedFactors};
 
 use super::message::Message;
 use super::transport::Transport;
@@ -43,6 +49,53 @@ struct WorkerState {
     projector: Option<Matrix>,
     a: Matrix,
     b: Vec<f32>,
+    /// Retained seed factorization (v3 sessions; `None` for one-shot
+    /// inits and gradient-only registrations).
+    seed: Option<SeedFactors>,
+    /// Whether a `RegisterMatrix` created this state — RHS frames are
+    /// only legal on registered sessions.
+    registered: bool,
+    /// Per-column batch estimates (v3 batched solves).
+    xs: Vec<Vec<f32>>,
+    /// Per-column rhs slices (v3 gradient service).
+    bs: Vec<Vec<f32>>,
+}
+
+impl WorkerState {
+    fn one_shot(
+        x: Vec<f32>,
+        projector: Option<Matrix>,
+        a: Matrix,
+        b: Vec<f32>,
+    ) -> Self {
+        Self {
+            x,
+            projector,
+            a,
+            b,
+            seed: None,
+            registered: false,
+            xs: Vec::new(),
+            bs: Vec::new(),
+        }
+    }
+
+    fn registered(
+        projector: Option<Matrix>,
+        seed: Option<SeedFactors>,
+        a: Matrix,
+    ) -> Self {
+        Self {
+            x: Vec::new(),
+            projector,
+            a,
+            b: Vec::new(),
+            seed,
+            registered: true,
+            xs: Vec::new(),
+            bs: Vec::new(),
+        }
+    }
 }
 
 fn handle<E: ComputeEngine>(
@@ -59,27 +112,101 @@ fn handle<E: ComputeEngine>(
                     let init =
                         engine.init(engine_kind, &a, &b, n_target as usize)?;
                     let x0 = init.x0.clone();
-                    *state = Some(WorkerState {
-                        x: init.x0,
-                        projector: Some(init.projector),
+                    *state = Some(WorkerState::one_shot(
+                        init.x0,
+                        Some(init.projector),
                         a,
                         b,
-                    });
+                    ));
                     Ok(Some(Message::InitDone { worker_id, x0 }))
                 }
                 None => {
                     // GradOnly: store the block, skip the O(l n^2)
                     // factorization entirely; DGD starts from x = 0 so
                     // there is no estimate to return either
-                    *state = Some(WorkerState {
-                        x: Vec::new(),
-                        projector: None,
-                        a,
-                        b,
-                    });
+                    *state =
+                        Some(WorkerState::one_shot(Vec::new(), None, a, b));
                     Ok(Some(Message::InitDone { worker_id, x0: Vec::new() }))
                 }
             }
+        }
+        Message::RegisterMatrix { worker_id, kind, a, n_target } => {
+            *my_id = worker_id;
+            match kind.engine_kind() {
+                Some(engine_kind) => {
+                    // factorize once; projector + seed state stay
+                    // resident for every rhs this session will stream
+                    let fac =
+                        engine.factorize(engine_kind, &a, n_target as usize)?;
+                    *state = Some(WorkerState::registered(
+                        Some(fac.projector),
+                        Some(fac.seed),
+                        a,
+                    ));
+                }
+                None => {
+                    // gradient-only session: the block alone is resident
+                    *state = Some(WorkerState::registered(None, None, a));
+                }
+            }
+            Ok(Some(Message::MatrixRegistered { worker_id }))
+        }
+        Message::SolveRhs { b } => {
+            let st = registered_state(state, "SolveRhs")?;
+            let x0s = seed_columns(engine, st, vec![b])?;
+            Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
+        }
+        Message::SolveBatch { bs } => {
+            let st = registered_state(state, "SolveBatch")?;
+            let x0s = seed_columns(engine, st, bs)?;
+            Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
+        }
+        Message::RunUpdateBatch { epoch: _, gamma, xbars } => {
+            let st = state.as_mut().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunUpdateBatch before RegisterMatrix".into(),
+                )
+            })?;
+            let p = st.projector.as_ref().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunUpdateBatch on a grad-only worker: no projector \
+                     was initialized"
+                        .into(),
+                )
+            })?;
+            if st.xs.len() != xbars.len() {
+                return Err(crate::error::DapcError::Coordinator(format!(
+                    "batch width mismatch: {} seeded columns vs {} \
+                     averages (SolveBatch before RunUpdateBatch?)",
+                    st.xs.len(),
+                    xbars.len()
+                )));
+            }
+            st.xs = engine.update_batch(&st.xs, &xbars, p, gamma)?;
+            Ok(Some(Message::UpdateBatchDone {
+                worker_id: *my_id,
+                xs: st.xs.clone(),
+            }))
+        }
+        Message::RunGradBatch { epoch: _, xs } => {
+            let st = state.as_ref().ok_or_else(|| {
+                crate::error::DapcError::Coordinator(
+                    "RunGradBatch before RegisterMatrix".into(),
+                )
+            })?;
+            if st.bs.len() != xs.len() {
+                return Err(crate::error::DapcError::Coordinator(format!(
+                    "batch width mismatch: {} stored rhs vs {} iterates \
+                     (SolveBatch before RunGradBatch?)",
+                    st.bs.len(),
+                    xs.len()
+                )));
+            }
+            let mut grads = Vec::with_capacity(xs.len());
+            for (x, bcol) in xs.iter().zip(&st.bs) {
+                grads.push(engine.dgd_grad(&st.a, x, bcol)?);
+            }
+            Ok(Some(Message::GradBatchDone { worker_id: *my_id, grads }))
         }
         Message::RunUpdate { epoch: _, gamma, xbar } => {
             let st = state.as_mut().ok_or_else(|| {
@@ -110,6 +237,56 @@ fn handle<E: ComputeEngine>(
         other => Err(crate::error::DapcError::Coordinator(format!(
             "worker received unexpected message {other:?}"
         ))),
+    }
+}
+
+/// The session state, or a loud error naming the offending frame when no
+/// `RegisterMatrix` preceded it (one-shot `InitPartition` state does NOT
+/// qualify: it retains no seed factorization to serve from).
+fn registered_state<'s>(
+    state: &'s mut Option<WorkerState>,
+    frame: &str,
+) -> Result<&'s mut WorkerState> {
+    match state {
+        Some(st) if st.registered => Ok(st),
+        _ => Err(crate::error::DapcError::Coordinator(format!(
+            "{frame} before RegisterMatrix: register a matrix into the \
+             session before streaming right-hand sides"
+        ))),
+    }
+}
+
+/// Seed k rhs columns through the retained factorization (or store them
+/// for gradient service), returning the per-column `x_j(0)` replies.
+fn seed_columns<E: ComputeEngine>(
+    engine: &E,
+    st: &mut WorkerState,
+    bs: Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>> {
+    match &st.seed {
+        Some(seed) => {
+            let mut x0s = Vec::with_capacity(bs.len());
+            for b in &bs {
+                x0s.push(engine.seed(seed, &st.a, b)?);
+            }
+            st.xs = x0s.clone();
+            if let Some(first) = x0s.first() {
+                st.x = first.clone();
+            }
+            st.bs = bs;
+            Ok(x0s)
+        }
+        None => {
+            // gradient-only session: nothing to factor-solve, DGD
+            // starts at 0 — store the columns for gradient rounds
+            if let Some(first) = bs.first() {
+                st.b = first.clone();
+            }
+            let k = bs.len();
+            st.bs = bs;
+            st.xs.clear();
+            Ok(vec![Vec::new(); k])
+        }
     }
 }
 
@@ -216,6 +393,122 @@ mod tests {
             panic!("expected GradDone");
         };
         assert!(crate::linalg::norms::max_abs(&grad) < 1e-3);
+        leader.send(&Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn rhs_before_register_rejected_loudly() {
+        // the session contract: streaming an rhs into a worker that
+        // never registered a matrix is a protocol error, reported as a
+        // WorkerError — even if a one-shot InitPartition happened first
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            let _ = run_worker(&engine, &mut worker_side);
+        });
+        leader.send(&Message::SolveRhs { b: vec![1.0, 2.0] }).unwrap();
+        match leader.recv().unwrap() {
+            Message::WorkerError { message, .. } => {
+                assert!(
+                    message.contains("SolveRhs before RegisterMatrix"),
+                    "{message}"
+                );
+            }
+            other => panic!("expected WorkerError, got {other:?}"),
+        }
+        handle.join().unwrap();
+
+        // one-shot init state does not make rhs streaming legal either
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            let _ = run_worker(&engine, &mut worker_side);
+        });
+        let (a, b, _) = consistent(16, 4, 30);
+        leader
+            .send(&Message::InitPartition {
+                worker_id: 0,
+                kind: InitKindWire::Qr,
+                a,
+                b: b.clone(),
+                n_target: 4,
+            })
+            .unwrap();
+        let _ = leader.recv().unwrap();
+        leader.send(&Message::SolveBatch { bs: vec![b] }).unwrap();
+        match leader.recv().unwrap() {
+            Message::WorkerError { message, .. } => {
+                assert!(
+                    message.contains("SolveBatch before RegisterMatrix"),
+                    "{message}"
+                );
+            }
+            other => panic!("expected WorkerError, got {other:?}"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn register_then_stream_rhs_reuses_factorization() {
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            run_worker(&engine, &mut worker_side)
+        });
+
+        let (a, b, _) = consistent(24, 8, 31);
+        leader
+            .send(&Message::RegisterMatrix {
+                worker_id: 4,
+                kind: InitKindWire::Qr,
+                a: a.clone(),
+                n_target: 8,
+            })
+            .unwrap();
+        let Message::MatrixRegistered { worker_id } = leader.recv().unwrap()
+        else {
+            panic!("expected MatrixRegistered");
+        };
+        assert_eq!(worker_id, 4);
+
+        // stream several rhs: each warm seed must equal a cold init
+        let engine = NativeEngine::new();
+        for seed in 0..3u64 {
+            let mut g = seeded(600 + seed);
+            let b2: Vec<f32> = (0..24).map(|_| g.normal_f32()).collect();
+            leader.send(&Message::SolveRhs { b: b2.clone() }).unwrap();
+            let Message::RhsSeeded { x0s, .. } = leader.recv().unwrap()
+            else {
+                panic!("expected RhsSeeded");
+            };
+            let cold = engine
+                .init(crate::solver::InitKind::Qr, &a, &b2, 8)
+                .unwrap();
+            assert_eq!(x0s, vec![cold.x0], "seed {seed}");
+        }
+
+        // a batched epoch over k = 2 columns
+        leader
+            .send(&Message::SolveBatch { bs: vec![b.clone(), b.clone()] })
+            .unwrap();
+        let Message::RhsSeeded { x0s, .. } = leader.recv().unwrap() else {
+            panic!("expected RhsSeeded");
+        };
+        assert_eq!(x0s.len(), 2);
+        leader
+            .send(&Message::RunUpdateBatch {
+                epoch: 0,
+                gamma: 0.9,
+                xbars: x0s.clone(),
+            })
+            .unwrap();
+        let Message::UpdateBatchDone { xs, .. } = leader.recv().unwrap()
+        else {
+            panic!("expected UpdateBatchDone");
+        };
+        assert_eq!(xs.len(), 2);
+
         leader.send(&Message::Shutdown).unwrap();
         handle.join().unwrap().unwrap();
     }

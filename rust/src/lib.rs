@@ -51,6 +51,7 @@ pub mod parallel;
 pub mod partition;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod solver;
 pub mod sparse;
 
@@ -62,6 +63,7 @@ pub mod prelude {
     pub use crate::linalg::Matrix;
     pub use crate::partition::{PartitionPlan, PartitionRegime};
     pub use crate::parallel::ParallelEngine;
+    pub use crate::service::{ServiceStats, SessionAlgorithm, SolverSession};
     pub use crate::solver::{
         ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
         SolveReport, Solver,

@@ -75,6 +75,41 @@ pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     acc + a0 + a1 + a2 + a3
 }
 
+/// Widen an f32 slice into a caller-provided f64 buffer.  f32 -> f64 is
+/// exact, so downstream arithmetic over the widened values is
+/// bit-identical to widening on the fly.
+#[inline]
+pub fn widen(src: &[f32], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len(), "widen length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f64;
+    }
+}
+
+/// [`dot`] against a pre-widened left operand: same 4-way f64
+/// accumulator split, same summation order, same rounding points — the
+/// result is bit-identical to `dot(x32, y)` whenever `x[i] == x32[i] as
+/// f64`.  The batched multi-RHS update uses this to widen each projector
+/// row ONCE and reuse it across every column of the batch.
+#[inline]
+pub fn dot_wide(x: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot_wide length mismatch");
+    let mut acc = 0.0f64;
+    let chunks = x.len() / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += x[i] * y[i] as f64;
+        a1 += x[i + 1] * y[i + 1] as f64;
+        a2 += x[i + 2] * y[i + 2] as f64;
+        a3 += x[i + 3] * y[i + 3] as f64;
+    }
+    for i in chunks * 4..x.len() {
+        acc += x[i] * y[i] as f64;
+    }
+    acc + a0 + a1 + a2 + a3
+}
+
 /// `y = A x` for row-major A (rows x cols), x of length cols.
 pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols(), x.len());
@@ -428,6 +463,21 @@ mod tests {
             gemv(&a, &x, &mut y_serial);
             gemv_pooled(&pool, &a, &x, &mut y_pooled);
             assert_eq!(y_serial, y_pooled, "({rows},{cols})");
+        }
+    }
+
+    #[test]
+    fn dot_wide_bitwise_matches_dot() {
+        // the batched-solve contract: widening the left operand up front
+        // must not change a single output bit, at any length (all tail
+        // cases of the 4-way unroll)
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 257] {
+            let mut g = seeded(900 + len as u64);
+            let x: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+            let y: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+            let mut xw = vec![0.0f64; len];
+            widen(&x, &mut xw);
+            assert_eq!(dot(&x, &y).to_bits(), dot_wide(&xw, &y).to_bits());
         }
     }
 

@@ -95,13 +95,18 @@ pub fn pinv_tall(a: &Matrix) -> Result<Matrix> {
 /// DESIGN.md §1). Computing in f64 and casting the results back matches
 /// the reference implementation's numerics.
 pub fn classical_init_f64(a: &Matrix, b: &[f32]) -> Result<(Vec<f32>, Matrix)> {
+    let (ginv, p) = classical_factorize_f64(a)?;
+    let x0 = classical_seed_f64(a, &ginv, b)?;
+    Ok((x0, p))
+}
+
+/// The right-hand-side-independent half of [`classical_init_f64`]: the
+/// f64 Gram inverse `(A^T A)^{-1}` (flat row-major, retained by warm
+/// solver sessions) and the numerically evaluated projector
+/// `P = I - (A^T A)^{-1}(A^T A)`.  Neither depends on `b`, so a session
+/// pays this O(l n^2 + n^3) cost exactly once per registered matrix.
+pub fn classical_factorize_f64(a: &Matrix) -> Result<(Vec<f64>, Matrix)> {
     let (l, n) = a.shape();
-    if b.len() != l {
-        return Err(DapcError::Shape(format!(
-            "rhs length {} != rows {l}",
-            b.len()
-        )));
-    }
     // G = A^T A in f64
     let mut g = vec![0.0f64; n * n];
     for r in 0..l {
@@ -121,7 +126,42 @@ pub fn classical_init_f64(a: &Matrix, b: &[f32]) -> Result<(Vec<f32>, Matrix)> {
         }
     }
     let ginv = gauss_jordan_inverse_f64(&g, n)?;
-    // x0 = Ginv (A^T b)
+    // P = I - Ginv G (numeric noise at f64 scale)
+    let mut p = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for k in 0..n {
+                s += ginv[i * n + k] * g[k * n + j];
+            }
+            let id = if i == j { 1.0 } else { 0.0 };
+            p[(i, j)] = (id - s) as f32;
+        }
+    }
+    Ok((ginv, p))
+}
+
+/// The per-RHS half of [`classical_init_f64`]: `x0 = Ginv (A^T b)` in
+/// f64 from a retained Gram inverse.  Performs exactly the arithmetic of
+/// the combined init, so a warm re-seed is bit-identical to a cold one.
+pub fn classical_seed_f64(
+    a: &Matrix,
+    ginv: &[f64],
+    b: &[f32],
+) -> Result<Vec<f32>> {
+    let (l, n) = a.shape();
+    if b.len() != l {
+        return Err(DapcError::Shape(format!(
+            "rhs length {} != rows {l}",
+            b.len()
+        )));
+    }
+    if ginv.len() != n * n {
+        return Err(DapcError::Shape(format!(
+            "gram inverse has {} entries, expected {n}x{n}",
+            ginv.len()
+        )));
+    }
     let mut atb = vec![0.0f64; n];
     for r in 0..l {
         let row = a.row(r);
@@ -140,19 +180,7 @@ pub fn classical_init_f64(a: &Matrix, b: &[f32]) -> Result<(Vec<f32>, Matrix)> {
         }
         x0[i] = s as f32;
     }
-    // P = I - Ginv G (numeric noise at f64 scale)
-    let mut p = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..n {
-            let mut s = 0.0f64;
-            for k in 0..n {
-                s += ginv[i * n + k] * g[k * n + j];
-            }
-            let id = if i == j { 1.0 } else { 0.0 };
-            p[(i, j)] = (id - s) as f32;
-        }
-    }
-    Ok((x0, p))
+    Ok(x0)
 }
 
 /// Gauss-Jordan inverse over a flat row-major f64 buffer.
@@ -293,6 +321,21 @@ mod tests {
         assert!(crate::linalg::norms::max_abs(p.as_slice()) < 1e-6);
         // rhs length check
         assert!(classical_init_f64(&a, &b[..10]).is_err());
+    }
+
+    #[test]
+    fn classical_factorize_seed_split_bitwise_matches_init() {
+        let a = randm(40, 12, 31);
+        let mut g = seeded(32);
+        let b: Vec<f32> = (0..40).map(|_| g.normal_f32()).collect();
+        let (x0, p) = classical_init_f64(&a, &b).unwrap();
+        let (ginv, p2) = classical_factorize_f64(&a).unwrap();
+        let x02 = classical_seed_f64(&a, &ginv, &b).unwrap();
+        assert_eq!(x0, x02);
+        assert_eq!(p.as_slice(), p2.as_slice());
+        // bad shapes are rejected, not UB
+        assert!(classical_seed_f64(&a, &ginv, &b[..5]).is_err());
+        assert!(classical_seed_f64(&a, &ginv[..7], &b).is_err());
     }
 
     #[test]

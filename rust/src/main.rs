@@ -16,9 +16,11 @@ use dapc::coordinator::TaskGraph;
 use dapc::error::{DapcError, Result};
 use dapc::linalg::norms;
 use dapc::runtime::executor::XlaExecutorHost;
+use dapc::service::{SessionAlgorithm, SolverSession};
 use dapc::solver::{
-    ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, ParallelEngine,
-    SolveOptions, Solver, XlaEngine,
+    drive_apc, drive_dgd, ApcClassicalSolver, ApcVariant, ComputeEngine,
+    DapcSolver, DgdSolver, InProcessBackend, NativeEngine, ParallelEngine,
+    SessionBackend, SolveOptions, Solver, XlaEngine,
 };
 use dapc::sparse::{generate::GeneratorConfig, matrix_market, CsrMatrix};
 
@@ -38,6 +40,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "synthetic data seed", takes_value: true },
         OptSpec { name: "artifacts", help: "artifact directory", takes_value: true },
         OptSpec { name: "distributed", help: "run over a local worker cluster", takes_value: false },
+        OptSpec { name: "serve-rhs", help: "solve-service mode: register the matrix once, stream K generated right-hand sides", takes_value: true },
         OptSpec { name: "workers", help: "comma-separated worker addrs (TCP leader)", takes_value: true },
         OptSpec { name: "listen", help: "worker listen address", takes_value: true },
         OptSpec { name: "out", help: "output path (graph/generate)", takes_value: true },
@@ -164,6 +167,10 @@ fn cmd_solve(parsed: &cli::ParsedArgs) -> Result<()> {
         ..Default::default()
     };
 
+    if let Some(k) = parsed.get_parse::<usize>("serve-rhs")? {
+        return cmd_serve(&cfg, parsed, &a, k);
+    }
+
     let report = if let Some(workers) = parsed.get("workers") {
         // TCP leader over remote workers
         let addrs: Vec<String> =
@@ -284,6 +291,181 @@ fn print_report(r: &dapc::solver::SolveReport, x_true: Option<&[f32]>) {
             println!("epoch {e}: mse {m:.6e}");
         }
     }
+}
+
+/// `solve --serve-rhs K`: register the matrix once into a warm solver
+/// session, stream K generated right-hand sides through it one at a
+/// time, then once more as a single column-blocked batch, and print the
+/// cold-vs-amortized timing comparison.
+fn cmd_serve(
+    cfg: &RunConfig,
+    parsed: &cli::ParsedArgs,
+    a: &CsrMatrix,
+    k: usize,
+) -> Result<()> {
+    if k == 0 {
+        return Err(DapcError::Config("--serve-rhs needs K >= 1".into()));
+    }
+    let algorithm = match cfg.algorithm {
+        Algorithm::DapcDecomposed => {
+            SessionAlgorithm::Apc(ApcVariant::Decomposed)
+        }
+        Algorithm::ApcClassical => SessionAlgorithm::Apc(ApcVariant::Classical),
+        Algorithm::Dgd => SessionAlgorithm::Dgd,
+    };
+    let opts = SolveOptions {
+        epochs: cfg.epochs,
+        eta: cfg.eta,
+        gamma: cfg.gamma,
+        dgd_step: cfg.dgd_step,
+        ..Default::default()
+    };
+
+    // K consistent right-hand sides b_i = A x_i from seeded generators —
+    // the "requests" this service session will stream
+    let (m, n) = a.shape();
+    let mut bs = Vec::with_capacity(k);
+    for i in 0..k as u64 {
+        let mut g = dapc::rng::seeded(cfg.seed.wrapping_add(1 + i));
+        let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let mut b = vec![0.0f32; m];
+        a.spmv_into(&x, &mut b);
+        bs.push(b);
+    }
+    println!(
+        "solve service: streaming {k} rhs over {m}x{n} (J = {})",
+        cfg.partitions
+    );
+
+    if let Some(workers) = parsed.get("workers") {
+        // TCP leader: the remote workers hold the registered state; the
+        // cold reference runs over the same connections first (workers
+        // replace their one-shot state on RegisterMatrix)
+        let addrs: Vec<String> =
+            workers.split(',').map(str::to_string).collect();
+        let mut leader = cluster::connect_tcp_workers(&addrs)?;
+        let cold_s =
+            time_cold(leader.backend_mut(), a, &bs[0], algorithm, &opts)?;
+        let result = serve_stream(
+            leader.backend_mut(),
+            a,
+            algorithm,
+            &opts,
+            &bs,
+            cold_s,
+        );
+        leader.shutdown();
+        return result;
+    }
+    if parsed.has_flag("distributed") {
+        // one cluster for both phases: workers replace their one-shot
+        // state when the session's RegisterMatrix arrives
+        let mut c =
+            cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
+        let cold_s =
+            time_cold(c.leader.backend_mut(), a, &bs[0], algorithm, &opts)?;
+        return serve_stream(
+            c.leader.backend_mut(),
+            a,
+            algorithm,
+            &opts,
+            &bs,
+            cold_s,
+        );
+    }
+    match cfg.engine {
+        EngineKind::Native if cfg.threads == 1 => {
+            let engine = NativeEngine::new();
+            serve_in_process(&engine, cfg, a, algorithm, &opts, &bs)
+        }
+        EngineKind::Native => {
+            let engine = ParallelEngine::new(cfg.threads);
+            println!("parallel native engine: {} threads", engine.threads());
+            serve_in_process(&engine, cfg, a, algorithm, &opts, &bs)
+        }
+        EngineKind::Xla => Err(DapcError::Config(
+            "--serve-rhs requires the native engine (the XLA init is a \
+             fused artifact with no retained factorization)"
+                .into(),
+        )),
+    }
+}
+
+fn serve_in_process<E: ComputeEngine>(
+    engine: &E,
+    cfg: &RunConfig,
+    a: &CsrMatrix,
+    algorithm: SessionAlgorithm,
+    opts: &SolveOptions,
+    bs: &[Vec<f32>],
+) -> Result<()> {
+    // the cold reference backend is dropped before the session starts,
+    // so its one-shot state never inflates the serving footprint
+    let cold_s = {
+        let mut cold_backend = InProcessBackend::new(engine, cfg.partitions);
+        time_cold(&mut cold_backend, a, &bs[0], algorithm, opts)?
+    };
+    let mut backend = InProcessBackend::new(engine, cfg.partitions);
+    serve_stream(&mut backend, a, algorithm, opts, bs, cold_s)
+}
+
+/// One cold one-shot solve (init + epochs) for the baseline timing.
+fn time_cold<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    b: &[f32],
+    algorithm: SessionAlgorithm,
+    opts: &SolveOptions,
+) -> Result<f64> {
+    let t0 = std::time::Instant::now();
+    let r = match algorithm {
+        SessionAlgorithm::Apc(variant) => {
+            drive_apc(backend, a, b, variant, opts)?
+        }
+        SessionAlgorithm::Dgd => drive_dgd(backend, a, b, opts)?,
+    };
+    let s = t0.elapsed().as_secs_f64();
+    println!("cold one-shot reference: {}", r.summary());
+    Ok(s)
+}
+
+fn serve_stream<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    algorithm: SessionAlgorithm,
+    opts: &SolveOptions,
+    bs: &[Vec<f32>],
+    cold_s: f64,
+) -> Result<()> {
+    let mut session =
+        SolverSession::register(backend, a.clone(), algorithm, opts.clone())?;
+    let mut worst_residual = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for b in bs {
+        let r = session.solve(b)?;
+        if let Some(res) = r.residual {
+            worst_residual = worst_residual.max(res);
+        }
+    }
+    let warm_per_rhs = t0.elapsed().as_secs_f64() / bs.len() as f64;
+
+    let t1 = std::time::Instant::now();
+    let batch = session.solve_batch(bs)?;
+    let batch_per_rhs = t1.elapsed().as_secs_f64() / batch.len() as f64;
+
+    println!("{}", session.stats().summary());
+    println!("cold solve:          {cold_s:.6}s / rhs");
+    println!(
+        "warm single solves:  {warm_per_rhs:.6}s / rhs ({:.2}x vs cold)",
+        cold_s / warm_per_rhs.max(1e-12)
+    );
+    println!(
+        "warm batch (k = {}): {batch_per_rhs:.6}s / rhs ({:.2}x vs cold)",
+        bs.len(),
+        cold_s / batch_per_rhs.max(1e-12)
+    );
+    println!("worst residual across the stream: {worst_residual:.3e}");
+    Ok(())
 }
 
 fn cmd_worker(parsed: &cli::ParsedArgs) -> Result<()> {

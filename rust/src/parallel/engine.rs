@@ -26,8 +26,10 @@ use crate::error::Result;
 use crate::linalg::{blas, Matrix};
 use crate::solver::engine::{
     average_chunk_kernel, check_average_shapes, check_dgd_shapes,
-    check_round_shapes, check_update_shapes, update_kernel, ComputeEngine,
-    InitKind, NativeEngine, RoundWorkspace, WorkerInit,
+    check_round_batch_shapes, check_round_shapes, check_update_shapes,
+    update_batch_kernel, update_kernel, ComputeEngine, InitKind,
+    NativeEngine, RoundWorkspace, SeedFactors, WorkerFactorization,
+    WorkerInit,
 };
 
 use super::pool::ThreadPool;
@@ -60,10 +62,12 @@ impl ParallelEngine {
         &self.pool
     }
 
-    /// Chunked-parallel eq. (7); shapes must be pre-validated.
-    fn average_chunks(
+    /// Chunked-parallel eq. (7); shapes must be pre-validated.  Generic
+    /// over the estimate container so the batched round can pass
+    /// per-column `&[f32]` views.
+    fn average_chunks<S: AsRef<[f32]> + Sync>(
         &self,
-        xs: &[Vec<f32>],
+        xs: &[S],
         xbar: &[f32],
         eta: f32,
         acc: &mut [f64],
@@ -256,6 +260,70 @@ impl ComputeEngine for ParallelEngine {
         Ok(())
     }
 
+    fn factorize(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        n_target: usize,
+    ) -> Result<WorkerFactorization> {
+        // factorization state is engine-independent; sessions built on
+        // the parallel engine still re-seed bit-identically
+        self.inner.factorize(kind, a, n_target)
+    }
+
+    fn seed(
+        &self,
+        seed: &SeedFactors,
+        a: &Matrix,
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.inner.seed(seed, a, b)
+    }
+
+    fn round_batch_into(
+        &self,
+        xs: &[Vec<Vec<f32>>],
+        xbars: &[Vec<f32>],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<Vec<f32>>],
+        out_xbars: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let (j, k, n) =
+            check_round_batch_shapes(xs, xbars, ps, out_xs, out_xbars)?;
+        ws.ensure_batch(j, k, n);
+        // eq. (6): one pool job per partition; each job sweeps its
+        // projector once for all k columns through the batched kernel
+        // (buffers disjoint by construction, so determinism holds)
+        let wides = &mut ws.wide[..j];
+        let scratches = &mut ws.scratch[..j * k];
+        self.pool.scope(|s| {
+            for ((((x, p), wide), scratch), out) in xs
+                .iter()
+                .zip(ps)
+                .zip(wides.iter_mut())
+                .zip(scratches.chunks_mut(k))
+                .zip(out_xs.iter_mut())
+            {
+                s.spawn(move || {
+                    update_batch_kernel(x, xbars, p, gamma, wide, scratch, out)
+                });
+            }
+        });
+        // eq. (7): per column, chunked exactly like the single-RHS path
+        let mut cols: Vec<&[f32]> = Vec::with_capacity(j);
+        for (c, (xbar, out_xbar)) in
+            xbars.iter().zip(out_xbars.iter_mut()).enumerate()
+        {
+            cols.clear();
+            cols.extend(out_xs.iter().map(|xj| xj[c].as_slice()));
+            self.average_chunks(&cols, xbar, eta, &mut ws.acc, out_xbar);
+        }
+        Ok(())
+    }
+
     fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         let mut ax = vec![0.0f32; a.rows()];
         let mut g = vec![0.0f32; a.cols()];
@@ -366,6 +434,60 @@ mod tests {
                 p.projector.as_slice()
             );
         }
+    }
+
+    #[test]
+    fn round_batch_bitwise_matches_native() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(3);
+        let (j, k, n) = (3usize, 4usize, 29usize); // odd n: ragged chunks
+        let xs: Vec<Vec<Vec<f32>>> = (0..j)
+            .map(|i| {
+                (0..k)
+                    .map(|c| randv(n, 1000 + (i * k + c) as u64))
+                    .collect()
+            })
+            .collect();
+        let xbars: Vec<Vec<f32>> =
+            (0..k).map(|c| randv(n, 2000 + c as u64)).collect();
+        let ps: Vec<Matrix> =
+            (0..j).map(|i| randm(n, n, 3000 + i as u64)).collect();
+
+        let mut nws = RoundWorkspace::default();
+        let mut n_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+        let mut n_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+        native
+            .round_batch_into(
+                &xs, &xbars, &ps, 0.7, 0.6, &mut nws, &mut n_xs,
+                &mut n_xbars,
+            )
+            .unwrap();
+
+        let mut pws = RoundWorkspace::default();
+        let mut p_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+        let mut p_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+        par.round_batch_into(
+            &xs, &xbars, &ps, 0.7, 0.6, &mut pws, &mut p_xs, &mut p_xbars,
+        )
+        .unwrap();
+
+        assert_eq!(n_xs, p_xs);
+        assert_eq!(n_xbars, p_xbars);
+    }
+
+    #[test]
+    fn factorize_and_seed_delegate_to_native() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(2);
+        let a = randm(24, 8, 41);
+        let b = randv(24, 42);
+        let nf = native.factorize(InitKind::Qr, &a, 8).unwrap();
+        let pf = par.factorize(InitKind::Qr, &a, 8).unwrap();
+        assert_eq!(nf.projector.as_slice(), pf.projector.as_slice());
+        assert_eq!(
+            native.seed(&nf.seed, &a, &b).unwrap(),
+            par.seed(&pf.seed, &a, &b).unwrap()
+        );
     }
 
     #[test]

@@ -1,0 +1,53 @@
+//! Solve service: warm sessions, factorization reuse, batched multi-RHS
+//! solves.
+//!
+//! The paper positions APC as an alternative to one-shot numerical
+//! solvers, but its init phase — the per-worker Householder QR of `A_j`
+//! (eqs. (1)-(4)) — is O(l n^2) while everything the *right-hand side*
+//! touches is O(l n + n^2): `x_j(0) = R^{-1} Q1^T b_j` and nothing else.
+//! The projector `P_j = I - Q1^T Q1` that drives every eq. (6) update is
+//! built from `A_j` alone, and the eq. (5)/(7) seeding/mixing consume
+//! only the per-partition estimates.  A serving layer can therefore
+//! register a matrix ONCE and amortize the factorization across
+//! thousands of solves — the request-serving shape this module provides.
+//!
+//! # What state is resident where
+//!
+//! * **Partitions/workers** retain, per block `j`: the dense `A_j`, the
+//!   projector `P_j`, and the seed factorization (QR factors, the f64
+//!   Gram inverse, or the fat-regime `Q`/`R^T` — see
+//!   [`crate::solver::SeedFactors`]).  This is the expensive
+//!   RHS-independent state; it never crosses the wire (cluster workers
+//!   build it from their `RegisterMatrix` block and keep it across
+//!   solves).
+//! * **The session (leader side)** retains only the CSR matrix (for
+//!   rhs slicing, residuals and the DGD auto step), the partition plan,
+//!   and n-length accumulators — the paper's leader-memory guarantee
+//!   carries over unchanged.
+//!
+//! # Request flow
+//!
+//! ```text
+//!   SolverSession::register(backend, A)   -- factorize once (cold cost)
+//!       session.solve(b)                  -- seed + epochs   (warm cost)
+//!       session.solve_batch(&[b0, .., bk])-- k columns through ONE epoch
+//!                                            loop; each projector row is
+//!                                            widened once and reused for
+//!                                            all k columns (column-
+//!                                            blocked batched kernel)
+//! ```
+//!
+//! Warm solves are **bit-identical** to cold solves and batched solves
+//! to sequential ones, on the in-process and cluster backends alike:
+//! seeding re-runs the exact arithmetic of the cold init against the
+//! retained factors, and the batched kernel keeps `dot`'s f64
+//! accumulation order per column (`tests/distributed_equivalence.rs`).
+//!
+//! [`ServiceStats`] tracks the amortization story: one-time registration
+//! cost vs per-RHS solve time and per-session solve counters.
+
+mod session;
+mod stats;
+
+pub use session::{SessionAlgorithm, SolverSession};
+pub use stats::ServiceStats;

@@ -1,0 +1,397 @@
+//! [`SolverSession`]: register a matrix once, then serve an arbitrary
+//! stream of right-hand sides (single or batched) over any
+//! [`SessionBackend`].
+
+use std::time::Instant;
+
+use crate::error::{DapcError, Result};
+use crate::partition::PartitionPlan;
+use crate::solver::driver::apc_label;
+use crate::solver::{
+    auto_dgd_step, drive_apc_epochs_multi, drive_dgd_epochs_multi,
+    init_kind_for, residual_norm, ApcVariant, SessionBackend, SolveOptions,
+    SolveReport,
+};
+use crate::sparse::CsrMatrix;
+
+use super::ServiceStats;
+
+/// Which algorithm a session serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionAlgorithm {
+    /// Consensus solves (decomposed or classical init, chosen once at
+    /// registration together with the regime).
+    Apc(ApcVariant),
+    /// Distributed gradient descent (gradient-only workers, no
+    /// factorization; the step size is resolved once at registration).
+    Dgd,
+}
+
+/// A warm solver session: the matrix is registered (factorized and
+/// retained partition-side) exactly once, after which [`Self::solve`]
+/// and [`Self::solve_batch`] serve right-hand sides at per-RHS cost
+/// O(l n + n^2) + epochs — never a second factorization.
+///
+/// Works over any [`SessionBackend`]: the in-process backend for
+/// single-host serving, the cluster backend (wire protocol v3) for
+/// distributed serving.  Warm results are bit-identical to cold
+/// one-shot solves on both.
+pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
+    backend: &'b mut B,
+    a: CsrMatrix,
+    plan: PartitionPlan,
+    algorithm: SessionAlgorithm,
+    opts: SolveOptions,
+    n_target: usize,
+    /// DGD step size, resolved once at registration (unused for APC).
+    alpha: f32,
+    /// Reused per-solve eq. (5)/(7) accumulators (k columns).
+    accs: Vec<Vec<f64>>,
+    stats: ServiceStats,
+}
+
+impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
+    /// Register `a` into the backend: partition, factorize, retain.
+    /// This is the session's one-time cold cost ([`ServiceStats`]
+    /// records it).
+    pub fn register(
+        backend: &'b mut B,
+        a: CsrMatrix,
+        algorithm: SessionAlgorithm,
+        opts: SolveOptions,
+    ) -> Result<Self> {
+        let j = backend.partitions();
+        if j == 0 {
+            return Err(DapcError::Coordinator(
+                "solver session needs at least one partition/worker (got 0)"
+                    .into(),
+            ));
+        }
+        if opts.x_true.is_some() || opts.collect_x_parts {
+            // the serving layer returns raw solves only; silently
+            // dropping a requested trace/x_parts would hand callers a
+            // report that is NOT equivalent to the cold path's
+            return Err(DapcError::Config(
+                "solver sessions do not support per-epoch traces (x_true) \
+                 or x_parts collection; use the one-shot \
+                 drive_apc/drive_dgd path for convergence analysis"
+                    .into(),
+            ));
+        }
+        let (m, n) = a.shape();
+        let plan = PartitionPlan::contiguous(m, n, j)?;
+        let t0 = Instant::now();
+        let (n_target, alpha) = match algorithm {
+            SessionAlgorithm::Apc(variant) => {
+                let kind = init_kind_for(variant, plan.regime);
+                (backend.register_matrix(kind, &plan, &a)?, 0.0)
+            }
+            SessionAlgorithm::Dgd => {
+                backend.register_grad(&plan, &a)?;
+                let alpha = if opts.dgd_step > 0.0 {
+                    opts.dgd_step
+                } else {
+                    auto_dgd_step(&a)
+                };
+                (plan.n, alpha)
+            }
+        };
+        let stats = ServiceStats {
+            register_time: t0.elapsed(),
+            ..ServiceStats::default()
+        };
+        Ok(Self {
+            backend,
+            a,
+            plan,
+            algorithm,
+            opts,
+            n_target,
+            alpha,
+            accs: Vec::new(),
+            stats,
+        })
+    }
+
+    /// Serve one right-hand side through the warm session.
+    pub fn solve(&mut self, b: &[f32]) -> Result<SolveReport> {
+        let mut reports = self.solve_batch_refs(&[b])?;
+        Ok(reports.pop().expect("one report per rhs"))
+    }
+
+    /// Serve `bs.len()` right-hand sides as ONE column-blocked batch:
+    /// all columns move through a single epoch loop, so each projector
+    /// sweep is shared by the whole batch.  Results are bit-identical
+    /// to calling [`Self::solve`] per column; reported times are the
+    /// batch cost divided evenly across columns (the amortized view).
+    pub fn solve_batch(&mut self, bs: &[Vec<f32>]) -> Result<Vec<SolveReport>> {
+        let refs: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
+        self.solve_batch_refs(&refs)
+    }
+
+    fn solve_batch_refs(&mut self, bs: &[&[f32]]) -> Result<Vec<SolveReport>> {
+        let k = bs.len();
+        if k == 0 {
+            return Err(DapcError::Shape(
+                "solve_batch needs at least one rhs".into(),
+            ));
+        }
+        let (m, n) = self.a.shape();
+        for b in bs {
+            if b.len() != m {
+                return Err(DapcError::Shape(format!(
+                    "rhs length {} != matrix rows {m}",
+                    b.len()
+                )));
+            }
+        }
+
+        let t0 = Instant::now();
+        let (seed_time, mut xbars, algorithm) = match self.algorithm {
+            SessionAlgorithm::Apc(variant) => {
+                self.accs.resize_with(k, Vec::new);
+                self.backend.seed_rhs(&self.plan, bs, &mut self.accs)?;
+                let seed_time = t0.elapsed();
+                let xbars = drive_apc_epochs_multi(
+                    &mut *self.backend,
+                    &mut self.accs,
+                    &self.opts,
+                )?;
+                (seed_time, xbars, apc_label(variant))
+            }
+            SessionAlgorithm::Dgd => {
+                self.backend.seed_grad_rhs(&self.plan, bs)?;
+                let seed_time = t0.elapsed();
+                let xs = drive_dgd_epochs_multi(
+                    &mut *self.backend,
+                    k,
+                    self.n_target,
+                    self.alpha,
+                    self.opts.epochs,
+                )?;
+                (seed_time, xs, "dgd")
+            }
+        };
+        let total = t0.elapsed();
+        let iterate_time = total.saturating_sub(seed_time);
+
+        // amortized per-RHS timing view
+        let div = u32::try_from(k).unwrap_or(u32::MAX);
+        let per_init = seed_time / div;
+        let per_iter = iterate_time / div;
+
+        let mut reports = Vec::with_capacity(k);
+        for (mut xbar, b) in xbars.drain(..).zip(bs) {
+            xbar.truncate(n);
+            let residual = residual_norm(&self.a, b, &xbar);
+            reports.push(SolveReport {
+                xbar,
+                x_parts: Vec::new(),
+                trace: None,
+                residual: Some(residual),
+                init_time: per_init,
+                iterate_time: per_iter,
+                algorithm,
+                engine: self.backend.backend_name(),
+                epochs: self.opts.epochs,
+            });
+        }
+        self.stats.record(k, total);
+        Ok(reports)
+    }
+
+    /// Amortization counters for this session.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// The registered matrix.
+    pub fn matrix(&self) -> &CsrMatrix {
+        &self.a
+    }
+
+    /// Partition count the session was registered with.
+    pub fn partitions(&self) -> usize {
+        self.plan.j()
+    }
+
+    /// The algorithm this session serves.
+    pub fn algorithm(&self) -> SessionAlgorithm {
+        self.algorithm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{
+        drive_apc, drive_dgd, InProcessBackend, NativeEngine, Solver as _,
+    };
+    use crate::sparse::generate::GeneratorConfig;
+
+    fn opts(epochs: usize) -> SolveOptions {
+        SolveOptions { epochs, ..Default::default() }
+    }
+
+    #[test]
+    fn warm_solve_bitwise_matches_cold_solve() {
+        let ds = GeneratorConfig::small_demo(16, 3).generate(11);
+        let e = NativeEngine::new();
+        for variant in [ApcVariant::Decomposed, ApcVariant::Classical] {
+            let mut cold_backend = InProcessBackend::new(&e, 3);
+            let cold = drive_apc(
+                &mut cold_backend,
+                &ds.matrix,
+                &ds.rhs,
+                variant,
+                &opts(15),
+            )
+            .unwrap();
+
+            let mut backend = InProcessBackend::new(&e, 3);
+            let mut session = SolverSession::register(
+                &mut backend,
+                ds.matrix.clone(),
+                SessionAlgorithm::Apc(variant),
+                opts(15),
+            )
+            .unwrap();
+            let warm = session.solve(&ds.rhs).unwrap();
+            assert_eq!(warm.xbar, cold.xbar, "{variant:?}");
+            assert_eq!(warm.residual, cold.residual, "{variant:?}");
+            // second serve of the SAME rhs: state fully re-seeded
+            let warm2 = session.solve(&ds.rhs).unwrap();
+            assert_eq!(warm2.xbar, cold.xbar, "{variant:?} resolve");
+        }
+    }
+
+    #[test]
+    fn warm_dgd_bitwise_matches_cold_dgd() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(12);
+        let e = NativeEngine::new();
+        let o = SolveOptions { epochs: 30, dgd_step: 0.0, ..Default::default() };
+
+        let mut cold_backend = InProcessBackend::new(&e, 2);
+        let cold =
+            drive_dgd(&mut cold_backend, &ds.matrix, &ds.rhs, &o).unwrap();
+
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionAlgorithm::Dgd,
+            o,
+        )
+        .unwrap();
+        let warm = session.solve(&ds.rhs).unwrap();
+        assert_eq!(warm.xbar, cold.xbar);
+        assert_eq!(warm.residual, cold.residual);
+    }
+
+    #[test]
+    fn batch_bitwise_matches_sequential_solves() {
+        let ds = GeneratorConfig::small_demo(14, 2).generate(13);
+        let e = NativeEngine::new();
+        // three distinct consistent rhs against the one registered matrix
+        let bs: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                let mut g = crate::rng::seeded(400 + i);
+                let x: Vec<f32> =
+                    (0..ds.matrix.cols()).map(|_| g.normal_f32()).collect();
+                let mut b = vec![0.0f32; ds.matrix.rows()];
+                ds.matrix.spmv_into(&x, &mut b);
+                b
+            })
+            .collect();
+
+        let mut b1 = InProcessBackend::new(&e, 2);
+        let mut seq = SolverSession::register(
+            &mut b1,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(20),
+        )
+        .unwrap();
+        let singles: Vec<_> =
+            bs.iter().map(|b| seq.solve(b).unwrap()).collect();
+
+        let mut b2 = InProcessBackend::new(&e, 2);
+        let mut batched = SolverSession::register(
+            &mut b2,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(20),
+        )
+        .unwrap();
+        let batch = batched.solve_batch(&bs).unwrap();
+
+        assert_eq!(batch.len(), 3);
+        for (one, many) in singles.iter().zip(&batch) {
+            assert_eq!(one.xbar, many.xbar);
+            assert_eq!(one.residual, many.residual);
+        }
+        assert_eq!(batched.stats().rhs_served, 3);
+        assert_eq!(batched.stats().solve_calls, 1);
+        assert_eq!(batched.stats().max_batch, 3);
+        assert_eq!(seq.stats().solve_calls, 3);
+    }
+
+    #[test]
+    fn session_matches_solver_facade() {
+        // the ergonomic one-shot facade and a warm session agree
+        let ds = GeneratorConfig::small_demo(16, 2).generate(14);
+        let e = NativeEngine::new();
+        let via_facade = crate::solver::DapcSolver::new(opts(10))
+            .solve(&e, &ds.matrix, &ds.rhs, 2)
+            .unwrap();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(10),
+        )
+        .unwrap();
+        assert_eq!(session.solve(&ds.rhs).unwrap().xbar, via_facade.xbar);
+    }
+
+    #[test]
+    fn trace_and_x_parts_options_rejected_at_register() {
+        let ds = GeneratorConfig::small_demo(8, 1).generate(16);
+        let e = NativeEngine::new();
+        for o in [
+            SolveOptions {
+                x_true: Some(ds.x_true.clone()),
+                ..Default::default()
+            },
+            SolveOptions { collect_x_parts: true, ..Default::default() },
+        ] {
+            let mut backend = InProcessBackend::new(&e, 1);
+            let err = SolverSession::register(
+                &mut backend,
+                ds.matrix.clone(),
+                SessionAlgorithm::Apc(ApcVariant::Decomposed),
+                o,
+            )
+            .map(|_| ())
+            .unwrap_err();
+            assert!(err.to_string().contains("do not support"), "{err}");
+        }
+    }
+
+    #[test]
+    fn bad_rhs_rejected() {
+        let ds = GeneratorConfig::small_demo(8, 1).generate(15);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 1);
+        let mut session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(5),
+        )
+        .unwrap();
+        assert!(session.solve(&ds.rhs[..3]).is_err());
+        assert!(session.solve_batch(&[]).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Amortization telemetry for a [`super::SolverSession`].
+
+use std::time::Duration;
+
+/// Per-session counters separating the one-time registration cost from
+/// the amortized per-RHS serving cost.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// One-time registration wall time (partitioning + factorization +
+    /// retaining the seed state) — the cost a cold solve pays per solve.
+    pub register_time: Duration,
+    /// `solve`/`solve_batch` calls served by this session.
+    pub solve_calls: u64,
+    /// Right-hand sides served (a batch of k counts k).
+    pub rhs_served: u64,
+    /// Largest batch width served so far.
+    pub max_batch: usize,
+    /// Total wall time across all solves (seeding + epochs).
+    pub solve_time: Duration,
+}
+
+impl ServiceStats {
+    pub(crate) fn record(&mut self, k: usize, elapsed: Duration) {
+        self.solve_calls += 1;
+        self.rhs_served += k as u64;
+        self.max_batch = self.max_batch.max(k);
+        self.solve_time += elapsed;
+    }
+
+    /// Mean wall time per served right-hand side, or `None` before the
+    /// first solve.
+    pub fn amortized_per_rhs(&self) -> Option<Duration> {
+        if self.rhs_served == 0 {
+            return None;
+        }
+        let div = u32::try_from(self.rhs_served).unwrap_or(u32::MAX);
+        Some(self.solve_time / div)
+    }
+
+    /// One summary line for logs: cold registration cost vs the
+    /// amortized warm per-RHS cost.
+    pub fn summary(&self) -> String {
+        let amortized = match self.amortized_per_rhs() {
+            Some(d) => format!("{:.6}s", d.as_secs_f64()),
+            None => "n/a".into(),
+        };
+        format!(
+            "session: register(cold init)={:.6}s, {} solve calls / {} rhs \
+             served (max batch {}), amortized {amortized}/rhs",
+            self.register_time.as_secs_f64(),
+            self.solve_calls,
+            self.rhs_served,
+            self.max_batch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_amortization() {
+        let mut s = ServiceStats::default();
+        assert!(s.amortized_per_rhs().is_none());
+        assert!(s.summary().contains("n/a"));
+        s.record(1, Duration::from_millis(10));
+        s.record(4, Duration::from_millis(30));
+        assert_eq!(s.solve_calls, 2);
+        assert_eq!(s.rhs_served, 5);
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.amortized_per_rhs(), Some(Duration::from_millis(8)));
+        assert!(s.summary().contains("2 solve calls / 5 rhs"));
+    }
+}

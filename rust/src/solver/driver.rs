@@ -32,7 +32,7 @@ use crate::partition::{PartitionPlan, PartitionRegime};
 use crate::sparse::CsrMatrix;
 
 use super::consensus::ApcVariant;
-use super::engine::{ComputeEngine, InitKind, RoundWorkspace};
+use super::engine::{ComputeEngine, InitKind, RoundWorkspace, SeedFactors};
 use super::report::{residual_norm, SolveOptions, SolveReport};
 
 /// How a backend returned the consensus round to the driver.
@@ -130,6 +130,24 @@ pub(crate) fn accumulate_sum(xs: &[Vec<f32>], acc: &mut [f64]) {
     }
 }
 
+/// Multi-column twin of [`accumulate_sum`]: `accs[c][i] = sum_j
+/// xs[j][c][i]`, partitions summed in fixed order `j = 0..J` per column.
+pub(crate) fn accumulate_sum_batch(
+    xs: &[Vec<Vec<f32>>],
+    accs: &mut [Vec<f64>],
+) {
+    for acc in accs.iter_mut() {
+        acc.fill(0.0);
+    }
+    for xj in xs {
+        for (acc, x) in accs.iter_mut().zip(xj.iter()) {
+            for (a, &v) in acc.iter_mut().zip(x.iter()) {
+                *a += v as f64;
+            }
+        }
+    }
+}
+
 /// Eq. (7) in place: `xbar[i] = eta * (acc[i] / J) + (1 - eta) * xbar[i]`
 /// — the second half of `engine::average_chunk_kernel`, same f64
 /// arithmetic, so driver-side mixing is bit-identical to engine-side.
@@ -147,7 +165,7 @@ fn mean_from_acc(acc: &[f64], j: usize) -> Vec<f32> {
     acc.iter().map(|&s| (s / jf) as f32).collect()
 }
 
-fn apc_label(variant: ApcVariant) -> &'static str {
+pub(crate) fn apc_label(variant: ApcVariant) -> &'static str {
     match variant {
         ApcVariant::Decomposed => "dapc-decomposed",
         ApcVariant::Classical => "apc-classical",
@@ -176,6 +194,18 @@ fn check_shapes(a: &CsrMatrix, b: &[f32], j: usize) -> Result<(usize, usize)> {
 /// This is THE apc epoch loop — `DapcSolver`/`ApcClassicalSolver` run it
 /// over [`InProcessBackend`], `coordinator::Leader` over
 /// `ClusterBackend`.
+/// The worker init matching an APC variant in a partition regime —
+/// shared by the cold driver and warm-session registration so both
+/// always factorize identically (a divergence here would break the
+/// warm == cold bit-identity contract).
+pub fn init_kind_for(variant: ApcVariant, regime: PartitionRegime) -> InitKind {
+    match (variant, regime) {
+        (_, PartitionRegime::Fat) => InitKind::Fat,
+        (ApcVariant::Decomposed, PartitionRegime::Tall) => InitKind::Qr,
+        (ApcVariant::Classical, PartitionRegime::Tall) => InitKind::Classical,
+    }
+}
+
 pub fn drive_apc<B: ConsensusBackend + ?Sized>(
     backend: &mut B,
     a: &CsrMatrix,
@@ -186,11 +216,7 @@ pub fn drive_apc<B: ConsensusBackend + ?Sized>(
     let j = backend.partitions();
     let (m, n) = check_shapes(a, b, j)?;
     let plan = PartitionPlan::contiguous(m, n, j)?;
-    let init_kind = match (variant, plan.regime) {
-        (_, PartitionRegime::Fat) => InitKind::Fat,
-        (ApcVariant::Decomposed, PartitionRegime::Tall) => InitKind::Qr,
-        (ApcVariant::Classical, PartitionRegime::Tall) => InitKind::Classical,
-    };
+    let init_kind = init_kind_for(variant, plan.regime);
 
     // ---- init phase (Algorithm 1 steps 1-4) -----------------------------
     let t0 = Instant::now();
@@ -331,6 +357,132 @@ pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
 }
 
 // ---------------------------------------------------------------------------
+// Warm sessions: register once, stream right-hand sides
+// ---------------------------------------------------------------------------
+
+/// Warm-session capability on a [`ConsensusBackend`]: register a matrix
+/// ONCE (partitions factorize and retain `A_j`/`P_j`/seed state), then
+/// serve an arbitrary stream of right-hand sides — per-RHS work is
+/// seeding plus the epoch loop, never a second O(l n^2) factorization.
+/// `P_j` is RHS-independent (eqs. (1)-(4) build it from `A_j` alone), so
+/// the retained state serves every future `b` unchanged.
+///
+/// All methods operate on k >= 1 RHS *columns* at once and keep the base
+/// trait's fixed-order f64 reduction contract per column, so warm and
+/// batched solves stay bit-identical to cold sequential ones across
+/// every backend (`tests/distributed_equivalence.rs` locks this in).
+pub trait SessionBackend: ConsensusBackend {
+    /// Factorize and retain the plan's blocks (projector + seed state,
+    /// both RHS-independent).  Returns the solution width the consensus
+    /// loop runs at.
+    fn register_matrix(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<usize>;
+
+    /// Register for gradient-only (DGD) service: partitions store their
+    /// blocks, no factorization at all.
+    fn register_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<()>;
+
+    /// Seed `bs.len()` fresh right-hand sides through the retained
+    /// factorizations: per-partition estimates become `x_j(0)` per
+    /// column and `accs[c]` (resized to the session width) receives the
+    /// fixed-order f64 sum feeding eq. (5).  Errors loudly when no
+    /// matrix was registered.
+    fn seed_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()>;
+
+    /// Store `bs.len()` right-hand sides for gradient service — the DGD
+    /// twin of [`Self::seed_rhs`] (no estimates exist; DGD starts at 0).
+    fn seed_grad_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+    ) -> Result<()>;
+
+    /// One eq. (6)/(7) round over every partition and every seeded
+    /// column; outcome semantics per column match
+    /// [`ConsensusBackend::run_round`].
+    fn run_round_batch(
+        &mut self,
+        gamma: f32,
+        eta: f32,
+        xbars: &mut [Vec<f32>],
+        accs: &mut [Vec<f64>],
+    ) -> Result<RoundOutcome>;
+
+    /// One DGD gradient round per column:
+    /// `accs[c] = sum_j A_j^T (A_j x_c - b_jc)` (fixed order per column).
+    fn grad_round_batch(
+        &mut self,
+        xs: &[Vec<f32>],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()>;
+}
+
+/// [`drive_apc`]'s iterate phase generalized to k RHS columns over a
+/// warm session: eq. (5) seeds each column's average from its
+/// accumulator, then `opts.epochs` batched rounds run with eq. (7)
+/// mixed per column.  Column for column this performs exactly the
+/// single-RHS loop's arithmetic, so a batch of k is bit-identical to k
+/// sequential solves.  Returns the final averages (padded width; the
+/// caller truncates).
+pub fn drive_apc_epochs_multi<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    accs: &mut [Vec<f64>],
+    opts: &SolveOptions,
+) -> Result<Vec<Vec<f32>>> {
+    let j = backend.partitions();
+    let mut xbars: Vec<Vec<f32>> =
+        accs.iter().map(|acc| mean_from_acc(acc, j)).collect();
+    for _ in 0..opts.epochs {
+        match backend.run_round_batch(opts.gamma, opts.eta, &mut xbars, accs)?
+        {
+            RoundOutcome::Accumulated => {
+                for (xbar, acc) in xbars.iter_mut().zip(accs.iter()) {
+                    mix_into(acc, j, opts.eta, xbar);
+                }
+            }
+            RoundOutcome::Mixed => {}
+        }
+    }
+    Ok(xbars)
+}
+
+/// [`drive_dgd`]'s iterate phase generalized to k RHS columns over a
+/// warm session (step size `alpha` resolved by the caller, once per
+/// session).  Returns the k final iterates.
+pub fn drive_dgd_epochs_multi<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    epochs: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut xs = vec![vec![0.0f32; n]; k];
+    let mut accs = vec![vec![0.0f64; n]; k];
+    for _ in 0..epochs {
+        backend.grad_round_batch(&xs, &mut accs)?;
+        for (x, acc) in xs.iter_mut().zip(accs.iter()) {
+            for (xi, g) in x.iter_mut().zip(acc.iter()) {
+                *xi -= alpha * (*g as f32);
+            }
+        }
+    }
+    Ok(xs)
+}
+
+// ---------------------------------------------------------------------------
 // In-process backend
 // ---------------------------------------------------------------------------
 
@@ -355,6 +507,16 @@ pub struct InProcessBackend<'e, E: ComputeEngine> {
     blocks: Vec<(Matrix, Vec<f32>)>,
     ax: Vec<Vec<f32>>,
     grad: Vec<f32>,
+    // warm-session state (filled by register_matrix / register_grad):
+    // the dense blocks + seed factorizations stay resident so every
+    // later rhs pays only O(l n + n^2) seeding
+    seeds: Vec<SeedFactors>,
+    session_blocks: Vec<Matrix>,
+    session_bs: Vec<Vec<Vec<f32>>>,
+    batch_xs: Vec<Vec<Vec<f32>>>,
+    batch_next_xs: Vec<Vec<Vec<f32>>>,
+    next_xbars: Vec<Vec<f32>>,
+    session_n: usize,
 }
 
 impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
@@ -371,6 +533,13 @@ impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
             blocks: Vec::new(),
             ax: Vec::new(),
             grad: Vec::new(),
+            seeds: Vec::new(),
+            session_blocks: Vec::new(),
+            session_bs: Vec::new(),
+            batch_xs: Vec::new(),
+            batch_next_xs: Vec::new(),
+            next_xbars: Vec::new(),
+            session_n: 0,
         }
     }
 }
@@ -496,6 +665,222 @@ impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
     }
 }
 
+impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
+    fn register_matrix(
+        &mut self,
+        kind: InitKind,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<usize> {
+        if plan.j() != self.j {
+            return Err(DapcError::Shape(format!(
+                "plan has {} blocks for a {}-partition backend",
+                plan.j(),
+                self.j
+            )));
+        }
+        let n = plan.n;
+        let mut ps = Vec::with_capacity(self.j);
+        let mut seeds = Vec::with_capacity(self.j);
+        let mut blocks = Vec::with_capacity(self.j);
+        for blk in &plan.blocks {
+            let sub = a.slice_rows_dense(blk.start, blk.end);
+            let fac = self.engine.factorize(kind, &sub, n)?;
+            ps.push(fac.projector);
+            seeds.push(fac.seed);
+            blocks.push(sub);
+        }
+        self.ps = ps;
+        self.seeds = seeds;
+        self.session_blocks = blocks;
+        self.session_bs.clear();
+        self.session_n = n;
+        Ok(n)
+    }
+
+    fn register_grad(
+        &mut self,
+        plan: &PartitionPlan,
+        a: &CsrMatrix,
+    ) -> Result<()> {
+        if plan.j() != self.j {
+            return Err(DapcError::Shape(format!(
+                "plan has {} blocks for a {}-partition backend",
+                plan.j(),
+                self.j
+            )));
+        }
+        self.session_blocks = plan
+            .blocks
+            .iter()
+            .map(|blk| a.slice_rows_dense(blk.start, blk.end))
+            .collect();
+        self.seeds.clear();
+        self.ax = self
+            .session_blocks
+            .iter()
+            .map(|sub| vec![0.0f32; sub.rows()])
+            .collect();
+        self.grad = vec![0.0f32; plan.n];
+        self.session_bs.clear();
+        self.session_n = plan.n;
+        Ok(())
+    }
+
+    fn seed_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()> {
+        let j = self.j;
+        if self.seeds.len() != j || j == 0 {
+            return Err(DapcError::Coordinator(
+                "seed_rhs before register_matrix: register a matrix into \
+                 the session before streaming right-hand sides"
+                    .into(),
+            ));
+        }
+        let m = plan.blocks.last().map(|b| b.end).unwrap_or(0);
+        for b in bs {
+            if b.len() != m {
+                return Err(DapcError::Shape(format!(
+                    "rhs length {} != matrix rows {m}",
+                    b.len()
+                )));
+            }
+        }
+        let k = bs.len();
+        let n = self.session_n;
+        let engine = self.engine;
+        self.batch_xs.resize_with(j, Vec::new);
+        for ((xcols, (seed, sub)), blk) in self
+            .batch_xs
+            .iter_mut()
+            .zip(self.seeds.iter().zip(&self.session_blocks))
+            .zip(&plan.blocks)
+        {
+            xcols.clear();
+            for b in bs {
+                xcols.push(engine.seed(seed, sub, &b[blk.start..blk.end])?);
+            }
+        }
+        self.batch_next_xs = vec![vec![vec![0.0f32; n]; k]; j];
+        self.next_xbars = vec![vec![0.0f32; n]; k];
+        for acc in accs.iter_mut() {
+            acc.clear();
+            acc.resize(n, 0.0);
+        }
+        accumulate_sum_batch(&self.batch_xs, accs);
+        Ok(())
+    }
+
+    fn seed_grad_rhs(
+        &mut self,
+        plan: &PartitionPlan,
+        bs: &[&[f32]],
+    ) -> Result<()> {
+        if self.session_blocks.len() != self.j
+            || self.ax.len() != self.j
+            || self.j == 0
+        {
+            return Err(DapcError::Coordinator(
+                "seed_grad_rhs before register_grad: register a matrix \
+                 into the session before streaming right-hand sides"
+                    .into(),
+            ));
+        }
+        let m = plan.blocks.last().map(|b| b.end).unwrap_or(0);
+        for b in bs {
+            if b.len() != m {
+                return Err(DapcError::Shape(format!(
+                    "rhs length {} != matrix rows {m}",
+                    b.len()
+                )));
+            }
+        }
+        self.session_bs = plan
+            .blocks
+            .iter()
+            .map(|blk| {
+                bs.iter().map(|b| b[blk.start..blk.end].to_vec()).collect()
+            })
+            .collect();
+        Ok(())
+    }
+
+    fn run_round_batch(
+        &mut self,
+        gamma: f32,
+        eta: f32,
+        xbars: &mut [Vec<f32>],
+        _accs: &mut [Vec<f64>],
+    ) -> Result<RoundOutcome> {
+        // allocation-free batched round: warmed workspace + double
+        // buffers, the multi-column twin of `run_round`
+        self.engine.round_batch_into(
+            &self.batch_xs,
+            xbars,
+            &self.ps,
+            gamma,
+            eta,
+            &mut self.ws,
+            &mut self.batch_next_xs,
+            &mut self.next_xbars,
+        )?;
+        std::mem::swap(&mut self.batch_xs, &mut self.batch_next_xs);
+        for (xbar, next) in xbars.iter_mut().zip(self.next_xbars.iter()) {
+            xbar.copy_from_slice(next);
+        }
+        Ok(RoundOutcome::Mixed)
+    }
+
+    fn grad_round_batch(
+        &mut self,
+        xs: &[Vec<f32>],
+        accs: &mut [Vec<f64>],
+    ) -> Result<()> {
+        if self.session_bs.len() != self.j {
+            return Err(DapcError::Coordinator(
+                "grad_round_batch before seed_grad_rhs".into(),
+            ));
+        }
+        let k = xs.len();
+        if accs.len() != k
+            || self.session_bs.iter().any(|bcols| bcols.len() != k)
+        {
+            // a zip would silently truncate the wider side and hand the
+            // caller all-zero gradients for the dropped columns
+            return Err(DapcError::Coordinator(format!(
+                "batch width mismatch: {} stored rhs columns / {} \
+                 accumulators vs {k} iterates (seed_grad_rhs before \
+                 grad_round_batch?)",
+                self.session_bs.first().map(Vec::len).unwrap_or(0),
+                accs.len()
+            )));
+        }
+        for acc in accs.iter_mut() {
+            acc.fill(0.0);
+        }
+        for ((sub, bcols), ax) in self
+            .session_blocks
+            .iter()
+            .zip(&self.session_bs)
+            .zip(self.ax.iter_mut())
+        {
+            for ((x, bcol), acc) in
+                xs.iter().zip(bcols.iter()).zip(accs.iter_mut())
+            {
+                self.engine.dgd_grad_into(sub, x, bcol, ax, &mut self.grad)?;
+                for (a, g) in acc.iter_mut().zip(&self.grad) {
+                    *a += *g as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -568,6 +953,56 @@ mod tests {
         .unwrap();
         assert_eq!(with.x_parts.len(), 2);
         assert_eq!(with.xbar, without.xbar);
+    }
+
+    #[test]
+    fn session_seed_before_register_rejected() {
+        let e = NativeEngine::new();
+        let ds = GeneratorConfig::small_demo(16, 2).generate(7);
+        let plan =
+            PartitionPlan::contiguous(ds.matrix.rows(), ds.matrix.cols(), 2)
+                .unwrap();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let b = ds.rhs.clone();
+        let mut accs = vec![Vec::new()];
+        let err = backend.seed_rhs(&plan, &[&b], &mut accs).unwrap_err();
+        assert!(err.to_string().contains("before register_matrix"), "{err}");
+        let err = backend.seed_grad_rhs(&plan, &[&b]).unwrap_err();
+        assert!(err.to_string().contains("before register_grad"), "{err}");
+    }
+
+    #[test]
+    fn session_register_then_multi_epoch_matches_cold_drive() {
+        // one-column warm session == cold drive_apc, at the driver level
+        let e = NativeEngine::new();
+        let ds = GeneratorConfig::small_demo(24, 3).generate(8);
+        let opts = SolveOptions { epochs: 12, ..Default::default() };
+
+        let mut cold_backend = InProcessBackend::new(&e, 3);
+        let cold = drive_apc(
+            &mut cold_backend,
+            &ds.matrix,
+            &ds.rhs,
+            ApcVariant::Decomposed,
+            &opts,
+        )
+        .unwrap();
+
+        let (m, n) = ds.matrix.shape();
+        let plan = PartitionPlan::contiguous(m, n, 3).unwrap();
+        let mut warm_backend = InProcessBackend::new(&e, 3);
+        let width = warm_backend
+            .register_matrix(InitKind::Qr, &plan, &ds.matrix)
+            .unwrap();
+        let mut accs = vec![Vec::new()];
+        warm_backend.seed_rhs(&plan, &[&ds.rhs], &mut accs).unwrap();
+        assert_eq!(accs[0].len(), width);
+        let mut xbars =
+            drive_apc_epochs_multi(&mut warm_backend, &mut accs, &opts)
+                .unwrap();
+        let mut warm = xbars.pop().unwrap();
+        warm.truncate(n);
+        assert_eq!(warm, cold.xbar);
     }
 
     #[test]

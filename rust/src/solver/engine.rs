@@ -39,15 +39,55 @@ pub struct WorkerInit {
     pub projector: Matrix,
 }
 
+/// Right-hand-side-independent state of one partition, retained by warm
+/// solver sessions: the eq. (6) projector `P_j` plus whatever
+/// factorization of `A_j` re-seeds `x_j(0)` for a fresh `b_j` without
+/// repeating the O(l n^2) factorization (`P_j` never depends on `b` —
+/// eqs. (1)-(4) build it from `A_j` alone).
+pub struct WorkerFactorization {
+    /// Eq. (6) projector (RHS-independent by construction).
+    pub projector: Matrix,
+    /// Factorization state consumed by [`ComputeEngine::seed`].
+    pub seed: SeedFactors,
+}
+
+/// The retained factorization backing [`ComputeEngine::seed`].  Each
+/// variant holds exactly the operands its per-RHS seed path reads, so a
+/// warm seed performs the identical arithmetic of the matching cold
+/// [`InitKind`] init (bit-identical `x_j(0)`).
+pub enum SeedFactors {
+    /// Reduced Householder QR of `A_j` (paper eqs. (1)-(4)):
+    /// `x0 = R^{-1} Q1^T b` by backward substitution.
+    Qr(qr::QrFactors),
+    /// f64 Gram inverse `(A_j^T A_j)^{-1}` (classical APC); seeding also
+    /// reads the block itself for `A_j^T b`.
+    Classical {
+        /// Flat row-major n x n inverse in f64.
+        ginv: Vec<f64>,
+    },
+    /// QR of `A_j^T` (fat regime): `x0 = Q (R^T)^{-1} b` by forward
+    /// substitution against the pre-transposed `R^T`.
+    Fat {
+        /// (n x l) semi-orthogonal factor of `A_j^T`.
+        q1: Matrix,
+        /// (l x l) lower-triangular `R^T`.
+        rt: Matrix,
+    },
+}
+
 /// Reusable buffers for the workspace-reuse round path
 /// ([`ComputeEngine::round_into`]): once warmed to a (J, n) shape the
 /// steady-state epoch loop performs no heap allocations.
 #[derive(Debug, Default, Clone)]
 pub struct RoundWorkspace {
-    /// One n-length scratch per partition (eq. (6) direction buffer).
+    /// One n-length scratch per partition (eq. (6) direction buffer);
+    /// batched rounds use J*k of these, chunked k per partition.
     pub scratch: Vec<Vec<f32>>,
     /// n-length f64 accumulator for the eq. (7) reduction.
     pub acc: Vec<f64>,
+    /// Per-partition n-length f64 row-widening buffers for the batched
+    /// multi-RHS update ([`ComputeEngine::round_batch_into`]).
+    pub wide: Vec<Vec<f64>>,
 }
 
 impl RoundWorkspace {
@@ -70,6 +110,20 @@ impl RoundWorkspace {
         }
         if self.acc.len() < n {
             self.acc.resize(n, 0.0);
+        }
+    }
+
+    /// Grow to fit a (J, k, n) batched round: J*k direction buffers plus
+    /// one row-widening buffer per partition.
+    pub fn ensure_batch(&mut self, j: usize, k: usize, n: usize) {
+        self.ensure(j * k, n);
+        if self.wide.len() < j {
+            self.wide.resize_with(j, Vec::new);
+        }
+        for w in &mut self.wide[..j] {
+            if w.len() != n {
+                w.resize(n, 0.0);
+            }
         }
     }
 }
@@ -97,9 +151,10 @@ pub(crate) fn update_kernel(
 /// Eq. (7) over the index range `[lo, lo + out.len())`: sweeps each `x_j`
 /// contiguously (cache-friendly) instead of walking all J vectors per
 /// index.  Summation order over j is fixed, so chunking the range across
-/// threads cannot change a single output bit.
-pub(crate) fn average_chunk_kernel(
-    xs: &[Vec<f32>],
+/// threads cannot change a single output bit.  Generic over the estimate
+/// container so batched rounds can pass per-column `&[f32]` views.
+pub(crate) fn average_chunk_kernel<S: AsRef<[f32]>>(
+    xs: &[S],
     xbar: &[f32],
     eta: f32,
     lo: usize,
@@ -113,6 +168,7 @@ pub(crate) fn average_chunk_kernel(
         *a = 0.0;
     }
     for x in xs {
+        let x = x.as_ref();
         for (a, &v) in acc.iter_mut().zip(&x[lo..lo + len]) {
             *a += v as f64;
         }
@@ -120,6 +176,45 @@ pub(crate) fn average_chunk_kernel(
     for ((o, &a), &xb) in out.iter_mut().zip(acc.iter()).zip(&xbar[lo..lo + len])
     {
         *o = (eta * (a / j) + (1.0 - eta) * xb as f64) as f32;
+    }
+}
+
+/// Eq. (6) for ONE partition over the k right-hand-side columns of a
+/// batched session solve, column-blocked: each projector row is widened
+/// to f64 once and reused for all k [`blas::dot_wide`] products, so the
+/// O(n^2) projector sweep (memory traffic + f32->f64 widening) is paid
+/// once per batch instead of once per column.  Per column the arithmetic
+/// is exactly [`update_kernel`]'s (`dot`'s 4-way f64 split in the same
+/// order), so a batch of k is bit-identical to k sequential updates —
+/// which is also why this must NOT call `blas::gemm`: the packed
+/// microkernel accumulates in f32 and would break that equality.
+///
+/// `xs`/`xbars`/`scratch`/`out` hold k n-length columns; `wide` is one
+/// n-length f64 buffer.
+pub(crate) fn update_batch_kernel(
+    xs: &[Vec<f32>],
+    xbars: &[Vec<f32>],
+    p: &Matrix,
+    gamma: f32,
+    wide: &mut [f64],
+    scratch: &mut [Vec<f32>],
+    out: &mut [Vec<f32>],
+) {
+    for ((s, xbar), x) in scratch.iter_mut().zip(xbars).zip(xs) {
+        for ((d, &xb), &xi) in s.iter_mut().zip(xbar.iter()).zip(x.iter()) {
+            *d = xb - xi;
+        }
+    }
+    for i in 0..p.rows() {
+        blas::widen(p.row(i), wide);
+        for (o, s) in out.iter_mut().zip(scratch.iter()) {
+            o[i] = blas::dot_wide(wide, s) as f32;
+        }
+    }
+    for (o, x) in out.iter_mut().zip(xs) {
+        for (oi, &xi) in o.iter_mut().zip(x.iter()) {
+            *oi = xi + gamma * *oi;
+        }
     }
 }
 
@@ -137,6 +232,41 @@ pub trait ComputeEngine {
         b: &[f32],
         n_target: usize,
     ) -> Result<WorkerInit>;
+
+    /// The RHS-independent half of [`Self::init`]: factorize one
+    /// partition and return the retained state a warm solver session
+    /// re-seeds from.  Engines whose init is an opaque fused artifact
+    /// (XLA) keep the default and report that sessions are unsupported.
+    fn factorize(
+        &self,
+        _kind: InitKind,
+        _a: &Matrix,
+        _n_target: usize,
+    ) -> Result<WorkerFactorization> {
+        Err(DapcError::Artifact(format!(
+            "engine {:?} does not retain factorizations; warm solver \
+             sessions need the native or parallel engine",
+            self.name()
+        )))
+    }
+
+    /// The per-RHS half of [`Self::init`]: seed `x_j(0)` for a fresh `b`
+    /// through a retained factorization — bit-identical to the matching
+    /// cold init, at O(l n + n^2) instead of O(l n^2).  `a` is the same
+    /// block the factorization was built from (the classical path reads
+    /// it for `A^T b`).
+    fn seed(
+        &self,
+        _seed: &SeedFactors,
+        _a: &Matrix,
+        _b: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(DapcError::Artifact(format!(
+            "engine {:?} does not retain factorizations; warm solver \
+             sessions need the native or parallel engine",
+            self.name()
+        )))
+    }
 
     /// Eq. (6) for one partition: `x + gamma * P (xbar - x)`.
     fn update(
@@ -225,6 +355,87 @@ pub trait ComputeEngine {
         }
         out_xbar.copy_from_slice(&new_xbar);
         let _ = ws;
+        Ok(())
+    }
+
+    /// Eq. (6) over the k columns of a batched session solve for one
+    /// partition (allocating variant, used by cluster workers).  Runs the
+    /// shared column-blocked kernel: per column bit-identical to
+    /// [`Self::update`], with the projector row widened once per batch.
+    fn update_batch(
+        &self,
+        xs: &[Vec<f32>],
+        xbars: &[Vec<f32>],
+        p: &Matrix,
+        gamma: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        if xs.len() != xbars.len() {
+            return Err(DapcError::Shape(format!(
+                "update_batch got {} estimates for {} averages",
+                xs.len(),
+                xbars.len()
+            )));
+        }
+        let n = p.rows();
+        for (x, xbar) in xs.iter().zip(xbars) {
+            check_update_shapes(x, xbar, p, n, n)?;
+        }
+        let k = xs.len();
+        let mut wide = vec![0.0f64; n];
+        let mut scratch = vec![vec![0.0f32; n]; k];
+        let mut out = vec![vec![0.0f32; n]; k];
+        update_batch_kernel(
+            xs,
+            xbars,
+            p,
+            gamma,
+            &mut wide,
+            &mut scratch,
+            &mut out,
+        );
+        Ok(out)
+    }
+
+    /// One fused epoch over all partitions AND all k RHS columns of a
+    /// batched session solve: eq. (6) per (partition, column) through the
+    /// column-blocked batched kernel, then eq. (7) independently per
+    /// column.  `xs`/`out_xs` are indexed `[partition][column]`,
+    /// `xbars`/`out_xbars` `[column]`.  Column for column this performs
+    /// exactly the arithmetic of [`Self::round_into`], so batched solves
+    /// stay bit-identical to sequential ones on every engine.
+    fn round_batch_into(
+        &self,
+        xs: &[Vec<Vec<f32>>],
+        xbars: &[Vec<f32>],
+        ps: &[Matrix],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<Vec<f32>>],
+        out_xbars: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let (j, k, n) =
+            check_round_batch_shapes(xs, xbars, ps, out_xs, out_xbars)?;
+        ws.ensure_batch(j, k, n);
+        for (i, (x, out)) in xs.iter().zip(out_xs.iter_mut()).enumerate() {
+            update_batch_kernel(
+                x,
+                xbars,
+                &ps[i],
+                gamma,
+                &mut ws.wide[i],
+                &mut ws.scratch[i * k..(i + 1) * k],
+                out,
+            );
+        }
+        let mut cols: Vec<&[f32]> = Vec::with_capacity(j);
+        for (c, (xbar, out_xbar)) in
+            xbars.iter().zip(out_xbars.iter_mut()).enumerate()
+        {
+            cols.clear();
+            cols.extend(out_xs.iter().map(|xj| xj[c].as_slice()));
+            average_chunk_kernel(&cols, xbar, eta, 0, &mut ws.acc[..n], out_xbar);
+        }
         Ok(())
     }
 
@@ -321,6 +532,20 @@ impl ComputeEngine for NativeEngine {
         b: &[f32],
         n_target: usize,
     ) -> Result<WorkerInit> {
+        // factorize + seed IS the cold init: warm sessions re-running
+        // `seed` on a retained factorization are bit-identical to a cold
+        // solve by construction, not by coincidence.
+        let fac = self.factorize(kind, a, n_target)?;
+        let x0 = self.seed(&fac.seed, a, b)?;
+        Ok(WorkerInit { x0, projector: fac.projector })
+    }
+
+    fn factorize(
+        &self,
+        kind: InitKind,
+        a: &Matrix,
+        n_target: usize,
+    ) -> Result<WorkerFactorization> {
         let n = a.cols();
         if n != n_target {
             return Err(DapcError::Shape(format!(
@@ -329,11 +554,9 @@ impl ComputeEngine for NativeEngine {
         }
         match kind {
             InitKind::Qr => {
-                // Paper eqs. (1)-(4): A = Q1 R, x0 = R^{-1} Q1^T b by
-                // backward substitution, P = I - Q1^T Q1.
+                // Paper eqs. (1)-(4): A = Q1 R, P = I - Q1^T Q1; the QR
+                // factors are retained for per-RHS seeding.
                 let f = qr::householder_qr(a);
-                let c = qr::qt_mul(&f, b);
-                let x0 = triangular::back_substitute(&f.r, &c);
                 let qtq = blas::gemm_tn(&f.q1, &f.q1);
                 let mut p = Matrix::eye(n);
                 for i in 0..n {
@@ -341,23 +564,27 @@ impl ComputeEngine for NativeEngine {
                         p[(i, j)] -= qtq[(i, j)];
                     }
                 }
-                Ok(WorkerInit { x0, projector: p })
+                Ok(WorkerFactorization {
+                    projector: p,
+                    seed: SeedFactors::Qr(f),
+                })
             }
             InitKind::Classical => {
-                // x0 = (A^T A)^{-1} A^T b ; P = I - G^{-1} G (numeric),
-                // in f64 like the paper's NumPy baseline — the normal
-                // equations square kappa(A), which in f32 makes the
-                // projector noise large enough to diverge (DESIGN.md §1).
-                let (x0, p) = inverse::classical_init_f64(a, b)?;
-                Ok(WorkerInit { x0, projector: p })
+                // G^{-1} and P = I - G^{-1} G (numeric), in f64 like the
+                // paper's NumPy baseline — the normal equations square
+                // kappa(A), which in f32 makes the projector noise large
+                // enough to diverge (DESIGN.md §1).
+                let (ginv, p) = inverse::classical_factorize_f64(a)?;
+                Ok(WorkerFactorization {
+                    projector: p,
+                    seed: SeedFactors::Classical { ginv },
+                })
             }
             InitKind::Fat => {
-                // A^T = Q R; x0 = Q R^{-T} b; P = I - Q Q^T.
+                // A^T = Q R; P = I - Q Q^T; Q and R^T are retained.
                 let at = a.transpose();
                 let f = qr::householder_qr(&at);
-                let c = triangular::forward_substitute(&f.r.transpose(), b);
-                let mut x0 = vec![0.0f32; n];
-                blas::gemv(&f.q1, &c, &mut x0);
+                let rt = f.r.transpose();
                 let qqt = blas::gemm(&f.q1, &f.q1.transpose());
                 let mut p = Matrix::eye(n);
                 for i in 0..n {
@@ -365,7 +592,49 @@ impl ComputeEngine for NativeEngine {
                         p[(i, j)] -= qqt[(i, j)];
                     }
                 }
-                Ok(WorkerInit { x0, projector: p })
+                Ok(WorkerFactorization {
+                    projector: p,
+                    seed: SeedFactors::Fat { q1: f.q1, rt },
+                })
+            }
+        }
+    }
+
+    fn seed(
+        &self,
+        seed: &SeedFactors,
+        a: &Matrix,
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        match seed {
+            SeedFactors::Qr(f) => {
+                if b.len() != f.q1.rows() {
+                    return Err(DapcError::Shape(format!(
+                        "seed rhs length {} != block rows {}",
+                        b.len(),
+                        f.q1.rows()
+                    )));
+                }
+                // x0 = R^{-1} Q1^T b (eqs. (2)-(3))
+                let c = qr::qt_mul(f, b);
+                Ok(triangular::back_substitute(&f.r, &c))
+            }
+            SeedFactors::Classical { ginv } => {
+                inverse::classical_seed_f64(a, ginv, b)
+            }
+            SeedFactors::Fat { q1, rt } => {
+                if b.len() != rt.rows() {
+                    return Err(DapcError::Shape(format!(
+                        "seed rhs length {} != block rows {}",
+                        b.len(),
+                        rt.rows()
+                    )));
+                }
+                // x0 = Q (R^T)^{-1} b
+                let c = triangular::forward_substitute(rt, b);
+                let mut x0 = vec![0.0f32; q1.rows()];
+                blas::gemv(q1, &c, &mut x0);
+                Ok(x0)
             }
         }
     }
@@ -527,8 +796,8 @@ pub(crate) fn check_update_shapes(
 }
 
 /// Shared shape validation for the average paths (native + parallel).
-pub(crate) fn check_average_shapes(
-    xs: &[Vec<f32>],
+pub(crate) fn check_average_shapes<S: AsRef<[f32]>>(
+    xs: &[S],
     n: usize,
     acc_len: usize,
     out_len: usize,
@@ -542,13 +811,85 @@ pub(crate) fn check_average_shapes(
              incompatible with n = {n}"
         )));
     }
-    if let Some(bad) = xs.iter().find(|x| x.len() < n) {
+    if let Some(bad) = xs.iter().find(|x| x.as_ref().len() < n) {
         return Err(DapcError::Shape(format!(
             "estimate length {} < n = {n}",
-            bad.len()
+            bad.as_ref().len()
         )));
     }
     Ok(())
+}
+
+/// Shared shape validation for the batched round paths; returns
+/// `(J, k, n)` on success.
+pub(crate) fn check_round_batch_shapes(
+    xs: &[Vec<Vec<f32>>],
+    xbars: &[Vec<f32>],
+    ps: &[Matrix],
+    out_xs: &[Vec<Vec<f32>>],
+    out_xbars: &[Vec<f32>],
+) -> Result<(usize, usize, usize)> {
+    let j = xs.len();
+    if j == 0 {
+        return Err(DapcError::Shape(
+            "batched round over zero partitions".into(),
+        ));
+    }
+    let k = xbars.len();
+    if k == 0 {
+        return Err(DapcError::Shape(
+            "batched round over zero rhs columns".into(),
+        ));
+    }
+    let n = xbars[0].len();
+    if ps.len() != j || out_xs.len() != j {
+        return Err(DapcError::Shape(format!(
+            "batched round over {j} partitions got {} projectors / {} \
+             outputs",
+            ps.len(),
+            out_xs.len()
+        )));
+    }
+    if out_xbars.len() != k {
+        return Err(DapcError::Shape(format!(
+            "batched round over {k} columns got {} output averages",
+            out_xbars.len()
+        )));
+    }
+    for v in xbars.iter().chain(out_xbars.iter()) {
+        if v.len() != n {
+            return Err(DapcError::Shape(format!(
+                "batched round average length {} != n = {n}",
+                v.len()
+            )));
+        }
+    }
+    for (x, o) in xs.iter().zip(out_xs) {
+        if x.len() != k || o.len() != k {
+            return Err(DapcError::Shape(format!(
+                "batched round estimate widths ({}, {}) != k = {k}",
+                x.len(),
+                o.len()
+            )));
+        }
+        for col in x.iter().chain(o.iter()) {
+            if col.len() != n {
+                return Err(DapcError::Shape(format!(
+                    "batched round estimate length {} != n = {n}",
+                    col.len()
+                )));
+            }
+        }
+    }
+    for p in ps {
+        if p.shape() != (n, n) {
+            return Err(DapcError::Shape(format!(
+                "projector shape {:?} != ({n}, {n})",
+                p.shape()
+            )));
+        }
+    }
+    Ok((j, k, n))
 }
 
 /// Shared shape validation for the round paths (native + parallel).
@@ -1043,6 +1384,133 @@ mod tests {
             let single = e.init(InitKind::Qr, a, b, 8).unwrap();
             assert_eq!(w.x0, single.x0);
         }
+    }
+
+    #[test]
+    fn factorize_then_seed_bitwise_matches_cold_init() {
+        let e = NativeEngine::new();
+        // tall QR + classical, and a genuine fat block
+        for (kind, l, n) in [
+            (InitKind::Qr, 48usize, 16usize),
+            (InitKind::Classical, 48, 16),
+            (InitKind::Fat, 8, 24),
+        ] {
+            let (a, b, _) = consistent(l, n, 60 + l as u64);
+            let cold = e.init(kind, &a, &b, n).unwrap();
+            let fac = e.factorize(kind, &a, n).unwrap();
+            assert_eq!(
+                cold.projector.as_slice(),
+                fac.projector.as_slice(),
+                "{kind:?}"
+            );
+            // seeding the SAME factorization with several rhs must match
+            // a cold init for each — the warm-session contract
+            for seed_idx in 0..3u64 {
+                let mut g = seeded(500 + seed_idx);
+                let b2: Vec<f32> = (0..l).map(|_| g.normal_f32()).collect();
+                let warm = e.seed(&fac.seed, &a, &b2).unwrap();
+                let cold2 = e.init(kind, &a, &b2, n).unwrap();
+                assert_eq!(warm, cold2.x0, "{kind:?} seed {seed_idx}");
+            }
+            // wrong rhs length is an error, not UB
+            assert!(e.seed(&fac.seed, &a, &b[..l - 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn update_batch_bitwise_matches_sequential_updates() {
+        let e = NativeEngine::new();
+        let mut g = seeded(88);
+        let (n, k) = (23usize, 5usize);
+        let p = randm(n, n, 888);
+        let xs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbars: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let batch = e.update_batch(&xs, &xbars, &p, 0.8).unwrap();
+        for c in 0..k {
+            let single = e.update(&xs[c], &xbars[c], &p, 0.8).unwrap();
+            assert_eq!(batch[c], single, "column {c}");
+        }
+        // mismatched widths rejected
+        assert!(e.update_batch(&xs, &xbars[..k - 1], &p, 0.8).is_err());
+    }
+
+    #[test]
+    fn round_batch_bitwise_matches_per_column_rounds() {
+        let e = NativeEngine::new();
+        let mut g = seeded(91);
+        let (j, k, n) = (3usize, 4usize, 17usize);
+        let ps: Vec<Matrix> = (0..j).map(|i| randm(n, n, 700 + i as u64)).collect();
+        // xs[partition][column]
+        let xs: Vec<Vec<Vec<f32>>> = (0..j)
+            .map(|_| {
+                (0..k)
+                    .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+                    .collect()
+            })
+            .collect();
+        let xbars: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+
+        let mut ws = RoundWorkspace::default();
+        let mut out_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+        let mut out_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+        e.round_batch_into(
+            &xs, &xbars, &ps, 0.7, 0.6, &mut ws, &mut out_xs, &mut out_xbars,
+        )
+        .unwrap();
+
+        for c in 0..k {
+            // column c in isolation through the single-RHS round path
+            let col_xs: Vec<Vec<f32>> =
+                (0..j).map(|i| xs[i][c].clone()).collect();
+            let (want_xs, want_xbar) =
+                e.round(&col_xs, &xbars[c], &ps, 0.7, 0.6).unwrap();
+            for i in 0..j {
+                assert_eq!(out_xs[i][c], want_xs[i], "j={i} c={c}");
+            }
+            assert_eq!(out_xbars[c], want_xbar, "c={c}");
+        }
+    }
+
+    #[test]
+    fn bad_round_batch_shapes_rejected() {
+        let e = NativeEngine::new();
+        let xs = vec![vec![vec![0.0f32; 4]]];
+        let xbars = vec![vec![0.0f32; 4]];
+        let ps = vec![Matrix::eye(3)]; // wrong projector shape
+        let mut ws = RoundWorkspace::default();
+        let mut out_xs = vec![vec![vec![0.0f32; 4]]];
+        let mut out_xbars = vec![vec![0.0f32; 4]];
+        assert!(e
+            .round_batch_into(
+                &xs,
+                &xbars,
+                &ps,
+                0.5,
+                0.5,
+                &mut ws,
+                &mut out_xs,
+                &mut out_xbars
+            )
+            .is_err());
+        // zero columns
+        assert!(e
+            .round_batch_into(
+                &xs,
+                &[],
+                &ps,
+                0.5,
+                0.5,
+                &mut ws,
+                &mut [],
+                &mut []
+            )
+            .is_err());
     }
 
     #[test]

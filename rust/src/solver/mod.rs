@@ -32,12 +32,13 @@ mod report;
 pub use consensus::{ApcClassicalSolver, ApcVariant, DapcSolver};
 pub use dgd::DgdSolver;
 pub use driver::{
-    auto_dgd_step, drive_apc, drive_dgd, ConsensusBackend, InProcessBackend,
-    RoundOutcome,
+    auto_dgd_step, drive_apc, drive_apc_epochs_multi, drive_dgd,
+    drive_dgd_epochs_multi, init_kind_for, ConsensusBackend,
+    InProcessBackend, RoundOutcome, SessionBackend,
 };
 pub use engine::{
-    ComputeEngine, InitKind, NativeEngine, RoundWorkspace, WorkerInit,
-    XlaEngine,
+    ComputeEngine, InitKind, NativeEngine, RoundWorkspace, SeedFactors,
+    WorkerFactorization, WorkerInit, XlaEngine,
 };
 pub use report::{residual_norm, SolveOptions, SolveReport};
 

@@ -1,8 +1,11 @@
 //! MatrixMarket (.mtx) reader/writer.
 //!
 //! Supports the subset the SuiteSparse `c-*` datasets use: `matrix
-//! coordinate real {general|symmetric}` plus `array` format for dense
-//! vectors (the paper reads both `A` and `b` with `scipy.io.mmread`).
+//! coordinate {real|integer|pattern} {general|symmetric}` plus `array`
+//! format for dense vectors (the paper reads both `A` and `b` with
+//! `scipy.io.mmread`).  The data-type token is validated explicitly:
+//! `complex` and unknown types are rejected with a clear parse error
+//! instead of being silently read as real.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -15,6 +18,7 @@ use super::{CooMatrix, CsrMatrix};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MmHeader {
     pub format: MmFormat,
+    pub field: MmField,
     pub symmetric: bool,
 }
 
@@ -22,6 +26,18 @@ pub struct MmHeader {
 pub enum MmFormat {
     Coordinate,
     Array,
+}
+
+/// Data type of the stored values.  Validated explicitly: `complex` and
+/// unknown tokens are rejected up front instead of being silently read
+/// as real data (which would mis-parse every entry line after it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmField {
+    Real,
+    Integer,
+    /// Structure-only matrices: entries are `row col` with an implicit
+    /// value of 1.0.
+    Pattern,
 }
 
 fn parse_header(line: &str) -> Result<MmHeader> {
@@ -41,13 +57,30 @@ fn parse_header(line: &str) -> Result<MmHeader> {
             )))
         }
     };
-    match toks[3] {
-        "real" | "integer" | "double" => {}
+    let field = match toks[3] {
+        // "double" is a long-accepted alias for real in the wild (and in
+        // this reader's previous versions) — keep reading it
+        "real" | "double" => MmField::Real,
+        "integer" => MmField::Integer,
+        "pattern" => MmField::Pattern,
+        "complex" => {
+            return Err(DapcError::Parse(
+                "complex MatrixMarket matrices are not supported (the \
+                 solver is real-valued; expected real, integer or pattern)"
+                    .into(),
+            ))
+        }
         other => {
             return Err(DapcError::Parse(format!(
-                "unsupported MatrixMarket field {other:?}"
+                "unknown MatrixMarket data type {other:?} (expected real, \
+                 integer or pattern)"
             )))
         }
+    };
+    if format == MmFormat::Array && field == MmField::Pattern {
+        return Err(DapcError::Parse(
+            "pattern is only valid for coordinate format".into(),
+        ));
     }
     let symmetric = match toks.get(4).copied().unwrap_or("general") {
         "general" => false,
@@ -58,7 +91,7 @@ fn parse_header(line: &str) -> Result<MmHeader> {
             )))
         }
     };
-    Ok(MmHeader { format, symmetric })
+    Ok(MmHeader { format, field, symmetric })
 }
 
 /// Read a sparse matrix from a MatrixMarket file.
@@ -103,10 +136,18 @@ pub fn read_matrix_from<R: BufRead>(reader: R) -> Result<CsrMatrix> {
                 }
                 let r: usize = t[0].parse().map_err(|_| bad_num(t[0]))?;
                 let c: usize = t[1].parse().map_err(|_| bad_num(t[1]))?;
-                let v: f32 = if t.len() > 2 {
-                    t[2].parse().map_err(|_| bad_num(t[2]))?
-                } else {
-                    1.0 // pattern matrices
+                let v: f32 = match header.field {
+                    // pattern entries carry no value token
+                    MmField::Pattern => 1.0,
+                    MmField::Real | MmField::Integer => {
+                        if t.len() < 3 {
+                            return Err(DapcError::Parse(format!(
+                                "missing value in {:?} entry: {line:?}",
+                                header.field
+                            )));
+                        }
+                        t[2].parse().map_err(|_| bad_num(t[2]))?
+                    }
                 };
                 if r == 0 || c == 0 {
                     return Err(DapcError::Parse(
@@ -250,6 +291,57 @@ mod tests {
         assert_eq!(m.get(1, 0), 2.0);
         assert_eq!(m.get(0, 1), 3.0);
         assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn parse_pattern_entries_without_values() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    3 3 2\n\
+                    1 1\n\
+                    3 2\n";
+        let m = read_matrix_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(2, 1), 1.0);
+        assert_eq!(m.nnz(), 2);
+        // integer data parses as real values
+        let ints = "%%MatrixMarket matrix coordinate integer general\n\
+                    2 2 1\n\
+                    1 2 5\n";
+        let m = read_matrix_from(Cursor::new(ints)).unwrap();
+        assert_eq!(m.get(0, 1), 5.0);
+        // the legacy "double" alias keeps parsing as real
+        let dbl = "%%MatrixMarket matrix coordinate double general\n\
+                   1 1 1\n\
+                   1 1 2.5\n";
+        let m = read_matrix_from(Cursor::new(dbl)).unwrap();
+        assert_eq!(m.get(0, 0), 2.5);
+    }
+
+    #[test]
+    fn data_type_token_validated_explicitly() {
+        // complex: clear, dedicated rejection
+        let err = read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2 3\n",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("complex"), "{err}");
+        // unknown type: no silent fall-through to real
+        let err = read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate quaternion general\n1 1 0\n",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown MatrixMarket"), "{err}");
+        // real entry MISSING its value is now an error, not a silent 1.0
+        let err = read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2\n",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("missing value"), "{err}");
+        // pattern arrays are contradictory
+        assert!(read_matrix_from(Cursor::new(
+            "%%MatrixMarket matrix array pattern general\n1 1\n"
+        ))
+        .is_err());
     }
 
     #[test]

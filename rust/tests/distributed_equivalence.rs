@@ -11,9 +11,10 @@
 use dapc::coordinator::LocalCluster;
 use dapc::linalg::Matrix;
 use dapc::rng::seeded;
+use dapc::service::{SessionAlgorithm, SolverSession};
 use dapc::solver::{
     drive_apc, drive_dgd, ApcVariant, InProcessBackend, NativeEngine,
-    SolveOptions, SolveReport,
+    SessionBackend, SolveOptions, SolveReport,
 };
 use dapc::sparse::CsrMatrix;
 
@@ -157,6 +158,221 @@ fn traces_match_point_for_point() {
     let lt = local.trace.expect("local trace");
     let dt = dist.trace.expect("cluster trace");
     assert_eq!(lt.points, dt.points);
+}
+
+// ---------------------------------------------------------------------------
+// Warm-session suite: a session solve must be assert_eq!-bit-identical
+// to a cold one-shot solve, and a batch of k to k sequential solves, on
+// BOTH backends.  Seeding re-runs the cold init's exact arithmetic over
+// the retained factorization, and the batched kernel keeps `dot`'s f64
+// accumulation order per column — these tests lock that contract in.
+// ---------------------------------------------------------------------------
+
+/// Generate `k` distinct consistent right-hand sides for `a`.
+fn rhs_stream(a: &CsrMatrix, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|i| {
+            let mut g = seeded(seed + i as u64);
+            let x: Vec<f32> =
+                (0..a.cols()).map(|_| g.normal_f32()).collect();
+            let mut b = vec![0.0f32; a.rows()];
+            a.spmv_into(&x, &mut b);
+            b
+        })
+        .collect()
+}
+
+fn warm_session_solves<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    algo: SessionAlgorithm,
+    opts: &SolveOptions,
+    bs: &[Vec<f32>],
+) -> Vec<SolveReport> {
+    let mut session =
+        SolverSession::register(backend, a.clone(), algo, opts.clone())
+            .expect("register");
+    bs.iter().map(|b| session.solve(b).expect("warm solve")).collect()
+}
+
+fn warm_session_batch<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    a: &CsrMatrix,
+    algo: SessionAlgorithm,
+    opts: &SolveOptions,
+    bs: &[Vec<f32>],
+) -> Vec<SolveReport> {
+    let mut session =
+        SolverSession::register(backend, a.clone(), algo, opts.clone())
+            .expect("register");
+    session.solve_batch(bs).expect("batched solve")
+}
+
+fn assert_warm_session_equivalent(
+    m: usize,
+    n: usize,
+    j: usize,
+    seed: u64,
+    variant: ApcVariant,
+) {
+    let (a, _) = consistent_system(m, n, seed);
+    let bs = rhs_stream(&a, 3, seed * 100);
+    let algo = SessionAlgorithm::Apc(variant);
+    let opts = SolveOptions { epochs: 20, ..Default::default() };
+    let engine = NativeEngine::new();
+
+    // cold one-shot reference per rhs (in-process backend)
+    let colds: Vec<SolveReport> = bs
+        .iter()
+        .map(|b| {
+            let mut backend = InProcessBackend::new(&engine, j);
+            drive_apc(&mut backend, &a, b, variant, &opts).expect("cold")
+        })
+        .collect();
+
+    // warm in-process session: stream the three rhs
+    let mut backend = InProcessBackend::new(&engine, j);
+    let warms = warm_session_solves(&mut backend, &a, algo, &opts, &bs);
+    for (cold, warm) in colds.iter().zip(&warms) {
+        assert_eq!(warm.xbar, cold.xbar, "{m}x{n} J={j} {variant:?} warm");
+        assert_eq!(warm.residual, cold.residual);
+    }
+
+    // warm cluster session over local channel workers
+    let mut cluster = LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    let dist_warms = warm_session_solves(
+        cluster.leader.backend_mut(),
+        &a,
+        algo,
+        &opts,
+        &bs,
+    );
+    for (cold, warm) in colds.iter().zip(&dist_warms) {
+        assert_eq!(
+            warm.xbar, cold.xbar,
+            "{m}x{n} J={j} {variant:?} cluster warm"
+        );
+        assert_eq!(warm.residual, cold.residual);
+    }
+
+    // one k=3 batch vs the 3 sequential solves, both backends
+    let mut backend = InProcessBackend::new(&engine, j);
+    let batch = warm_session_batch(&mut backend, &a, algo, &opts, &bs);
+    let mut cluster2 =
+        LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    let dist_batch = warm_session_batch(
+        cluster2.leader.backend_mut(),
+        &a,
+        algo,
+        &opts,
+        &bs,
+    );
+    for c in 0..bs.len() {
+        assert_eq!(
+            batch[c].xbar, colds[c].xbar,
+            "{m}x{n} J={j} {variant:?} batch col {c}"
+        );
+        assert_eq!(
+            dist_batch[c].xbar, colds[c].xbar,
+            "{m}x{n} J={j} {variant:?} cluster batch col {c}"
+        );
+        assert_eq!(batch[c].residual, colds[c].residual);
+        assert_eq!(dist_batch[c].residual, colds[c].residual);
+    }
+}
+
+#[test]
+fn warm_session_apc_decomposed_bit_identical_to_cold() {
+    assert_warm_session_equivalent(96, 10, 3, 41, ApcVariant::Decomposed);
+    // ragged split
+    assert_warm_session_equivalent(103, 10, 4, 42, ApcVariant::Decomposed);
+}
+
+#[test]
+fn warm_session_apc_classical_bit_identical_to_cold() {
+    assert_warm_session_equivalent(96, 10, 3, 43, ApcVariant::Classical);
+}
+
+#[test]
+fn warm_session_fat_regime_bit_identical_to_cold() {
+    // 15-row blocks < n = 32: genuine projectors, the batched consensus
+    // loop does real work
+    assert_warm_session_equivalent(60, 32, 4, 44, ApcVariant::Decomposed);
+}
+
+#[test]
+fn warm_session_dgd_bit_identical_to_cold() {
+    let (a, _) = consistent_system(96, 10, 45);
+    let bs = rhs_stream(&a, 3, 4500);
+    let opts = SolveOptions {
+        epochs: 30,
+        dgd_step: 0.0, // auto step, resolved identically on both paths
+        ..Default::default()
+    };
+    let engine = NativeEngine::new();
+    let j = 3;
+
+    let colds: Vec<SolveReport> = bs
+        .iter()
+        .map(|b| {
+            let mut backend = InProcessBackend::new(&engine, j);
+            drive_dgd(&mut backend, &a, b, &opts).expect("cold dgd")
+        })
+        .collect();
+
+    let mut backend = InProcessBackend::new(&engine, j);
+    let warms = warm_session_solves(
+        &mut backend,
+        &a,
+        SessionAlgorithm::Dgd,
+        &opts,
+        &bs,
+    );
+    let mut cluster = LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    let dist_warms = warm_session_solves(
+        cluster.leader.backend_mut(),
+        &a,
+        SessionAlgorithm::Dgd,
+        &opts,
+        &bs,
+    );
+    let mut backend2 = InProcessBackend::new(&engine, j);
+    let batch = warm_session_batch(
+        &mut backend2,
+        &a,
+        SessionAlgorithm::Dgd,
+        &opts,
+        &bs,
+    );
+    for c in 0..bs.len() {
+        assert_eq!(warms[c].xbar, colds[c].xbar, "dgd warm col {c}");
+        assert_eq!(dist_warms[c].xbar, colds[c].xbar, "dgd cluster col {c}");
+        assert_eq!(batch[c].xbar, colds[c].xbar, "dgd batch col {c}");
+        assert_eq!(warms[c].residual, colds[c].residual);
+    }
+}
+
+#[test]
+fn warm_session_interleaved_stream_stays_stateless_per_rhs() {
+    // serving b0, b1, then b0 again must reproduce b0's first answer
+    // exactly: nothing of a previous solve may leak into the next seed
+    let (a, _) = consistent_system(96, 10, 46);
+    let bs = rhs_stream(&a, 2, 4600);
+    let opts = SolveOptions { epochs: 15, ..Default::default() };
+    let engine = NativeEngine::new();
+    let mut backend = InProcessBackend::new(&engine, 3);
+    let mut session = SolverSession::register(
+        &mut backend,
+        a.clone(),
+        SessionAlgorithm::Apc(ApcVariant::Decomposed),
+        opts,
+    )
+    .expect("register");
+    let first = session.solve(&bs[0]).expect("b0");
+    let _ = session.solve(&bs[1]).expect("b1");
+    let again = session.solve(&bs[0]).expect("b0 again");
+    assert_eq!(first.xbar, again.xbar);
+    assert_eq!(session.stats().rhs_served, 3);
 }
 
 #[test]
