@@ -134,8 +134,11 @@ fn handle<E: ComputeEngine>(
             *my_id = worker_id;
             match kind.engine_kind() {
                 Some(engine_kind) => {
-                    // factorize once; projector + seed state stay
-                    // resident for every rhs this session will stream
+                    // factorize once — the panel-blocked QR; a pooled
+                    // engine fans the trailing updates across its
+                    // threads, so a worker's cold registration scales
+                    // with --threads.  Projector + seed state stay
+                    // resident for every rhs this session will stream.
                     let fac =
                         engine.factorize(engine_kind, &a, n_target as usize)?;
                     *state = Some(WorkerState::registered(

@@ -54,9 +54,19 @@ pub fn std_dev(x: &[f32]) -> f64 {
         .sqrt()
 }
 
-/// Max absolute entry.
+/// Max absolute entry.  NaN entries propagate: `f32::max` silently
+/// discards NaN operands, so the old fold reported an all-NaN iterate as
+/// `max_abs == 0.0` — a poisoned solve would sail straight through every
+/// residual and convergence check instead of failing it loudly.
 pub fn max_abs(x: &[f32]) -> f32 {
-    x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+    let mut m = 0.0f32;
+    for &v in x {
+        if v.is_nan() {
+            return f32::NAN;
+        }
+        m = m.max(v.abs());
+    }
+    m
 }
 
 #[cfg(test)]
@@ -90,5 +100,17 @@ mod tests {
     fn max_abs_signs() {
         assert_eq!(max_abs(&[-3.0, 2.0, 1.0]), 3.0);
         assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_propagates_nan() {
+        // an all-NaN vector used to report 0.0 — "converged"
+        assert!(max_abs(&[f32::NAN, f32::NAN, f32::NAN]).is_nan());
+        // one poisoned entry is enough, wherever it sits
+        assert!(max_abs(&[1.0, f32::NAN, 3.0]).is_nan());
+        assert!(max_abs(&[f32::NAN, 1.0]).is_nan());
+        assert!(max_abs(&[1.0, f32::NAN]).is_nan());
+        // non-NaN specials are ordinary magnitudes
+        assert_eq!(max_abs(&[f32::NEG_INFINITY, 1.0]), f32::INFINITY);
     }
 }

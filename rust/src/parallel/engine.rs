@@ -9,8 +9,14 @@
 //! * eq. (7) averaging splits the index range into contiguous chunks;
 //!   within a chunk each output element still sums over partitions in
 //!   fixed order j = 0..J;
-//! * worker init (QR / Gram factorizations) is embarrassingly parallel
-//!   across partitions ([`ComputeEngine::init_all`]);
+//! * worker init / session registration (QR / Gram factorizations) is
+//!   embarrassingly parallel across partitions
+//!   ([`ComputeEngine::init_all`] / [`ComputeEngine::factorize_all`]);
+//!   when partitions are scarcer than pool workers, partitions run
+//!   sequentially and each panel-blocked QR instead fans its trailing
+//!   updates over the whole pool
+//!   ([`crate::linalg::qr::householder_qr_pooled`]) — both schedules are
+//!   bit-identical, so the choice is purely about utilization;
 //! * the DGD forward product `A x` is row-chunk parallel
 //!   ([`crate::linalg::blas::gemv_pooled`]); the transposed reduction
 //!   `A^T r` stays sequential because parallelizing it would reorder
@@ -27,9 +33,9 @@ use crate::linalg::{blas, Matrix};
 use crate::solver::engine::{
     average_chunk_kernel, check_average_shapes, check_dgd_shapes,
     check_round_batch_shapes, check_round_shapes, check_update_shapes,
-    update_batch_kernel, update_kernel, ComputeEngine, InitKind,
-    NativeEngine, RoundWorkspace, SeedFactors, WorkerFactorization,
-    WorkerInit,
+    factorize_kernel, update_batch_kernel, update_kernel, ComputeEngine,
+    InitKind, NativeEngine, RoundWorkspace, SeedFactors,
+    WorkerFactorization, WorkerInit,
 };
 
 use super::pool::ThreadPool;
@@ -60,6 +66,44 @@ impl ParallelEngine {
     /// The underlying pool, for sharing with other components.
     pub fn pool(&self) -> &Arc<ThreadPool> {
         &self.pool
+    }
+
+    /// Run `job(i)` for `i in 0..j` as one pool job each, collecting
+    /// results in order — the shared fan-out scaffolding behind
+    /// [`ComputeEngine::init_all`] and [`ComputeEngine::factorize_all`].
+    /// Jobs must not touch the pool themselves (nesting scopes on a
+    /// saturated pool would deadlock), which is why both callers hand
+    /// their job the *serial* inner engine.
+    fn fan_out<T: Send>(
+        &self,
+        j: usize,
+        job: impl Fn(usize) -> Result<T> + Sync,
+    ) -> Result<Vec<T>> {
+        let mut slots: Vec<Option<Result<T>>> = Vec::new();
+        slots.resize_with(j, || None);
+        let job = &job;
+        self.pool.scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                s.spawn(move || {
+                    *slot = Some(job(i));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|r| r.expect("pool job completed"))
+            .collect()
+    }
+
+    /// The hybrid init/registration schedule, in ONE place: with
+    /// partitions scarcer than workers AND a factorization that can use
+    /// the pool itself (the panel-blocked QR paths; Classical's Gram
+    /// route is serial inside), sequential partitions each fanning their
+    /// trailing updates over the whole pool beat partition-parallel jobs
+    /// that would idle `size - j` workers.  Every schedule is
+    /// bit-identical — this is purely a utilization choice.
+    fn whole_pool_per_factorization(&self, j: usize, kind: InitKind) -> bool {
+        j < self.pool.size() && kind != InitKind::Classical
     }
 
     /// Chunked-parallel eq. (7); shapes must be pre-validated.  Generic
@@ -109,7 +153,13 @@ impl ComputeEngine for ParallelEngine {
         b: &[f32],
         n_target: usize,
     ) -> Result<WorkerInit> {
-        self.inner.init(kind, a, b, n_target)
+        // pooled factorize + seed IS the cold init, mirroring
+        // NativeEngine::init: warm re-seeds stay bit-identical to cold
+        // solves by construction, and a lone leader-side init gets the
+        // panel-blocked QR's trailing-update parallelism
+        let fac = self.factorize(kind, a, n_target)?;
+        let x0 = self.inner.seed(&fac.seed, a, b)?;
+        Ok(WorkerInit { x0, projector: fac.projector })
     }
 
     fn init_all(
@@ -119,23 +169,21 @@ impl ComputeEngine for ParallelEngine {
         extract: &(dyn Fn(usize) -> (Matrix, Vec<f32>) + Sync),
         n_target: usize,
     ) -> Result<Vec<WorkerInit>> {
-        let mut slots: Vec<Option<Result<WorkerInit>>> = Vec::new();
-        slots.resize_with(j, || None);
-        let inner = &self.inner;
-        self.pool.scope(|s| {
-            for (i, slot) in slots.iter_mut().enumerate() {
-                s.spawn(move || {
-                    // densify inside the job too: at most `threads` dense
-                    // blocks are ever live at once
+        if self.whole_pool_per_factorization(j, kind) {
+            return (0..j)
+                .map(|i| {
                     let (a, b) = extract(i);
-                    *slot = Some(inner.init(kind, &a, &b, n_target));
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|r| r.expect("init job completed"))
-            .collect()
+                    self.init(kind, &a, &b, n_target)
+                })
+                .collect();
+        }
+        let inner = &self.inner;
+        self.fan_out(j, |i| {
+            // densify inside the job too: at most `threads` dense
+            // blocks are ever live at once
+            let (a, b) = extract(i);
+            inner.init(kind, &a, &b, n_target)
+        })
     }
 
     fn update(
@@ -266,9 +314,29 @@ impl ComputeEngine for ParallelEngine {
         a: &Matrix,
         n_target: usize,
     ) -> Result<WorkerFactorization> {
-        // factorization state is engine-independent; sessions built on
-        // the parallel engine still re-seed bit-identically
-        self.inner.factorize(kind, a, n_target)
+        // the shared kernel with pooled trailing updates — bit-identical
+        // to the native engine's serial run, so sessions re-seed
+        // identically no matter which engine (at which thread count)
+        // registered the matrix
+        factorize_kernel(kind, a, n_target, Some(&self.pool))
+    }
+
+    fn factorize_all(
+        &self,
+        kind: InitKind,
+        blocks: &[Matrix],
+        n_target: usize,
+    ) -> Result<Vec<WorkerFactorization>> {
+        if self.whole_pool_per_factorization(blocks.len(), kind) {
+            return blocks
+                .iter()
+                .map(|a| self.factorize(kind, a, n_target))
+                .collect();
+        }
+        let inner = &self.inner;
+        self.fan_out(blocks.len(), |i| {
+            inner.factorize(kind, &blocks[i], n_target)
+        })
     }
 
     fn seed(
@@ -476,7 +544,9 @@ mod tests {
     }
 
     #[test]
-    fn factorize_and_seed_delegate_to_native() {
+    fn factorize_and_seed_bitwise_match_native() {
+        // the pooled panel-blocked QR must reproduce the serial kernel
+        // exactly — the warm-session bit-identity contract across engines
         let native = NativeEngine::new();
         let par = ParallelEngine::new(2);
         let a = randm(24, 8, 41);
@@ -488,6 +558,39 @@ mod tests {
             native.seed(&nf.seed, &a, &b).unwrap(),
             par.seed(&pf.seed, &a, &b).unwrap()
         );
+    }
+
+    #[test]
+    fn factorize_all_bitwise_matches_native_at_any_partition_count() {
+        // j below the pool size takes the sequential-with-pooled-QR
+        // schedule, j above it the partition-parallel one; both must be
+        // bit-identical to the native engine
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(3);
+        for j in [1usize, 2, 5] {
+            let blocks: Vec<Matrix> =
+                (0..j).map(|i| randm(26, 7, 900 + i as u64)).collect();
+            let nf = native.factorize_all(InitKind::Qr, &blocks, 7).unwrap();
+            let pf = par.factorize_all(InitKind::Qr, &blocks, 7).unwrap();
+            assert_eq!(nf.len(), j);
+            for (i, (n, p)) in nf.iter().zip(&pf).enumerate() {
+                assert_eq!(
+                    n.projector.as_slice(),
+                    p.projector.as_slice(),
+                    "j={j} partition {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factorize_all_error_propagates() {
+        let par = ParallelEngine::new(2);
+        // n_target mismatch is a reported error on both schedules
+        let blocks: Vec<Matrix> =
+            (0..4).map(|i| randm(10, 4, 80 + i as u64)).collect();
+        assert!(par.factorize_all(InitKind::Qr, &blocks[..1], 5).is_err());
+        assert!(par.factorize_all(InitKind::Qr, &blocks, 5).is_err());
     }
 
     #[test]

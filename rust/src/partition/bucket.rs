@@ -64,6 +64,16 @@ pub fn pad_to_bucket(
 
 /// Choose the smallest bucket from `available` (sorted or not) that fits
 /// `(rows, n)`; returns `(l_pad, n_pad)`.
+///
+/// "Smallest" is the least padded *area* `l_pad * n_pad` — the size of
+/// the dense padded block, which governs its memory, packing and
+/// transfer cost and is the first-order proxy for the init work (exact
+/// QR flops are `area * n_pad`, so area slightly under-weights width;
+/// the bucket sets we ship are coarse enough that the orderings agree).
+/// The previous lexicographic `(n_pad, l_pad)` order could pick a
+/// narrow, very tall tower over a slightly wider bucket with far fewer
+/// padded rows, multiplying the padded QR work.  Ties break on
+/// `(n_pad, l_pad)` so equal-area choices stay deterministic.
 pub fn choose_bucket(
     rows: usize,
     n: usize,
@@ -75,7 +85,7 @@ pub fn choose_bucket(
         .filter(|&(l_pad, n_pad)| {
             n_pad >= n && l_pad >= rows + (n_pad - n)
         })
-        .min_by_key(|&(l_pad, n_pad)| (n_pad, l_pad))
+        .min_by_key(|&(l_pad, n_pad)| (l_pad * n_pad, n_pad, l_pad))
 }
 
 #[cfg(test)]
@@ -156,5 +166,25 @@ mod tests {
         // 63 rows, n=20: 63 + 12 = 75 > 64 -> next bucket
         assert_eq!(choose_bucket(63, 20, &avail), Some((256, 128)));
         assert_eq!(choose_bucket(1000, 20, &avail), None);
+    }
+
+    #[test]
+    fn choose_bucket_prefers_smaller_padded_area_over_narrower_width() {
+        // both buckets fit a 20x16 block.  The old lexicographic
+        // (n_pad, l_pad) order picked the narrow 4096x32 tower (area
+        // 131072 — 16x the padded QR work) purely because it is
+        // narrower; area selection takes 128x64 (area 8192).
+        let avail = [(4096, 32), (128, 64)];
+        assert_eq!(choose_bucket(20, 16, &avail), Some((128, 64)));
+        // when the narrower bucket is ALSO the smaller area it still wins
+        assert_eq!(
+            choose_bucket(20, 16, &[(64, 32), (128, 64)]),
+            Some((64, 32))
+        );
+        // equal areas: deterministic (n_pad, l_pad) tie-break
+        assert_eq!(
+            choose_bucket(20, 16, &[(128, 64), (256, 32)]),
+            Some((256, 32))
+        );
     }
 }

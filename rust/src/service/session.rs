@@ -2,7 +2,7 @@
 //! stream of right-hand sides (single or batched) over any
 //! [`SessionBackend`].
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{DapcError, Result};
 use crate::partition::PartitionPlan;
@@ -175,10 +175,12 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         let total = t0.elapsed();
         let iterate_time = total.saturating_sub(seed_time);
 
-        // amortized per-RHS timing view
-        let div = u32::try_from(k).unwrap_or(u32::MAX);
-        let per_init = seed_time / div;
-        let per_iter = iterate_time / div;
+        // amortized per-RHS timing view (f64 division: no clamping cast,
+        // same fix as ServiceStats::amortized_per_rhs)
+        let per_init =
+            Duration::from_secs_f64(seed_time.as_secs_f64() / k as f64);
+        let per_iter =
+            Duration::from_secs_f64(iterate_time.as_secs_f64() / k as f64);
 
         let mut reports = Vec::with_capacity(k);
         for (mut xbar, b) in xbars.drain(..).zip(bs) {

@@ -29,12 +29,18 @@ impl ServiceStats {
 
     /// Mean wall time per served right-hand side, or `None` before the
     /// first solve.
+    ///
+    /// Computed in f64 seconds: `Duration / u32` would force the u64
+    /// counter through a clamping cast, silently inflating the reported
+    /// mean once a long-lived session serves more than `u32::MAX`
+    /// right-hand sides.
     pub fn amortized_per_rhs(&self) -> Option<Duration> {
         if self.rhs_served == 0 {
             return None;
         }
-        let div = u32::try_from(self.rhs_served).unwrap_or(u32::MAX);
-        Some(self.solve_time / div)
+        Some(Duration::from_secs_f64(
+            self.solve_time.as_secs_f64() / self.rhs_served as f64,
+        ))
     }
 
     /// One summary line for logs: cold registration cost vs the
@@ -71,5 +77,22 @@ mod tests {
         assert_eq!(s.max_batch, 4);
         assert_eq!(s.amortized_per_rhs(), Some(Duration::from_millis(8)));
         assert!(s.summary().contains("2 solve calls / 5 rhs"));
+    }
+
+    #[test]
+    fn amortization_survives_counters_past_u32() {
+        // a long-lived session: 2^33 rhs served in 2^33 seconds is
+        // exactly 1s/rhs.  The old clamped `Duration / u32::MAX` divisor
+        // reported ~2s — off by rhs_served / u32::MAX — and the error
+        // grew without bound as the session kept serving.
+        let s = ServiceStats {
+            register_time: Duration::ZERO,
+            solve_calls: 1,
+            rhs_served: 1u64 << 33,
+            max_batch: 1,
+            solve_time: Duration::from_secs(1u64 << 33),
+        };
+        let per = s.amortized_per_rhs().unwrap().as_secs_f64();
+        assert!((per - 1.0).abs() < 1e-9, "amortized {per}s, want 1s");
     }
 }

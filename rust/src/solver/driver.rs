@@ -680,15 +680,21 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
             )));
         }
         let n = plan.n;
+        // densify every block up front (sessions retain them for seeding
+        // anyway), then factorize in ONE engine-level pass — partition-
+        // parallel on pooled engines, with the panel-blocked QR fanning
+        // trailing updates when partitions are scarcer than threads
+        let blocks: Vec<Matrix> = plan
+            .blocks
+            .iter()
+            .map(|blk| a.slice_rows_dense(blk.start, blk.end))
+            .collect();
+        let facs = self.engine.factorize_all(kind, &blocks, n)?;
         let mut ps = Vec::with_capacity(self.j);
         let mut seeds = Vec::with_capacity(self.j);
-        let mut blocks = Vec::with_capacity(self.j);
-        for blk in &plan.blocks {
-            let sub = a.slice_rows_dense(blk.start, blk.end);
-            let fac = self.engine.factorize(kind, &sub, n)?;
+        for fac in facs {
             ps.push(fac.projector);
             seeds.push(fac.seed);
-            blocks.push(sub);
         }
         self.ps = ps;
         self.seeds = seeds;

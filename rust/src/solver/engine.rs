@@ -8,6 +8,7 @@
 
 use crate::error::{DapcError, Result};
 use crate::linalg::{blas, inverse, qr, triangular, Matrix};
+use crate::parallel::ThreadPool;
 use crate::partition::pad_to_bucket;
 use crate::runtime::{Tensor, XlaExecutor};
 
@@ -218,6 +219,73 @@ pub(crate) fn update_batch_kernel(
     }
 }
 
+/// The ONE factorization kernel behind every engine's
+/// [`ComputeEngine::factorize`]: panel-blocked Householder QR (trailing
+/// updates fanned over `pool` when one is given) or the f64 Gram
+/// inverse.  The pooled and serial QR paths are bit-identical by
+/// construction (`linalg::qr` module docs), so cross-engine equality and
+/// warm == cold re-seeding hold no matter which engine — at which thread
+/// count — performed the factorization.
+pub(crate) fn factorize_kernel(
+    kind: InitKind,
+    a: &Matrix,
+    n_target: usize,
+    pool: Option<&ThreadPool>,
+) -> Result<WorkerFactorization> {
+    let n = a.cols();
+    if n != n_target {
+        return Err(DapcError::Shape(format!(
+            "native engine expects n_target == n ({n_target} != {n})"
+        )));
+    }
+    match kind {
+        InitKind::Qr => {
+            // Paper eqs. (1)-(4): A = Q1 R, P = I - Q1^T Q1; the QR
+            // factors are retained for per-RHS seeding.
+            let f = qr::householder_qr_pooled(a, pool);
+            let qtq = blas::gemm_tn(&f.q1, &f.q1);
+            let mut p = Matrix::eye(n);
+            for i in 0..n {
+                for j in 0..n {
+                    p[(i, j)] -= qtq[(i, j)];
+                }
+            }
+            Ok(WorkerFactorization {
+                projector: p,
+                seed: SeedFactors::Qr(f),
+            })
+        }
+        InitKind::Classical => {
+            // G^{-1} and P = I - G^{-1} G (numeric), in f64 like the
+            // paper's NumPy baseline — the normal equations square
+            // kappa(A), which in f32 makes the projector noise large
+            // enough to diverge (DESIGN.md §1).
+            let (ginv, p) = inverse::classical_factorize_f64(a)?;
+            Ok(WorkerFactorization {
+                projector: p,
+                seed: SeedFactors::Classical { ginv },
+            })
+        }
+        InitKind::Fat => {
+            // A^T = Q R; P = I - Q Q^T; Q and R^T are retained.
+            let at = a.transpose();
+            let f = qr::householder_qr_pooled(&at, pool);
+            let rt = f.r.transpose();
+            let qqt = blas::gemm(&f.q1, &f.q1.transpose());
+            let mut p = Matrix::eye(n);
+            for i in 0..n {
+                for j in 0..n {
+                    p[(i, j)] -= qqt[(i, j)];
+                }
+            }
+            Ok(WorkerFactorization {
+                projector: p,
+                seed: SeedFactors::Fat { q1: f.q1, rt },
+            })
+        }
+    }
+}
+
 /// Engine-agnostic operations used by the solvers and the coordinator.
 pub trait ComputeEngine {
     /// Initialize one partition (dense block `a`, rhs `b`).
@@ -248,6 +316,24 @@ pub trait ComputeEngine {
              sessions need the native or parallel engine",
             self.name()
         )))
+    }
+
+    /// [`Self::factorize`] over every partition of a session
+    /// registration.  The blocks arrive densified — sessions retain them
+    /// for seeding anyway, so (unlike [`Self::init_all`]) lazy
+    /// densification would not bound peak memory.  Cold registration is
+    /// embarrassingly parallel across partitions; pooled engines
+    /// override.
+    fn factorize_all(
+        &self,
+        kind: InitKind,
+        blocks: &[Matrix],
+        n_target: usize,
+    ) -> Result<Vec<WorkerFactorization>> {
+        blocks
+            .iter()
+            .map(|a| self.factorize(kind, a, n_target))
+            .collect()
     }
 
     /// The per-RHS half of [`Self::init`]: seed `x_j(0)` for a fresh `b`
@@ -546,58 +632,9 @@ impl ComputeEngine for NativeEngine {
         a: &Matrix,
         n_target: usize,
     ) -> Result<WorkerFactorization> {
-        let n = a.cols();
-        if n != n_target {
-            return Err(DapcError::Shape(format!(
-                "native engine expects n_target == n ({n_target} != {n})"
-            )));
-        }
-        match kind {
-            InitKind::Qr => {
-                // Paper eqs. (1)-(4): A = Q1 R, P = I - Q1^T Q1; the QR
-                // factors are retained for per-RHS seeding.
-                let f = qr::householder_qr(a);
-                let qtq = blas::gemm_tn(&f.q1, &f.q1);
-                let mut p = Matrix::eye(n);
-                for i in 0..n {
-                    for j in 0..n {
-                        p[(i, j)] -= qtq[(i, j)];
-                    }
-                }
-                Ok(WorkerFactorization {
-                    projector: p,
-                    seed: SeedFactors::Qr(f),
-                })
-            }
-            InitKind::Classical => {
-                // G^{-1} and P = I - G^{-1} G (numeric), in f64 like the
-                // paper's NumPy baseline — the normal equations square
-                // kappa(A), which in f32 makes the projector noise large
-                // enough to diverge (DESIGN.md §1).
-                let (ginv, p) = inverse::classical_factorize_f64(a)?;
-                Ok(WorkerFactorization {
-                    projector: p,
-                    seed: SeedFactors::Classical { ginv },
-                })
-            }
-            InitKind::Fat => {
-                // A^T = Q R; P = I - Q Q^T; Q and R^T are retained.
-                let at = a.transpose();
-                let f = qr::householder_qr(&at);
-                let rt = f.r.transpose();
-                let qqt = blas::gemm(&f.q1, &f.q1.transpose());
-                let mut p = Matrix::eye(n);
-                for i in 0..n {
-                    for j in 0..n {
-                        p[(i, j)] -= qqt[(i, j)];
-                    }
-                }
-                Ok(WorkerFactorization {
-                    projector: p,
-                    seed: SeedFactors::Fat { q1: f.q1, rt },
-                })
-            }
-        }
+        // the shared panel-blocked kernel, serial: this engine has no
+        // threads to offer the trailing updates
+        factorize_kernel(kind, a, n_target, None)
     }
 
     fn seed(
@@ -1415,6 +1452,28 @@ mod tests {
             // wrong rhs length is an error, not UB
             assert!(e.seed(&fac.seed, &a, &b[..l - 1]).is_err());
         }
+    }
+
+    #[test]
+    fn factorize_all_matches_per_partition_factorize() {
+        let e = NativeEngine::new();
+        let blocks: Vec<Matrix> = (0..3)
+            .map(|i| {
+                let (a, _, _) = consistent(24, 8, 70 + i);
+                a
+            })
+            .collect();
+        let all = e.factorize_all(InitKind::Qr, &blocks, 8).unwrap();
+        assert_eq!(all.len(), 3);
+        for (fac, a) in all.iter().zip(&blocks) {
+            let single = e.factorize(InitKind::Qr, a, 8).unwrap();
+            assert_eq!(
+                fac.projector.as_slice(),
+                single.projector.as_slice()
+            );
+        }
+        // the n_target check still guards every block
+        assert!(e.factorize_all(InitKind::Qr, &blocks, 9).is_err());
     }
 
     #[test]

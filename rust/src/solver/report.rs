@@ -8,6 +8,10 @@ use crate::sparse::CsrMatrix;
 
 /// `||A x - b||_2` through the allocation-free CSR
 /// [`CsrMatrix::spmv_into`] path (one scratch vector, reused internally).
+///
+/// A NaN anywhere in `x` or `b` propagates into the returned residual
+/// (and from there into [`SolveReport::summary`]): a poisoned iterate
+/// must surface as `residual=NaN`, never as a small number.
 pub fn residual_norm(a: &CsrMatrix, b: &[f32], x: &[f32]) -> f64 {
     let mut ax = vec![0.0f32; a.rows()];
     a.spmv_into(x, &mut ax);
@@ -166,5 +170,36 @@ mod tests {
         // off-by-one in the last component => residual exactly 1
         let b_off = [2.0f32, 6.0, 4.0];
         assert!((residual_norm(&a, &b_off, &x) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_norm_propagates_nan_iterates() {
+        use crate::linalg::Matrix;
+        let a = CsrMatrix::from_dense(&Matrix::from_vec(
+            2,
+            2,
+            vec![1.0, 0.0, 0.0, 1.0],
+        ));
+        let b = [1.0f32, 1.0];
+        // one poisoned entry or a fully poisoned iterate: NaN out
+        assert!(residual_norm(&a, &b, &[f32::NAN, 1.0]).is_nan());
+        assert!(residual_norm(&a, &b, &[f32::NAN, f32::NAN]).is_nan());
+    }
+
+    #[test]
+    fn summary_surfaces_nan_residual() {
+        let r = SolveReport {
+            xbar: vec![f32::NAN, f32::NAN],
+            x_parts: vec![],
+            trace: None,
+            residual: Some(f64::NAN),
+            init_time: Duration::from_millis(1),
+            iterate_time: Duration::from_millis(1),
+            algorithm: "dapc-decomposed",
+            engine: "native",
+            epochs: 1,
+        };
+        // the poisoned solve must be visible in the one-line summary
+        assert!(r.summary().contains("residual=NaN"), "{}", r.summary());
     }
 }
