@@ -1,8 +1,20 @@
 //! Microbenchmarks of the native linalg primitives — the L3 profile
 //! baseline for the §Perf optimization pass (gemm/gemv dominate the
 //! consensus epochs; QR dominates init).
+//!
+//! Since the SIMD dispatch layer (`linalg::simd`) every vector kernel is
+//! benched **per backend**: the lane-structured scalar fallback vs the
+//! AVX2+FMA path (when the CPU has it), on identical inputs.  The two
+//! are bit-identical by contract, so any delta between the lines is
+//! pure throughput — that comparison is the evidence the ROADMAP's
+//! "explicit SIMD" lever asks for, and it lands in
+//! `BENCH_microbench_linalg.json` (kernel/backend/n fields per record)
+//! which CI validates and uploads.  Timing *ratios* are deliberately
+//! not asserted here: shared CI runners jitter too much for a hard
+//! gate, and the JSON keeps the trajectory reviewable instead.
 
-use dapc::benchkit::{black_box, quick_mode, Bench};
+use dapc::benchkit::{black_box, quick_mode, Bench, BenchResult, JsonReport};
+use dapc::linalg::simd::{self, Backend, MR, NR};
 use dapc::linalg::{blas, inverse, qr, triangular, Matrix};
 use dapc::rng::seeded;
 
@@ -11,11 +23,121 @@ fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
     Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
 }
 
+fn randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut g = seeded(seed);
+    (0..len).map(|_| g.normal_f32()).collect()
+}
+
+fn speedup_line(kernel: &str, n: usize, per_backend: &[(Backend, BenchResult)]) {
+    if let (Some(s), Some(a)) = (
+        per_backend.iter().find(|(b, _)| *b == Backend::Scalar),
+        per_backend.iter().find(|(b, _)| *b == Backend::Avx2Fma),
+    ) {
+        println!(
+            "  -> {kernel} {n}: avx2+fma {:.2}x vs scalar",
+            s.1.stats.median() / a.1.stats.median().max(1e-12)
+        );
+    }
+}
+
 fn main() {
-    let sizes: &[usize] = if quick_mode() { &[128] } else { &[128, 256, 512] };
     let bench = Bench::default();
+    let mut report = JsonReport::new("microbench_linalg");
+    let active = simd::active();
 
     println!("=== linalg microbenches ===");
+    println!("kernel dispatch: {}", simd::description());
+
+    // -----------------------------------------------------------------
+    // Vector kernels, per backend (dot / dot_wide / axpy)
+    // -----------------------------------------------------------------
+    let lens: &[usize] = if quick_mode() { &[4096] } else { &[1024, 4096, 65536] };
+    for &n in lens {
+        let x = randv(n, 11);
+        let y = randv(n, 12);
+        let mut xw = vec![0.0f64; n];
+        blas::widen(&x, &mut xw);
+
+        let mut dots = Vec::new();
+        for &b in &simd::available() {
+            let res = bench.run(&format!("dot         {n} [{}]", b.name()), || {
+                black_box(simd::dot_on(b, &x, &y));
+            });
+            report.add(
+                &res,
+                &[("n", n as f64)],
+                &[("kernel", "dot"), ("backend", b.name())],
+            );
+            dots.push((b, res));
+        }
+        speedup_line("dot", n, &dots);
+
+        let mut wides = Vec::new();
+        for &b in &simd::available() {
+            let res = bench.run(&format!("dot_wide    {n} [{}]", b.name()), || {
+                black_box(simd::dot_wide_on(b, &xw, &y));
+            });
+            report.add(
+                &res,
+                &[("n", n as f64)],
+                &[("kernel", "dot_wide"), ("backend", b.name())],
+            );
+            wides.push((b, res));
+        }
+        speedup_line("dot_wide", n, &wides);
+
+        let mut axpys = Vec::new();
+        for &b in &simd::available() {
+            let mut acc = y.clone();
+            let res = bench.run(&format!("axpy        {n} [{}]", b.name()), || {
+                simd::axpy_on(b, 1e-4, &x, &mut acc);
+                black_box(acc[0]);
+            });
+            report.add(
+                &res,
+                &[("n", n as f64)],
+                &[("kernel", "axpy"), ("backend", b.name())],
+            );
+            axpys.push((b, res));
+        }
+        speedup_line("axpy", n, &axpys);
+        println!();
+    }
+
+    // -----------------------------------------------------------------
+    // The gemm register microkernel, per backend (the packing around it
+    // is backend-independent, so this isolates exactly what dispatches)
+    // -----------------------------------------------------------------
+    let kc = 256; // the KC default in blas.rs
+    let reps = 10_000; // 2*kc*MR*NR flops per call is too brief to time alone
+    let ap = randv(kc * MR, 21);
+    let bp = randv(kc * NR, 22);
+    let mut micro = Vec::new();
+    for &b in &simd::available() {
+        let mut acc = [[0.0f32; NR]; MR];
+        let res = bench.run(&format!("microkernel kc={kc} x{reps} [{}]", b.name()), || {
+            for _ in 0..reps {
+                simd::microkernel_on(b, kc, &ap, &bp, &mut acc);
+            }
+            black_box(acc[0][0]);
+        });
+        let gflops = (2 * kc * MR * NR * reps) as f64 / res.stats.median() / 1e9;
+        println!("  -> microkernel [{}]: {gflops:.2} GFLOP/s", b.name());
+        report.add(
+            &res,
+            &[("kc", kc as f64), ("reps", reps as f64), ("gflops", gflops)],
+            &[("kernel", "microkernel"), ("backend", b.name())],
+        );
+        micro.push((b, res));
+    }
+    speedup_line("microkernel", kc, &micro);
+    println!();
+
+    // -----------------------------------------------------------------
+    // Composite kernels on the ACTIVE dispatch path (these go through
+    // the public blas/qr entry points like the solvers do)
+    // -----------------------------------------------------------------
+    let sizes: &[usize] = if quick_mode() { &[128] } else { &[128, 256, 512] };
     for &n in sizes {
         let a = randm(n, n, 1);
         let b = randm(n, n, 2);
@@ -28,29 +150,67 @@ fn main() {
         // effective GFLOP/s for the gemm (2 n^3 flops)
         let gflops = 2.0 * (n as f64).powi(3) / gemm_res.stats.median() / 1e9;
         println!("  -> gemm {n}: {gflops:.2} GFLOP/s");
+        report.add(
+            &gemm_res,
+            &[("n", n as f64), ("gflops", gflops)],
+            &[("kernel", "gemm"), ("backend", active.name())],
+        );
 
-        bench.run(&format!("gemv        {n}x{n}"), || {
+        let gemv_res = bench.run(&format!("gemv        {n}x{n}"), || {
             let mut y = vec![0.0f32; n];
             blas::gemv(&a, &x, &mut y);
             black_box(y[0]);
         });
-        bench.run(&format!("gram        {}x{n}", 4 * n), || {
+        report.add(
+            &gemv_res,
+            &[("n", n as f64)],
+            &[("kernel", "gemv"), ("backend", active.name())],
+        );
+        let gram_res = bench.run(&format!("gram        {}x{n}", 4 * n), || {
             black_box(blas::gram(&tall).as_slice()[0]);
         });
-        bench.run(&format!("qr          {}x{n}", 4 * n), || {
+        report.add(
+            &gram_res,
+            &[("n", n as f64)],
+            &[("kernel", "gram"), ("backend", active.name())],
+        );
+        let qr_res = bench.run(&format!("qr          {}x{n}", 4 * n), || {
             black_box(qr::householder_qr(&tall).r.as_slice()[0]);
         });
-        bench.run(&format!("gj_inverse  {n}x{n}"), || {
+        report.add(
+            &qr_res,
+            &[("n", n as f64)],
+            &[("kernel", "qr"), ("backend", active.name())],
+        );
+        let inv_res = bench.run(&format!("gj_inverse  {n}x{n}"), || {
             let g = blas::gram(&tall);
             black_box(inverse::gauss_jordan_inverse(&g).unwrap().as_slice()[0]);
         });
+        report.add(
+            &inv_res,
+            &[("n", n as f64)],
+            &[("kernel", "gj_inverse"), ("backend", active.name())],
+        );
         let r = {
             let f = qr::householder_qr(&tall);
             f.r
         };
-        bench.run(&format!("backsub     {n}"), || {
+        let bs_res = bench.run(&format!("backsub     {n}"), || {
             black_box(triangular::back_substitute(&r, &x)[0]);
         });
+        report.add(
+            &bs_res,
+            &[("n", n as f64)],
+            &[("kernel", "backsub"), ("backend", active.name())],
+        );
         println!();
+    }
+
+    match report.write() {
+        Ok(path) => println!("wrote {} ({} records)", path.display(), report.len()),
+        Err(e) => {
+            eprintln!("failed to write bench json: {e}");
+            std::process::exit(1);
+        }
     }
 }

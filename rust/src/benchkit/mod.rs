@@ -198,6 +198,82 @@ impl JsonReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Result validation (the CI `bench-validate` self-check)
+// ---------------------------------------------------------------------------
+
+/// Keys every [`JsonReport`] record carries ([`JsonReport::add`] writes
+/// them unconditionally); [`validate_report_text`] requires them all.
+pub const RECORD_KEYS: [&str; 6] =
+    ["mean_s", "median_s", "p95_s", "min_s", "max_s", "samples"];
+
+/// Validate one rendered `BENCH_*.json` document: it must parse with the
+/// in-repo JSON reader, name its bench, and carry a **non-empty**
+/// `results` array whose records each hold a name plus every
+/// [`RECORD_KEYS`] timing field (finite, non-negative, >= 1 sample).
+///
+/// This is what `dapc bench-validate` runs in CI after the smoke
+/// benches: a bench binary that exited 0 but silently wrote nothing (or
+/// wrote a truncated/NaN-laden document) fails the build instead of
+/// uploading a hollow artifact.
+///
+/// Returns the number of validated records.
+pub fn validate_report_text(text: &str) -> crate::error::Result<usize> {
+    use crate::config::json::Json;
+    use crate::error::DapcError;
+    let doc = Json::parse(text)?;
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| {
+            DapcError::Parse("bench json: missing or empty \"bench\" name".into())
+        })?;
+    let results = doc.get("results").and_then(Json::as_arr).ok_or_else(|| {
+        DapcError::Parse(format!("bench {bench:?}: missing \"results\" array"))
+    })?;
+    if results.is_empty() {
+        return Err(DapcError::Parse(format!(
+            "bench {bench:?}: empty \"results\" — the bench produced no records"
+        )));
+    }
+    for (i, r) in results.iter().enumerate() {
+        r.get("name")
+            .and_then(Json::as_str)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| {
+                DapcError::Parse(format!(
+                    "bench {bench:?} record {i}: missing or empty \"name\""
+                ))
+            })?;
+        for key in RECORD_KEYS {
+            let v = r.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                DapcError::Parse(format!(
+                    "bench {bench:?} record {i}: missing numeric {key:?}"
+                ))
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(DapcError::Parse(format!(
+                    "bench {bench:?} record {i}: {key:?} = {v} is not a \
+                     finite non-negative number"
+                )));
+            }
+            if key == "samples" && v < 1.0 {
+                return Err(DapcError::Parse(format!(
+                    "bench {bench:?} record {i}: zero samples"
+                )));
+            }
+        }
+    }
+    Ok(results.len())
+}
+
+/// [`validate_report_text`] over a file on disk.
+pub fn validate_report_file(path: &std::path::Path) -> crate::error::Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    validate_report_text(&text)
+}
+
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
 fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -219,12 +295,15 @@ fn json_str(s: &str) -> String {
     out
 }
 
-/// Finite JSON number (NaN/inf have no JSON form; clamp to 0).
+/// Finite JSON number.  NaN/inf have no JSON form — emit `null` so a
+/// poisoned timing fails [`validate_report_text`] loudly (`as_f64` on
+/// `Json::Null` is `None` -> "missing numeric" error) instead of being
+/// laundered into a plausible-looking zero.
 fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:e}")
     } else {
-        "0".into()
+        "null".into()
     }
 }
 
@@ -281,6 +360,75 @@ mod tests {
         assert!((r0.get("threads").and_then(Json::as_f64).unwrap() - 4.0).abs() < 1e-12);
         assert_eq!(r0.get("shape").and_then(Json::as_str), Some("1163x290"));
         assert_eq!(r0.get("samples").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn validator_accepts_real_reports() {
+        let mut rep = JsonReport::new("validator_ok");
+        let res = BenchResult {
+            name: "k1".into(),
+            stats: TimingStats::from_secs(vec![0.25, 0.5]),
+        };
+        rep.add(&res, &[("n", 4096.0)], &[("backend", "scalar")]);
+        rep.add(&res, &[], &[]);
+        assert_eq!(validate_report_text(&rep.render()).unwrap(), 2);
+    }
+
+    #[test]
+    fn validator_rejects_empty_results() {
+        let rep = JsonReport::new("validator_empty");
+        let err = validate_report_text(&rep.render()).unwrap_err();
+        assert!(err.to_string().contains("no records"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_keys_and_junk() {
+        // a record missing the timing fields the harness always writes
+        let doc = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
+                   {\"name\": \"k\", \"mean_s\": 1.0}\n  ]\n}\n";
+        let err = validate_report_text(doc).unwrap_err();
+        assert!(err.to_string().contains("median_s"), "{err}");
+        // outright junk fails at the parser
+        assert!(validate_report_text("BENCH { not json").is_err());
+        // a non-finite timing is written as null (json_num) and must be
+        // rejected as a missing numeric, not laundered into a zero
+        let mut rep = JsonReport::new("validator_nan");
+        rep.add(
+            &BenchResult {
+                name: "poisoned".into(),
+                stats: TimingStats::from_secs(vec![f64::NAN]),
+            },
+            &[],
+            &[],
+        );
+        assert!(validate_report_text(&rep.render()).is_err());
+        // a literal negative fails the range check
+        let neg = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
+                   {\"name\": \"k\", \"mean_s\": -1.0, \"median_s\": 1.0, \
+                   \"p95_s\": 1.0, \"min_s\": 1.0, \"max_s\": 1.0, \
+                   \"samples\": 2}\n  ]\n}\n";
+        let err = validate_report_text(neg).unwrap_err();
+        assert!(err.to_string().contains("mean_s"), "{err}");
+        // zero samples — a bench that timed nothing — fails
+        let zs = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
+                  {\"name\": \"k\", \"mean_s\": 1.0, \"median_s\": 1.0, \
+                  \"p95_s\": 1.0, \"min_s\": 1.0, \"max_s\": 1.0, \
+                  \"samples\": 0}\n  ]\n}\n";
+        let err = validate_report_text(zs).unwrap_err();
+        assert!(err.to_string().contains("zero samples"), "{err}");
+    }
+
+    #[test]
+    fn validator_roundtrips_through_file() {
+        let dir = std::env::temp_dir().join("dapc_benchkit_validate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rep = JsonReport::new("validator_file");
+        rep.add(&Bench::new(0, 1).run_once("noop", || {}), &[], &[]);
+        let path = dir.join("BENCH_validator_file.json");
+        std::fs::write(&path, rep.render()).unwrap();
+        assert_eq!(validate_report_file(&path).unwrap(), 1);
+        assert!(validate_report_file(&dir.join("BENCH_absent.json")).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

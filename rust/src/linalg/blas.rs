@@ -6,6 +6,21 @@
 //! packed panels.  `gemv` accumulates per-row dot products (with a pooled
 //! row-chunk-parallel variant for the consensus hot path).
 //!
+//! # Kernel dispatch (see [`super::simd`])
+//!
+//! The flop-carrying primitives — [`dot`], [`dot_wide`], [`axpy`],
+//! [`widen`] and the gemm microkernel — are thin wrappers over the
+//! runtime-dispatched SIMD layer in `linalg::simd`: AVX2+FMA intrinsics
+//! when the CPU has them, a **lane-structured scalar fallback**
+//! otherwise (or under `DAPC_FORCE_SCALAR=1`).  The two paths are
+//! bit-identical by construction — the scalar fallback accumulates in
+//! the same fixed 8-lane order with the same horizontal reduction tree
+//! the vector path uses — so the dispatch choice, exactly like the
+//! thread count, can never change a result.  `simd.rs` documents the
+//! contract (lane order, remainder handling, where FMA is and is not
+//! allowed, NaN policy); `tests/simd_lane_contract.rs` enforces it
+//! bitwise across every `n % 8` remainder class.
+//!
 //! # Block-size tuning (`MC`/`KC`/`NC`)
 //!
 //! The three cache block sizes map onto the cache hierarchy:
@@ -17,9 +32,11 @@
 //!   and C tile;
 //! * `KC * NC * 4 bytes` (the packed B panel) targets L3 (512 KiB at the
 //!   defaults);
-//! * `MR x NR` (4 x 8) keeps the accumulator tile in registers: 32 f32
-//!   accumulators = 4 vector registers of 8 lanes, which LLVM reliably
-//!   vectorizes on AVX2-class hardware without explicit intrinsics.
+//! * `MR x NR` (4 x 8, defined next to the microkernel in `simd.rs`)
+//!   keeps the accumulator tile in registers: 32 f32 accumulators =
+//!   4 vector registers of 8 lanes, held explicitly by the AVX2
+//!   microkernel and reliably register-allocated by LLVM on the scalar
+//!   fallback.
 //!
 //! Methodology: sweep one constant at a time against
 //! `cargo bench --bench microbench_linalg` (the gemm GFLOP/s line) and
@@ -28,6 +45,7 @@
 //! below were chosen for a generic x86-64 container; re-tune when the
 //! deployment hardware is known (see ROADMAP "Performance").
 
+use super::simd::{self, MR, NR};
 use super::Matrix;
 use crate::parallel::ThreadPool;
 
@@ -37,77 +55,51 @@ const MC: usize = 64;
 const KC: usize = 256;
 /// Columns of the packed B panel (L3 block).
 const NC: usize = 512;
-/// Microkernel tile rows (register block).
-const MR: usize = 4;
-/// Microkernel tile columns (register block; one 8-lane f32 vector).
-const NR: usize = 8;
 
-/// `y += alpha * x` (axpy).
+/// `y += alpha * x` (axpy), runtime-dispatched (`linalg::simd`).
 ///
-/// Checked in release builds too: a silent length mismatch here would
-/// read past the unrolled loop's assumptions in every caller.
+/// Elementwise f32 mul + add on both backends — no reduction, no f32
+/// FMA — so the dispatch choice never changes a bit.  Length mismatch
+/// is checked in release builds too: a silent mismatch here would read
+/// past the kernel's assumptions in every caller.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    assert_eq!(x.len(), y.len(), "axpy length mismatch");
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy_on(simd::active(), alpha, x, y)
 }
 
-/// Dot product with f64 accumulation.
+/// Dot product with f64 accumulation, runtime-dispatched
+/// (`linalg::simd`).
+///
+/// Both backends accumulate in the same fixed 8-lane order (8
+/// independent f64 accumulators, one shared horizontal reduction tree,
+/// sequential `n % 8` tail added last), so the result is bit-identical
+/// whichever path runs.  The AVX2 path may fuse the multiply-add: the
+/// widened f32 products are exact in f64, so the fused rounding point
+/// is the same one the scalar fallback rounds at.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
-    assert_eq!(x.len(), y.len(), "dot length mismatch");
-    let mut acc = 0.0f64;
-    // 4-way unroll keeps the dependency chain short; LLVM vectorizes this.
-    let chunks = x.len() / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let i = c * 4;
-        a0 += x[i] as f64 * y[i] as f64;
-        a1 += x[i + 1] as f64 * y[i + 1] as f64;
-        a2 += x[i + 2] as f64 * y[i + 2] as f64;
-        a3 += x[i + 3] as f64 * y[i + 3] as f64;
-    }
-    for i in chunks * 4..x.len() {
-        acc += x[i] as f64 * y[i] as f64;
-    }
-    acc + a0 + a1 + a2 + a3
+    simd::dot_on(simd::active(), x, y)
 }
 
 /// Widen an f32 slice into a caller-provided f64 buffer.  f32 -> f64 is
 /// exact, so downstream arithmetic over the widened values is
-/// bit-identical to widening on the fly.
+/// bit-identical to widening on the fly (and vectorizing the conversion
+/// is trivially lane-safe).
 #[inline]
 pub fn widen(src: &[f32], dst: &mut [f64]) {
-    assert_eq!(src.len(), dst.len(), "widen length mismatch");
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d = s as f64;
-    }
+    simd::widen_on(simd::active(), src, dst)
 }
 
-/// [`dot`] against a pre-widened left operand: same 4-way f64
+/// [`dot`] against a pre-widened left operand: same fixed 8-lane f64
 /// accumulator split, same summation order, same rounding points — the
 /// result is bit-identical to `dot(x32, y)` whenever `x[i] == x32[i] as
 /// f64`.  The batched multi-RHS update uses this to widen each projector
-/// row ONCE and reuse it across every column of the batch.
+/// row ONCE and reuse it across every column of the batch.  (Unlike
+/// [`dot`], no backend may fuse here: a general 53-bit x 24-bit product
+/// is not exact, so both paths round the product before accumulating.)
 #[inline]
 pub fn dot_wide(x: &[f64], y: &[f32]) -> f64 {
-    assert_eq!(x.len(), y.len(), "dot_wide length mismatch");
-    let mut acc = 0.0f64;
-    let chunks = x.len() / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let i = c * 4;
-        a0 += x[i] * y[i] as f64;
-        a1 += x[i + 1] * y[i + 1] as f64;
-        a2 += x[i + 2] * y[i + 2] as f64;
-        a3 += x[i + 3] * y[i + 3] as f64;
-    }
-    for i in chunks * 4..x.len() {
-        acc += x[i] * y[i] as f64;
-    }
-    acc + a0 + a1 + a2 + a3
+    simd::dot_wide_on(simd::active(), x, y)
 }
 
 /// `y = A x` for row-major A (rows x cols), x of length cols.
@@ -173,6 +165,9 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     if m == 0 || k == 0 || n == 0 {
         return;
     }
+    // one dispatch decision for the whole product, hoisted out of the
+    // tile loops (the choice cannot affect the bits — simd module docs)
+    let backend = simd::active();
 
     // pack buffers sized to the largest panel this problem needs
     let kc_max = KC.min(k);
@@ -203,7 +198,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
                         let mr = MR.min(mc - ir);
                         let ap = &a_pack[t * kc * MR..(t + 1) * kc * MR];
                         let mut acc = [[0.0f32; NR]; MR];
-                        microkernel(kc, ap, bp, &mut acc);
+                        simd::microkernel_on(backend, kc, ap, bp, &mut acc);
                         // fringe lanes were zero-padded in the packs, so
                         // the full tile is valid; write only the live part
                         for i in 0..mr {
@@ -280,24 +275,6 @@ fn pack_b(
                 .copy_from_slice(&brow[jc + c0..jc + c0 + cols]);
             for j in cols..NR {
                 buf[off + j] = 0.0;
-            }
-        }
-    }
-}
-
-/// The register-tiled inner kernel: `acc += Ap * Bp` over the shared `kc`
-/// dimension, where `Ap` is an `MR x kc` panel (k-major) and `Bp` a
-/// `kc x NR` panel (k-major).  All indices are panel-local, so LLVM sees
-/// constant-length inner loops and keeps `acc` in vector registers.
-#[inline]
-fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for p in 0..kc {
-        let av = &ap[p * MR..p * MR + MR];
-        let bv = &bp[p * NR..p * NR + NR];
-        for i in 0..MR {
-            let ai = av[i];
-            for j in 0..NR {
-                acc[i][j] += ai * bv[j];
             }
         }
     }
@@ -470,14 +447,38 @@ mod tests {
     fn dot_wide_bitwise_matches_dot() {
         // the batched-solve contract: widening the left operand up front
         // must not change a single output bit, at any length (all tail
-        // cases of the 4-way unroll)
-        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 257] {
+        // classes of the fixed 8-lane accumulator split)
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 31, 257] {
             let mut g = seeded(900 + len as u64);
             let x: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
             let y: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
             let mut xw = vec![0.0f64; len];
             widen(&x, &mut xw);
             assert_eq!(dot(&x, &y).to_bits(), dot_wide(&xw, &y).to_bits());
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_match_pinned_scalar_bitwise() {
+        // whatever backend `active()` picked (native leg or the
+        // DAPC_FORCE_SCALAR=1 CI leg), the public wrappers must agree
+        // bitwise with the lane-structured scalar reference — the full
+        // remainder-class sweep lives in tests/simd_lane_contract.rs
+        use crate::linalg::simd::{self, Backend};
+        let mut g = seeded(321);
+        for len in [0usize, 1, 7, 8, 9, 64, 130] {
+            let x: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+            let y: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+            assert_eq!(
+                dot(&x, &y).to_bits(),
+                simd::dot_on(Backend::Scalar, &x, &y).to_bits(),
+                "dot len {len}"
+            );
+            let mut ya = y.clone();
+            let mut yb = y.clone();
+            axpy(0.37, &x, &mut ya);
+            simd::axpy_on(Backend::Scalar, 0.37, &x, &mut yb);
+            assert_eq!(ya, yb, "axpy len {len}");
         }
     }
 

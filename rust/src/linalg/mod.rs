@@ -7,6 +7,9 @@
 //!
 //! * [`Matrix`] — row-major f32 dense matrix,
 //! * [`blas`] — blocked gemm/gemv/axpy primitives,
+//! * [`simd`] — the runtime-dispatched kernel layer under [`blas`]
+//!   (AVX2+FMA or a lane-structured scalar fallback, bit-identical by
+//!   construction; `DAPC_FORCE_SCALAR=1` forces the scalar path),
 //! * [`qr`] — Householder QR (economy form, paper eq. (1)),
 //! * [`triangular`] — forward/backward substitution (paper eqs. (2)-(3)),
 //! * [`inverse`] — Gauss-Jordan elimination with partial pivoting [18],
@@ -21,6 +24,7 @@ pub mod inverse;
 mod matrix;
 pub mod norms;
 pub mod qr;
+pub mod simd;
 pub mod triangular;
 
 pub use matrix::Matrix;

@@ -29,7 +29,17 @@
 //! different column chunks.  (This is also why the sweeps do not go
 //! through the packed f32 `gemm` microkernel: dot/axpy per column make
 //! chunk-independence self-evident, where repacked panels would make it an
-//! argument about packing boundaries.)
+//! argument about packing boundaries.  Routing them through the packed
+//! gemm once a chunk-stable packing story exists is the remaining QR
+//! headroom — see ROADMAP "Performance".)
+//!
+//! The per-column `blas::dot`/`blas::axpy` calls themselves go through
+//! the runtime-dispatched SIMD layer ([`crate::linalg::simd`]): the
+//! trailing sweeps run on AVX2+FMA where available, and because that
+//! layer's scalar fallback is lane-structured to be bit-identical to the
+//! vector path, the factors stay independent of BOTH the thread count
+//! and the kernel dispatch — the two switches compose without weakening
+//! either invariant.
 //!
 //! The working copy is stored **column-major** (`work_t`, one contiguous
 //! l-length slice per column): reflector extraction, every per-column

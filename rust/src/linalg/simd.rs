@@ -1,0 +1,657 @@
+//! Runtime-dispatched SIMD kernels with a **lane-deterministic scalar
+//! contract**.
+//!
+//! Every hot linalg primitive (`dot`, `dot_wide`, `axpy`, `widen`, and
+//! the gemm `MR x NR` microkernel) exists twice in this module: an
+//! explicit AVX2(+FMA) implementation (`std::arch::x86_64` intrinsics,
+//! `unsafe` confined to the intrinsic bodies) and a scalar fallback.
+//! [`active`] picks one **once per process** (cached in a `OnceLock`):
+//! AVX2+FMA when `is_x86_feature_detected!` reports both features,
+//! scalar otherwise — and `DAPC_FORCE_SCALAR=1` forces the scalar path
+//! regardless, which is how CI covers both legs on the same hardware.
+//!
+//! # The lane contract — why dispatch can never change a result
+//!
+//! The repo's equivalence suites (`tests/distributed_equivalence.rs`,
+//! `tests/parallel_engine.rs`) assert **bitwise** equality: cross-engine,
+//! warm == cold, batch == sequential, pooled == serial.  A kernel layer
+//! whose vector and scalar paths rounded differently would silently key
+//! every one of those invariants on the CPU the test ran on.  Instead,
+//! the two paths are bit-identical *by construction*:
+//!
+//! * **Reductions** (`dot`, `dot_wide`) accumulate into a fixed array of
+//!   [`LANES`] = 8 independent f64 accumulators — lane `l` only ever sees
+//!   elements `i` with `i % 8 == l` — followed by one fixed horizontal
+//!   reduction tree `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))` and a
+//!   separate sequential tail for the `n % 8` remainder, *added last*.
+//!   The scalar fallback is restructured into exactly this shape, so the
+//!   AVX2 path (two 4-lane `__m256d` accumulators, the same tree via
+//!   `vaddpd`/`vextractf128`/`vunpckhpd`) performs the identical
+//!   sequence of f64 roundings.
+//! * **FMA is used only where it is provably exact-equivalent.**  `dot`
+//!   multiplies two *widened* f32 values in f64: a 24-bit x 24-bit
+//!   mantissa product fits in 48 < 53 bits, so the product is exact and
+//!   `fma(x, y, acc)` rounds at the same single point as
+//!   `acc + (x * y)` — bit-identical.  `dot_wide` takes an *arbitrary*
+//!   f64 left operand (53-bit x 24-bit products do not fit), so both its
+//!   paths round the product first (`mul` then `add`), matching the
+//!   scalar `acc += x * y as f64` for every input, widened or not.
+//! * **Elementwise f32 kernels** (`axpy`, `widen`, the gemm microkernel)
+//!   carry no cross-lane reduction at all: output element `(i, j)` is the
+//!   same chain of scalar f32 roundings on both paths (`mul` + `add`,
+//!   never f32 FMA — a fused f32 multiply-add rounds once where the
+//!   scalar fallback rounds twice, and emulating fused rounding in
+//!   scalar code costs more than it saves).
+//!
+//! Net effect: like the thread count (`parallel::ThreadPool`) and the
+//! batch width (`solver::engine::update_batch_kernel`), the dispatch
+//! choice is *invisible in the output bits*.  `DAPC_FORCE_SCALAR=1` is a
+//! perf switch, not a numerics switch.
+//!
+//! # NaN policy
+//!
+//! Matching `norms::max_abs`: NaN is never silently dropped.  A NaN
+//! anywhere in a reduction input makes the result NaN on both paths
+//! (FMA, mul and add all propagate NaN); elementwise kernels poison
+//! exactly the lanes a scalar loop would.  NaN *payloads* are not part
+//! of the contract — `tests/simd_lane_contract.rs` asserts NaN-ness, and
+//! bitwise equality on non-NaN data.
+//!
+//! # Remainder handling
+//!
+//! Every kernel splits `n` as `8 * (n / 8) + (n % 8)`.  The vector body
+//! covers the full 8-wide chunks with unaligned loads (`loadu`); the
+//! remainder runs the plain sequential scalar loop on both paths, and
+//! for reductions its partial sum joins *after* the lane tree.  The
+//! property sweep in `tests/simd_lane_contract.rs` covers every
+//! `n % 8 ∈ 0..=7` class at several magnitudes.
+
+use std::sync::OnceLock;
+
+/// Fixed accumulator lane count of the reduction kernels — one AVX2
+/// register of f32, or two registers of f64.  Both dispatch paths
+/// accumulate in exactly this many independent lanes.
+pub const LANES: usize = 8;
+
+/// Gemm microkernel tile rows (register block; see `blas` module docs
+/// for the surrounding MC/KC/NC cache blocking).
+pub const MR: usize = 4;
+
+/// Gemm microkernel tile columns (register block; one 8-lane f32
+/// vector, i.e. [`LANES`]).
+pub const NR: usize = 8;
+
+/// Which kernel implementation a call runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The 8-lane-structured scalar fallback (portable).
+    Scalar,
+    /// AVX2 + FMA intrinsics (x86-64 only, runtime-detected).
+    Avx2Fma,
+}
+
+impl Backend {
+    /// Short stable name, used in bench JSON records and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// `DAPC_FORCE_SCALAR=1` forces the scalar path (any other value, or
+/// unset, lets detection decide).
+fn force_scalar_env() -> bool {
+    std::env::var("DAPC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Runtime CPU support for the [`Backend::Avx2Fma`] kernels.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Runtime CPU support for the [`Backend::Avx2Fma`] kernels.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// The selection rule, split out pure so it is unit-testable without
+/// mutating process environment: forcing scalar always wins; otherwise
+/// AVX2+FMA exactly when the CPU has it.
+pub fn select(force_scalar: bool, avx2: bool) -> Backend {
+    if force_scalar || !avx2 {
+        Backend::Scalar
+    } else {
+        Backend::Avx2Fma
+    }
+}
+
+/// Every backend this CPU can run, scalar first — the iteration list
+/// for the lane-contract tests and the per-backend microbenches, kept
+/// here so adding a backend extends their coverage automatically.
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    if avx2_available() {
+        v.push(Backend::Avx2Fma);
+    }
+    v
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// The process-wide kernel backend, selected once on first use (env +
+/// feature detection) and never changed after — a mid-run flip would be
+/// harmless for the bits (see module docs) but would make perf numbers
+/// unattributable.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(|| select(force_scalar_env(), avx2_available()))
+}
+
+/// Human-readable description of the active backend and why it was
+/// chosen (for `dapc kernels` and CI logs).
+pub fn description() -> &'static str {
+    match active() {
+        Backend::Avx2Fma => "avx2+fma (runtime-detected)",
+        Backend::Scalar => {
+            if force_scalar_env() {
+                "scalar (forced by DAPC_FORCE_SCALAR=1)"
+            } else if avx2_available() {
+                // selection was cached before the env var changed, or a
+                // test called select() directly; report what is running
+                "scalar (selected at startup)"
+            } else {
+                "scalar (avx2+fma not detected)"
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points: length checks + backend routing.
+//
+// Each takes the backend explicitly so benches and the lane-contract
+// tests can pin a path; hot callers pass `active()` (hoisted out of
+// their inner loops where it matters, e.g. `blas::gemm_into`).
+// ---------------------------------------------------------------------------
+
+/// Dot product with f64 accumulation on the given backend.
+///
+/// Checked in release builds too: a silent length mismatch here would
+/// read past the kernel's assumptions in every caller.
+#[inline]
+pub fn dot_on(backend: Backend, x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    match backend {
+        Backend::Scalar => scalar::dot(x, y),
+        Backend::Avx2Fma => dot_avx2(x, y),
+    }
+}
+
+/// [`dot_on`] against a pre-widened f64 left operand.
+#[inline]
+pub fn dot_wide_on(backend: Backend, x: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot_wide length mismatch");
+    match backend {
+        Backend::Scalar => scalar::dot_wide(x, y),
+        Backend::Avx2Fma => dot_wide_avx2(x, y),
+    }
+}
+
+/// `y += alpha * x` on the given backend.
+#[inline]
+pub fn axpy_on(backend: Backend, alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    match backend {
+        Backend::Scalar => scalar::axpy(alpha, x, y),
+        Backend::Avx2Fma => axpy_avx2(alpha, x, y),
+    }
+}
+
+/// Exact f32 -> f64 widening into a caller buffer on the given backend.
+#[inline]
+pub fn widen_on(backend: Backend, src: &[f32], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len(), "widen length mismatch");
+    match backend {
+        Backend::Scalar => scalar::widen(src, dst),
+        Backend::Avx2Fma => widen_avx2(src, dst),
+    }
+}
+
+/// The gemm register microkernel on the given backend:
+/// `acc += Ap * Bp` over the shared `kc` dimension, `Ap` an `MR x kc`
+/// panel (k-major), `Bp` a `kc x NR` panel (k-major).  Accumulation over
+/// `p` is sequential per output element on both paths (f32 mul + add,
+/// no FMA — module docs), so the paths are elementwise bit-identical.
+#[inline]
+pub fn microkernel_on(
+    backend: Backend,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    assert!(ap.len() >= kc * MR, "microkernel A panel too short");
+    assert!(bp.len() >= kc * NR, "microkernel B panel too short");
+    match backend {
+        Backend::Scalar => scalar::microkernel(kc, ap, bp, acc),
+        Backend::Avx2Fma => microkernel_avx2(kc, ap, bp, acc),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 trampolines: re-check CPU support so the pub `*_on` functions
+// stay sound even if a caller passes `Backend::Avx2Fma` by hand on an
+// unsupported machine (`is_x86_feature_detected!` caches, so the check
+// is one relaxed atomic load), then enter the `unsafe` intrinsic body.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_avx2(x: &[f32], y: &[f32]) -> f64 {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::dot(x, y) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_wide_avx2(x: &[f64], y: &[f32]) -> f64 {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::dot_wide(x, y) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::axpy(alpha, x, y) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn widen_avx2(src: &[f32], dst: &mut [f64]) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::widen(src, dst) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn microkernel_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::microkernel(kc, ap, bp, acc) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_avx2(_x: &[f32], _y: &[f32]) -> f64 {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_wide_avx2(_x: &[f64], _y: &[f32]) -> f64 {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn axpy_avx2(_alpha: f32, _x: &[f32], _y: &mut [f32]) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn widen_avx2(_src: &[f32], _dst: &mut [f64]) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn microkernel_avx2(_kc: usize, _ap: &[f32], _bp: &[f32], _acc: &mut [[f32; NR]; MR]) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+/// The shared horizontal reduction tree over the 8 f64 lane
+/// accumulators — the scalar mirror of `vaddpd ymm(lo,hi)` followed by
+/// the 128-bit fold (`vextractf128` + `vaddpd`) and the final scalar
+/// add (`vunpckhpd` + `vaddsd`).  Both backends MUST reduce through
+/// this exact association.
+#[inline]
+fn reduce_lanes(a: &[f64; LANES]) -> f64 {
+    let s0 = a[0] + a[4];
+    let s1 = a[1] + a[5];
+    let s2 = a[2] + a[6];
+    let s3 = a[3] + a[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar fallbacks, restructured to the vector lane order.
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    use super::{reduce_lanes, LANES, MR, NR};
+
+    /// 8 independent f64 accumulators in vector lane order, fixed
+    /// reduction tree, sequential `n % 8` tail added last — the exact
+    /// rounding sequence of `avx2::dot` (module docs).
+    pub(super) fn dot(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = [0.0f64; LANES];
+        for c in 0..chunks {
+            let base = c * LANES;
+            for (l, a) in acc.iter_mut().enumerate() {
+                // exact product (24-bit mantissas in f64), one rounding
+                // at the add — the same single rounding the vector
+                // path's fmadd performs
+                *a += x[base + l] as f64 * y[base + l] as f64;
+            }
+        }
+        let mut tail = 0.0f64;
+        for i in chunks * LANES..n {
+            tail += x[i] as f64 * y[i] as f64;
+        }
+        reduce_lanes(&acc) + tail
+    }
+
+    /// [`dot`] with a pre-widened left operand.  The product here is a
+    /// full 53-bit x 24-bit f64 multiply (NOT exact in general), so both
+    /// backends round it before the add — which also keeps this
+    /// bit-identical to [`dot`] whenever `x[i] == x32[i] as f64`, since
+    /// the widened product is exact and its rounding a no-op.
+    pub(super) fn dot_wide(x: &[f64], y: &[f32]) -> f64 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = [0.0f64; LANES];
+        for c in 0..chunks {
+            let base = c * LANES;
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a += x[base + l] * y[base + l] as f64;
+            }
+        }
+        let mut tail = 0.0f64;
+        for i in chunks * LANES..n {
+            tail += x[i] * y[i] as f64;
+        }
+        reduce_lanes(&acc) + tail
+    }
+
+    /// Elementwise, no reduction: lane structure is irrelevant to the
+    /// bits, so the fallback keeps the obvious loop (round the product,
+    /// round the add — exactly `vmulps` + `vaddps` per lane).
+    pub(super) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Elementwise exact conversion (f32 -> f64 is injective).
+    pub(super) fn widen(src: &[f32], dst: &mut [f64]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as f64;
+        }
+    }
+
+    /// The register-tiled gemm inner kernel.  `acc[i]` is one 8-lane f32
+    /// row; accumulation over `p` is sequential per element with
+    /// mul-then-add rounding, matching `avx2::microkernel` lane for
+    /// lane.  All indices are panel-local constant-trip loops, so LLVM
+    /// keeps `acc` in vector registers even on this fallback path.
+    pub(super) fn microkernel(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        for p in 0..kc {
+            let av = &ap[p * MR..p * MR + MR];
+            let bv = &bp[p * NR..p * NR + NR];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let ai = av[i];
+                for (j, a) in row.iter_mut().enumerate() {
+                    *a += ai * bv[j];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA bodies.  `unsafe` is confined to these functions; every
+// entry goes through the checked trampolines above.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{LANES, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Fold the two 4-lane f64 accumulators (lanes 0..=3 in `lo`,
+    /// 4..=7 in `hi`) through the fixed tree of `super::reduce_lanes`.
+    ///
+    /// # Safety
+    /// Requires AVX2 (checked by every public trampoline).
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_pd(lo: __m256d, hi: __m256d) -> f64 {
+        // [a0+a4, a1+a5, a2+a6, a3+a7]
+        let s = _mm256_add_pd(lo, hi);
+        let s_lo = _mm256_castpd256_pd128(s); // [s0, s1]
+        let s_hi = _mm256_extractf128_pd::<1>(s); // [s2, s3]
+        let t = _mm_add_pd(s_lo, s_hi); // [s0+s2, s1+s3]
+        let t_hi = _mm_unpackhi_pd(t, t);
+        _mm_cvtsd_f64(_mm_add_sd(t, t_hi)) // (s0+s2) + (s1+s3)
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot(x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / LANES;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let x_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(xv));
+            let x_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(xv));
+            let y_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(yv));
+            let y_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(yv));
+            // widened products are exact in f64, so the fused rounding
+            // point equals mul-then-add — bit-identical to the scalar
+            // fallback's `acc += x as f64 * y as f64`
+            acc_lo = _mm256_fmadd_pd(x_lo, y_lo, acc_lo);
+            acc_hi = _mm256_fmadd_pd(x_hi, y_hi, acc_hi);
+        }
+        let mut tail = 0.0f64;
+        for i in chunks * LANES..n {
+            tail += x[i] as f64 * y[i] as f64;
+        }
+        reduce_pd(acc_lo, acc_hi) + tail
+    }
+
+    /// # Safety
+    /// Requires AVX2 and `x.len() == y.len()`.  Deliberately mul+add,
+    /// not FMA: the f64 x f64 product is not exact, and the scalar
+    /// contract rounds it before the accumulate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_wide(x: &[f64], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / LANES;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let x_lo = _mm256_loadu_pd(xp.add(i));
+            let x_hi = _mm256_loadu_pd(xp.add(i + 4));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let y_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(yv));
+            let y_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(yv));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(x_lo, y_lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(x_hi, y_hi));
+        }
+        let mut tail = 0.0f64;
+        for i in chunks * LANES..n {
+            tail += x[i] * y[i] as f64;
+        }
+        reduce_pd(acc_lo, acc_hi) + tail
+    }
+
+    /// # Safety
+    /// Requires AVX2 and `x.len() == y.len()`.  mul+add (no f32 FMA) so
+    /// every lane rounds exactly like the scalar `*yi += alpha * xi`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / LANES;
+        let av = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let r = _mm256_add_ps(yv, _mm256_mul_ps(av, xv));
+            _mm256_storeu_ps(yp.add(i), r);
+        }
+        for i in chunks * LANES..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 and `src.len() == dst.len()`.  Conversion is
+    /// exact, so vectorization is trivially bit-identical.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widen(src: &[f32], dst: &mut [f64]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let chunks = n / LANES;
+        let sp = src.as_ptr();
+        let dp = dst.as_mut_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let sv = _mm256_loadu_ps(sp.add(i));
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(sv));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(sv));
+            _mm256_storeu_pd(dp.add(i), lo);
+            _mm256_storeu_pd(dp.add(i + 4), hi);
+        }
+        for i in chunks * LANES..n {
+            dst[i] = src[i] as f64;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2, `ap.len() >= kc * MR`, `bp.len() >= kc * NR`.
+    ///
+    /// One 8-lane f32 register per microtile row, broadcast A element,
+    /// mul+add per `p` step — the same per-element rounding chain as
+    /// the scalar microkernel (f32 FMA would round once where the
+    /// contract rounds twice, so it is deliberately not used).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn microkernel(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for p in 0..kc {
+            let bv = _mm256_loadu_ps(b.add(p * NR));
+            let ac = a.add(p * MR);
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(*ac), bv));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(*ac.add(1)), bv));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(*ac.add(2)), bv));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(*ac.add(3)), bv));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_rule() {
+        // forcing scalar always wins, even with avx2 present
+        assert_eq!(select(true, true), Backend::Scalar);
+        assert_eq!(select(true, false), Backend::Scalar);
+        // otherwise the hardware decides
+        assert_eq!(select(false, true), Backend::Avx2Fma);
+        assert_eq!(select(false, false), Backend::Scalar);
+    }
+
+    #[test]
+    fn active_is_stable_and_consistent_with_env() {
+        let first = active();
+        // cached: repeated queries can never flip mid-process
+        assert_eq!(active(), first);
+        let forced = force_scalar_env();
+        if forced {
+            assert_eq!(first, Backend::Scalar);
+        }
+        if !avx2_available() {
+            assert_eq!(first, Backend::Scalar);
+        }
+        // description never panics and names the backend family
+        let d = description();
+        assert!(d.starts_with("scalar") || d.starts_with("avx2"));
+    }
+
+    #[test]
+    fn reduce_tree_association() {
+        // the tree is ((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7)) — check with
+        // magnitudes that would expose a different association
+        let a = [1e16, 1.0, -1e16, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let expect = ((1e16 + 3.0) + (-1e16 + 5.0)) + ((1.0 + 4.0) + (2.0 + 6.0));
+        assert_eq!(reduce_lanes(&a).to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn scalar_dot_matches_sequential_within_rounding() {
+        // the lane restructure changes the association, not the math:
+        // against a sequential f64 reference the error stays at rounding
+        // noise for benign data
+        let x: Vec<f32> = (0..1000).map(|i| ((i * 37) % 101) as f32 * 0.01 - 0.5).collect();
+        let y: Vec<f32> = (0..1000).map(|i| ((i * 53) % 97) as f32 * 0.02 - 1.0).collect();
+        let mut seq = 0.0f64;
+        for (a, b) in x.iter().zip(&y) {
+            seq += *a as f64 * *b as f64;
+        }
+        let lane = dot_on(Backend::Scalar, &x, &y);
+        assert!((lane - seq).abs() <= 1e-9 * seq.abs().max(1.0));
+    }
+
+    #[test]
+    fn lane_empty_and_tiny_inputs() {
+        assert_eq!(dot_on(Backend::Scalar, &[], &[]), 0.0);
+        assert_eq!(dot_on(Backend::Scalar, &[2.0], &[3.0]), 6.0);
+        let mut d = [0.0f64; 3];
+        widen_on(Backend::Scalar, &[1.0, -2.5, 0.5], &mut d);
+        assert_eq!(d, [1.0, -2.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_on_length_mismatch_panics_in_release_too() {
+        let _ = dot_on(Backend::Scalar, &[1.0, 2.0], &[1.0]);
+    }
+}

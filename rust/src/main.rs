@@ -1,11 +1,14 @@
 //! `dapc` CLI — leader entrypoint for the DAPC system.
 //!
 //! Subcommands:
-//!   solve    run a solver on a dataset (MatrixMarket or synthetic)
-//!   worker   serve a TCP worker (multi-process cluster)
-//!   graph    export the Algorithm-1 task graph as Graphviz DOT
-//!   info     list available AOT artifacts
-//!   generate write a synthetic Schenk-like dataset to MatrixMarket files
+//!   solve          run a solver on a dataset (MatrixMarket or synthetic)
+//!   worker         serve a TCP worker (multi-process cluster)
+//!   graph          export the Algorithm-1 task graph as Graphviz DOT
+//!   info           list available AOT artifacts
+//!   generate       write a synthetic Schenk-like dataset to MatrixMarket files
+//!   kernels        report the runtime-dispatched kernel backend (CI logs this
+//!                  on both legs of the DAPC_FORCE_SCALAR matrix)
+//!   bench-validate check BENCH_*.json bench artifacts parse and are non-hollow
 
 use std::path::{Path, PathBuf};
 
@@ -63,7 +66,8 @@ fn run(args: &[String]) -> Result<()> {
     if parsed.has_flag("help") || parsed.command.is_none() {
         println!(
             "dapc — Distributed Accelerated Projection-Based Consensus Decomposition\n\n\
-             usage: dapc <solve|worker|graph|info|generate> [options]\n\n{}",
+             usage: dapc <solve|worker|graph|info|generate|kernels|bench-validate> \
+             [options]\n\n{}",
             cli::usage(&specs)
         );
         return Ok(());
@@ -74,10 +78,51 @@ fn run(args: &[String]) -> Result<()> {
         "graph" => cmd_graph(&parsed),
         "info" => cmd_info(&parsed),
         "generate" => cmd_generate(&parsed),
+        "kernels" => cmd_kernels(),
+        "bench-validate" => cmd_bench_validate(&parsed),
         other => Err(DapcError::Parse(format!(
-            "unknown command {other:?} (expected solve|worker|graph|info|generate)"
+            "unknown command {other:?} (expected \
+             solve|worker|graph|info|generate|kernels|bench-validate)"
         ))),
     }
+}
+
+/// `dapc kernels`: which SIMD kernel backend this process would run, and
+/// why.  CI runs this on both legs of the dispatch matrix so the log
+/// records the detected CPU features next to each test run.
+fn cmd_kernels() -> Result<()> {
+    use dapc::linalg::simd;
+    println!("kernel backend: {}", simd::description());
+    println!("  avx2+fma detected: {}", simd::avx2_available());
+    println!(
+        "  DAPC_FORCE_SCALAR: {}",
+        std::env::var("DAPC_FORCE_SCALAR").unwrap_or_else(|_| "(unset)".into())
+    );
+    println!(
+        "  lane contract: {} fixed f64 accumulator lanes, shared reduction \
+         tree — dispatch never changes output bits",
+        simd::LANES
+    );
+    Ok(())
+}
+
+/// `dapc bench-validate FILE...`: fail loudly if any bench JSON artifact
+/// is missing, unparseable, or hollow (no records / broken keys).
+fn cmd_bench_validate(parsed: &cli::ParsedArgs) -> Result<()> {
+    if parsed.positionals.is_empty() {
+        return Err(DapcError::Config(
+            "bench-validate needs one or more BENCH_*.json paths".into(),
+        ));
+    }
+    let mut total = 0usize;
+    for p in &parsed.positionals {
+        let n = dapc::benchkit::validate_report_file(Path::new(p))
+            .map_err(|e| DapcError::Parse(format!("{p}: {e}")))?;
+        println!("OK {p} ({n} records)");
+        total += n;
+    }
+    println!("{} file(s) valid, {total} records", parsed.positionals.len());
+    Ok(())
 }
 
 fn build_config(parsed: &cli::ParsedArgs) -> Result<RunConfig> {

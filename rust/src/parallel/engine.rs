@@ -25,6 +25,13 @@
 //! Jobs never nest scopes on the pool (that would deadlock a fully
 //! occupied pool), which is why the per-partition round jobs call the
 //! *serial* kernels.
+//!
+//! The scalar kernels these jobs run are themselves runtime-dispatched
+//! ([`crate::linalg::simd`]): AVX2+FMA or the lane-structured scalar
+//! fallback.  That dispatch is bit-deterministic by the same standard as
+//! the scheduling above — `DAPC_FORCE_SCALAR=1`, like `--threads N`,
+//! changes throughput and never a single output bit — so engine
+//! equivalence holds across *both* axes at once.
 
 use std::sync::Arc;
 

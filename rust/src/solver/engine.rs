@@ -185,10 +185,12 @@ pub(crate) fn average_chunk_kernel<S: AsRef<[f32]>>(
 /// to f64 once and reused for all k [`blas::dot_wide`] products, so the
 /// O(n^2) projector sweep (memory traffic + f32->f64 widening) is paid
 /// once per batch instead of once per column.  Per column the arithmetic
-/// is exactly [`update_kernel`]'s (`dot`'s 4-way f64 split in the same
-/// order), so a batch of k is bit-identical to k sequential updates —
-/// which is also why this must NOT call `blas::gemm`: the packed
-/// microkernel accumulates in f32 and would break that equality.
+/// is exactly [`update_kernel`]'s (`dot`'s fixed 8-lane f64 split in the
+/// same order — the `linalg::simd` lane contract guarantees this on both
+/// the AVX2 and scalar dispatch paths), so a batch of k is bit-identical
+/// to k sequential updates — which is also why this must NOT call
+/// `blas::gemm`: the packed microkernel accumulates in f32 and would
+/// break that equality.
 ///
 /// `xs`/`xbars`/`scratch`/`out` hold k n-length columns; `wide` is one
 /// n-length f64 buffer.

@@ -1,0 +1,326 @@
+//! The lane-deterministic dispatch contract, enforced bitwise.
+//!
+//! `linalg::simd` promises that the AVX2+FMA kernels and the
+//! lane-structured scalar fallbacks produce **bit-identical** results —
+//! that is what keeps every `assert_eq!` equivalence suite in this repo
+//! (cross-engine, warm == cold, batch == sequential, pooled == serial)
+//! valid on any CPU and under `DAPC_FORCE_SCALAR=1`.  This suite sweeps
+//! every kernel across all `n % 8` remainder classes at several
+//! magnitudes, plus NaN-propagation cases matching the `norms::max_abs`
+//! policy (a NaN is never silently dropped).
+//!
+//! On hardware without AVX2+FMA the vector leg is skipped (there is
+//! nothing to compare); the dispatched-vs-scalar assertions still run
+//! and the CI dispatch matrix covers the vector leg on x86-64 runners.
+
+use dapc::linalg::simd::{self, Backend, LANES, MR, NR};
+use dapc::linalg::{blas, Matrix};
+use dapc::rng::seeded;
+
+/// Scalar + (when the CPU supports it) the AVX2+FMA backend.
+fn backends() -> Vec<Backend> {
+    let v = simd::available();
+    if !v.contains(&Backend::Avx2Fma) {
+        eprintln!("simd_lane_contract: no avx2+fma, vector leg skipped");
+    }
+    v
+}
+
+/// Every remainder class `n % 8 ∈ 0..=7` around several magnitudes:
+/// below one lane block, exactly at block boundaries, and deep into the
+/// vector body.
+fn sweep_lengths() -> Vec<usize> {
+    let mut v = Vec::new();
+    for base in [0usize, LANES, 8 * LANES, 32 * LANES, 125 * LANES] {
+        for r in 0..LANES {
+            v.push(base + r);
+        }
+    }
+    v
+}
+
+fn rand_f32(len: usize, seed: u64) -> Vec<f32> {
+    let mut g = seeded(seed);
+    (0..len).map(|_| g.normal_f32()).collect()
+}
+
+/// f64 values that are NOT exact widenings of any f32 (the sum of two
+/// scaled f32s needs more than 24 mantissa bits), exercising the
+/// dot_wide rounding contract on genuinely wide inputs.
+fn rand_f64_unwidenable(len: usize, seed: u64) -> Vec<f64> {
+    let mut g = seeded(seed);
+    (0..len)
+        .map(|_| g.normal_f32() as f64 + g.normal_f32() as f64 * 1e-9)
+        .collect()
+}
+
+fn assert_f64_bits_eq(a: f64, b: f64, ctx: &str) {
+    let same = (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits();
+    assert!(same, "{ctx}: {a:?} ({:#x}) vs {b:?} ({:#x})", a.to_bits(), b.to_bits());
+}
+
+fn assert_f32_slice_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let same = (x.is_nan() && y.is_nan()) || x.to_bits() == y.to_bits();
+        assert!(same, "{ctx}: element {i}: {x:?} vs {y:?}");
+    }
+}
+
+#[test]
+fn dot_bitwise_across_backends_and_remainder_classes() {
+    let backends = backends();
+    for &n in &sweep_lengths() {
+        let x = rand_f32(n, 10_000 + n as u64);
+        let y = rand_f32(n, 20_000 + n as u64);
+        let reference = simd::dot_on(Backend::Scalar, &x, &y);
+        for &b in &backends {
+            let got = simd::dot_on(b, &x, &y);
+            assert_f64_bits_eq(got, reference, &format!("dot n={n} {:?}", b));
+        }
+        // and the dispatched wrapper (whatever `active()` picked) agrees
+        assert_f64_bits_eq(blas::dot(&x, &y), reference, &format!("dot dispatch n={n}"));
+    }
+}
+
+#[test]
+fn dot_wide_bitwise_across_backends_and_remainder_classes() {
+    let backends = backends();
+    for &n in &sweep_lengths() {
+        let y = rand_f32(n, 30_000 + n as u64);
+        // widened-f32 left operand (the batched-solve case) ...
+        let x32 = rand_f32(n, 40_000 + n as u64);
+        let mut xw = vec![0.0f64; n];
+        blas::widen(&x32, &mut xw);
+        // ... and a genuinely-f64 left operand (full rounding exposure)
+        let xd = rand_f64_unwidenable(n, 50_000 + n as u64);
+        for x in [&xw, &xd] {
+            let reference = simd::dot_wide_on(Backend::Scalar, x, &y);
+            for &b in &backends {
+                let got = simd::dot_wide_on(b, x, &y);
+                assert_f64_bits_eq(got, reference, &format!("dot_wide n={n} {:?}", b));
+            }
+            assert_f64_bits_eq(
+                blas::dot_wide(x, &y),
+                reference,
+                &format!("dot_wide dispatch n={n}"),
+            );
+        }
+        // the cross-kernel identity the batched update depends on:
+        // pre-widening must not change a bit, on any backend
+        for &b in &backends {
+            assert_f64_bits_eq(
+                simd::dot_wide_on(b, &xw, &y),
+                simd::dot_on(b, &x32, &y),
+                &format!("dot_wide == dot (widened) n={n} {:?}", b),
+            );
+        }
+    }
+}
+
+#[test]
+fn axpy_bitwise_across_backends_and_remainder_classes() {
+    let backends = backends();
+    for &n in &sweep_lengths() {
+        let x = rand_f32(n, 60_000 + n as u64);
+        let y0 = rand_f32(n, 70_000 + n as u64);
+        let mut reference = y0.clone();
+        simd::axpy_on(Backend::Scalar, -0.731, &x, &mut reference);
+        for &b in &backends {
+            let mut y = y0.clone();
+            simd::axpy_on(b, -0.731, &x, &mut y);
+            assert_f32_slice_bits_eq(&y, &reference, &format!("axpy n={n} {:?}", b));
+        }
+        let mut y = y0.clone();
+        blas::axpy(-0.731, &x, &mut y);
+        assert_f32_slice_bits_eq(&y, &reference, &format!("axpy dispatch n={n}"));
+    }
+}
+
+#[test]
+fn widen_bitwise_across_backends_and_remainder_classes() {
+    let backends = backends();
+    for &n in &sweep_lengths() {
+        let src = rand_f32(n, 80_000 + n as u64);
+        let mut reference = vec![0.0f64; n];
+        simd::widen_on(Backend::Scalar, &src, &mut reference);
+        // widening is exact: spot-check the definition, not just agreement
+        for (d, &s) in reference.iter().zip(&src) {
+            assert_eq!(*d, s as f64);
+        }
+        for &b in &backends {
+            let mut dst = vec![0.0f64; n];
+            simd::widen_on(b, &src, &mut dst);
+            assert_eq!(dst, reference, "widen n={n} {:?}", b);
+        }
+    }
+}
+
+#[test]
+fn gemm_microkernel_bitwise_across_backends_and_depths() {
+    // kc sweeps the depth of the packed panels — the microkernel's only
+    // loop — including 0, tiny depths, the KC default (256) and a ragged
+    // past-the-block value.  Since pack_a/pack_b and the fringe writeback
+    // in `gemm_into` are backend-independent plain code, microkernel
+    // equality here lifts to full-gemm bit-equality under dispatch.
+    let backends = backends();
+    for &kc in &[0usize, 1, 2, 3, 5, 8, 13, 64, 256, 300] {
+        let ap = rand_f32(kc * MR, 90_000 + kc as u64);
+        let bp = rand_f32(kc * NR, 91_000 + kc as u64);
+        let mut reference = [[0.1f32; NR]; MR]; // nonzero: kernel accumulates
+        simd::microkernel_on(Backend::Scalar, kc, &ap, &bp, &mut reference);
+        for &b in &backends {
+            let mut acc = [[0.1f32; NR]; MR];
+            simd::microkernel_on(b, kc, &ap, &bp, &mut acc);
+            for (i, (got, want)) in acc.iter().zip(&reference).enumerate() {
+                assert_f32_slice_bits_eq(
+                    got,
+                    want,
+                    &format!("microkernel kc={kc} row {i} {:?}", b),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_end_to_end_matches_f64_oracle_under_active_dispatch() {
+    // belt-and-braces for the lifting argument above: the dispatched
+    // gemm (whatever backend is active in this process) stays correct
+    // across fringe/blocking shapes
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+    for &(m, k, n) in &[(5, 9, 11), (64, 256, 8), (65, 257, 9)] {
+        let mut g = seeded((m * 7 + k * 3 + n) as u64);
+        let a = Matrix::from_fn(m, k, |_, _| g.normal_f32());
+        let b = Matrix::from_fn(k, n, |_, _| g.normal_f32());
+        let c = blas::gemm(&a, &b);
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "({m},{k},{n})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NaN propagation — matching the `norms::max_abs` policy: a NaN input is
+// never silently dropped, on either dispatch path.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_propagates_nan_from_any_position_on_all_backends() {
+    // positions cover the first lane block, a mid-body lane, and the
+    // sequential tail of a length with remainder 5
+    let n = 3 * LANES + 5;
+    let backends = backends();
+    for &pos in &[0usize, 1, LANES + 3, 2 * LANES, n - 1] {
+        for side in 0..2 {
+            let mut x = rand_f32(n, 95_000 + pos as u64);
+            let mut y = rand_f32(n, 96_000 + pos as u64);
+            if side == 0 {
+                x[pos] = f32::NAN;
+            } else {
+                y[pos] = f32::NAN;
+            }
+            for &b in &backends {
+                let got = simd::dot_on(b, &x, &y);
+                assert!(got.is_nan(), "dot NaN at {pos} side {side} {:?}: {got}", b);
+            }
+            assert!(blas::dot(&x, &y).is_nan(), "dispatched dot NaN at {pos}");
+        }
+    }
+}
+
+#[test]
+fn dot_wide_propagates_nan_on_all_backends() {
+    let n = 2 * LANES + 3;
+    let backends = backends();
+    for &pos in &[0usize, LANES + 1, n - 1] {
+        let mut x = rand_f64_unwidenable(n, 97_000 + pos as u64);
+        let y = rand_f32(n, 98_000 + pos as u64);
+        x[pos] = f64::NAN;
+        for &b in &backends {
+            assert!(
+                simd::dot_wide_on(b, &x, &y).is_nan(),
+                "dot_wide NaN at {pos} {:?}",
+                b
+            );
+        }
+    }
+}
+
+#[test]
+fn axpy_poisons_exactly_the_nan_lanes_on_all_backends() {
+    let n = 2 * LANES + 6;
+    let backends = backends();
+    let pos = LANES + 2; // inside the vector body
+    let tail_pos = n - 1; // inside the sequential tail
+    let mut x = rand_f32(n, 99_000);
+    let y0 = rand_f32(n, 99_001);
+    x[pos] = f32::NAN;
+    x[tail_pos] = f32::NAN;
+    let mut reference = y0.clone();
+    simd::axpy_on(Backend::Scalar, 2.5, &x, &mut reference);
+    assert!(reference[pos].is_nan() && reference[tail_pos].is_nan());
+    for &b in &backends {
+        let mut y = y0.clone();
+        simd::axpy_on(b, 2.5, &x, &mut y);
+        // NaN lanes poisoned, all other lanes still bitwise identical
+        assert_f32_slice_bits_eq(&y, &reference, &format!("axpy NaN {:?}", b));
+    }
+}
+
+#[test]
+fn microkernel_poisons_exactly_the_nan_column_on_all_backends() {
+    let backends = backends();
+    let kc = 9;
+    let mut ap = rand_f32(kc * MR, 99_100);
+    let bp = rand_f32(kc * NR, 99_101);
+    ap[3 * MR + 1] = f32::NAN; // row 1 of the tile, depth step 3
+    let mut reference = [[0.0f32; NR]; MR];
+    simd::microkernel_on(Backend::Scalar, kc, &ap, &bp, &mut reference);
+    for &v in &reference[1] {
+        assert!(v.is_nan(), "NaN A element must poison its whole tile row");
+    }
+    for &b in &backends {
+        let mut acc = [[0.0f32; NR]; MR];
+        simd::microkernel_on(b, kc, &ap, &bp, &mut acc);
+        for (i, (got, want)) in acc.iter().zip(&reference).enumerate() {
+            assert_f32_slice_bits_eq(
+                got,
+                want,
+                &format!("microkernel NaN row {i} {:?}", b),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch selection plumbing.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_scalar_env_pins_the_scalar_backend() {
+    // this binary runs twice in CI: natively and with DAPC_FORCE_SCALAR=1
+    let forced = std::env::var("DAPC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false);
+    if forced {
+        assert_eq!(simd::active(), Backend::Scalar);
+        assert!(simd::description().contains("DAPC_FORCE_SCALAR"));
+    } else if simd::avx2_available() {
+        assert_eq!(simd::active(), Backend::Avx2Fma);
+    } else {
+        assert_eq!(simd::active(), Backend::Scalar);
+    }
+    // the selection rule itself, independent of this process's env
+    assert_eq!(simd::select(true, true), Backend::Scalar);
+    assert_eq!(simd::select(false, true), Backend::Avx2Fma);
+    assert_eq!(simd::select(false, false), Backend::Scalar);
+}
