@@ -12,9 +12,15 @@
 //! which CI validates and uploads.  Timing *ratios* are deliberately
 //! not asserted here: shared CI runners jitter too much for a hard
 //! gate, and the JSON keeps the trajectory reviewable instead.
+//!
+//! Three gemm comparison lines ride along for the raw-speed tier: the
+//! packed trailing-sweep gemm vs the column-separable per-column dots it
+//! replaced (at the QR sweep shape), tier-0 vs the opt-in tier-1 FMA
+//! microkernel on identical inputs, and the direct-vs-packed small-`n`
+//! crossover that the per-shape `GemmPath::Auto` dispatch encodes.
 
 use dapc::benchkit::{black_box, quick_mode, Bench, BenchResult, JsonReport};
-use dapc::linalg::simd::{self, Backend, MR, NR};
+use dapc::linalg::simd::{self, Backend, KernelTier, MR, NR};
 use dapc::linalg::{blas, inverse, qr, triangular, Matrix};
 use dapc::rng::seeded;
 
@@ -131,6 +137,113 @@ fn main() {
         micro.push((b, res));
     }
     speedup_line("microkernel", kc, &micro);
+    println!();
+
+    // -----------------------------------------------------------------
+    // The packed trailing-sweep gemm vs the column-separable baseline it
+    // replaced, plus the kernel-tier line (tier-0 unfused vs tier-1
+    // FMA), at the QR sweep shape: W = Vᵀ·B with nb = PANEL reflectors
+    // applied to a block of trailing columns
+    // -----------------------------------------------------------------
+    let nb = qr::PANEL;
+    let (lp, ncols) = if quick_mode() { (256, 128) } else { (480, 288) };
+    let vrows = randv(nb * lp, 31); // reflector block, row-major nb x lp
+    let bcols = randv(lp * ncols, 32); // trailing columns, column-major
+    let mut w = vec![0.0f32; nb * ncols];
+
+    let cols_res = bench.run(&format!("sweep gemm {nb}x{lp}x{ncols} [columns]"), || {
+        for j in 0..ncols {
+            let col = &bcols[j * lp..(j + 1) * lp];
+            for s in 0..nb {
+                w[s * ncols + j] = blas::dot(&vrows[s * lp..(s + 1) * lp], col) as f32;
+            }
+        }
+        black_box(w[0]);
+    });
+    let cols_med = cols_res.stats.median();
+    report.add(
+        &cols_res,
+        &[("n", ncols as f64)],
+        &[("kernel", "sweep_columns"), ("backend", active.name())],
+    );
+
+    // the reflector block packs once per sweep (as in qr::apply_block);
+    // the column block re-packs every call, as it does per chunk
+    let mut vt_pack = vec![0.0f32; blas::packed_a_len(nb, lp)];
+    blas::pack_a_strided(&vrows, lp, 1, nb, lp, &mut vt_pack);
+    let mut b_pack = vec![0.0f32; blas::packed_b_len(lp, ncols)];
+    let tiers = [
+        ("t0", KernelTier::Deterministic),
+        ("t1", KernelTier::Fast),
+    ];
+    let mut packed_med = Vec::new();
+    for (label, tier) in tiers {
+        let res = bench.run(&format!("sweep gemm {nb}x{lp}x{ncols} [packed {label}]"), || {
+            blas::pack_b_strided(&bcols, 1, lp, lp, ncols, &mut b_pack);
+            blas::packed_gemm_into(
+                active,
+                tier,
+                nb,
+                ncols,
+                lp,
+                &vt_pack,
+                &b_pack,
+                blas::Accum::Store,
+                &mut w,
+                ncols,
+                1,
+            );
+            black_box(w[0]);
+        });
+        packed_med.push(res.stats.median());
+        let lab = format!("sweep_packed_{label}");
+        report.add(
+            &res,
+            &[("n", ncols as f64)],
+            &[("kernel", lab.as_str()), ("backend", active.name())],
+        );
+    }
+    println!(
+        "  -> sweep gemm {nb}x{lp}x{ncols}: packed t0 {:.2}x vs columns, t1 {:.2}x vs t0",
+        cols_med / packed_med[0].max(1e-12),
+        packed_med[0] / packed_med[1].max(1e-12)
+    );
+    println!();
+
+    // -----------------------------------------------------------------
+    // Per-shape dispatch crossover: at n < NR the packed path wastes
+    // most of every microtile, so the direct dot/axpy path wins — Auto
+    // switches on n < NR (or m < MR); these lines record the crossover
+    // that rule encodes
+    // -----------------------------------------------------------------
+    let km = 192;
+    let paths = [
+        ("direct", blas::GemmPath::Direct),
+        ("packed", blas::GemmPath::Packed),
+    ];
+    for &nn in &[2usize, 4, NR, 4 * NR] {
+        let a = randm(km, km, 41);
+        let b = randm(km, nn, 42);
+        let mut c = Matrix::zeros(km, nn);
+        let mut medians = Vec::new();
+        for (label, path) in paths {
+            let res = bench.run(&format!("gemm {km}x{km}x{nn} [{label}]"), || {
+                blas::gemm_into_with(path, &a, &b, &mut c);
+                black_box(c.as_slice()[0]);
+            });
+            medians.push(res.stats.median());
+            let lab = format!("gemm_smalln_{label}");
+            report.add(
+                &res,
+                &[("m", km as f64), ("n", nn as f64)],
+                &[("kernel", lab.as_str()), ("backend", active.name())],
+            );
+        }
+        println!(
+            "  -> n={nn}: direct {:.2}x vs packed",
+            medians[1] / medians[0].max(1e-12)
+        );
+    }
     println!();
 
     // -----------------------------------------------------------------

@@ -9,6 +9,10 @@
 //! that cold phase scale with `--threads`: partitions factorize
 //! concurrently, and when partitions are scarcer than pool workers each
 //! factorization fans its trailing updates over the whole pool instead.
+//! The trailing sweeps run through the packed gemm microkernel and the
+//! in-panel reflector applications fan over the pool too (the previously
+//! serial O(l·PANEL²) per panel) — this bench is the scaling gate for
+//! both: the 4-thread assert below fails if either path stops paying.
 //!
 //! The bench asserts that cold-register wall time strictly improves from
 //! the sequential engine to 4 threads, and that every engine registers

@@ -21,6 +21,40 @@
 //! allowed, NaN policy); `tests/simd_lane_contract.rs` enforces it
 //! bitwise across every `n % 8` remainder class.
 //!
+//! # The chunk-stable packing contract
+//!
+//! The packed-gemm entry points ([`pack_a_strided`], [`pack_b_strided`],
+//! [`packed_gemm_into`]) promise that **the f32 accumulation order of
+//! every output element is a pure function of its (row-tile, col-tile,
+//! depth-block) coordinates** — never of which thread packed a panel,
+//! which thread ran a tile, or how the caller chunked the output:
+//!
+//! * packing is a pure gather: `a_pack[q*k*MR + p*MR + i]` and
+//!   `b_pack[q*k*NR + p*NR + j]` are plain copies (zero-padded fringes),
+//!   so packing the panels in parallel, in any order, yields identical
+//!   buffers;
+//! * the microkernel's `MR x NR` lanes are elementwise-independent: a
+//!   tile's position selects *which* accumulator lane an element lands
+//!   in, never the arithmetic performed on that lane;
+//! * depth blocking is a function of `k` alone: every element is
+//!   accumulated per `KC` block (accumulator zeroed, `kc` sequential
+//!   steps, one add into C), whatever the surrounding tile loops do.
+//!
+//! Consequence: splitting the *columns* of C across threads (each worker
+//! packs its own B panels against one shared packed A) reproduces the
+//! serial bits exactly — this is what lets the QR trailing sweeps run
+//! through the packed microkernel while keeping `householder_qr_pooled`
+//! bitwise-equal to serial at any thread count
+//! (`tests/packing_contract.rs` proves the property over every
+//! `m % MR` / `n % NR` / `k % 8` remainder class with 1, 2 and 7
+//! workers).  The contract holds at *both* kernel tiers: tier-1 changes
+//! the per-element rounding (fused multiply-add), not the per-element
+//! order, so within one backend tier-1 results are equally
+//! chunk-stable.  Small blocks (`m < MR` or `n < NR`) skip packing
+//! entirely ([`GemmPath`]): the direct dot/axpy path replays the same
+//! per-element order, bitwise-identical to the packed path under
+//! tier-0.
+//!
 //! # Block-size tuning (`MC`/`KC`/`NC`)
 //!
 //! The three cache block sizes map onto the cache hierarchy:
@@ -45,16 +79,16 @@
 //! below were chosen for a generic x86-64 container; re-tune when the
 //! deployment hardware is known (see ROADMAP "Performance").
 
-use super::simd::{self, MR, NR};
+use super::simd::{self, Backend, KernelTier, MR, NR};
 use super::Matrix;
 use crate::parallel::ThreadPool;
 
 /// Rows of the packed A panel (L2 block).
-const MC: usize = 64;
+pub const MC: usize = 64;
 /// Shared (depth) dimension of both packed panels (L1/L2 block).
-const KC: usize = 256;
+pub const KC: usize = 256;
 /// Columns of the packed B panel (L3 block).
-const NC: usize = 512;
+pub const NC: usize = 512;
 
 /// `y += alpha * x` (axpy), runtime-dispatched (`linalg::simd`).
 ///
@@ -155,8 +189,50 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+/// Which gemm inner path [`gemm_into_on`] takes.
+///
+/// `Auto` picks `Direct` exactly when the output is thinner than one
+/// microtile (`m < MR` or `n < NR`) — the fat-regime projector blocks
+/// and single-vector products where packing overhead is a recorded
+/// loss — and `Packed` otherwise.  The choice is a pure function of the
+/// problem shape, and under tier-0 the two paths agree bitwise anyway
+/// (regression-tested below), so dispatch never costs reproducibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GemmPath {
+    /// Shape-deterministic choice between the other two.
+    #[default]
+    Auto,
+    /// Packed panels + register-tiled microkernel (the BLIS nest).
+    Packed,
+    /// No packing: per-row axpy accumulation (same per-element order).
+    Direct,
+}
+
 /// `C = A B` into a caller-provided output (overwritten).
+///
+/// Shape-dispatched ([`GemmPath::Auto`]) under the process-default
+/// backend and kernel tier.
 pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_into_on(simd::active(), simd::active_tier(), GemmPath::Auto, a, b, c)
+}
+
+/// [`gemm_into`] with an explicit inner path (benches and the crossover
+/// regression tests pin `Packed` / `Direct` to compare them).
+pub fn gemm_into_with(path: GemmPath, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_into_on(simd::active(), simd::active_tier(), path, a, b, c)
+}
+
+/// `C = A B` with every dispatch decision explicit: backend, kernel
+/// tier, and inner path.  The engines route through this so a per-solve
+/// [`KernelTier`] override reaches the flop-carrying loops.
+pub fn gemm_into_on(
+    backend: Backend,
+    tier: KernelTier,
+    path: GemmPath,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
     assert_eq!(a.cols(), b.rows(), "gemm inner dimension mismatch");
     assert_eq!(c.rows(), a.rows(), "gemm output rows mismatch");
     assert_eq!(c.cols(), b.cols(), "gemm output cols mismatch");
@@ -165,9 +241,15 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    // one dispatch decision for the whole product, hoisted out of the
-    // tile loops (the choice cannot affect the bits — simd module docs)
-    let backend = simd::active();
+    let direct = match path {
+        GemmPath::Auto => m < MR || n < NR,
+        GemmPath::Packed => false,
+        GemmPath::Direct => true,
+    };
+    if direct {
+        gemm_direct(backend, a, b, c);
+        return;
+    }
 
     // pack buffers sized to the largest panel this problem needs
     let kc_max = KC.min(k);
@@ -198,7 +280,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
                         let mr = MR.min(mc - ir);
                         let ap = &a_pack[t * kc * MR..(t + 1) * kc * MR];
                         let mut acc = [[0.0f32; NR]; MR];
-                        simd::microkernel_on(backend, kc, ap, bp, &mut acc);
+                        simd::microkernel_tier_on(backend, tier, kc, ap, bp, &mut acc);
                         // fringe lanes were zero-padded in the packs, so
                         // the full tile is valid; write only the live part
                         for i in 0..mr {
@@ -214,6 +296,36 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             pc += KC;
         }
         jc += NC;
+    }
+}
+
+/// The no-packing inner path for thin outputs (`m < MR` or `n < NR`).
+///
+/// Replays the packed path's per-element accumulation order exactly —
+/// per `KC` depth block: zero a per-row f32 accumulator, one [`axpy`]
+/// per depth step (f32 mul + add, same rounding as the tier-0
+/// microkernel lane step), then fold the block into C — so under tier-0
+/// the two paths are bitwise-identical for every shape.  The direct
+/// path is tier-independent (axpy never fuses): at tier-1 the paths may
+/// differ by fused rounding, but [`GemmPath::Auto`] is a pure function
+/// of shape, so any given product always takes the same path.
+fn gemm_direct(backend: Backend, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut acc_row = vec![0.0f32; n];
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        for i in 0..m {
+            acc_row.fill(0.0);
+            let arow = a.row(i);
+            for p in 0..kc {
+                simd::axpy_on(backend, arow[pc + p], b.row(pc + p), &mut acc_row);
+            }
+            for (cj, aj) in c.row_mut(i).iter_mut().zip(&acc_row) {
+                *cj += *aj;
+            }
+        }
+        pc += KC;
     }
 }
 
@@ -275,6 +387,170 @@ fn pack_b(
                 .copy_from_slice(&brow[jc + c0..jc + c0 + cols]);
             for j in cols..NR {
                 buf[off + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Length of a full-depth packed A buffer for an `m x k` operand:
+/// `m.div_ceil(MR)` MR-row panels, each `k * MR` long (fringe rows
+/// zero-padded by the packer).
+#[inline]
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * MR * k
+}
+
+/// Length of a full-depth packed B buffer for a `k x n` operand:
+/// `n.div_ceil(NR)` NR-column panels, each `k * NR` long.
+#[inline]
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * NR * k
+}
+
+/// Pack a strided `m x k` operand into full-depth MR-row panels:
+/// `buf[q*k*MR + p*MR + i] = src[(q*MR + i)*rs + p*cs]` (ragged last
+/// panel zero-padded).
+///
+/// A pure gather — part of the chunk-stable packing contract (module
+/// docs): packing panels in any order, on any thread, produces
+/// identical bytes.  The stride pair expresses both orientations
+/// without a copy: `rs = ld, cs = 1` packs row-major rows, `rs = 1,
+/// cs = ld` packs a column-major view (i.e. the transpose) — the QR
+/// sweeps use both over the same reflector block.
+pub fn pack_a_strided(src: &[f32], rs: usize, cs: usize, m: usize, k: usize, buf: &mut [f32]) {
+    let panels = m.div_ceil(MR);
+    assert!(buf.len() >= panels * MR * k, "packed A buffer too short");
+    if m > 0 && k > 0 {
+        // highest index touched by the gather below
+        assert!((m - 1) * rs + (k - 1) * cs < src.len(), "packed A source too short");
+    }
+    for q in 0..panels {
+        let r0 = q * MR;
+        let rows = MR.min(m - r0);
+        let base = q * k * MR;
+        for i in 0..MR {
+            if i < rows {
+                for p in 0..k {
+                    buf[base + p * MR + i] = src[(r0 + i) * rs + p * cs];
+                }
+            } else {
+                for p in 0..k {
+                    buf[base + p * MR + i] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a strided `k x n` operand into full-depth NR-column panels:
+/// `buf[q*k*NR + p*NR + j] = src[p*rs + (q*NR + j)*cs]` (ragged last
+/// panel zero-padded).  Same pure-gather contract as
+/// [`pack_a_strided`].
+pub fn pack_b_strided(src: &[f32], rs: usize, cs: usize, k: usize, n: usize, buf: &mut [f32]) {
+    let panels = n.div_ceil(NR);
+    assert!(buf.len() >= panels * NR * k, "packed B buffer too short");
+    if n > 0 && k > 0 {
+        assert!((k - 1) * rs + (n - 1) * cs < src.len(), "packed B source too short");
+    }
+    for q in 0..panels {
+        let c0 = q * NR;
+        let cols = NR.min(n - c0);
+        let base = q * k * NR;
+        for p in 0..k {
+            let off = base + p * NR;
+            for j in 0..cols {
+                buf[off + j] = src[p * rs + (c0 + j) * cs];
+            }
+            for j in cols..NR {
+                buf[off + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// How [`packed_gemm_into`] combines the product with the output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accum {
+    /// `C = A B` (the output's prior contents never enter the sum).
+    Store,
+    /// `C -= A B` (the trailing-update shape `A -= V (T^T W)`).
+    Sub,
+}
+
+/// Register-tiled gemm over **pre-packed** operands, with strided
+/// output: `C (+)= op(A_pack B_pack)` per [`Accum`].
+///
+/// The caller packs once with [`pack_a_strided`] / [`pack_b_strided`]
+/// and may reuse either pack across many calls — the QR trailing sweep
+/// packs the reflector block once per panel and streams every trailing
+/// column chunk against it.  `c[(i, j)]` lives at `i*rs_c + j*cs_c`, so
+/// both row-major chunks and column-major scratch (the `W` buffer) are
+/// valid outputs without a transpose.
+///
+/// Accumulation order per element is fixed by the contract (module
+/// docs): per `KC` depth block — accumulator zeroed, `kc` sequential
+/// fused-or-not steps (per `tier`), one combine into C (`Store`: first
+/// block writes, later blocks add; `Sub`: every block subtracts).  The
+/// order is a pure function of (i, j, k), so results are independent of
+/// how the caller chunked rows or columns across threads.
+pub fn packed_gemm_into(
+    backend: Backend,
+    tier: KernelTier,
+    m: usize,
+    n: usize,
+    k: usize,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    accum: Accum,
+    c: &mut [f32],
+    rs_c: usize,
+    cs_c: usize,
+) {
+    assert!(a_pack.len() >= packed_a_len(m, k), "packed A too short");
+    assert!(b_pack.len() >= packed_b_len(k, n), "packed B too short");
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(
+        (m - 1) * rs_c + (n - 1) * cs_c < c.len(),
+        "packed gemm output too short"
+    );
+    if k == 0 {
+        if accum == Accum::Store {
+            for i in 0..m {
+                for j in 0..n {
+                    c[i * rs_c + j * cs_c] = 0.0;
+                }
+            }
+        }
+        return;
+    }
+    let row_panels = m.div_ceil(MR);
+    let col_panels = n.div_ceil(NR);
+    for q in 0..col_panels {
+        let nr = NR.min(n - q * NR);
+        for t in 0..row_panels {
+            let mr = MR.min(m - t * MR);
+            let mut pc = 0;
+            while pc < k {
+                let kc = KC.min(k - pc);
+                // full-depth panels keep each depth block's sliver
+                // contiguous: panel stride k*MR (k*NR), block offset pc
+                let ap = &a_pack[t * k * MR + pc * MR..][..kc * MR];
+                let bp = &b_pack[q * k * NR + pc * NR..][..kc * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                simd::microkernel_tier_on(backend, tier, kc, ap, bp, &mut acc);
+                for i in 0..mr {
+                    for (j, &v) in acc[i][..nr].iter().enumerate() {
+                        let idx = (t * MR + i) * rs_c + (q * NR + j) * cs_c;
+                        match accum {
+                            Accum::Store if pc == 0 => c[idx] = v,
+                            Accum::Store => c[idx] += v,
+                            Accum::Sub => c[idx] -= v,
+                        }
+                    }
+                }
+                pc += KC;
             }
         }
     }
@@ -512,5 +788,184 @@ mod tests {
     #[should_panic]
     fn dot_length_mismatch_panics_in_release_too() {
         let _ = dot(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn direct_and_packed_paths_agree_bitwise_under_tier0() {
+        // the per-shape dispatch regression: whatever Auto would pick,
+        // both inner paths must produce identical bits at tier-0 —
+        // shapes cover the crossover region (thin m, thin n, both, and
+        // fat shapes that straddle a KC depth boundary)
+        let backend = simd::active();
+        for &(m, k, n) in &[
+            (1, 5, 1),
+            (2, 300, 3),   // thin both ways, multi-KC depth
+            (3, 17, 40),   // m < MR only
+            (40, 17, 5),   // n < NR only
+            (13, 257, 23), // fat: packed is the natural path
+        ] {
+            let a = randm(m, k, (m * 31 + k) as u64);
+            let b = randm(k, n, (n * 17 + 1) as u64);
+            let mut c_direct = Matrix::zeros(m, n);
+            let mut c_packed = Matrix::zeros(m, n);
+            gemm_into_on(
+                backend,
+                KernelTier::Deterministic,
+                GemmPath::Direct,
+                &a,
+                &b,
+                &mut c_direct,
+            );
+            gemm_into_on(
+                backend,
+                KernelTier::Deterministic,
+                GemmPath::Packed,
+                &a,
+                &b,
+                &mut c_packed,
+            );
+            let db: Vec<u32> = c_direct.as_slice().iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = c_packed.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(db, pb, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn auto_path_small_shapes_match_naive() {
+        // Auto sends these through the direct path; accuracy must hold
+        for &(m, k, n) in &[(1, 1, 1), (3, 40, 2), (2, 513, 7), (1, 9, 100)] {
+            let a = randm(m, k, (m + k) as u64);
+            let b = randm(k, n, (k + n + 7) as u64);
+            let c = gemm(&a, &b);
+            assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_into_matches_gemm_into() {
+        // the pre-packed entry must agree with the blocked path exactly:
+        // both accumulate per KC depth block in the same per-element
+        // order, and Store-first-block == fill(0.0)-then-add up to the
+        // sign of zero (exercised shapes avoid exact-zero outputs)
+        let backend = simd::active();
+        for &(m, k, n) in &[(4, 8, 8), (5, 9, 11), (33, 300, 17), (12, 256, 8)] {
+            let a = randm(m, k, (m * 7 + k) as u64);
+            let b = randm(k, n, (n * 3 + k) as u64);
+            let mut a_pack = vec![0.0f32; packed_a_len(m, k)];
+            let mut b_pack = vec![0.0f32; packed_b_len(k, n)];
+            pack_a_strided(a.as_slice(), k, 1, m, k, &mut a_pack);
+            pack_b_strided(b.as_slice(), n, 1, k, n, &mut b_pack);
+            let mut c = Matrix::from_fn(m, n, |_, _| 99.0); // dirty: Store must win
+            packed_gemm_into(
+                backend,
+                KernelTier::Deterministic,
+                m,
+                n,
+                k,
+                &a_pack,
+                &b_pack,
+                Accum::Store,
+                c.as_mut_slice(),
+                n,
+                1,
+            );
+            let mut want = Matrix::zeros(m, n);
+            gemm_into_on(
+                backend,
+                KernelTier::Deterministic,
+                GemmPath::Packed,
+                &a,
+                &b,
+                &mut want,
+            );
+            let cb: Vec<u32> = c.as_slice().iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(cb, wb, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_sub_and_column_major_output() {
+        // Sub into a strided (column-major) output — the exact shape of
+        // the QR trailing update writing W / subtracting V(T^T W)
+        let backend = simd::active();
+        let (m, k, n) = (7, 19, 5);
+        let a = randm(m, k, 71);
+        let b = randm(k, n, 72);
+        let mut a_pack = vec![0.0f32; packed_a_len(m, k)];
+        let mut b_pack = vec![0.0f32; packed_b_len(k, n)];
+        pack_a_strided(a.as_slice(), k, 1, m, k, &mut a_pack);
+        pack_b_strided(b.as_slice(), n, 1, k, n, &mut b_pack);
+        // column-major C: element (i, j) at i + j*m
+        let mut c = vec![0.5f32; m * n];
+        packed_gemm_into(
+            backend,
+            KernelTier::Deterministic,
+            m,
+            n,
+            k,
+            &a_pack,
+            &b_pack,
+            Accum::Sub,
+            &mut c,
+            1,
+            m,
+        );
+        let prod = gemm(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let want = 0.5 - prod[(i, j)];
+                assert!((c[i + j * m] - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_strided_transpose_view() {
+        // rs=1, cs=ld packs the transpose without materializing it: the
+        // QR sweep packs V^T (rows = contiguous reflectors) this way
+        let (rows, cols) = (6, 9);
+        let a = randm(rows, cols, 80);
+        let at = a.transpose();
+        let mut direct = vec![0.0f32; packed_a_len(cols, rows)];
+        let mut viewed = vec![0.0f32; packed_a_len(cols, rows)];
+        pack_a_strided(at.as_slice(), rows, 1, cols, rows, &mut direct);
+        pack_a_strided(a.as_slice(), 1, cols, cols, rows, &mut viewed);
+        assert_eq!(direct, viewed);
+    }
+
+    #[test]
+    fn packed_gemm_k_zero_store_zero_fills() {
+        let mut c = vec![7.0f32; 6];
+        packed_gemm_into(
+            simd::active(),
+            KernelTier::Deterministic,
+            2,
+            3,
+            0,
+            &[],
+            &[],
+            Accum::Store,
+            &mut c,
+            3,
+            1,
+        );
+        assert_eq!(c, vec![0.0; 6]);
+        // Sub with k == 0 leaves the output untouched
+        let mut d = vec![7.0f32; 6];
+        packed_gemm_into(
+            simd::active(),
+            KernelTier::Deterministic,
+            2,
+            3,
+            0,
+            &[],
+            &[],
+            Accum::Sub,
+            &mut d,
+            3,
+            1,
+        );
+        assert_eq!(d, vec![7.0; 6]);
     }
 }

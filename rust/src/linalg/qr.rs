@@ -20,26 +20,39 @@
 //!   A_trail -= V (T^T W)         (panel-wide axpys per trailing column)
 //! ```
 //!
-//! Both sweeps are **column-separable**: trailing column c reads only the
-//! shared (V, T) pair plus its own entries, through [`blas::dot`] /
-//! [`blas::axpy`] in a fixed order.  Splitting the trailing columns across
-//! the thread pool ([`householder_qr_pooled`]) therefore cannot change a
-//! single output bit — thread-count independence holds *by construction*,
-//! because the pooled and serial paths run the SAME per-column kernel over
-//! different column chunks.  (This is also why the sweeps do not go
-//! through the packed f32 `gemm` microkernel: dot/axpy per column make
-//! chunk-independence self-evident, where repacked panels would make it an
-//! argument about packing boundaries.  Routing them through the packed
-//! gemm once a chunk-stable packing story exists is the remaining QR
-//! headroom — see ROADMAP "Performance".)
+//! Both sweeps run through the **packed register-tiled gemm**
+//! ([`blas::packed_gemm_into`]): the reflector block is packed once per
+//! panel (both orientations, [`blas::pack_a_strided`]), every trailing
+//! column chunk packs its own B panels against it, and the `MR x NR`
+//! microkernel carries all the flops.  Thread-count independence now
+//! rests on the **chunk-stable packing contract** (`blas.rs` module
+//! docs, enforced by `tests/packing_contract.rs`): packing is a pure
+//! gather and each output element's f32 accumulation order is a pure
+//! function of its (row, col, depth) coordinates — never of which
+//! thread packed a panel or where a column chunk boundary fell.
+//! Splitting the trailing columns across the thread pool
+//! ([`householder_qr_pooled`]) therefore still cannot change a single
+//! output bit, even though a column's position inside an NR-wide
+//! microtile shifts with the chunking.  The per-column `T`-apply
+//! between the two gemms stays in f64, exactly as before.
 //!
-//! The per-column `blas::dot`/`blas::axpy` calls themselves go through
-//! the runtime-dispatched SIMD layer ([`crate::linalg::simd`]): the
-//! trailing sweeps run on AVX2+FMA where available, and because that
-//! layer's scalar fallback is lane-structured to be bit-identical to the
-//! vector path, the factors stay independent of BOTH the thread count
-//! and the kernel dispatch — the two switches compose without weakening
-//! either invariant.
+//! The microkernel itself goes through the runtime-dispatched SIMD
+//! layer ([`crate::linalg::simd`]): AVX2+FMA where available, with the
+//! lane-structured scalar fallback bit-identical to the vector path at
+//! tier-0 — so the factors stay independent of the thread count AND the
+//! kernel dispatch.  Under the tier-1 fast kernels
+//! ([`householder_qr_tiered`], `DAPC_KERNEL_TIER=fast`) the fused
+//! rounding changes the factor bits *once per backend*, but the
+//! chunk-stable order is unchanged, so pooled == serial stays bitwise
+//! at any thread count within a tier+backend pair.
+//!
+//! The **panel factorization** itself is also pooled: the in-panel
+//! reflector application (one dot + one axpy per remaining panel
+//! column) and the `larft` z-dots fan over the pool's workers when the
+//! panel has enough work.  Both loops are elementwise-independent
+//! across their fan axis, so the fan-out is bit-transparent too —
+//! cold registration no longer serializes on O(l * PANEL^2) per panel
+//! (`benches/register_scaling.rs` tracks the win).
 //!
 //! The working copy is stored **column-major** (`work_t`, one contiguous
 //! l-length slice per column): reflector extraction, every per-column
@@ -57,12 +70,14 @@
 //! end-to-end on `benches/register_scaling.rs` (cold session registration
 //! is pure factorization).
 
+use super::simd::{self, Backend, KernelTier};
 use super::{blas, Matrix};
 use crate::parallel::ThreadPool;
 
 /// Panel width NB of the blocked factorization (see module docs for the
-/// tuning methodology).
-const PANEL: usize = 32;
+/// tuning methodology).  Public so `dapc kernels` can report it next to
+/// the gemm blocking constants.
+pub const PANEL: usize = 32;
 
 /// Result of a reduced QR factorization.
 pub struct QrFactors {
@@ -81,16 +96,34 @@ pub fn householder_qr(a: &Matrix) -> QrFactors {
     householder_qr_pooled(a, None)
 }
 
-/// Reduced Householder QR with the per-panel trailing updates (and the
-/// Q1 recovery) fanned out over `pool`'s workers when one is given.
+/// Reduced Householder QR with the per-panel trailing updates, the
+/// panel factorization, and the Q1 recovery fanned out over `pool`'s
+/// workers when one is given.
 ///
 /// Bit-identical to the serial [`householder_qr`] at any thread count:
 /// the parallel split is over *columns*, and every column's arithmetic is
-/// independent of the chunking (module docs).
+/// independent of the chunking (module docs).  Runs at the
+/// process-default kernel tier.
 pub fn householder_qr_pooled(a: &Matrix, pool: Option<&ThreadPool>) -> QrFactors {
+    householder_qr_tiered(a, pool, simd::active_tier())
+}
+
+/// [`householder_qr_pooled`] with an explicit kernel tier — the engines
+/// route a per-solve [`crate::solver::SolveOptions::kernel_tier`]
+/// override through this.  The pooled == serial bitwise guarantee holds
+/// at either tier; only cross-tier comparisons need a tolerance
+/// (`tests/kernel_tier.rs`).
+pub fn householder_qr_tiered(
+    a: &Matrix,
+    pool: Option<&ThreadPool>,
+    tier: KernelTier,
+) -> QrFactors {
     let (l, n) = a.shape();
     assert!(l >= n, "householder_qr requires a tall matrix, got {l}x{n}");
     let npanels = n.div_ceil(PANEL);
+    // one dispatch decision for the whole factorization (cannot affect
+    // tier-0 bits; at tier-1 it pins the within-backend reproducibility)
+    let backend = simd::active();
 
     // column-major working copy: column c of A lives in work_t[c*l..(c+1)*l]
     let mut work_t = vec![0.0f32; n * l];
@@ -110,11 +143,13 @@ pub fn householder_qr_pooled(a: &Matrix, pool: Option<&ThreadPool>) -> QrFactors
         let k0 = p * PANEL;
         let nb = PANEL.min(n - k0);
         let t = &mut ts[p * PANEL * PANEL..(p + 1) * PANEL * PANEL];
-        factor_panel(&mut work_t, &mut vs, t, l, k0, nb);
+        factor_panel(&mut work_t, &mut vs, t, l, k0, nb, pool);
         // one blocked update of every trailing column:
         // A_trail <- (I - V T^T V^T) A_trail  (= H_{nb-1} .. H_0 A_trail)
         let v = &vs[k0 * l..(k0 + nb) * l];
         apply_block(
+            backend,
+            tier,
             v,
             t,
             l,
@@ -149,7 +184,18 @@ pub fn householder_qr_pooled(a: &Matrix, pool: Option<&ThreadPool>) -> QrFactors
         let nb = PANEL.min(n - k0);
         let t = &ts[p * PANEL * PANEL..(p + 1) * PANEL * PANEL];
         let v = &vs[k0 * l..(k0 + nb) * l];
-        apply_block(v, t, l, k0, nb, Sweep::Forward, &mut q_t[k0 * l..], pool);
+        apply_block(
+            backend,
+            tier,
+            v,
+            t,
+            l,
+            k0,
+            nb,
+            Sweep::Forward,
+            &mut q_t[k0 * l..],
+            pool,
+        );
     }
     let mut q1 = Matrix::zeros(l, n);
     for i in 0..l {
@@ -161,11 +207,27 @@ pub fn householder_qr_pooled(a: &Matrix, pool: Option<&ThreadPool>) -> QrFactors
     QrFactors { q1, r }
 }
 
+/// Minimum `(rows) * (fan width)` product before [`factor_panel`] fans a
+/// loop over the pool: below this the spawn overhead dwarfs the dots.
+/// The gate reads only the problem shape — never the data — and the
+/// fanned kernels are chunk-independent, so the threshold cannot change
+/// a bit (it only decides who computes it).
+const PANEL_FAN_MIN_WORK: usize = 8192;
+
 /// Factor columns `[k0, k0 + nb)` of the column-major working copy in
 /// place: the classic reflector-at-a-time arithmetic restricted to the
 /// panel, plus the `larft` recurrence filling the panel's `T` factor
 /// (`tau = 2` for the unit-norm reflectors, 0 for null ones — a zero T
 /// row/column makes the blocked apply skip that reflector exactly).
+///
+/// With a pool, the two O(l * PANEL) inner loops — applying the fresh
+/// reflector to the remaining panel columns, and the `larft` z-dots
+/// against the earlier reflectors — fan over the workers.  Both are
+/// elementwise-independent across their fan axis (each panel column /
+/// each z entry reads the shared reflector plus its own data), so the
+/// fan-out is bitwise-invisible, exactly like the trailing-sweep
+/// chunking.  The serial T recurrence that remains is O(PANEL^2) per
+/// column — noise next to the dots.
 fn factor_panel(
     work_t: &mut [f32],
     vs: &mut [f32],
@@ -173,12 +235,14 @@ fn factor_panel(
     l: usize,
     k0: usize,
     nb: usize,
+    pool: Option<&ThreadPool>,
 ) {
     let mut z = [0.0f32; PANEL];
     for kk in 0..nb {
         let k = k0 + kk;
         // v = masked column k of the working copy (rows >= k)
         let (vs_done, vs_rest) = vs.split_at_mut(k * l);
+        let vs_done: &[f32] = vs_done;
         let v = &mut vs_rest[..l];
         v[k..].copy_from_slice(&work_t[k * l + k..(k + 1) * l]);
         let sigma = blas::dot(&v[k..], &v[k..]).sqrt();
@@ -198,21 +262,70 @@ fn factor_panel(
         for vi in v[k..].iter_mut() {
             *vi *= inv;
         }
+        let vk: &[f32] = &v[k..];
         // panel-internal H_k = I - 2 v v^T over columns k..panel end
         // (column k itself becomes the k-th R column, ~zero below the
         // diagonal); per column one contiguous dot + one contiguous axpy
-        for c in k..k0 + nb {
-            let col = &mut work_t[c * l..(c + 1) * l];
-            let w = blas::dot(&v[k..], &col[k..]) as f32;
-            blas::axpy(-2.0 * w, &v[k..], &mut col[k..]);
+        let rem = k0 + nb - k;
+        let panel_cols = &mut work_t[k * l..(k0 + nb) * l];
+        match pool {
+            Some(pool)
+                if pool.size() > 1
+                    && rem > 1
+                    && (l - k) * rem >= PANEL_FAN_MIN_WORK =>
+            {
+                let parts = pool.size().min(rem);
+                let chunk = rem.div_ceil(parts);
+                pool.scope(|s| {
+                    for ch in panel_cols.chunks_mut(chunk * l) {
+                        s.spawn(move || {
+                            for col in ch.chunks_mut(l) {
+                                let w = blas::dot(vk, &col[k..]) as f32;
+                                blas::axpy(-2.0 * w, vk, &mut col[k..]);
+                            }
+                        });
+                    }
+                });
+            }
+            _ => {
+                for col in panel_cols.chunks_mut(l) {
+                    let w = blas::dot(vk, &col[k..]) as f32;
+                    blas::axpy(-2.0 * w, vk, &mut col[k..]);
+                }
+            }
         }
         // larft column kk: z = V[:, 0..kk]^T v (earlier reflectors are
         // zero above their own pivot row <= k, and v is zero above k, so
         // the suffix dot captures every nonzero product), then
         // t[s][kk] = -2 * sum_{r in s..kk} t[s][r] * z[r], t[kk][kk] = 2.
-        for r in 0..kk {
-            let vr = &vs_done[(k0 + r) * l..(k0 + r + 1) * l];
-            z[r] = blas::dot(&vr[k..], &v[k..]) as f32;
+        let zs = &mut z[..kk];
+        match pool {
+            Some(pool)
+                if pool.size() > 1
+                    && kk > 1
+                    && (l - k) * kk >= PANEL_FAN_MIN_WORK =>
+            {
+                let parts = pool.size().min(kk);
+                let chunk = kk.div_ceil(parts);
+                pool.scope(|s| {
+                    for (ci, zc) in zs.chunks_mut(chunk).enumerate() {
+                        let r0 = ci * chunk;
+                        s.spawn(move || {
+                            for (o, zr) in zc.iter_mut().enumerate() {
+                                let r = k0 + r0 + o;
+                                let vr = &vs_done[r * l..(r + 1) * l];
+                                *zr = blas::dot(&vr[k..], vk) as f32;
+                            }
+                        });
+                    }
+                });
+            }
+            _ => {
+                for (r, zr) in zs.iter_mut().enumerate() {
+                    let vr = &vs_done[(k0 + r) * l..(k0 + r + 1) * l];
+                    *zr = blas::dot(&vr[k..], vk) as f32;
+                }
+            }
         }
         for s in 0..kk {
             let mut acc = 0.0f64;
@@ -238,12 +351,24 @@ enum Sweep {
 }
 
 /// Apply one panel's accumulated reflectors to `cols` (column-major,
-/// `cols.len() / l` columns).  The work is column-separable, so chunks of
-/// columns go to the pool when one is provided, each chunk running the
-/// identical per-column kernel — bit-identical to the serial sweep at any
-/// thread count.
+/// `cols.len() / l` columns) through the packed gemm.
+///
+/// The reflector block is packed ONCE here, in both orientations —
+/// `V^T` (nb x lp, each packed row a contiguous reflector suffix) for
+/// the `W = V^T C` sweep, and `V` (lp x nb, a strided transpose view of
+/// the same storage) for the `C -= V Y` sweep — then shared read-only
+/// by every column chunk.  Chunks go to the pool when one is provided;
+/// the chunk-stable packing contract (`blas.rs`) makes the split
+/// bit-transparent even though a column's microtile alignment shifts
+/// with the chunk boundary.
+///
+/// Reflector r is zero above row `k0 + r`, so restricting both sweeps
+/// to rows `>= k0` keeps every nonzero product; the `r` extra rows per
+/// reflector inside the block contribute exact `+-0.0` products only.
 #[allow(clippy::too_many_arguments)]
 fn apply_block(
+    backend: Backend,
+    tier: KernelTier,
     v: &[f32],
     t: &[f32],
     l: usize,
@@ -254,6 +379,18 @@ fn apply_block(
     pool: Option<&ThreadPool>,
 ) {
     let ncols = cols.len() / l.max(1);
+    if ncols == 0 {
+        return;
+    }
+    let lp = l - k0;
+    let mut vt_pack = vec![0.0f32; blas::packed_a_len(nb, lp)];
+    let mut v_pack = vec![0.0f32; blas::packed_a_len(lp, nb)];
+    // V^T rows are the contiguous reflector suffixes: row stride l
+    blas::pack_a_strided(&v[k0..], l, 1, nb, lp, &mut vt_pack);
+    // V itself is the column-major (transpose) view of the same storage
+    blas::pack_a_strided(&v[k0..], 1, l, lp, nb, &mut v_pack);
+    let vt_pack = &vt_pack[..];
+    let v_pack = &v_pack[..];
     match pool {
         Some(pool) if pool.size() > 1 && ncols > 1 => {
             let parts = pool.size().min(ncols);
@@ -261,21 +398,49 @@ fn apply_block(
             pool.scope(|s| {
                 for ch in cols.chunks_mut(chunk * l) {
                     s.spawn(move || {
-                        apply_block_serial(v, t, l, k0, nb, sweep, ch)
+                        apply_block_packed(
+                            backend,
+                            tier,
+                            vt_pack,
+                            v_pack,
+                            t,
+                            l,
+                            k0,
+                            nb,
+                            sweep,
+                            ch,
+                        )
                     });
                 }
             });
         }
-        _ => apply_block_serial(v, t, l, k0, nb, sweep, cols),
+        _ => apply_block_packed(
+            backend,
+            tier,
+            vt_pack,
+            v_pack,
+            t,
+            l,
+            k0,
+            nb,
+            sweep,
+            cols,
+        ),
     }
 }
 
-/// The per-chunk kernel behind [`apply_block`]: for every column,
-/// `w = V^T col`, `y = T^T w` (or `T w`), `col -= V y`.  `w`/`y` live on
-/// the stack — no per-reflector (or even per-column) heap scratch, the
-/// hoisted descendant of the old `apply_reflector_left` allocation.
-fn apply_block_serial(
-    v: &[f32],
+/// The per-chunk kernel behind [`apply_block`]: in column blocks of at
+/// most [`blas::NC`], pack the chunk's columns, run
+/// `W = V^T C` (packed gemm, column-major W scratch), apply `T^T` (or
+/// `T`) per column in f64 — unchanged from the pre-packed kernel — then
+/// `C -= V Y` (packed gemm, Sub).  Scratch is allocated once per chunk
+/// and reused across its column blocks.
+#[allow(clippy::too_many_arguments)]
+fn apply_block_packed(
+    backend: Backend,
+    tier: KernelTier,
+    vt_pack: &[f32],
+    v_pack: &[f32],
     t: &[f32],
     l: usize,
     k0: usize,
@@ -283,34 +448,69 @@ fn apply_block_serial(
     sweep: Sweep,
     cols: &mut [f32],
 ) {
-    let mut w = [0.0f32; PANEL];
-    let mut y = [0.0f32; PANEL];
-    for col in cols.chunks_mut(l) {
-        // W = V^T col (reflector r is zero above row k0 + r)
-        for (r, vr) in v.chunks_exact(l).enumerate() {
-            w[r] = blas::dot(&vr[k0 + r..], &col[k0 + r..]) as f32;
-        }
-        // y = T^T w (adjoint) or T w (forward); T is upper triangular
-        for s in 0..nb {
-            let mut acc = 0.0f64;
-            match sweep {
-                Sweep::Adjoint => {
-                    for r in 0..=s {
-                        acc += t[r * PANEL + s] as f64 * w[r] as f64;
+    let lp = l - k0;
+    let ncols = cols.len() / l;
+    let bw = ncols.min(blas::NC);
+    let mut b_pack = vec![0.0f32; blas::packed_b_len(lp, bw)];
+    let mut y_pack = vec![0.0f32; blas::packed_b_len(nb, bw)];
+    // W and Y, column-major with leading dimension PANEL
+    let mut w_buf = vec![0.0f32; PANEL * bw];
+    let mut y_buf = vec![0.0f32; PANEL * bw];
+    for ch in cols.chunks_mut(bw * l) {
+        let nc = ch.len() / l;
+        // W = V^T C over rows >= k0: C's (i, j) entry sits at
+        // ch[k0 + i + j*l], i.e. rs = 1, cs = l from the k0 offset
+        blas::pack_b_strided(&ch[k0..], 1, l, lp, nc, &mut b_pack);
+        blas::packed_gemm_into(
+            backend,
+            tier,
+            nb,
+            nc,
+            lp,
+            vt_pack,
+            &b_pack,
+            blas::Accum::Store,
+            &mut w_buf,
+            1,
+            PANEL,
+        );
+        // y = T^T w (adjoint) or T w (forward) per column, in f64;
+        // T is upper triangular — identical math to the pre-packed sweep
+        for j in 0..nc {
+            let w = &w_buf[j * PANEL..j * PANEL + nb];
+            let y = &mut y_buf[j * PANEL..j * PANEL + nb];
+            for s in 0..nb {
+                let mut acc = 0.0f64;
+                match sweep {
+                    Sweep::Adjoint => {
+                        for r in 0..=s {
+                            acc += t[r * PANEL + s] as f64 * w[r] as f64;
+                        }
+                    }
+                    Sweep::Forward => {
+                        for r in s..nb {
+                            acc += t[s * PANEL + r] as f64 * w[r] as f64;
+                        }
                     }
                 }
-                Sweep::Forward => {
-                    for r in s..nb {
-                        acc += t[s * PANEL + r] as f64 * w[r] as f64;
-                    }
-                }
+                y[s] = acc as f32;
             }
-            y[s] = acc as f32;
         }
-        // col -= V y
-        for (r, vr) in v.chunks_exact(l).enumerate() {
-            blas::axpy(-y[r], &vr[k0 + r..], &mut col[k0 + r..]);
-        }
+        // C -= V Y over the same row window
+        blas::pack_b_strided(&y_buf, 1, PANEL, nb, nc, &mut y_pack);
+        blas::packed_gemm_into(
+            backend,
+            tier,
+            lp,
+            nc,
+            nb,
+            v_pack,
+            &y_pack,
+            blas::Accum::Sub,
+            &mut ch[k0..],
+            1,
+            l,
+        );
     }
 }
 
@@ -572,7 +772,7 @@ mod tests {
         for &(l, n) in &[(16, 5), (64, 33), (100, 40), (70, 70)] {
             let a = randm(l, n, 4000 + (l * 7 + n) as u64);
             let serial = householder_qr(&a);
-            for threads in [2usize, 3, 5] {
+            for threads in [2usize, 3, 4, 5, 8] {
                 let pool = ThreadPool::new(threads);
                 let pooled = householder_qr_pooled(&a, Some(&pool));
                 assert_eq!(
@@ -587,6 +787,43 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn tier1_pooled_bitwise_matches_tier1_serial() {
+        // the pooled == serial guarantee must survive the fast tier:
+        // fused rounding changes WHAT each element computes, never the
+        // chunk-stable order it computes it in
+        for &(l, n) in &[(64, 33), (100, 40)] {
+            let a = randm(l, n, 6000 + (l + n) as u64);
+            let serial = householder_qr_tiered(&a, None, KernelTier::Fast);
+            for threads in [2usize, 4, 7] {
+                let pool = ThreadPool::new(threads);
+                let pooled =
+                    householder_qr_tiered(&a, Some(&pool), KernelTier::Fast);
+                assert_eq!(
+                    serial.q1.as_slice(),
+                    pooled.q1.as_slice(),
+                    "Q1 ({l},{n}) t={threads}"
+                );
+                assert_eq!(
+                    serial.r.as_slice(),
+                    pooled.r.as_slice(),
+                    "R ({l},{n}) t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier1_factors_stay_accurate() {
+        // tier-1 changes rounding, not math: the algebraic identities
+        // hold at the same tolerances the tier-0 suite asserts
+        let a = randm(90, 40, 77);
+        let f = householder_qr_tiered(&a, None, KernelTier::Fast);
+        assert!(gemm(&f.q1, &f.r).max_abs_diff(&a) < 5e-4);
+        let qtq = gemm_tn(&f.q1, &f.q1);
+        assert!(qtq.max_abs_diff(&Matrix::eye(40)) < 2e-4);
     }
 
     #[test]

@@ -36,17 +36,38 @@
 //!   f64 left operand (53-bit x 24-bit products do not fit), so both its
 //!   paths round the product first (`mul` then `add`), matching the
 //!   scalar `acc += x * y as f64` for every input, widened or not.
-//! * **Elementwise f32 kernels** (`axpy`, `widen`, the gemm microkernel)
-//!   carry no cross-lane reduction at all: output element `(i, j)` is the
-//!   same chain of scalar f32 roundings on both paths (`mul` + `add`,
-//!   never f32 FMA — a fused f32 multiply-add rounds once where the
-//!   scalar fallback rounds twice, and emulating fused rounding in
-//!   scalar code costs more than it saves).
+//! * **Elementwise f32 kernels** (`axpy`, `widen`, the tier-0 gemm
+//!   microkernel) carry no cross-lane reduction at all: output element
+//!   `(i, j)` is the same chain of scalar f32 roundings on both paths
+//!   (`mul` + `add`, never f32 FMA on tier-0 — a fused f32 multiply-add
+//!   rounds once where the scalar fallback rounds twice, and emulating
+//!   fused rounding in scalar code costs more than it saves).
 //!
 //! Net effect: like the thread count (`parallel::ThreadPool`) and the
 //! batch width (`solver::engine::update_batch_kernel`), the dispatch
 //! choice is *invisible in the output bits*.  `DAPC_FORCE_SCALAR=1` is a
 //! perf switch, not a numerics switch.
+//!
+//! # The two-tier determinism contract ([`KernelTier`])
+//!
+//! The gemm microkernel exists at two numerics tiers:
+//!
+//! * **Tier-0, [`KernelTier::Deterministic`] (default)** — the contract
+//!   above, unchanged: f32 mul-then-add on every backend, bitwise across
+//!   scalar/AVX2/thread count.  Every `assert_eq!` equivalence suite in
+//!   the repo runs under this tier.
+//! * **Tier-1, [`KernelTier::Fast`]** (`DAPC_KERNEL_TIER=fast`, or
+//!   `SolveOptions::kernel_tier` per solve) — the microkernel may use
+//!   *fused* f32 multiply-add ([`f32::mul_add`] on the scalar path,
+//!   `vfmadd231ps` on AVX2), roughly doubling gemm peak on FMA hardware.
+//!   Tier-1 results are **bitwise-reproducible within one backend** (the
+//!   accumulation order is still a pure function of the element
+//!   coordinates, so threads/chunking still cannot change a bit), but
+//!   across backends and against tier-0 they are validated by a forward
+//!   error bound (`tests/kernel_tier.rs`), not `assert_eq!`.  The tier
+//!   only affects the microkernel — `dot`/`dot_wide`/`axpy`/`widen` keep
+//!   the tier-0 contract always, so consensus iterates
+//!   (`update_batch_kernel` etc.) are tier-independent.
 //!
 //! # NaN policy
 //!
@@ -100,10 +121,72 @@ impl Backend {
     }
 }
 
+/// Which numerics tier the gemm microkernel runs (module docs, "two-tier
+/// determinism contract").  Only the microkernel is tiered; every other
+/// kernel keeps the tier-0 contract unconditionally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelTier {
+    /// Tier-0: f32 mul-then-add, bitwise across backends and threads.
+    #[default]
+    Deterministic,
+    /// Tier-1: fused f32 multiply-add — bitwise-reproducible within one
+    /// backend, tolerance-validated across backends / against tier-0.
+    Fast,
+}
+
+impl KernelTier {
+    /// Short stable name, used in bench JSON records and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Deterministic => "deterministic",
+            KernelTier::Fast => "fast",
+        }
+    }
+}
+
 /// `DAPC_FORCE_SCALAR=1` forces the scalar path (any other value, or
 /// unset, lets detection decide).
 fn force_scalar_env() -> bool {
     std::env::var("DAPC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `DAPC_KERNEL_TIER=fast` opts the process into the tier-1 microkernel
+/// (any other value, or unset, keeps the deterministic default).
+fn fast_tier_env() -> bool {
+    std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false)
+}
+
+/// The tier selection rule, split out pure so it is unit-testable
+/// without mutating process environment.
+pub fn select_tier(fast: bool) -> KernelTier {
+    if fast {
+        KernelTier::Fast
+    } else {
+        KernelTier::Deterministic
+    }
+}
+
+static ACTIVE_TIER: OnceLock<KernelTier> = OnceLock::new();
+
+/// The process-default kernel tier, read once from `DAPC_KERNEL_TIER`
+/// and cached — callers that need a per-solve override (the engines)
+/// carry an explicit [`KernelTier`] instead of re-reading this.
+pub fn active_tier() -> KernelTier {
+    *ACTIVE_TIER.get_or_init(|| select_tier(fast_tier_env()))
+}
+
+/// Human-readable description of the active tier and what it promises
+/// (for `dapc kernels` and CI logs).
+pub fn tier_description() -> &'static str {
+    match active_tier() {
+        KernelTier::Deterministic => {
+            "tier-0 deterministic (bitwise across backends and threads)"
+        }
+        KernelTier::Fast => {
+            "tier-1 fast (DAPC_KERNEL_TIER=fast: fused f32 rounding, \
+             bitwise within a backend, tolerance-validated across)"
+        }
+    }
 }
 
 /// Runtime CPU support for the [`Backend::Avx2Fma`] kernels.
@@ -241,6 +324,34 @@ pub fn microkernel_on(
     }
 }
 
+/// [`microkernel_on`] with an explicit [`KernelTier`]: tier-0 routes to
+/// the mul+add kernels above; tier-1 routes to the fused variants
+/// ([`f32::mul_add`] scalar / `vfmadd231ps` AVX2).  Per output element
+/// the accumulation over `p` is sequential on every (tier, backend)
+/// combination — which is what keeps tile traversal and thread chunking
+/// invisible in the bits even at tier-1.
+#[inline]
+pub fn microkernel_tier_on(
+    backend: Backend,
+    tier: KernelTier,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    match tier {
+        KernelTier::Deterministic => microkernel_on(backend, kc, ap, bp, acc),
+        KernelTier::Fast => {
+            assert!(ap.len() >= kc * MR, "microkernel A panel too short");
+            assert!(bp.len() >= kc * NR, "microkernel B panel too short");
+            match backend {
+                Backend::Scalar => scalar::microkernel_fma(kc, ap, bp, acc),
+                Backend::Avx2Fma => microkernel_fma_avx2(kc, ap, bp, acc),
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // x86-64 trampolines: re-check CPU support so the pub `*_on` functions
 // stay sound even if a caller passes `Backend::Avx2Fma` by hand on an
@@ -283,6 +394,18 @@ fn microkernel_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]
     unsafe { avx2::microkernel(kc, ap, bp, acc) }
 }
 
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn microkernel_fma_avx2(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::microkernel_fma(kc, ap, bp, acc) }
+}
+
 #[cfg(not(target_arch = "x86_64"))]
 fn dot_avx2(_x: &[f32], _y: &[f32]) -> f64 {
     panic!("the avx2+fma kernel backend requires x86_64");
@@ -305,6 +428,16 @@ fn widen_avx2(_src: &[f32], _dst: &mut [f64]) {
 
 #[cfg(not(target_arch = "x86_64"))]
 fn microkernel_avx2(_kc: usize, _ap: &[f32], _bp: &[f32], _acc: &mut [[f32; NR]; MR]) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn microkernel_fma_avx2(
+    _kc: usize,
+    _ap: &[f32],
+    _bp: &[f32],
+    _acc: &mut [[f32; NR]; MR],
+) {
     panic!("the avx2+fma kernel backend requires x86_64");
 }
 
@@ -408,6 +541,29 @@ mod scalar {
                 let ai = av[i];
                 for (j, a) in row.iter_mut().enumerate() {
                     *a += ai * bv[j];
+                }
+            }
+        }
+    }
+
+    /// The tier-1 microkernel: same traversal, fused rounding.
+    /// `f32::mul_add` is IEEE correctly-rounded, so tier-1 scalar runs
+    /// are reproducible regardless of whether LLVM lowers it to hardware
+    /// `vfmadd` or libm `fmaf` — the within-backend bitwise promise
+    /// holds on any host.
+    pub(super) fn microkernel_fma(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        for p in 0..kc {
+            let av = &ap[p * MR..p * MR + MR];
+            let bv = &bp[p * NR..p * NR + NR];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let ai = av[i];
+                for (j, a) in row.iter_mut().enumerate() {
+                    *a = ai.mul_add(bv[j], *a);
                 }
             }
         }
@@ -583,6 +739,43 @@ mod avx2 {
         _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
         _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
     }
+
+    /// Tier-1 microkernel: `vfmadd231ps` fuses the multiply and add into
+    /// one rounding per element.  Same traversal order as the tier-0
+    /// kernel, so within-backend runs stay bitwise-reproducible; only the
+    /// per-element rounding differs from tier-0 (validated by tolerance).
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
+    /// `kc * NR` elements (asserted by the dispatching trampoline).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn microkernel_fma(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for p in 0..kc {
+            let bv = _mm256_loadu_ps(b.add(p * NR));
+            let ac = a.add(p * MR);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*ac), bv, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*ac.add(1)), bv, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*ac.add(2)), bv, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*ac.add(3)), bv, c3);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
 }
 
 #[cfg(test)]
@@ -653,5 +846,94 @@ mod tests {
     #[should_panic]
     fn dot_on_length_mismatch_panics_in_release_too() {
         let _ = dot_on(Backend::Scalar, &[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn tier_selection_rule() {
+        assert_eq!(select_tier(false), KernelTier::Deterministic);
+        assert_eq!(select_tier(true), KernelTier::Fast);
+        // the default tier is the deterministic one
+        assert_eq!(KernelTier::default(), KernelTier::Deterministic);
+        assert_eq!(KernelTier::Deterministic.name(), "deterministic");
+        assert_eq!(KernelTier::Fast.name(), "fast");
+    }
+
+    #[test]
+    fn active_tier_is_stable_and_consistent_with_env() {
+        let first = active_tier();
+        // cached: repeated queries can never flip mid-process
+        assert_eq!(active_tier(), first);
+        let fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+        assert_eq!(first, select_tier(fast));
+        // description never panics and names the tier
+        assert!(tier_description().starts_with("tier-"));
+    }
+
+    #[test]
+    fn tier0_entry_is_the_tier0_kernel_bitwise() {
+        // microkernel_tier_on at tier-0 must be byte-for-byte the tier-0
+        // kernel, whatever the process env says
+        let kc = 37;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i * 29) % 23) as f32 * 0.06 - 0.7).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i * 31) % 19) as f32 * 0.05 - 0.4).collect();
+        let mut a0 = [[0.1f32; NR]; MR];
+        let mut a1 = [[0.1f32; NR]; MR];
+        microkernel_on(Backend::Scalar, kc, &ap, &bp, &mut a0);
+        microkernel_tier_on(
+            Backend::Scalar,
+            KernelTier::Deterministic,
+            kc,
+            &ap,
+            &bp,
+            &mut a1,
+        );
+        assert_eq!(a0.map(|r| r.map(f32::to_bits)), a1.map(|r| r.map(f32::to_bits)));
+    }
+
+    #[test]
+    fn tier1_scalar_is_reproducible_and_close_to_tier0() {
+        let kc = 64;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i * 41) % 27) as f32 * 0.04 - 0.5).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i * 43) % 31) as f32 * 0.03 - 0.45).collect();
+        let mut t0 = [[0.0f32; NR]; MR];
+        let mut f1 = [[0.0f32; NR]; MR];
+        let mut f2 = [[0.0f32; NR]; MR];
+        microkernel_tier_on(
+            Backend::Scalar,
+            KernelTier::Deterministic,
+            kc,
+            &ap,
+            &bp,
+            &mut t0,
+        );
+        microkernel_tier_on(Backend::Scalar, KernelTier::Fast, kc, &ap, &bp, &mut f1);
+        microkernel_tier_on(Backend::Scalar, KernelTier::Fast, kc, &ap, &bp, &mut f2);
+        // within-backend tier-1 runs are bitwise-identical
+        assert_eq!(f1.map(|r| r.map(f32::to_bits)), f2.map(|r| r.map(f32::to_bits)));
+        // fused rounding drops at most one rounding per element per step:
+        // stays within a small multiple of f32 eps of the tier-0 result
+        for (r0, r1) in t0.iter().zip(&f1) {
+            for (v0, v1) in r0.iter().zip(r1) {
+                let tol = 2.0 * kc as f32 * f32::EPSILON * v0.abs().max(1.0);
+                assert!((v0 - v1).abs() <= tol, "{v0} vs {v1}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier1_backends_agree_to_tolerance() {
+        if !avx2_available() {
+            return;
+        }
+        let kc = 96;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i * 17) % 13) as f32 * 0.08 - 0.5).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i * 19) % 11) as f32 * 0.09 - 0.5).collect();
+        let mut s = [[0.25f32; NR]; MR];
+        let mut v = [[0.25f32; NR]; MR];
+        microkernel_tier_on(Backend::Scalar, KernelTier::Fast, kc, &ap, &bp, &mut s);
+        microkernel_tier_on(Backend::Avx2Fma, KernelTier::Fast, kc, &ap, &bp, &mut v);
+        // both fuse every step identically (correctly-rounded fma), so in
+        // fact they agree bitwise — assert the stronger property
+        assert_eq!(s.map(|r| r.map(f32::to_bits)), v.map(|r| r.map(f32::to_bits)));
     }
 }

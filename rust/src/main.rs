@@ -6,8 +6,9 @@
 //!   graph          export the Algorithm-1 task graph as Graphviz DOT
 //!   info           list available AOT artifacts
 //!   generate       write a synthetic Schenk-like dataset to MatrixMarket files
-//!   kernels        report the runtime-dispatched kernel backend (CI logs this
-//!                  on both legs of the DAPC_FORCE_SCALAR matrix)
+//!   kernels        report the runtime-dispatched kernel backend, the active
+//!                  f32 kernel tier, and the gemm tiling constants (CI logs
+//!                  this on every leg of the dispatch matrix)
 //!   bench-validate check BENCH_*.json bench artifacts parse and are non-hollow
 
 use std::path::{Path, PathBuf};
@@ -18,6 +19,7 @@ use dapc::coordinator::cluster;
 use dapc::coordinator::TaskGraph;
 use dapc::error::{DapcError, Result};
 use dapc::linalg::norms;
+use dapc::linalg::simd::KernelTier;
 use dapc::runtime::executor::XlaExecutorHost;
 use dapc::service::{SessionAlgorithm, SolverSession};
 use dapc::solver::{
@@ -34,6 +36,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "engine", help: "native|xla", takes_value: true },
         OptSpec { name: "partitions", help: "number of partitions J", takes_value: true },
         OptSpec { name: "threads", help: "native-engine worker threads (1 = sequential, 0 = auto)", takes_value: true },
+        OptSpec { name: "kernel-tier", help: "deterministic|fast f32 kernel tier (default: DAPC_KERNEL_TIER env; in-process native engines only)", takes_value: true },
         OptSpec { name: "epochs", help: "consensus epochs T", takes_value: true },
         OptSpec { name: "eta", help: "mixing weight (0,1]", takes_value: true },
         OptSpec { name: "gamma", help: "projection step (0,1]", takes_value: true },
@@ -87,11 +90,13 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// `dapc kernels`: which SIMD kernel backend this process would run, and
-/// why.  CI runs this on both legs of the dispatch matrix so the log
-/// records the detected CPU features next to each test run.
+/// `dapc kernels`: which SIMD kernel backend and kernel tier this
+/// process would run, plus the blocking constants and thread count — the
+/// full configuration a bench artifact should be attributed to.  CI runs
+/// this on every leg of the dispatch matrix so the log records the
+/// detected CPU features next to each test run.
 fn cmd_kernels() -> Result<()> {
-    use dapc::linalg::simd;
+    use dapc::linalg::{blas, qr, simd};
     println!("kernel backend: {}", simd::description());
     println!("  avx2+fma detected: {}", simd::avx2_available());
     println!(
@@ -103,7 +108,38 @@ fn cmd_kernels() -> Result<()> {
          tree — dispatch never changes output bits",
         simd::LANES
     );
+    println!("kernel tier: {}", simd::tier_description());
+    println!(
+        "  DAPC_KERNEL_TIER: {}",
+        std::env::var("DAPC_KERNEL_TIER").unwrap_or_else(|_| "(unset)".into())
+    );
+    println!(
+        "tiling: MR={} NR={} MC={} KC={} NC={} PANEL={}",
+        simd::MR,
+        simd::NR,
+        blas::MC,
+        blas::KC,
+        blas::NC,
+        qr::PANEL
+    );
+    println!(
+        "threads: {} (pool default; --threads overrides per run)",
+        dapc::parallel::default_threads()
+    );
     Ok(())
+}
+
+/// Parse `--kernel-tier` into the [`SolveOptions::kernel_tier`] override
+/// (None = inherit the `DAPC_KERNEL_TIER` process default).
+fn parse_kernel_tier(parsed: &cli::ParsedArgs) -> Result<Option<KernelTier>> {
+    match parsed.get("kernel-tier") {
+        None => Ok(None),
+        Some("deterministic") => Ok(Some(KernelTier::Deterministic)),
+        Some("fast") => Ok(Some(KernelTier::Fast)),
+        Some(other) => Err(DapcError::Config(format!(
+            "--kernel-tier expects deterministic|fast, got {other:?}"
+        ))),
+    }
 }
 
 /// `dapc bench-validate FILE...`: fail loudly if any bench JSON artifact
@@ -209,6 +245,7 @@ fn cmd_solve(parsed: &cli::ParsedArgs) -> Result<()> {
         gamma: cfg.gamma,
         dgd_step: cfg.dgd_step,
         x_true: if parsed.has_flag("trace") { x_true.clone() } else { None },
+        kernel_tier: parse_kernel_tier(parsed)?,
         ..Default::default()
     };
 
@@ -251,12 +288,18 @@ fn run_single(
 ) -> Result<dapc::solver::SolveReport> {
     match cfg.engine {
         EngineKind::Native if cfg.threads == 1 => {
-            let engine = NativeEngine::new();
+            let engine = match opts.kernel_tier {
+                Some(t) => NativeEngine::with_tier(t),
+                None => NativeEngine::new(),
+            };
             dispatch_solver(cfg, &engine, a, b, opts)
         }
         EngineKind::Native => {
             // 0 = one worker per hardware thread (pool default)
-            let engine = ParallelEngine::new(cfg.threads);
+            let engine = match opts.kernel_tier {
+                Some(t) => ParallelEngine::with_tier(cfg.threads, t),
+                None => ParallelEngine::new(cfg.threads),
+            };
             println!("parallel native engine: {} threads", engine.threads());
             dispatch_solver(cfg, &engine, a, b, opts)
         }
@@ -363,6 +406,7 @@ fn cmd_serve(
         eta: cfg.eta,
         gamma: cfg.gamma,
         dgd_step: cfg.dgd_step,
+        kernel_tier: parse_kernel_tier(parsed)?,
         ..Default::default()
     };
 
@@ -420,11 +464,17 @@ fn cmd_serve(
     }
     match cfg.engine {
         EngineKind::Native if cfg.threads == 1 => {
-            let engine = NativeEngine::new();
+            let engine = match opts.kernel_tier {
+                Some(t) => NativeEngine::with_tier(t),
+                None => NativeEngine::new(),
+            };
             serve_in_process(&engine, cfg, a, algorithm, &opts, &bs)
         }
         EngineKind::Native => {
-            let engine = ParallelEngine::new(cfg.threads);
+            let engine = match opts.kernel_tier {
+                Some(t) => ParallelEngine::with_tier(cfg.threads, t),
+                None => ParallelEngine::new(cfg.threads),
+            };
             println!("parallel native engine: {} threads", engine.threads());
             serve_in_process(&engine, cfg, a, algorithm, &opts, &bs)
         }
@@ -519,12 +569,21 @@ fn cmd_worker(parsed: &cli::ParsedArgs) -> Result<()> {
         .get("listen")
         .ok_or_else(|| DapcError::Config("worker requires --listen".into()))?;
     println!("dapc worker listening on {addr} (engine: {:?})", cfg.engine);
+    let tier = parse_kernel_tier(parsed)?;
     match cfg.engine {
         EngineKind::Native if cfg.threads == 1 => {
-            cluster::serve_tcp_worker(&NativeEngine::new(), addr)
+            let engine = match tier {
+                Some(t) => NativeEngine::with_tier(t),
+                None => NativeEngine::new(),
+            };
+            cluster::serve_tcp_worker(&engine, addr)
         }
         EngineKind::Native => {
-            cluster::serve_tcp_worker(&ParallelEngine::new(cfg.threads), addr)
+            let engine = match tier {
+                Some(t) => ParallelEngine::with_tier(cfg.threads, t),
+                None => ParallelEngine::new(cfg.threads),
+            };
+            cluster::serve_tcp_worker(&engine, addr)
         }
         EngineKind::Xla => {
             let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;

@@ -36,6 +36,7 @@
 use std::sync::Arc;
 
 use crate::error::Result;
+use crate::linalg::simd::KernelTier;
 use crate::linalg::{blas, Matrix};
 use crate::solver::engine::{
     average_chunk_kernel, check_average_shapes, check_dgd_shapes,
@@ -55,7 +56,7 @@ pub struct ParallelEngine {
 
 impl ParallelEngine {
     /// Engine over a fresh pool of `threads` workers (0 = one per
-    /// available hardware thread).
+    /// available hardware thread), at the process-default kernel tier.
     pub fn new(threads: usize) -> Self {
         Self::with_pool(Arc::new(ThreadPool::new(threads)))
     }
@@ -63,6 +64,24 @@ impl ParallelEngine {
     /// Engine over a shared pool (e.g. one pool for several solvers).
     pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
         Self { inner: NativeEngine::new(), pool }
+    }
+
+    /// [`Self::new`] pinned to an explicit [`KernelTier`] — the pooled
+    /// twin of [`NativeEngine::with_tier`].  The tier changes which f32
+    /// gemm microkernel the factorizations run; it never touches the
+    /// thread-count invariants (parallel == native stays bitwise at
+    /// either tier, because the chunk-stable packing contract is
+    /// tier-independent).
+    pub fn with_tier(threads: usize, tier: KernelTier) -> Self {
+        Self {
+            inner: NativeEngine::with_tier(tier),
+            pool: Arc::new(ThreadPool::new(threads)),
+        }
+    }
+
+    /// The kernel tier this engine factorizes at.
+    pub fn tier(&self) -> KernelTier {
+        self.inner.tier()
     }
 
     /// Worker-thread count.
@@ -325,7 +344,7 @@ impl ComputeEngine for ParallelEngine {
         // to the native engine's serial run, so sessions re-seed
         // identically no matter which engine (at which thread count)
         // registered the matrix
-        factorize_kernel(kind, a, n_target, Some(&self.pool))
+        factorize_kernel(kind, a, n_target, Some(&self.pool), self.inner.tier())
     }
 
     fn factorize_all(

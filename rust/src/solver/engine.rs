@@ -7,6 +7,7 @@
 //! and the integration tests assert they agree numerically.
 
 use crate::error::{DapcError, Result};
+use crate::linalg::simd::{self, KernelTier};
 use crate::linalg::{blas, inverse, qr, triangular, Matrix};
 use crate::parallel::ThreadPool;
 use crate::partition::pad_to_bucket;
@@ -227,12 +228,17 @@ pub(crate) fn update_batch_kernel(
 /// inverse.  The pooled and serial QR paths are bit-identical by
 /// construction (`linalg::qr` module docs), so cross-engine equality and
 /// warm == cold re-seeding hold no matter which engine — at which thread
-/// count — performed the factorization.
+/// count — performed the factorization.  `tier` selects the f32 kernel
+/// tier for the QR sweeps and the fat-regime projector gemm (the
+/// engines carry it from [`crate::solver::SolveOptions::kernel_tier`]);
+/// every bitwise invariant above holds *within* a tier, and tier-0 is
+/// the default everywhere.
 pub(crate) fn factorize_kernel(
     kind: InitKind,
     a: &Matrix,
     n_target: usize,
     pool: Option<&ThreadPool>,
+    tier: KernelTier,
 ) -> Result<WorkerFactorization> {
     let n = a.cols();
     if n != n_target {
@@ -244,7 +250,7 @@ pub(crate) fn factorize_kernel(
         InitKind::Qr => {
             // Paper eqs. (1)-(4): A = Q1 R, P = I - Q1^T Q1; the QR
             // factors are retained for per-RHS seeding.
-            let f = qr::householder_qr_pooled(a, pool);
+            let f = qr::householder_qr_tiered(a, pool, tier);
             let qtq = blas::gemm_tn(&f.q1, &f.q1);
             let mut p = Matrix::eye(n);
             for i in 0..n {
@@ -271,9 +277,20 @@ pub(crate) fn factorize_kernel(
         InitKind::Fat => {
             // A^T = Q R; P = I - Q Q^T; Q and R^T are retained.
             let at = a.transpose();
-            let f = qr::householder_qr_pooled(&at, pool);
+            let f = qr::householder_qr_tiered(&at, pool, tier);
             let rt = f.r.transpose();
-            let qqt = blas::gemm(&f.q1, &f.q1.transpose());
+            let q1t = f.q1.transpose();
+            let mut qqt = Matrix::zeros(f.q1.rows(), f.q1.rows());
+            // explicit-tier gemm so a per-solve override reaches the
+            // projector build (Auto still shape-dispatches thin blocks)
+            blas::gemm_into_on(
+                simd::active(),
+                tier,
+                blas::GemmPath::Auto,
+                &f.q1,
+                &q1t,
+                &mut qqt,
+            );
             let mut p = Matrix::eye(n);
             for i in 0..n {
                 for j in 0..n {
@@ -603,12 +620,39 @@ pub trait ComputeEngine {
 // ---------------------------------------------------------------------------
 
 /// Pure-Rust engine over `crate::linalg` — the correctness reference.
-#[derive(Debug, Default, Clone)]
-pub struct NativeEngine;
+///
+/// Carries the [`KernelTier`] its factorizations run at: [`Self::new`]
+/// reads the process default (`DAPC_KERNEL_TIER`), [`Self::with_tier`]
+/// pins one explicitly (the CLI routes
+/// [`crate::solver::SolveOptions::kernel_tier`] through this).  The
+/// tier only touches the f32 gemm microkernel — consensus iterates go
+/// through `dot`/`dot_wide`/`axpy`, which are tier-independent — so two
+/// engines at different tiers differ (at most) in their factorizations.
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    tier: KernelTier,
+}
 
 impl NativeEngine {
+    /// Engine at the process-default kernel tier.
     pub fn new() -> Self {
-        Self
+        Self { tier: simd::active_tier() }
+    }
+
+    /// Engine pinned to an explicit kernel tier.
+    pub fn with_tier(tier: KernelTier) -> Self {
+        Self { tier }
+    }
+
+    /// The kernel tier this engine factorizes at.
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -636,7 +680,7 @@ impl ComputeEngine for NativeEngine {
     ) -> Result<WorkerFactorization> {
         // the shared panel-blocked kernel, serial: this engine has no
         // threads to offer the trailing updates
-        factorize_kernel(kind, a, n_target, None)
+        factorize_kernel(kind, a, n_target, None, self.tier)
     }
 
     fn seed(

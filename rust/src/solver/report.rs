@@ -3,6 +3,7 @@
 use std::time::Duration;
 
 use crate::linalg::norms;
+use crate::linalg::simd::KernelTier;
 use crate::metrics::ConvergenceTrace;
 use crate::sparse::CsrMatrix;
 
@@ -46,6 +47,11 @@ pub struct SolveOptions {
     /// [`SolveReport::x_parts`].  Off by default: the driver then never
     /// retains J extra n-vectors on the leader.
     pub collect_x_parts: bool,
+    /// Per-solve f32 kernel-tier override for the in-process native
+    /// engines (`None` = the process default read from
+    /// `DAPC_KERNEL_TIER`).  Consumed at engine construction; see the
+    /// two-tier contract in `linalg::simd`.
+    pub kernel_tier: Option<KernelTier>,
 }
 
 impl Default for SolveOptions {
@@ -58,6 +64,7 @@ impl Default for SolveOptions {
             x_true: None,
             fused_loop: false,
             collect_x_parts: false,
+            kernel_tier: None,
         }
     }
 }

@@ -1,0 +1,144 @@
+//! The two-tier kernel determinism contract, end to end.
+//!
+//! Tier-0 (`KernelTier::Deterministic`, the default) keeps every f32
+//! gemm bitwise-identical across scalar/AVX2 dispatch and thread counts.
+//! Tier-1 (`KernelTier::Fast`, opt-in via `DAPC_KERNEL_TIER=fast` or
+//! [`SolveOptions::kernel_tier`]) fuses the f32 multiply-add in the
+//! microkernel: faster and *more* accurate per depth step, but no longer
+//! bit-identical to tier-0.  What tier-1 still promises — and this suite
+//! enforces — is
+//!
+//! * reproducibility: the same inputs on the same backend+tier give the
+//!   same bits, run after run and at any thread count (chunk-stable
+//!   packing keeps pooled == serial bitwise *within* a tier), and
+//! * accuracy: the tier gap is bounded by the unfused kernel's own
+//!   rounding budget (`~k·eps` relative to the accumulated magnitude),
+//!   so every tolerance-based suite in this repo passes on either tier.
+
+use dapc::linalg::blas::{self, GemmPath};
+use dapc::linalg::simd::{self, KernelTier};
+use dapc::linalg::{norms, Matrix};
+use dapc::rng::seeded;
+use dapc::solver::{DapcSolver, NativeEngine, ParallelEngine, SolveOptions, Solver};
+use dapc::sparse::generate::GeneratorConfig;
+
+fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut g = seeded(seed);
+    Matrix::from_fn(rows, cols, |_, _| g.normal_f32())
+}
+
+fn gemm_with_tier(tier: KernelTier, a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    blas::gemm_into_on(simd::active(), tier, GemmPath::Packed, a, b, &mut c);
+    c
+}
+
+#[test]
+fn fast_tier_is_opt_in_and_engines_inherit_the_process_default() {
+    // the process default follows DAPC_KERNEL_TIER exactly: unset (or
+    // anything but "fast") means tier-0 — the fast tier never turns
+    // itself on
+    let env_fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+    let expect = if env_fast {
+        KernelTier::Fast
+    } else {
+        KernelTier::Deterministic
+    };
+    assert_eq!(simd::active_tier(), expect);
+    assert_eq!(NativeEngine::new().tier(), expect);
+    assert_eq!(NativeEngine::default().tier(), expect);
+    assert_eq!(ParallelEngine::new(2).tier(), expect);
+    // explicit construction overrides the env in either direction
+    assert_eq!(NativeEngine::with_tier(KernelTier::Fast).tier(), KernelTier::Fast);
+    let pinned = NativeEngine::with_tier(KernelTier::Deterministic);
+    assert_eq!(pinned.tier(), KernelTier::Deterministic);
+    assert_eq!(ParallelEngine::with_tier(3, KernelTier::Fast).tier(), KernelTier::Fast);
+}
+
+#[test]
+fn tier1_gemm_stays_within_the_forward_error_bound() {
+    // |tier1 - tier0| per element is bounded by 2·k·eps·Σ|a_ip||b_pj|:
+    // both kernels are dot products with ≤ 2k roundings, fusing only
+    // removes some of them.  The bound is checked against an exact-ish
+    // f64 accumulation of |a||b|, not against the outputs themselves.
+    for &(m, k, n) in &[(13usize, 37usize, 19usize), (37, 130, 29), (64, 256, 24)] {
+        let a = randm(m, k, 300 + k as u64);
+        let b = randm(k, n, 400 + k as u64);
+        let c0 = gemm_with_tier(KernelTier::Deterministic, &a, &b);
+        let c1 = gemm_with_tier(KernelTier::Fast, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut mag = 0.0f64;
+                for p in 0..k {
+                    mag += (a[(i, p)] as f64 * b[(p, j)] as f64).abs();
+                }
+                let bound = 2.0 * k as f64 * f32::EPSILON as f64 * mag.max(1.0);
+                let diff = (c1[(i, j)] as f64 - c0[(i, j)] as f64).abs();
+                assert!(
+                    diff <= bound,
+                    "({m},{k},{n}) at ({i},{j}): |{} - {}| = {diff:e} > {bound:e}",
+                    c1[(i, j)],
+                    c0[(i, j)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tier1_gemm_is_bitwise_reproducible_within_the_backend() {
+    let a = randm(33, 129, 500);
+    let b = randm(129, 21, 501);
+    let first = gemm_with_tier(KernelTier::Fast, &a, &b);
+    for run in 0..3 {
+        let again = gemm_with_tier(KernelTier::Fast, &a, &b);
+        for i in 0..first.rows() {
+            for j in 0..first.cols() {
+                assert_eq!(
+                    first[(i, j)].to_bits(),
+                    again[(i, j)].to_bits(),
+                    "tier-1 rerun {run} drifted at ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tier1_pooled_solve_is_bitwise_identical_to_tier1_serial() {
+    // the chunk-stable packing contract is tier-independent: pooled ==
+    // serial must hold bitwise *within* tier-1 too, at any thread count
+    let ds = GeneratorConfig::small_demo(40, 3).generate(21);
+    let opts = SolveOptions { epochs: 20, ..Default::default() };
+    let serial = DapcSolver::new(opts.clone())
+        .solve(&NativeEngine::with_tier(KernelTier::Fast), &ds.matrix, &ds.rhs, 3)
+        .unwrap();
+    for threads in [2usize, 4, 7] {
+        let engine = ParallelEngine::with_tier(threads, KernelTier::Fast);
+        let pooled = DapcSolver::new(opts.clone())
+            .solve(&engine, &ds.matrix, &ds.rhs, 3)
+            .unwrap();
+        assert_eq!(serial.xbar, pooled.xbar, "tier-1 diverged at {threads} threads");
+    }
+    // and the fast tier still solves the system
+    assert!(serial.final_mse(&ds.x_true) < 1e-6);
+}
+
+#[test]
+fn cross_tier_solves_agree_to_solver_tolerance() {
+    // tier-1 perturbs the QR factors at the k·eps level; after the
+    // consensus iteration both tiers converge to the same solution well
+    // inside the accuracy the solver itself claims
+    let ds = GeneratorConfig::small_demo(48, 4).generate(33);
+    let opts = SolveOptions { epochs: 30, ..Default::default() };
+    let t0 = DapcSolver::new(opts.clone())
+        .solve(&NativeEngine::with_tier(KernelTier::Deterministic), &ds.matrix, &ds.rhs, 4)
+        .unwrap();
+    let t1 = DapcSolver::new(opts)
+        .solve(&NativeEngine::with_tier(KernelTier::Fast), &ds.matrix, &ds.rhs, 4)
+        .unwrap();
+    let gap = norms::mse(&t0.xbar, &t1.xbar);
+    assert!(gap < 1e-8, "cross-tier solve gap {gap:e}");
+    assert!(t0.final_mse(&ds.x_true) < 1e-6);
+    assert!(t1.final_mse(&ds.x_true) < 1e-6);
+}

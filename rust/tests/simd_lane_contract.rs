@@ -13,7 +13,7 @@
 //! nothing to compare); the dispatched-vs-scalar assertions still run
 //! and the CI dispatch matrix covers the vector leg on x86-64 runners.
 
-use dapc::linalg::simd::{self, Backend, LANES, MR, NR};
+use dapc::linalg::simd::{self, Backend, KernelTier, LANES, MR, NR};
 use dapc::linalg::{blas, Matrix};
 use dapc::rng::seeded;
 
@@ -323,4 +323,84 @@ fn forced_scalar_env_pins_the_scalar_backend() {
     assert_eq!(simd::select(true, true), Backend::Scalar);
     assert_eq!(simd::select(false, true), Backend::Avx2Fma);
     assert_eq!(simd::select(false, false), Backend::Scalar);
+}
+
+#[test]
+fn kernel_tier_env_pins_the_active_tier() {
+    // this binary also runs on the DAPC_KERNEL_TIER=fast leg of the CI
+    // matrix; the process-wide tier must follow the env exactly
+    let fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+    if fast {
+        assert_eq!(simd::active_tier(), KernelTier::Fast);
+        assert!(simd::tier_description().contains("fast"));
+    } else {
+        assert_eq!(simd::active_tier(), KernelTier::Deterministic);
+    }
+    // the selection rule itself, independent of this process's env
+    assert_eq!(simd::select_tier(true), KernelTier::Fast);
+    assert_eq!(simd::select_tier(false), KernelTier::Deterministic);
+    assert_eq!(KernelTier::default(), KernelTier::Deterministic);
+}
+
+// ---------------------------------------------------------------------------
+// The two-tier microkernel contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tier0_microkernel_entry_is_bitwise_the_lane_kernel_on_all_backends() {
+    // the tier-0 route through `microkernel_tier_on` IS `microkernel_on`:
+    // pinning Deterministic must reproduce the lane kernel bit for bit on
+    // every backend and depth, so every pre-tier `assert_eq!` suite keeps
+    // its meaning under the tier dispatch layer
+    let backends = backends();
+    for &kc in &[0usize, 1, 7, 64, 256, 300] {
+        let ap = rand_f32(kc * MR, 101_000 + kc as u64);
+        let bp = rand_f32(kc * NR, 102_000 + kc as u64);
+        for &b in &backends {
+            let mut want = [[0.25f32; NR]; MR];
+            simd::microkernel_on(b, kc, &ap, &bp, &mut want);
+            let mut got = [[0.25f32; NR]; MR];
+            simd::microkernel_tier_on(b, KernelTier::Deterministic, kc, &ap, &bp, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_f32_slice_bits_eq(g, w, &format!("tier0 kc={kc} row {i} {:?}", b));
+            }
+        }
+    }
+}
+
+#[test]
+fn tier1_microkernel_is_reproducible_and_within_the_fma_error_bound() {
+    // tier-1 fuses the f32 multiply-add; it drops one rounding per depth
+    // step, so |tier1 - tier0| is bounded by the unfused kernel's own
+    // rounding budget: kc * eps relative to the accumulated magnitude
+    let backends = backends();
+    for &kc in &[1usize, 13, 256] {
+        let ap = rand_f32(kc * MR, 103_000 + kc as u64);
+        let bp = rand_f32(kc * NR, 104_000 + kc as u64);
+        for &b in &backends {
+            let mut t0 = [[0.0f32; NR]; MR];
+            simd::microkernel_tier_on(b, KernelTier::Deterministic, kc, &ap, &bp, &mut t0);
+            let mut t1 = [[0.0f32; NR]; MR];
+            simd::microkernel_tier_on(b, KernelTier::Fast, kc, &ap, &bp, &mut t1);
+            // run-twice reproducibility: within backend+tier, bitwise
+            let mut t1b = [[0.0f32; NR]; MR];
+            simd::microkernel_tier_on(b, KernelTier::Fast, kc, &ap, &bp, &mut t1b);
+            for (i, (x, y)) in t1.iter().zip(&t1b).enumerate() {
+                assert_f32_slice_bits_eq(x, y, &format!("tier1 rerun kc={kc} row {i} {:?}", b));
+            }
+            for i in 0..MR {
+                for j in 0..NR {
+                    let bound = 2.0 * kc as f32 * f32::EPSILON * t0[i][j].abs().max(1.0);
+                    let diff = (t1[i][j] - t0[i][j]).abs();
+                    assert!(
+                        diff <= bound,
+                        "tier1 kc={kc} ({i},{j}) {:?}: |{} - {}| = {diff} > {bound}",
+                        b,
+                        t1[i][j],
+                        t0[i][j]
+                    );
+                }
+            }
+        }
+    }
 }
