@@ -17,7 +17,10 @@
 //! packed trailing-sweep gemm vs the column-separable per-column dots it
 //! replaced (at the QR sweep shape), tier-0 vs the opt-in tier-1 FMA
 //! microkernel on identical inputs, and the direct-vs-packed small-`n`
-//! crossover that the per-shape `GemmPath::Auto` dispatch encodes.
+//! crossover that the per-shape `GemmPath::Auto` dispatch encodes.  The
+//! wide (f64-accumulating) microkernel of the prepacked epoch path gets
+//! the same treatment: GFLOP/s per backend and tier vs the widened
+//! row-dot oracle it is bitwise-equal to, on identical inputs.
 
 use dapc::benchkit::{black_box, quick_mode, Bench, BenchResult, JsonReport};
 use dapc::linalg::simd::{self, Backend, KernelTier, MR, NR};
@@ -137,6 +140,78 @@ fn main() {
         micro.push((b, res));
     }
     speedup_line("microkernel", kc, &micro);
+    println!();
+
+    // -----------------------------------------------------------------
+    // The wide (f64-accumulating) microkernel of the prepacked epoch
+    // path vs the row-dot oracle it replaced, on identical inputs: the
+    // baseline widens each A row and runs NR dot_wide calls per tile,
+    // exactly as the epoch loop did before prepacked panels.  Per
+    // backend, with the tier-1 fused line riding along.
+    // -----------------------------------------------------------------
+    let mut rows_a = vec![vec![0.0f32; kc]; MR];
+    for (p, tile) in ap.chunks_exact(MR).enumerate() {
+        for (row, &v) in rows_a.iter_mut().zip(tile) {
+            row[p] = v;
+        }
+    }
+    let mut cols_b = vec![vec![0.0f32; kc]; NR];
+    for (p, panel) in bp.chunks_exact(NR).enumerate() {
+        for (col, &v) in cols_b.iter_mut().zip(panel) {
+            col[p] = v;
+        }
+    }
+    let wide_flops = (2 * kc * MR * NR * reps) as f64;
+    for &b in &simd::available() {
+        let mut wrow = vec![0.0f64; kc];
+        let mut out = [[0.0f64; NR]; MR];
+        let base_res = bench.run(&format!("wide row-dot kc={kc} x{reps} [{}]", b.name()), || {
+            for _ in 0..reps {
+                for (row, o) in rows_a.iter().zip(out.iter_mut()) {
+                    blas::widen(row, &mut wrow);
+                    for (col, oj) in cols_b.iter().zip(o.iter_mut()) {
+                        *oj = simd::dot_wide_on(b, &wrow, col);
+                    }
+                }
+            }
+            black_box(out[0][0]);
+        });
+        let base_gflops = wide_flops / base_res.stats.median() / 1e9;
+        report.add(
+            &base_res,
+            &[("kc", kc as f64), ("reps", reps as f64), ("gflops", base_gflops)],
+            &[("kernel", "wide_row_dot"), ("backend", b.name())],
+        );
+        let mut tier_med = Vec::new();
+        for (label, tier) in [("t0", KernelTier::Deterministic), ("t1", KernelTier::Fast)] {
+            let res = bench.run(
+                &format!("wide microkernel {label} kc={kc} x{reps} [{}]", b.name()),
+                || {
+                    for _ in 0..reps {
+                        simd::microkernel_wide_tier_on(b, tier, kc, &ap, &bp, &mut out);
+                    }
+                    black_box(out[0][0]);
+                },
+            );
+            let gflops = wide_flops / res.stats.median() / 1e9;
+            let lab = format!("wide_microkernel_{label}");
+            report.add(
+                &res,
+                &[("kc", kc as f64), ("reps", reps as f64), ("gflops", gflops)],
+                &[("kernel", lab.as_str()), ("backend", b.name())],
+            );
+            tier_med.push((res.stats.median(), gflops));
+        }
+        println!(
+            "  -> wide microkernel [{}]: t0 {:.2} GFLOP/s ({:.2}x vs row-dot's {:.2}), \
+             t1 {:.2}x vs t0",
+            b.name(),
+            tier_med[0].1,
+            base_res.stats.median() / tier_med[0].0.max(1e-12),
+            base_gflops,
+            tier_med[0].0 / tier_med[1].0.max(1e-12)
+        );
+    }
     println!();
 
     // -----------------------------------------------------------------

@@ -11,7 +11,9 @@
 //!
 //!   batched k=32 per-RHS  <  warm single per-RHS  <  cold per-solve
 //!
-//! and records everything in `BENCH_service_throughput.json`.
+//! and records everything in `BENCH_service_throughput.json`, including
+//! the steady-state per-epoch time of the prepacked epoch path
+//! (`warm_per_epoch_s` / `batch32_per_epoch_s` in the summary record).
 
 use dapc::benchkit::{quick_mode, Bench, JsonReport};
 use dapc::prelude::*;
@@ -135,12 +137,23 @@ fn main() {
         batch_per_rhs[2].1,
         cold_s / batch_per_rhs[2].1,
     );
+    // steady-state per-epoch view: what one prepacked projector sweep
+    // costs once the session is warm (seeding/residual overhead divided
+    // out across the epoch count)
+    let warm_per_epoch = warm_s / epochs as f64;
+    let batch32_per_epoch = batch_per_rhs[2].1 * 32.0 / epochs as f64;
+    println!(
+        "steady state: {warm_per_epoch:.6}s per epoch (k=1), \
+         {batch32_per_epoch:.6}s per epoch (k=32)"
+    );
     report.add(
         &Bench::new(0, 1).run_once("summary", || {}),
         &[
             ("cold_solve_s", cold_s),
             ("warm_per_solve_s", warm_s),
             ("batch32_per_rhs_s", batch_per_rhs[2].1),
+            ("warm_per_epoch_s", warm_per_epoch),
+            ("batch32_per_epoch_s", batch32_per_epoch),
             ("register_s", register_s),
             ("amortized_per_rhs_s", amortized),
         ],

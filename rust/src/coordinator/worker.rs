@@ -11,7 +11,7 @@
 //! with a `WorkerError` — it would otherwise silently serve stale state.
 
 use crate::error::Result;
-use crate::linalg::Matrix;
+use crate::linalg::{blas, Matrix};
 use crate::solver::{ComputeEngine, SeedFactors};
 
 use super::message::Message;
@@ -52,6 +52,10 @@ struct WorkerState {
     /// Retained seed factorization (v3 sessions; `None` for one-shot
     /// inits and gradient-only registrations).
     seed: Option<SeedFactors>,
+    /// Prepacked projector panels retained alongside the factorization:
+    /// registered sessions stream their batched epochs through the
+    /// packed wide-gemm update instead of the row-dot sweep.
+    panels: Option<blas::PrepackedPanels>,
     /// Whether a `RegisterMatrix` created this state — RHS frames are
     /// only legal on registered sessions.
     registered: bool,
@@ -74,6 +78,7 @@ impl WorkerState {
             a,
             b,
             seed: None,
+            panels: None,
             registered: false,
             xs: Vec::new(),
             bs: Vec::new(),
@@ -83,6 +88,7 @@ impl WorkerState {
     fn registered(
         projector: Option<Matrix>,
         seed: Option<SeedFactors>,
+        panels: Option<blas::PrepackedPanels>,
         a: Matrix,
     ) -> Self {
         Self {
@@ -91,6 +97,7 @@ impl WorkerState {
             a,
             b: Vec::new(),
             seed,
+            panels,
             registered: true,
             xs: Vec::new(),
             bs: Vec::new(),
@@ -137,19 +144,21 @@ fn handle<E: ComputeEngine>(
                     // factorize once — the panel-blocked QR; a pooled
                     // engine fans the trailing updates across its
                     // threads, so a worker's cold registration scales
-                    // with --threads.  Projector + seed state stay
-                    // resident for every rhs this session will stream.
+                    // with --threads.  Projector + prepacked panels +
+                    // seed state stay resident for every rhs this
+                    // session will stream.
                     let fac =
                         engine.factorize(engine_kind, &a, n_target as usize)?;
                     *state = Some(WorkerState::registered(
                         Some(fac.projector),
                         Some(fac.seed),
+                        Some(fac.panels),
                         a,
                     ));
                 }
                 None => {
                     // gradient-only session: the block alone is resident
-                    *state = Some(WorkerState::registered(None, None, a));
+                    *state = Some(WorkerState::registered(None, None, None, a));
                 }
             }
             Ok(Some(Message::MatrixRegistered { worker_id }))
@@ -185,7 +194,15 @@ fn handle<E: ComputeEngine>(
                     xbars.len()
                 )));
             }
-            st.xs = engine.update_batch(&st.xs, &xbars, p, gamma)?;
+            // registered sessions carry prepacked panels and take the
+            // packed wide-gemm sweep — bit-identical to the row-dot
+            // update, so the wire protocol is unchanged
+            st.xs = match &st.panels {
+                Some(panels) => {
+                    engine.update_batch_packed(&st.xs, &xbars, panels, gamma)?
+                }
+                None => engine.update_batch(&st.xs, &xbars, p, gamma)?,
+            };
             Ok(Some(Message::UpdateBatchDone {
                 worker_id: *my_id,
                 xs: st.xs.clone(),

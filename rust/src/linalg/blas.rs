@@ -55,6 +55,29 @@
 //! per-element order, bitwise-identical to the packed path under
 //! tier-0.
 //!
+//! # Prepacked operands ([`PrepackedPanels`])
+//!
+//! Packing is a pure gather of a *constant* operand, so an operand that
+//! is reused across many products — the per-partition projector `P_j`,
+//! applied every consensus epoch for the lifetime of a registered
+//! matrix — can pay the pack **once** and keep the panel buffer
+//! resident, exactly like prepacked weights in an inference stack.
+//! [`PrepackedPanels::from_matrix`] snapshots a row-major matrix into
+//! full-depth MR-row panels (the [`pack_a_strided`] layout; the source
+//! matrix can be dropped or kept independently), and
+//! [`packed_gemm_prepacked_into`] multiplies the resident panels
+//! against a freshly packed B, accumulating in **f64** through the wide
+//! microkernel (`simd::microkernel_wide_on`): every output element
+//! carries the bit-exact value of `dot(row_i(A), col_j(B))`, so the
+//! prepacked epoch path equals the per-row `dot`/`dot_wide` path it
+//! replaces bit-for-bit, at any thread count and any output chunking
+//! (the chunk-stable contract above, strengthened from "pure function
+//! of tile coordinates" to "equal to the row dot").  The cost is
+//! memory: the panel buffer duplicates the operand
+//! (`packed_a_len(m, k)` f32s, ~m·k plus fringe padding), which is why
+//! the solver retains panels only for *registered* sessions, never for
+//! one-shot solves, and reports the resident bytes in `ServiceStats`.
+//!
 //! # Block-size tuning (`MC`/`KC`/`NC`)
 //!
 //! The three cache block sizes map onto the cache hierarchy:
@@ -556,6 +579,111 @@ pub fn packed_gemm_into(
     }
 }
 
+/// A matrix packed once into full-depth MR-row A-panels and kept
+/// resident for reuse across many products (module docs, "Prepacked
+/// operands").  The epoch loop builds one per projector at
+/// `register_matrix` time and streams every epoch's B panels against
+/// it via [`packed_gemm_prepacked_into`].
+#[derive(Debug, Clone)]
+pub struct PrepackedPanels {
+    buf: Vec<f32>,
+    m: usize,
+    k: usize,
+}
+
+impl PrepackedPanels {
+    /// Pack a row-major `m x k` matrix ([`pack_a_strided`] with
+    /// `rs = k, cs = 1`).  Pure gather: the result is a deterministic
+    /// function of the matrix bytes.
+    pub fn from_matrix(a: &Matrix) -> Self {
+        let (m, k) = a.shape();
+        let mut buf = vec![0.0f32; packed_a_len(m, k)];
+        pack_a_strided(a.as_slice(), k, 1, m, k, &mut buf);
+        PrepackedPanels { buf, m, k }
+    }
+
+    /// Rows of the packed operand.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Columns (depth) of the packed operand.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Resident bytes of the panel buffer (the pack-once memory
+    /// tradeoff `ServiceStats` reports).
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+
+    /// The raw panel buffer (`buf[t*k*MR + p*MR + i]`, fringe rows
+    /// zero-padded).
+    pub fn panels(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+/// Wide-microkernel gemm over a resident prepacked A and a packed B:
+/// `C[i - row0, j] = Σ_p A[i, p] · B[p, j]` for `i` in
+/// `row0..row0 + rows`, f64 accumulation, **overwriting** C.
+///
+/// Unlike [`packed_gemm_into`] the depth is never split into `KC`
+/// blocks: each output element is one full-depth pass of the wide
+/// microkernel, whose lane discipline makes it bit-equal to
+/// `dot(row_i(A), col_j(B))` under tier-0 (`simd.rs` module docs).
+/// `row0` must be MR-aligned so a row range addresses whole panels —
+/// callers split C across threads at MR boundaries, and because each
+/// element is a pure function of its own row and column, any such split
+/// reproduces the serial bits.  `c[(i - row0, j)]` lives at
+/// `(i - row0)*rs_c + j*cs_c`.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_gemm_prepacked_into(
+    backend: Backend,
+    tier: KernelTier,
+    a: &PrepackedPanels,
+    row0: usize,
+    rows: usize,
+    n: usize,
+    b_pack: &[f32],
+    c: &mut [f32],
+    rs_c: usize,
+    cs_c: usize,
+) {
+    let k = a.k;
+    assert_eq!(row0 % MR, 0, "prepacked row range must be MR-aligned");
+    assert!(row0 + rows <= a.m, "prepacked row range out of bounds");
+    assert!(b_pack.len() >= packed_b_len(k, n), "packed B too short");
+    if rows == 0 || n == 0 {
+        return;
+    }
+    assert!(
+        (rows - 1) * rs_c + (n - 1) * cs_c < c.len(),
+        "prepacked gemm output too short"
+    );
+    let t0 = row0 / MR;
+    let row_panels = (row0 + rows).div_ceil(MR) - t0;
+    let col_panels = n.div_ceil(NR);
+    for q in 0..col_panels {
+        let nr = NR.min(n - q * NR);
+        let bpanel = &b_pack[q * k * NR..(q + 1) * k * NR];
+        for t in 0..row_panels {
+            let ir = (t0 + t) * MR;
+            let mr = MR.min(row0 + rows - ir);
+            let ap = &a.buf[(t0 + t) * k * MR..(t0 + t + 1) * k * MR];
+            let mut out = [[0.0f64; NR]; MR];
+            simd::microkernel_wide_tier_on(backend, tier, k, ap, bpanel, &mut out);
+            for (i, orow) in out.iter().enumerate().take(mr) {
+                let ci = ir + i - row0;
+                for (j, &v) in orow[..nr].iter().enumerate() {
+                    c[ci * rs_c + (q * NR + j) * cs_c] = v as f32;
+                }
+            }
+        }
+    }
+}
+
 /// `C = A^T B` without materializing the transpose.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows());
@@ -932,6 +1060,100 @@ mod tests {
         pack_a_strided(at.as_slice(), rows, 1, cols, rows, &mut direct);
         pack_a_strided(a.as_slice(), 1, cols, cols, rows, &mut viewed);
         assert_eq!(direct, viewed);
+    }
+
+    #[test]
+    fn prepacked_gemm_is_row_dot_bitwise() {
+        // the tentpole contract: every element of the prepacked product
+        // equals dot(row_i(A), col_j(B)) bit-for-bit — shapes cover MR
+        // and NR fringes and every k % 8 class the epoch loop can see
+        let backend = simd::active();
+        for &(m, k, n) in &[
+            (4, 8, 8),
+            (5, 9, 3),
+            (16, 29, 1),
+            (13, 31, 11),
+            (24, 64, 8),
+        ] {
+            let a = randm(m, k, (m * 13 + k) as u64);
+            let b = randm(k, n, (n * 11 + k) as u64);
+            let packs = PrepackedPanels::from_matrix(&a);
+            assert_eq!((packs.m(), packs.k()), (m, k));
+            assert_eq!(packs.bytes(), packed_a_len(m, k) * 4);
+            let mut b_pack = vec![0.0f32; packed_b_len(k, n)];
+            pack_b_strided(b.as_slice(), n, 1, k, n, &mut b_pack);
+            let mut c = vec![9.0f32; m * n];
+            packed_gemm_prepacked_into(
+                backend,
+                KernelTier::Deterministic,
+                &packs,
+                0,
+                m,
+                n,
+                &b_pack,
+                &mut c,
+                n,
+                1,
+            );
+            for i in 0..m {
+                for j in 0..n {
+                    let col: Vec<f32> = (0..k).map(|p| b[(p, j)]).collect();
+                    let want = dot(a.row(i), &col) as f32;
+                    assert_eq!(
+                        c[i * n + j].to_bits(),
+                        want.to_bits(),
+                        "({m},{k},{n}) at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_gemm_row_chunks_reproduce_full_sweep() {
+        // MR-aligned row chunks into disjoint output buffers must equal
+        // the one-shot full sweep — the pooled fan-out shape
+        let backend = simd::active();
+        let (m, k, n) = (21, 37, 9);
+        let a = randm(m, k, 91);
+        let b = randm(k, n, 92);
+        let packs = PrepackedPanels::from_matrix(&a);
+        let mut b_pack = vec![0.0f32; packed_b_len(k, n)];
+        pack_b_strided(b.as_slice(), n, 1, k, n, &mut b_pack);
+        let mut full = vec![0.0f32; m * n];
+        packed_gemm_prepacked_into(
+            backend,
+            KernelTier::Deterministic,
+            &packs,
+            0,
+            m,
+            n,
+            &b_pack,
+            &mut full,
+            n,
+            1,
+        );
+        let mut chunked = vec![0.0f32; m * n];
+        let rows_per = 2 * MR; // MR-aligned, leaves a ragged tail chunk
+        for (ci, cbuf) in chunked.chunks_mut(rows_per * n).enumerate() {
+            let lo = ci * rows_per;
+            let rows = rows_per.min(m - lo);
+            packed_gemm_prepacked_into(
+                backend,
+                KernelTier::Deterministic,
+                &packs,
+                lo,
+                rows,
+                n,
+                &b_pack,
+                cbuf,
+                n,
+                1,
+            );
+        }
+        let fb: Vec<u32> = full.iter().map(|v| v.to_bits()).collect();
+        let cb: Vec<u32> = chunked.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, cb);
     }
 
     #[test]

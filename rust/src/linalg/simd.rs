@@ -69,6 +69,28 @@
 //!   the tier-0 contract always, so consensus iterates
 //!   (`update_batch_kernel` etc.) are tier-independent.
 //!
+//! # The wide microkernel (packed panels, f64 accumulation)
+//!
+//! [`microkernel_wide_on`] is the epoch-loop analogue of the gemm
+//! microkernel: f32 packed `MR x kc` A-panels times f32 `kc x NR`
+//! B-panels, accumulated in **f64** with the exact lane discipline of
+//! [`dot_on`] — per output element, depth index `p` feeds phase
+//! accumulator `p % 8` over the full depth (the caller passes the whole
+//! `k`, never a `KC` slice), the 8 phases fold through the shared
+//! [`reduce_lanes`] tree, and the sequential `k % 8` tail joins last.
+//! Every output element therefore carries the bit-exact value of
+//! `dot(row_i(A), col_j(B))`: single-RHS row-dots, batch-of-k panels,
+//! pooled row chunks and serial sweeps all agree by construction, which
+//! is what lets the consensus epoch loop run on prepacked projector
+//! panels (`blas::PrepackedPanels`) without perturbing a bit of any
+//! equivalence suite.  Unlike the f32 microkernel the wide kernel
+//! *overwrites* its `MR x NR` f64 output tile (no read-modify-write), so
+//! its result is a pure function of the panels alone.  A tier-1 fused
+//! variant ([`microkernel_wide_tier_on`] with [`KernelTier::Fast`])
+//! accumulates in fused f32 (sequential over `p` per element,
+//! correctly-rounded on both backends) and widens once at the end —
+//! same reproducibility story as the tier-1 f32 microkernel.
+//!
 //! # NaN policy
 //!
 //! Matching `norms::max_abs`: NaN is never silently dropped.  A NaN
@@ -352,6 +374,67 @@ pub fn microkernel_tier_on(
     }
 }
 
+/// The wide (f64-accumulating) register microkernel on the given
+/// backend: `out[i][j] = Σ_p Ap[i,p] · Bp[p,j]` over the **full** depth
+/// `kc`, with the dot-product lane discipline (8 phase accumulators by
+/// `p % 8`, the [`reduce_lanes`] tree, sequential `kc % 8` tail last).
+/// `Ap` is an `MR x kc` packed panel (k-major, as laid out by
+/// `blas::pack_a_strided`), `Bp` a `kc x NR` packed panel.  Overwrites
+/// the tile — every element equals `dot_on(row_i, col_j)` bitwise, so
+/// callers must pass the whole depth in one call (a `KC` split would
+/// change the phase assignment).
+#[inline]
+pub fn microkernel_wide_on(
+    backend: Backend,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    out: &mut [[f64; NR]; MR],
+) {
+    assert!(ap.len() >= kc * MR, "wide microkernel A panel too short");
+    assert!(bp.len() >= kc * NR, "wide microkernel B panel too short");
+    match backend {
+        Backend::Scalar => scalar::microkernel_wide(kc, ap, bp, out),
+        Backend::Avx2Fma => microkernel_wide_avx2(kc, ap, bp, out),
+    }
+}
+
+/// [`microkernel_wide_on`] with an explicit [`KernelTier`]: tier-0 is
+/// the lane-disciplined f64 kernel above; tier-1 accumulates in *fused*
+/// f32 (sequential over `p` per element, [`f32::mul_add`] scalar /
+/// `vfmadd231ps` AVX2, both correctly rounded so the backends agree
+/// bitwise within tier-1) and widens the finished sum into the f64
+/// tile.  The consensus epoch loop always passes tier-0 — tier-1 here
+/// exists for benches and tier experiments behind the same contract as
+/// the f32 microkernel.
+#[inline]
+pub fn microkernel_wide_tier_on(
+    backend: Backend,
+    tier: KernelTier,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    out: &mut [[f64; NR]; MR],
+) {
+    match tier {
+        KernelTier::Deterministic => {
+            microkernel_wide_on(backend, kc, ap, bp, out)
+        }
+        KernelTier::Fast => {
+            assert!(ap.len() >= kc * MR, "wide microkernel A panel too short");
+            assert!(bp.len() >= kc * NR, "wide microkernel B panel too short");
+            match backend {
+                Backend::Scalar => {
+                    scalar::microkernel_wide_fma(kc, ap, bp, out)
+                }
+                Backend::Avx2Fma => {
+                    microkernel_wide_fma_avx2(kc, ap, bp, out)
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // x86-64 trampolines: re-check CPU support so the pub `*_on` functions
 // stay sound even if a caller passes `Backend::Avx2Fma` by hand on an
@@ -406,6 +489,30 @@ fn microkernel_fma_avx2(
     unsafe { avx2::microkernel_fma(kc, ap, bp, acc) }
 }
 
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn microkernel_wide_avx2(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    out: &mut [[f64; NR]; MR],
+) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::microkernel_wide(kc, ap, bp, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn microkernel_wide_fma_avx2(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    out: &mut [[f64; NR]; MR],
+) {
+    assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    unsafe { avx2::microkernel_wide_fma(kc, ap, bp, out) }
+}
+
 #[cfg(not(target_arch = "x86_64"))]
 fn dot_avx2(_x: &[f32], _y: &[f32]) -> f64 {
     panic!("the avx2+fma kernel backend requires x86_64");
@@ -437,6 +544,26 @@ fn microkernel_fma_avx2(
     _ap: &[f32],
     _bp: &[f32],
     _acc: &mut [[f32; NR]; MR],
+) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn microkernel_wide_avx2(
+    _kc: usize,
+    _ap: &[f32],
+    _bp: &[f32],
+    _out: &mut [[f64; NR]; MR],
+) {
+    panic!("the avx2+fma kernel backend requires x86_64");
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn microkernel_wide_fma_avx2(
+    _kc: usize,
+    _ap: &[f32],
+    _bp: &[f32],
+    _out: &mut [[f64; NR]; MR],
 ) {
     panic!("the avx2+fma kernel backend requires x86_64");
 }
@@ -542,6 +669,59 @@ mod scalar {
                 for (j, a) in row.iter_mut().enumerate() {
                     *a += ai * bv[j];
                 }
+            }
+        }
+    }
+
+    /// The wide microkernel: per output element `(i, j)`, depth step
+    /// `p` feeds f64 phase accumulator `p % 8` (products of widened f32
+    /// are exact, one rounding at each add — the dot-product contract),
+    /// phases fold through [`reduce_lanes`], the sequential `kc % 8`
+    /// tail joins last, and the tile is *overwritten*.  Bit-identical
+    /// to `dot(row_i(ap), col_j(bp))` per element.
+    pub(super) fn microkernel_wide(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        out: &mut [[f64; NR]; MR],
+    ) {
+        let chunks = kc / LANES;
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, o) in row.iter_mut().enumerate() {
+                let mut lanes = [0.0f64; LANES];
+                for c in 0..chunks {
+                    let base = c * LANES;
+                    for (l, a) in lanes.iter_mut().enumerate() {
+                        let p = base + l;
+                        *a += ap[p * MR + i] as f64 * bp[p * NR + j] as f64;
+                    }
+                }
+                let mut tail = 0.0f64;
+                for p in chunks * LANES..kc {
+                    tail += ap[p * MR + i] as f64 * bp[p * NR + j] as f64;
+                }
+                *o = reduce_lanes(&lanes) + tail;
+            }
+        }
+    }
+
+    /// The tier-1 wide microkernel: a single fused f32 accumulator per
+    /// element, sequential over the full depth, widened exactly into
+    /// the f64 tile at the end.  `f32::mul_add` is correctly rounded,
+    /// so scalar and AVX2 tier-1 agree bitwise.
+    pub(super) fn microkernel_wide_fma(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        out: &mut [[f64; NR]; MR],
+    ) {
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, o) in row.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for p in 0..kc {
+                    s = ap[p * MR + i].mul_add(bp[p * NR + j], s);
+                }
+                *o = s as f64;
             }
         }
     }
@@ -776,6 +956,102 @@ mod avx2 {
         _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
         _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
     }
+
+    /// The wide (f64) microkernel.  Per output row the 8 depth phases
+    /// are kept as 8 vector accumulators over one 4-column half of the
+    /// tile (two passes per row keep the register count at 8 + temps);
+    /// `vfmadd231pd` on widened-f32 products is exact-equivalent to
+    /// mul-then-add, so each phase performs the identical rounding
+    /// sequence as the scalar lanes, and the phase fold below is the
+    /// vectorized `super::reduce_lanes` tree.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
+    /// `kc * NR` elements (asserted by the dispatching trampoline).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn microkernel_wide(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        out: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let chunks = kc / LANES;
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for (i, row) in out.iter_mut().enumerate() {
+            for half in 0..2 {
+                let col0 = half * 4;
+                let mut ph = [_mm256_setzero_pd(); LANES];
+                for c in 0..chunks {
+                    let base = c * LANES;
+                    for (l, acc) in ph.iter_mut().enumerate() {
+                        let p = base + l;
+                        let av = _mm256_set1_pd(*a.add(p * MR + i) as f64);
+                        let bv = _mm256_cvtps_pd(_mm_loadu_ps(
+                            b.add(p * NR + col0),
+                        ));
+                        *acc = _mm256_fmadd_pd(av, bv, *acc);
+                    }
+                }
+                // the reduce_lanes tree, 4 columns at a time:
+                // ((p0+p4)+(p2+p6)) + ((p1+p5)+(p3+p7))
+                let s0 = _mm256_add_pd(ph[0], ph[4]);
+                let s1 = _mm256_add_pd(ph[1], ph[5]);
+                let s2 = _mm256_add_pd(ph[2], ph[6]);
+                let s3 = _mm256_add_pd(ph[3], ph[7]);
+                let red = _mm256_add_pd(
+                    _mm256_add_pd(s0, s2),
+                    _mm256_add_pd(s1, s3),
+                );
+                let mut reds = [0.0f64; 4];
+                _mm256_storeu_pd(reds.as_mut_ptr(), red);
+                for (jj, &r) in reds.iter().enumerate() {
+                    let j = col0 + jj;
+                    let mut tail = 0.0f64;
+                    for p in chunks * LANES..kc {
+                        tail += *a.add(p * MR + i) as f64
+                            * *b.add(p * NR + j) as f64;
+                    }
+                    row[j] = r + tail;
+                }
+            }
+        }
+    }
+
+    /// Tier-1 wide microkernel: one fused f32 accumulator vector per
+    /// row, sequential over the full depth (the same per-element order
+    /// as the scalar twin, both correctly rounded), widened exactly
+    /// into the f64 tile at the end.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
+    /// `kc * NR` elements (asserted by the dispatching trampoline).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn microkernel_wide_fma(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        out: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for (i, row) in out.iter_mut().enumerate() {
+            let mut cv = _mm256_setzero_ps();
+            for p in 0..kc {
+                let av = _mm256_set1_ps(*a.add(p * MR + i));
+                let bv = _mm256_loadu_ps(b.add(p * NR));
+                cv = _mm256_fmadd_ps(av, bv, cv);
+            }
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(cv));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(cv));
+            _mm256_storeu_pd(row.as_mut_ptr(), lo);
+            _mm256_storeu_pd(row.as_mut_ptr().add(4), hi);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -916,6 +1192,116 @@ mod tests {
             for (v0, v1) in r0.iter().zip(r1) {
                 let tol = 2.0 * kc as f32 * f32::EPSILON * v0.abs().max(1.0);
                 assert!((v0 - v1).abs() <= tol, "{v0} vs {v1}");
+            }
+        }
+    }
+
+    /// Gather row `i` of a packed A panel / column `j` of a packed B
+    /// panel back into contiguous vectors for the dot oracle.
+    fn gather(ap: &[f32], bp: &[f32], kc: usize, i: usize, j: usize) -> (Vec<f32>, Vec<f32>) {
+        let row: Vec<f32> = (0..kc).map(|p| ap[p * MR + i]).collect();
+        let col: Vec<f32> = (0..kc).map(|p| bp[p * NR + j]).collect();
+        (row, col)
+    }
+
+    #[test]
+    fn wide_kernel_is_per_element_dot_bitwise_every_remainder_class() {
+        // kc sweeps every kc % 8 class; every backend must reproduce
+        // dot() bit-for-bit in every tile element
+        for kc in [0usize, 1, 3, 7, 8, 9, 13, 16, 29, 64, 67] {
+            let ap: Vec<f32> = (0..kc.max(1) * MR)
+                .map(|i| ((i * 29) % 23) as f32 * 0.06 - 0.7)
+                .collect();
+            let bp: Vec<f32> = (0..kc.max(1) * NR)
+                .map(|i| ((i * 31) % 19) as f32 * 0.05 - 0.4)
+                .collect();
+            for &b in &available() {
+                let mut out = [[1.5f64; NR]; MR]; // must be overwritten
+                microkernel_wide_on(b, kc, &ap, &bp, &mut out);
+                for i in 0..MR {
+                    for j in 0..NR {
+                        let (row, col) = gather(&ap, &bp, kc, i, j);
+                        let want = dot_on(Backend::Scalar, &row, &col);
+                        assert_eq!(
+                            out[i][j].to_bits(),
+                            want.to_bits(),
+                            "kc={kc} i={i} j={j} backend={}",
+                            b.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_tier0_entry_is_the_wide_kernel_bitwise() {
+        let kc = 21;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i * 37) % 17) as f32 * 0.07 - 0.5).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i * 41) % 13) as f32 * 0.04 - 0.3).collect();
+        let mut o0 = [[0.0f64; NR]; MR];
+        let mut o1 = [[0.0f64; NR]; MR];
+        microkernel_wide_on(Backend::Scalar, kc, &ap, &bp, &mut o0);
+        microkernel_wide_tier_on(
+            Backend::Scalar,
+            KernelTier::Deterministic,
+            kc,
+            &ap,
+            &bp,
+            &mut o1,
+        );
+        assert_eq!(o0.map(|r| r.map(f64::to_bits)), o1.map(|r| r.map(f64::to_bits)));
+    }
+
+    #[test]
+    fn wide_tier1_is_reproducible_and_close_to_tier0() {
+        let kc = 48;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i * 43) % 29) as f32 * 0.05 - 0.6).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i * 47) % 31) as f32 * 0.03 - 0.4).collect();
+        let mut t0 = [[0.0f64; NR]; MR];
+        microkernel_wide_tier_on(
+            Backend::Scalar,
+            KernelTier::Deterministic,
+            kc,
+            &ap,
+            &bp,
+            &mut t0,
+        );
+        let mut runs = Vec::new();
+        for &b in &available() {
+            let mut f = [[0.0f64; NR]; MR];
+            microkernel_wide_tier_on(Backend::Scalar, KernelTier::Fast, kc, &ap, &bp, &mut f);
+            let mut g = [[0.0f64; NR]; MR];
+            microkernel_wide_tier_on(b, KernelTier::Fast, kc, &ap, &bp, &mut g);
+            // within tier-1 every backend fuses identically
+            assert_eq!(f.map(|r| r.map(f64::to_bits)), g.map(|r| r.map(f64::to_bits)));
+            runs.push(f);
+        }
+        for (r0, r1) in t0.iter().zip(&runs[0]) {
+            for (v0, v1) in r0.iter().zip(r1) {
+                let tol = 4.0 * kc as f64 * f32::EPSILON as f64 * v0.abs().max(1.0);
+                assert!((v0 - v1).abs() <= tol, "{v0} vs {v1}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_kernel_propagates_nan() {
+        let kc = 11;
+        let mut ap: Vec<f32> = vec![0.5; kc * MR];
+        let bp: Vec<f32> = vec![0.25; kc * NR];
+        ap[3 * MR + 1] = f32::NAN; // depth 3, row 1
+        for &b in &available() {
+            let mut out = [[0.0f64; NR]; MR];
+            microkernel_wide_on(b, kc, &ap, &bp, &mut out);
+            for (i, row) in out.iter().enumerate() {
+                for &v in row {
+                    if i == 1 {
+                        assert!(v.is_nan(), "backend {}", b.name());
+                    } else {
+                        assert!(!v.is_nan(), "backend {}", b.name());
+                    }
+                }
             }
         }
     }

@@ -126,6 +126,20 @@ fn cmd_kernels() -> Result<()> {
         "threads: {} (pool default; --threads overrides per run)",
         dapc::parallel::default_threads()
     );
+    println!(
+        "resident factorization (per registered partition, l x n block): \
+         l*n + n*n f32 + packed_a_len(n, n) f32 panels + seed factors"
+    );
+    for (label, kind, l, n) in [
+        ("qr 4096x1024", dapc::solver::InitKind::Qr, 4096usize, 1024usize),
+        ("classical 4096x1024", dapc::solver::InitKind::Classical, 4096, 1024),
+        ("fat 256x1024", dapc::solver::InitKind::Fat, 256, 1024),
+    ] {
+        println!(
+            "  e.g. {label}: {} B",
+            dapc::solver::resident_partition_bytes(kind, l, n)
+        );
+    }
     Ok(())
 }
 

@@ -20,7 +20,12 @@
 //! * the DGD forward product `A x` is row-chunk parallel
 //!   ([`crate::linalg::blas::gemv_pooled`]); the transposed reduction
 //!   `A^T r` stays sequential because parallelizing it would reorder
-//!   floating-point sums.
+//!   floating-point sums;
+//! * the prepacked batched round fans (partition x MR-aligned row
+//!   chunk) wide-gemm jobs over the pool: every output element is
+//!   produced by exactly one microkernel tile whose accumulation order
+//!   is a pure function of its coordinates, so any fan of disjoint row
+//!   ranges is bit-identical to the serial sweep by construction.
 //!
 //! Jobs never nest scopes on the pool (that would deadlock a fully
 //! occupied pool), which is why the per-partition round jobs call the
@@ -36,14 +41,15 @@
 use std::sync::Arc;
 
 use crate::error::Result;
-use crate::linalg::simd::KernelTier;
+use crate::linalg::simd::{self, KernelTier, MR};
 use crate::linalg::{blas, Matrix};
 use crate::solver::engine::{
     average_chunk_kernel, check_average_shapes, check_dgd_shapes,
-    check_round_batch_shapes, check_round_shapes, check_update_shapes,
-    factorize_kernel, update_batch_kernel, update_kernel, ComputeEngine,
-    InitKind, NativeEngine, RoundWorkspace, SeedFactors,
-    WorkerFactorization, WorkerInit,
+    check_prepacked_panels, check_round_batch_shapes, check_round_shapes,
+    check_update_batch_packed_shapes, check_update_shapes, factorize_kernel,
+    pack_batch_diffs, scale_batch_from_cbuf, update_batch_kernel,
+    update_kernel, ComputeEngine, InitKind, NativeEngine, RoundWorkspace,
+    SeedFactors, WorkerFactorization, WorkerInit,
 };
 
 use super::pool::ThreadPool;
@@ -391,18 +397,16 @@ impl ComputeEngine for ParallelEngine {
         // eq. (6): one pool job per partition; each job sweeps its
         // projector once for all k columns through the batched kernel
         // (buffers disjoint by construction, so determinism holds)
-        let wides = &mut ws.wide[..j];
         let scratches = &mut ws.scratch[..j * k];
         self.pool.scope(|s| {
-            for ((((x, p), wide), scratch), out) in xs
+            for (((x, p), scratch), out) in xs
                 .iter()
                 .zip(ps)
-                .zip(wides.iter_mut())
                 .zip(scratches.chunks_mut(k))
                 .zip(out_xs.iter_mut())
             {
                 s.spawn(move || {
-                    update_batch_kernel(x, xbars, p, gamma, wide, scratch, out)
+                    update_batch_kernel(x, xbars, p, gamma, scratch, out)
                 });
             }
         });
@@ -416,6 +420,135 @@ impl ComputeEngine for ParallelEngine {
             self.average_chunks(&cols, xbar, eta, &mut ws.acc, out_xbar);
         }
         Ok(())
+    }
+
+    fn round_batch_packed_into(
+        &self,
+        xs: &[Vec<Vec<f32>>],
+        xbars: &[Vec<f32>],
+        ps: &[Matrix],
+        panels: &[blas::PrepackedPanels],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<Vec<f32>>],
+        out_xbars: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let (j, k, n) =
+            check_round_batch_shapes(xs, xbars, ps, out_xs, out_xbars)?;
+        check_prepacked_panels(panels, j, n)?;
+        if n == 0 {
+            return Ok(());
+        }
+        ws.ensure_packed(j, k, n);
+        // stage 1: pack each partition's k diff columns into B-panel
+        // layout — one pool job per partition, disjoint buffers
+        self.pool.scope(|s| {
+            for (x, bp) in xs.iter().zip(ws.bpack[..j].iter_mut()) {
+                s.spawn(move || pack_batch_diffs(x, xbars, n, bp));
+            }
+        });
+        // stage 2: the packed projector sweeps, fanned over
+        // (partition x MR-aligned row chunk).  Each output element comes
+        // from exactly one wide-microkernel tile, so this fan reproduces
+        // the serial sweep bit for bit at any thread count.
+        let backend = simd::active();
+        let chunks = self.pool.size().div_ceil(j).max(1);
+        let rows_per = n.div_ceil(chunks).div_ceil(MR) * MR;
+        let bpacks = &ws.bpack[..j];
+        let cbufs = &mut ws.cbuf[..j];
+        self.pool.scope(|s| {
+            for ((panel, bp), cbuf) in
+                panels.iter().zip(bpacks).zip(cbufs.iter_mut())
+            {
+                for (ci, cchunk) in
+                    cbuf[..n * k].chunks_mut(rows_per * k).enumerate()
+                {
+                    let lo = ci * rows_per;
+                    let rows = cchunk.len() / k;
+                    s.spawn(move || {
+                        blas::packed_gemm_prepacked_into(
+                            backend,
+                            KernelTier::Deterministic,
+                            panel,
+                            lo,
+                            rows,
+                            k,
+                            bp,
+                            cchunk,
+                            k,
+                            1,
+                        );
+                    });
+                }
+            }
+        });
+        // stage 3: scatter + eq. (6) relaxation, one job per partition
+        self.pool.scope(|s| {
+            for ((x, cbuf), out) in
+                xs.iter().zip(ws.cbuf[..j].iter()).zip(out_xs.iter_mut())
+            {
+                s.spawn(move || scale_batch_from_cbuf(x, cbuf, gamma, k, out));
+            }
+        });
+        // eq. (7): per column, chunked exactly like the row-dot path
+        let mut cols: Vec<&[f32]> = Vec::with_capacity(j);
+        for (c, (xbar, out_xbar)) in
+            xbars.iter().zip(out_xbars.iter_mut()).enumerate()
+        {
+            cols.clear();
+            cols.extend(out_xs.iter().map(|xj| xj[c].as_slice()));
+            self.average_chunks(&cols, xbar, eta, &mut ws.acc, out_xbar);
+        }
+        Ok(())
+    }
+
+    fn update_batch_packed(
+        &self,
+        xs: &[Vec<f32>],
+        xbars: &[Vec<f32>],
+        panels: &blas::PrepackedPanels,
+        gamma: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (k, n) = check_update_batch_packed_shapes(xs, xbars, panels)?;
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 0 {
+            return Ok(vec![Vec::new(); k]);
+        }
+        let mut bpack = vec![0.0f32; blas::packed_b_len(n, k)];
+        pack_batch_diffs(xs, xbars, n, &mut bpack);
+        let mut cbuf = vec![0.0f32; n * k];
+        // MR-aligned row chunks over the pool — same tile-per-element
+        // argument as the batched round, so this matches the serial
+        // default bitwise
+        let backend = simd::active();
+        let rows_per = n.div_ceil(self.pool.size().max(1)).div_ceil(MR) * MR;
+        let bp = &bpack;
+        self.pool.scope(|s| {
+            for (ci, cchunk) in cbuf.chunks_mut(rows_per * k).enumerate() {
+                let lo = ci * rows_per;
+                let rows = cchunk.len() / k;
+                s.spawn(move || {
+                    blas::packed_gemm_prepacked_into(
+                        backend,
+                        KernelTier::Deterministic,
+                        panels,
+                        lo,
+                        rows,
+                        k,
+                        bp,
+                        cchunk,
+                        k,
+                        1,
+                    );
+                });
+            }
+        });
+        let mut out = vec![vec![0.0f32; n]; k];
+        scale_batch_from_cbuf(xs, &cbuf, gamma, k, &mut out);
+        Ok(out)
     }
 
     fn dgd_grad(&self, a: &Matrix, x: &[f32], b: &[f32]) -> Result<Vec<f32>> {
@@ -567,6 +700,66 @@ mod tests {
 
         assert_eq!(n_xs, p_xs);
         assert_eq!(n_xbars, p_xbars);
+    }
+
+    #[test]
+    fn round_batch_packed_bitwise_matches_native_at_any_thread_count() {
+        let native = NativeEngine::new();
+        let (j, k, n) = (3usize, 4usize, 29usize); // odd n: ragged chunks
+        let xs: Vec<Vec<Vec<f32>>> = (0..j)
+            .map(|i| {
+                (0..k)
+                    .map(|c| randv(n, 1100 + (i * k + c) as u64))
+                    .collect()
+            })
+            .collect();
+        let xbars: Vec<Vec<f32>> =
+            (0..k).map(|c| randv(n, 2100 + c as u64)).collect();
+        let ps: Vec<Matrix> =
+            (0..j).map(|i| randm(n, n, 3100 + i as u64)).collect();
+        let panels: Vec<blas::PrepackedPanels> =
+            ps.iter().map(blas::PrepackedPanels::from_matrix).collect();
+
+        let mut nws = RoundWorkspace::default();
+        let mut n_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+        let mut n_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+        native
+            .round_batch_packed_into(
+                &xs, &xbars, &ps, &panels, 0.7, 0.6, &mut nws, &mut n_xs,
+                &mut n_xbars,
+            )
+            .unwrap();
+
+        for threads in [1usize, 2, 7] {
+            let par = ParallelEngine::new(threads);
+            let mut pws = RoundWorkspace::default();
+            let mut p_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+            let mut p_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+            par.round_batch_packed_into(
+                &xs, &xbars, &ps, &panels, 0.7, 0.6, &mut pws, &mut p_xs,
+                &mut p_xbars,
+            )
+            .unwrap();
+            assert_eq!(n_xs, p_xs, "threads={threads}");
+            assert_eq!(n_xbars, p_xbars, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn update_batch_packed_bitwise_matches_native() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(3);
+        let (n, k) = (23usize, 5usize);
+        let p = randm(n, n, 4100);
+        let panels = blas::PrepackedPanels::from_matrix(&p);
+        let xs: Vec<Vec<f32>> =
+            (0..k).map(|c| randv(n, 5100 + c as u64)).collect();
+        let xbars: Vec<Vec<f32>> =
+            (0..k).map(|c| randv(n, 6100 + c as u64)).collect();
+        assert_eq!(
+            native.update_batch_packed(&xs, &xbars, &panels, 0.8).unwrap(),
+            par.update_batch_packed(&xs, &xbars, &panels, 0.8).unwrap()
+        );
     }
 
     #[test]

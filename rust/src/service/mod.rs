@@ -14,12 +14,15 @@
 //! # What state is resident where
 //!
 //! * **Partitions/workers** retain, per block `j`: the dense `A_j`, the
-//!   projector `P_j`, and the seed factorization (QR factors, the f64
-//!   Gram inverse, or the fat-regime `Q`/`R^T` — see
-//!   [`crate::solver::SeedFactors`]).  This is the expensive
-//!   RHS-independent state; it never crosses the wire (cluster workers
-//!   build it from their `RegisterMatrix` block and keep it across
-//!   solves).
+//!   projector `P_j` *plus its prepacked A-panels* (the pack-once
+//!   operand of the wide packed epoch kernel — see
+//!   [`crate::linalg::blas::PrepackedPanels`]), and the seed
+//!   factorization (QR factors, the f64 Gram inverse, or the fat-regime
+//!   `Q`/`R^T` — see [`crate::solver::SeedFactors`]).  This is the
+//!   expensive RHS-independent state; it never crosses the wire
+//!   (cluster workers build it from their `RegisterMatrix` block and
+//!   keep it across solves).  [`ServiceStats`] reports the per-partition
+//!   byte cost ([`crate::solver::resident_partition_bytes`]).
 //! * **The session (leader side)** retains only the CSR matrix (for
 //!   rhs slicing, residuals and the DGD auto step), the partition plan,
 //!   and n-length accumulators — the paper's leader-memory guarantee
@@ -31,17 +34,18 @@
 //!   SolverSession::register(backend, A)   -- factorize once (cold cost)
 //!       session.solve(b)                  -- seed + epochs   (warm cost)
 //!       session.solve_batch(&[b0, .., bk])-- k columns through ONE epoch
-//!                                            loop; each projector row is
-//!                                            widened once and reused for
-//!                                            all k columns (column-
-//!                                            blocked batched kernel)
+//!                                            loop; the prepacked `P_j`
+//!                                            panels stream through the
+//!                                            wide packed kernel, shared
+//!                                            by all k columns
 //! ```
 //!
 //! Warm solves are **bit-identical** to cold solves and batched solves
 //! to sequential ones, on the in-process and cluster backends alike:
 //! seeding re-runs the exact arithmetic of the cold init against the
-//! retained factors, and the batched kernel keeps `dot`'s f64
-//! accumulation order per column (`tests/distributed_equivalence.rs`).
+//! retained factors, and the packed epoch kernel reproduces `dot`'s
+//! lane-deterministic f64 accumulation order per output element
+//! (`tests/distributed_equivalence.rs`, `tests/prepacked_equivalence.rs`).
 //!
 //! [`ServiceStats`] tracks the amortization story: one-time registration
 //! cost vs per-RHS solve time and per-session solve counters.

@@ -9,8 +9,8 @@ use crate::partition::PartitionPlan;
 use crate::solver::driver::apc_label;
 use crate::solver::{
     auto_dgd_step, drive_apc_epochs_multi, drive_dgd_epochs_multi,
-    init_kind_for, residual_norm, ApcVariant, SessionBackend, SolveOptions,
-    SolveReport,
+    init_kind_for, resident_partition_bytes, residual_norm, ApcVariant,
+    SessionBackend, SolveOptions, SolveReport,
 };
 use crate::sparse::CsrMatrix;
 
@@ -96,8 +96,22 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
                 (plan.n, alpha)
             }
         };
+        // pure shape arithmetic: what each registered partition keeps
+        // resident for warm serving (block + projector + prepacked
+        // panels + seed factors); DGD workers retain no factorization
+        let resident = match algorithm {
+            SessionAlgorithm::Apc(variant) => {
+                let kind = init_kind_for(variant, plan.regime);
+                plan.blocks
+                    .iter()
+                    .map(|b| resident_partition_bytes(kind, b.len(), plan.n))
+                    .collect()
+            }
+            SessionAlgorithm::Dgd => Vec::new(),
+        };
         let stats = ServiceStats {
             register_time: t0.elapsed(),
+            resident_partition_bytes: resident,
             ..ServiceStats::default()
         };
         Ok(Self {
@@ -265,6 +279,46 @@ mod tests {
             let warm2 = session.solve(&ds.rhs).unwrap();
             assert_eq!(warm2.xbar, cold.xbar, "{variant:?} resolve");
         }
+    }
+
+    #[test]
+    fn register_reports_resident_factorization_bytes() {
+        let ds = GeneratorConfig::small_demo(16, 3).generate(11);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 3);
+        let session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(5),
+        )
+        .unwrap();
+        let stats = session.stats();
+        assert_eq!(stats.resident_partition_bytes.len(), 3);
+        let (m, n) = ds.matrix.shape();
+        let plan = PartitionPlan::contiguous(m, n, 3).unwrap();
+        let kind = init_kind_for(ApcVariant::Decomposed, plan.regime);
+        for (blk, &bytes) in
+            plan.blocks.iter().zip(&stats.resident_partition_bytes)
+        {
+            assert_eq!(
+                bytes,
+                resident_partition_bytes(kind, blk.len(), plan.n)
+            );
+        }
+        assert!(stats.summary().contains("resident"));
+
+        // DGD workers retain no factorization: nothing to report
+        let mut b2 = InProcessBackend::new(&e, 2);
+        let dgd = SolverSession::register(
+            &mut b2,
+            ds.matrix.clone(),
+            SessionAlgorithm::Dgd,
+            SolveOptions { epochs: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(dgd.stats().resident_partition_bytes.is_empty());
+        assert!(!dgd.stats().summary().contains("resident"));
     }
 
     #[test]

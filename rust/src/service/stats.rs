@@ -17,6 +17,12 @@ pub struct ServiceStats {
     pub max_batch: usize,
     /// Total wall time across all solves (seeding + epochs).
     pub solve_time: Duration,
+    /// Per-partition bytes of RHS-independent state retained for warm
+    /// serving: the f32 block, the projector plus its prepacked
+    /// A-panels, and the seed factors
+    /// ([`crate::solver::resident_partition_bytes`]).  Empty for
+    /// sessions that retain no factorization (DGD).
+    pub resident_partition_bytes: Vec<u64>,
 }
 
 impl ServiceStats {
@@ -43,16 +49,31 @@ impl ServiceStats {
         ))
     }
 
+    /// Total resident-factorization bytes across all partitions.
+    pub fn resident_bytes_total(&self) -> u64 {
+        self.resident_partition_bytes.iter().sum()
+    }
+
     /// One summary line for logs: cold registration cost vs the
-    /// amortized warm per-RHS cost.
+    /// amortized warm per-RHS cost, plus the resident-factorization
+    /// memory the warm path pays for (when the session retains any).
     pub fn summary(&self) -> String {
         let amortized = match self.amortized_per_rhs() {
             Some(d) => format!("{:.6}s", d.as_secs_f64()),
             None => "n/a".into(),
         };
+        let resident = if self.resident_partition_bytes.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", resident {} B across {} partitions",
+                self.resident_bytes_total(),
+                self.resident_partition_bytes.len(),
+            )
+        };
         format!(
             "session: register(cold init)={:.6}s, {} solve calls / {} rhs \
-             served (max batch {}), amortized {amortized}/rhs",
+             served (max batch {}), amortized {amortized}/rhs{resident}",
             self.register_time.as_secs_f64(),
             self.solve_calls,
             self.rhs_served,
@@ -80,6 +101,15 @@ mod tests {
     }
 
     #[test]
+    fn summary_reports_resident_bytes() {
+        let mut s = ServiceStats::default();
+        assert!(!s.summary().contains("resident"));
+        s.resident_partition_bytes = vec![100, 28];
+        assert_eq!(s.resident_bytes_total(), 128);
+        assert!(s.summary().contains("resident 128 B across 2 partitions"));
+    }
+
+    #[test]
     fn amortization_survives_counters_past_u32() {
         // a long-lived session: 2^33 rhs served in 2^33 seconds is
         // exactly 1s/rhs.  The old clamped `Duration / u32::MAX` divisor
@@ -91,6 +121,7 @@ mod tests {
             rhs_served: 1u64 << 33,
             max_batch: 1,
             solve_time: Duration::from_secs(1u64 << 33),
+            resident_partition_bytes: Vec::new(),
         };
         let per = s.amortized_per_rhs().unwrap().as_secs_f64();
         assert!((per - 1.0).abs() < 1e-9, "amortized {per}s, want 1s");

@@ -26,7 +26,7 @@
 use std::time::Instant;
 
 use crate::error::{DapcError, Result};
-use crate::linalg::{norms, Matrix};
+use crate::linalg::{blas, norms, Matrix};
 use crate::metrics::ConvergenceTrace;
 use crate::partition::{PartitionPlan, PartitionRegime};
 use crate::sparse::CsrMatrix;
@@ -508,9 +508,12 @@ pub struct InProcessBackend<'e, E: ComputeEngine> {
     ax: Vec<Vec<f32>>,
     grad: Vec<f32>,
     // warm-session state (filled by register_matrix / register_grad):
-    // the dense blocks + seed factorizations stay resident so every
-    // later rhs pays only O(l n + n^2) seeding
+    // the dense blocks + seed factorizations + prepacked projector
+    // panels stay resident so every later rhs pays only O(l n + n^2)
+    // seeding, and every epoch runs the packed wide-gemm sweep with no
+    // per-epoch packing or widening
     seeds: Vec<SeedFactors>,
+    packs: Vec<blas::PrepackedPanels>,
     session_blocks: Vec<Matrix>,
     session_bs: Vec<Vec<Vec<f32>>>,
     batch_xs: Vec<Vec<Vec<f32>>>,
@@ -534,6 +537,7 @@ impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
             ax: Vec::new(),
             grad: Vec::new(),
             seeds: Vec::new(),
+            packs: Vec::new(),
             session_blocks: Vec::new(),
             session_bs: Vec::new(),
             batch_xs: Vec::new(),
@@ -574,6 +578,10 @@ impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
                 .init_all(kind, j, &|i| plan.extract(a, b, i), n_target)?;
         self.xs = inits.iter().map(|w| w.x0.clone()).collect();
         self.ps = inits.into_iter().map(|w| w.projector).collect();
+        // cold one-shot solves keep the row-dot round; drop any stale
+        // prepacked panels from an earlier registration so they can
+        // never be paired with the wrong projectors
+        self.packs.clear();
         self.next_xs =
             self.xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
         self.next_xbar = vec![0.0f32; n_target];
@@ -692,12 +700,15 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
         let facs = self.engine.factorize_all(kind, &blocks, n)?;
         let mut ps = Vec::with_capacity(self.j);
         let mut seeds = Vec::with_capacity(self.j);
+        let mut packs = Vec::with_capacity(self.j);
         for fac in facs {
             ps.push(fac.projector);
+            packs.push(fac.panels);
             seeds.push(fac.seed);
         }
         self.ps = ps;
         self.seeds = seeds;
+        self.packs = packs;
         self.session_blocks = blocks;
         self.session_bs.clear();
         self.session_n = n;
@@ -823,17 +834,34 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
         _accs: &mut [Vec<f64>],
     ) -> Result<RoundOutcome> {
         // allocation-free batched round: warmed workspace + double
-        // buffers, the multi-column twin of `run_round`
-        self.engine.round_batch_into(
-            &self.batch_xs,
-            xbars,
-            &self.ps,
-            gamma,
-            eta,
-            &mut self.ws,
-            &mut self.batch_next_xs,
-            &mut self.next_xbars,
-        )?;
+        // buffers, the multi-column twin of `run_round`.  Registered
+        // sessions carry prepacked projector panels and take the packed
+        // wide-gemm epoch path — bit-identical to the row-dot round,
+        // minus the per-epoch widening/matrix traffic.
+        if self.packs.len() == self.j {
+            self.engine.round_batch_packed_into(
+                &self.batch_xs,
+                xbars,
+                &self.ps,
+                &self.packs,
+                gamma,
+                eta,
+                &mut self.ws,
+                &mut self.batch_next_xs,
+                &mut self.next_xbars,
+            )?;
+        } else {
+            self.engine.round_batch_into(
+                &self.batch_xs,
+                xbars,
+                &self.ps,
+                gamma,
+                eta,
+                &mut self.ws,
+                &mut self.batch_next_xs,
+                &mut self.next_xbars,
+            )?;
+        }
         std::mem::swap(&mut self.batch_xs, &mut self.batch_next_xs);
         for (xbar, next) in xbars.iter_mut().zip(self.next_xbars.iter()) {
             xbar.copy_from_slice(next);

@@ -7,7 +7,7 @@
 //! and the integration tests assert they agree numerically.
 
 use crate::error::{DapcError, Result};
-use crate::linalg::simd::{self, KernelTier};
+use crate::linalg::simd::{self, KernelTier, NR};
 use crate::linalg::{blas, inverse, qr, triangular, Matrix};
 use crate::parallel::ThreadPool;
 use crate::partition::pad_to_bucket;
@@ -49,6 +49,12 @@ pub struct WorkerInit {
 pub struct WorkerFactorization {
     /// Eq. (6) projector (RHS-independent by construction).
     pub projector: Matrix,
+    /// The same projector prepacked into register-tile A-panels
+    /// ([`blas::PrepackedPanels`]) once at factorization time, so the
+    /// steady-state epoch loop never re-reads or re-packs the row-major
+    /// matrix (the pack-once / stream-forever half of the amortized
+    /// regime).
+    pub panels: blas::PrepackedPanels,
     /// Factorization state consumed by [`ComputeEngine::seed`].
     pub seed: SeedFactors,
 }
@@ -83,13 +89,19 @@ pub enum SeedFactors {
 #[derive(Debug, Default, Clone)]
 pub struct RoundWorkspace {
     /// One n-length scratch per partition (eq. (6) direction buffer);
-    /// batched rounds use J*k of these, chunked k per partition.
+    /// the row-dot batched round uses J*k of these, chunked k per
+    /// partition, while the prepacked round needs none (diffs are packed
+    /// straight into `bpack`).
     pub scratch: Vec<Vec<f32>>,
     /// n-length f64 accumulator for the eq. (7) reduction.
     pub acc: Vec<f64>,
-    /// Per-partition n-length f64 row-widening buffers for the batched
-    /// multi-RHS update ([`ComputeEngine::round_batch_into`]).
-    pub wide: Vec<Vec<f64>>,
+    /// Per-partition packed right-hand-side panels for the prepacked
+    /// epoch path ([`ComputeEngine::round_batch_packed_into`]):
+    /// [`blas::packed_b_len`]`(n, k)` f32 values each.
+    pub bpack: Vec<Vec<f32>>,
+    /// Per-partition row-major (n x k) outputs of the packed projector
+    /// sweep, scattered back into the per-column estimates.
+    pub cbuf: Vec<Vec<f32>>,
 }
 
 impl RoundWorkspace {
@@ -115,16 +127,34 @@ impl RoundWorkspace {
         }
     }
 
-    /// Grow to fit a (J, k, n) batched round: J*k direction buffers plus
-    /// one row-widening buffer per partition.
+    /// Grow to fit a (J, k, n) row-dot batched round: J*k direction
+    /// buffers plus the shared f64 accumulator.
     pub fn ensure_batch(&mut self, j: usize, k: usize, n: usize) {
         self.ensure(j * k, n);
-        if self.wide.len() < j {
-            self.wide.resize_with(j, Vec::new);
+    }
+
+    /// Grow to fit a (J, k, n) prepacked batched round: per partition
+    /// one packed B panel set and one (n x k) output buffer, plus the
+    /// shared f64 accumulator.  No per-column scratch is needed.
+    pub fn ensure_packed(&mut self, j: usize, k: usize, n: usize) {
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
         }
-        for w in &mut self.wide[..j] {
-            if w.len() != n {
-                w.resize(n, 0.0);
+        let blen = blas::packed_b_len(n, k);
+        if self.bpack.len() < j {
+            self.bpack.resize_with(j, Vec::new);
+        }
+        for b in &mut self.bpack[..j] {
+            if b.len() != blen {
+                b.resize(blen, 0.0);
+            }
+        }
+        if self.cbuf.len() < j {
+            self.cbuf.resize_with(j, Vec::new);
+        }
+        for c in &mut self.cbuf[..j] {
+            if c.len() != n * k {
+                c.resize(n * k, 0.0);
             }
         }
     }
@@ -189,30 +219,36 @@ pub(crate) fn average_chunk_kernel<S: AsRef<[f32]>>(
 /// is exactly [`update_kernel`]'s (`dot`'s fixed 8-lane f64 split in the
 /// same order — the `linalg::simd` lane contract guarantees this on both
 /// the AVX2 and scalar dispatch paths), so a batch of k is bit-identical
-/// to k sequential updates — which is also why this must NOT call
-/// `blas::gemm`: the packed microkernel accumulates in f32 and would
-/// break that equality.
+/// to k sequential updates.
 ///
-/// `xs`/`xbars`/`scratch`/`out` hold k n-length columns; `wide` is one
-/// n-length f64 buffer.
+/// This row-dot sweep is retained as the bitwise oracle for the
+/// prepacked epoch path: `simd::microkernel_wide` accumulates every
+/// output element in the same fixed 8-lane f64 order over the full
+/// depth, so [`ComputeEngine::round_batch_packed_into`] reproduces this
+/// kernel bit-for-bit under tier-0.  (An earlier revision claimed packed
+/// gemm "would break" batch == sequential equality — true of the
+/// f32-accumulating `blas::gemm` microkernel, but not of the wide
+/// microkernel built for this path.)
+///
+/// `xs`/`xbars`/`scratch`/`out` hold k n-length columns.
 pub(crate) fn update_batch_kernel(
     xs: &[Vec<f32>],
     xbars: &[Vec<f32>],
     p: &Matrix,
     gamma: f32,
-    wide: &mut [f64],
     scratch: &mut [Vec<f32>],
     out: &mut [Vec<f32>],
 ) {
+    let mut wide = vec![0.0f64; p.cols()];
     for ((s, xbar), x) in scratch.iter_mut().zip(xbars).zip(xs) {
         for ((d, &xb), &xi) in s.iter_mut().zip(xbar.iter()).zip(x.iter()) {
             *d = xb - xi;
         }
     }
     for i in 0..p.rows() {
-        blas::widen(p.row(i), wide);
+        blas::widen(p.row(i), &mut wide);
         for (o, s) in out.iter_mut().zip(scratch.iter()) {
-            o[i] = blas::dot_wide(wide, s) as f32;
+            o[i] = blas::dot_wide(&wide, s) as f32;
         }
     }
     for (o, x) in out.iter_mut().zip(xs) {
@@ -220,6 +256,68 @@ pub(crate) fn update_batch_kernel(
             *oi = xi + gamma * *oi;
         }
     }
+}
+
+/// Pack the k batched consensus directions `xbar_c - x_c` of one
+/// partition straight into wide-microkernel B-panel layout
+/// (`panel[q][p * NR + j]` = column `q*NR + j`, depth index `p`; fringe
+/// columns zero-padded) — the diff never materializes as a row-major
+/// scratch column.  The subtraction is the identical f32 expression
+/// [`update_batch_kernel`] computes, so the packed sweep sees
+/// bit-identical inputs.
+pub(crate) fn pack_batch_diffs(
+    xs: &[Vec<f32>],
+    xbars: &[Vec<f32>],
+    n: usize,
+    bpack: &mut [f32],
+) {
+    let k = xs.len();
+    debug_assert_eq!(k, xbars.len());
+    debug_assert!(bpack.len() >= blas::packed_b_len(n, k));
+    let col_panels = k.div_ceil(NR);
+    for (q, panel) in bpack.chunks_exact_mut(n * NR).enumerate().take(col_panels) {
+        for jj in 0..NR {
+            let c = q * NR + jj;
+            if c < k {
+                let (x, xbar) = (&xs[c], &xbars[c]);
+                for p in 0..n {
+                    panel[p * NR + jj] = xbar[p] - x[p];
+                }
+            } else {
+                for p in 0..n {
+                    panel[p * NR + jj] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Scatter the packed projector sweep's row-major (n x k) output back
+/// into per-column estimates and apply the eq. (6) relaxation:
+/// `out[c][i] = x[c][i] + gamma * cbuf[i * k + c]` — the same final
+/// expression as the row-dot kernel, element for element.
+pub(crate) fn scale_batch_from_cbuf(
+    xs: &[Vec<f32>],
+    cbuf: &[f32],
+    gamma: f32,
+    k: usize,
+    out: &mut [Vec<f32>],
+) {
+    for (c, (o, x)) in out.iter_mut().zip(xs).enumerate() {
+        for (i, (oi, &xi)) in o.iter_mut().zip(x.iter()).enumerate() {
+            *oi = xi + gamma * cbuf[i * k + c];
+        }
+    }
+}
+
+/// Bundle a projector with its prepacked panels and seed factors: every
+/// retained factorization prepacks `P_j` exactly once, here, so all
+/// holders of a [`WorkerFactorization`] (in-process engines, the
+/// cluster worker, warm solver sessions) get the packed epoch operand
+/// for free.
+fn retained(projector: Matrix, seed: SeedFactors) -> WorkerFactorization {
+    let panels = blas::PrepackedPanels::from_matrix(&projector);
+    WorkerFactorization { projector, panels, seed }
 }
 
 /// The ONE factorization kernel behind every engine's
@@ -258,10 +356,7 @@ pub(crate) fn factorize_kernel(
                     p[(i, j)] -= qtq[(i, j)];
                 }
             }
-            Ok(WorkerFactorization {
-                projector: p,
-                seed: SeedFactors::Qr(f),
-            })
+            Ok(retained(p, SeedFactors::Qr(f)))
         }
         InitKind::Classical => {
             // G^{-1} and P = I - G^{-1} G (numeric), in f64 like the
@@ -269,10 +364,7 @@ pub(crate) fn factorize_kernel(
             // kappa(A), which in f32 makes the projector noise large
             // enough to diverge (DESIGN.md §1).
             let (ginv, p) = inverse::classical_factorize_f64(a)?;
-            Ok(WorkerFactorization {
-                projector: p,
-                seed: SeedFactors::Classical { ginv },
-            })
+            Ok(retained(p, SeedFactors::Classical { ginv }))
         }
         InitKind::Fat => {
             // A^T = Q R; P = I - Q Q^T; Q and R^T are retained.
@@ -297,12 +389,31 @@ pub(crate) fn factorize_kernel(
                     p[(i, j)] -= qqt[(i, j)];
                 }
             }
-            Ok(WorkerFactorization {
-                projector: p,
-                seed: SeedFactors::Fat { q1: f.q1, rt },
-            })
+            Ok(retained(p, SeedFactors::Fat { q1: f.q1, rt }))
         }
     }
+}
+
+/// Bytes of RHS-independent state one registered partition keeps
+/// resident for warm serving: the densified (l x n) f32 block (read by
+/// classical re-seeding and retained by every session), the (n x n) f32
+/// projector, its prepacked A-panels ([`blas::packed_a_len`]`(n, n)`
+/// f32 — the pack-once memory cost of the packed epoch path), and the
+/// [`SeedFactors`] variant the [`InitKind`] retains (QR: l*n + n*n f32;
+/// classical: n*n f64; fat: n*l + l*l f32).  Pure shape arithmetic —
+/// [`crate::service::ServiceStats`] and `dapc kernels` report it
+/// without touching the retained buffers.
+pub fn resident_partition_bytes(kind: InitKind, l: usize, n: usize) -> u64 {
+    let f32b = std::mem::size_of::<f32>() as u64;
+    let block = (l * n) as u64 * f32b;
+    let projector = (n * n) as u64 * f32b;
+    let panels = blas::packed_a_len(n, n) as u64 * f32b;
+    let seed = match kind {
+        InitKind::Qr => (l * n + n * n) as u64 * f32b,
+        InitKind::Classical => (n * n) as u64 * std::mem::size_of::<f64>() as u64,
+        InitKind::Fat => (n * l + l * l) as u64 * f32b,
+    };
+    block + projector + panels + seed
 }
 
 /// Engine-agnostic operations used by the solvers and the coordinator.
@@ -486,18 +597,50 @@ pub trait ComputeEngine {
             check_update_shapes(x, xbar, p, n, n)?;
         }
         let k = xs.len();
-        let mut wide = vec![0.0f64; n];
         let mut scratch = vec![vec![0.0f32; n]; k];
         let mut out = vec![vec![0.0f32; n]; k];
-        update_batch_kernel(
-            xs,
-            xbars,
-            p,
-            gamma,
-            &mut wide,
-            &mut scratch,
-            &mut out,
+        update_batch_kernel(xs, xbars, p, gamma, &mut scratch, &mut out);
+        Ok(out)
+    }
+
+    /// [`Self::update_batch`] through the prepacked projector panels
+    /// retained in a [`WorkerFactorization`]: the k consensus directions
+    /// are packed into B-panels and swept by the wide microkernel at
+    /// tier-0, which is bit-identical to the row-dot kernel per element
+    /// — so this is [`Self::update_batch`] exactly, minus the per-epoch
+    /// widening/matrix traffic.  Cluster workers route their registered
+    /// sessions through this.
+    fn update_batch_packed(
+        &self,
+        xs: &[Vec<f32>],
+        xbars: &[Vec<f32>],
+        panels: &blas::PrepackedPanels,
+        gamma: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (k, n) = check_update_batch_packed_shapes(xs, xbars, panels)?;
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 0 {
+            return Ok(vec![Vec::new(); k]);
+        }
+        let mut bpack = vec![0.0f32; blas::packed_b_len(n, k)];
+        pack_batch_diffs(xs, xbars, n, &mut bpack);
+        let mut cbuf = vec![0.0f32; n * k];
+        blas::packed_gemm_prepacked_into(
+            simd::active(),
+            KernelTier::Deterministic,
+            panels,
+            0,
+            n,
+            k,
+            &bpack,
+            &mut cbuf,
+            k,
+            1,
         );
+        let mut out = vec![vec![0.0f32; n]; k];
+        scale_batch_from_cbuf(xs, &cbuf, gamma, k, &mut out);
         Ok(out)
     }
 
@@ -528,10 +671,68 @@ pub trait ComputeEngine {
                 xbars,
                 &ps[i],
                 gamma,
-                &mut ws.wide[i],
                 &mut ws.scratch[i * k..(i + 1) * k],
                 out,
             );
+        }
+        let mut cols: Vec<&[f32]> = Vec::with_capacity(j);
+        for (c, (xbar, out_xbar)) in
+            xbars.iter().zip(out_xbars.iter_mut()).enumerate()
+        {
+            cols.clear();
+            cols.extend(out_xs.iter().map(|xj| xj[c].as_slice()));
+            average_chunk_kernel(&cols, xbar, eta, 0, &mut ws.acc[..n], out_xbar);
+        }
+        Ok(())
+    }
+
+    /// [`Self::round_batch_into`] through prepacked projector panels:
+    /// per partition the k consensus directions are packed into B-panel
+    /// layout ([`pack_batch_diffs`]), swept by the wide microkernel at
+    /// tier-0 against the A-panels retained at factorization time, and
+    /// scattered back with the eq. (6) relaxation; eq. (7) then averages
+    /// per column exactly as the row-dot path does.  Every output bit
+    /// matches [`Self::round_batch_into`] on the same inputs — the wide
+    /// microkernel's per-element accumulation order is the row-dot
+    /// order — so engines route warm sessions here purely for speed.
+    /// The epoch sweep is pinned to tier-0 regardless of the engine's
+    /// factorization tier: consensus iterates stay bit-identical across
+    /// kernel-tier configurations (only factorizations may differ).
+    #[allow(clippy::too_many_arguments)]
+    fn round_batch_packed_into(
+        &self,
+        xs: &[Vec<Vec<f32>>],
+        xbars: &[Vec<f32>],
+        ps: &[Matrix],
+        panels: &[blas::PrepackedPanels],
+        gamma: f32,
+        eta: f32,
+        ws: &mut RoundWorkspace,
+        out_xs: &mut [Vec<Vec<f32>>],
+        out_xbars: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let (j, k, n) =
+            check_round_batch_shapes(xs, xbars, ps, out_xs, out_xbars)?;
+        check_prepacked_panels(panels, j, n)?;
+        if n == 0 {
+            return Ok(());
+        }
+        ws.ensure_packed(j, k, n);
+        for (i, (x, out)) in xs.iter().zip(out_xs.iter_mut()).enumerate() {
+            pack_batch_diffs(x, xbars, n, &mut ws.bpack[i]);
+            blas::packed_gemm_prepacked_into(
+                simd::active(),
+                KernelTier::Deterministic,
+                &panels[i],
+                0,
+                n,
+                k,
+                &ws.bpack[i],
+                &mut ws.cbuf[i],
+                k,
+                1,
+            );
+            scale_batch_from_cbuf(x, &ws.cbuf[i], gamma, k, out);
         }
         let mut cols: Vec<&[f32]> = Vec::with_capacity(j);
         for (c, (xbar, out_xbar)) in
@@ -973,6 +1174,60 @@ pub(crate) fn check_round_batch_shapes(
         }
     }
     Ok((j, k, n))
+}
+
+/// Shared shape validation for the prepacked batched update paths
+/// (native + parallel); returns `(k, n)` on success.
+pub(crate) fn check_update_batch_packed_shapes(
+    xs: &[Vec<f32>],
+    xbars: &[Vec<f32>],
+    panels: &blas::PrepackedPanels,
+) -> Result<(usize, usize)> {
+    if xs.len() != xbars.len() {
+        return Err(DapcError::Shape(format!(
+            "update_batch_packed got {} estimates for {} averages",
+            xs.len(),
+            xbars.len()
+        )));
+    }
+    let n = panels.m();
+    if panels.k() != n {
+        return Err(DapcError::Shape(format!(
+            "prepacked projector panels are {}x{}, expected square",
+            panels.m(),
+            panels.k()
+        )));
+    }
+    if let Some(bad) = xs.iter().chain(xbars).find(|v| v.len() != n) {
+        return Err(DapcError::Shape(format!(
+            "update_batch_packed column length {} != n = {n}",
+            bad.len()
+        )));
+    }
+    Ok((xs.len(), n))
+}
+
+/// Shared shape validation for the prepacked batched round paths
+/// (native + parallel): one square (n x n) panel set per partition.
+pub(crate) fn check_prepacked_panels(
+    panels: &[blas::PrepackedPanels],
+    j: usize,
+    n: usize,
+) -> Result<()> {
+    if panels.len() != j {
+        return Err(DapcError::Shape(format!(
+            "prepacked round over {j} partitions got {} panel sets",
+            panels.len()
+        )));
+    }
+    if let Some(bad) = panels.iter().find(|p| p.m() != n || p.k() != n) {
+        return Err(DapcError::Shape(format!(
+            "prepacked panels pack a {}x{} projector, expected ({n}, {n})",
+            bad.m(),
+            bad.k()
+        )));
+    }
+    Ok(())
 }
 
 /// Shared shape validation for the round paths (native + parallel).
@@ -1580,6 +1835,169 @@ mod tests {
             }
             assert_eq!(out_xbars[c], want_xbar, "c={c}");
         }
+    }
+
+    #[test]
+    fn round_batch_packed_bitwise_matches_row_dot() {
+        let e = NativeEngine::new();
+        // shapes crossing MR/NR panel boundaries and k < NR, k == 1
+        for (j, k, n) in [
+            (3usize, 4usize, 17usize),
+            (2, 1, 8),
+            (1, 3, 29),
+            (2, 9, 23),
+        ] {
+            let mut g = seeded(9000 + (j * 100 + k * 10 + n) as u64);
+            let ps: Vec<Matrix> =
+                (0..j).map(|i| randm(n, n, 710 + i as u64)).collect();
+            let panels: Vec<blas::PrepackedPanels> =
+                ps.iter().map(blas::PrepackedPanels::from_matrix).collect();
+            let xs: Vec<Vec<Vec<f32>>> = (0..j)
+                .map(|_| {
+                    (0..k)
+                        .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+                        .collect()
+                })
+                .collect();
+            let xbars: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+                .collect();
+
+            let mut ws = RoundWorkspace::default();
+            let mut want_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+            let mut want_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+            e.round_batch_into(
+                &xs,
+                &xbars,
+                &ps,
+                0.7,
+                0.6,
+                &mut ws,
+                &mut want_xs,
+                &mut want_xbars,
+            )
+            .unwrap();
+
+            let mut pws = RoundWorkspace::default();
+            let mut got_xs: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; n]; k]; j];
+            let mut got_xbars: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+            e.round_batch_packed_into(
+                &xs,
+                &xbars,
+                &ps,
+                &panels,
+                0.7,
+                0.6,
+                &mut pws,
+                &mut got_xs,
+                &mut got_xbars,
+            )
+            .unwrap();
+
+            assert_eq!(want_xs, got_xs, "j={j} k={k} n={n}");
+            assert_eq!(want_xbars, got_xbars, "j={j} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn update_batch_packed_bitwise_matches_update_batch() {
+        let e = NativeEngine::new();
+        let mut g = seeded(92);
+        let (n, k) = (21usize, 5usize);
+        let p = randm(n, n, 921);
+        let panels = blas::PrepackedPanels::from_matrix(&p);
+        let xs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let xbars: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| g.normal_f32()).collect())
+            .collect();
+        let want = e.update_batch(&xs, &xbars, &p, 0.8).unwrap();
+        let got = e.update_batch_packed(&xs, &xbars, &panels, 0.8).unwrap();
+        assert_eq!(want, got);
+        // mismatched widths and wrong column lengths are rejected
+        assert!(e
+            .update_batch_packed(&xs, &xbars[..k - 1], &panels, 0.8)
+            .is_err());
+        let short = vec![vec![0.0f32; n - 1]; k];
+        assert!(e.update_batch_packed(&short, &xbars, &panels, 0.8).is_err());
+    }
+
+    #[test]
+    fn packed_round_rejects_mismatched_panels() {
+        let e = NativeEngine::new();
+        let n = 6;
+        let xs = vec![vec![vec![0.0f32; n]]];
+        let xbars = vec![vec![0.0f32; n]];
+        let ps = vec![Matrix::eye(n)];
+        // panels packed from a projector of the WRONG shape
+        let panels = vec![blas::PrepackedPanels::from_matrix(&Matrix::eye(5))];
+        let mut ws = RoundWorkspace::default();
+        let mut out_xs = vec![vec![vec![0.0f32; n]]];
+        let mut out_xbars = vec![vec![0.0f32; n]];
+        assert!(e
+            .round_batch_packed_into(
+                &xs,
+                &xbars,
+                &ps,
+                &panels,
+                0.5,
+                0.5,
+                &mut ws,
+                &mut out_xs,
+                &mut out_xbars
+            )
+            .is_err());
+        // and too few panel sets
+        assert!(e
+            .round_batch_packed_into(
+                &xs,
+                &xbars,
+                &ps,
+                &[],
+                0.5,
+                0.5,
+                &mut ws,
+                &mut out_xs,
+                &mut out_xbars
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn factorize_retains_panels_of_the_projector() {
+        let e = NativeEngine::new();
+        let (a, _, _) = consistent(32, 12, 64);
+        let fac = e.factorize(InitKind::Qr, &a, 12).unwrap();
+        assert_eq!(fac.panels.m(), 12);
+        assert_eq!(fac.panels.k(), 12);
+        let mut fresh = blas::PrepackedPanels::from_matrix(&fac.projector);
+        assert_eq!(fac.panels.panels(), fresh.panels());
+        // panels follow the projector, not the block
+        fresh = blas::PrepackedPanels::from_matrix(&a);
+        assert_eq!(fresh.m(), 32);
+    }
+
+    #[test]
+    fn resident_bytes_track_seed_variant() {
+        let (l, n) = (48u64, 16u64);
+        let common = l * n * 4 + n * n * 4
+            + blas::packed_a_len(n as usize, n as usize) as u64 * 4;
+        assert_eq!(
+            resident_partition_bytes(InitKind::Qr, 48, 16),
+            common + (l * n + n * n) * 4
+        );
+        assert_eq!(
+            resident_partition_bytes(InitKind::Classical, 48, 16),
+            common + n * n * 8
+        );
+        let (l, n) = (8u64, 24u64);
+        let common = l * n * 4 + n * n * 4
+            + blas::packed_a_len(n as usize, n as usize) as u64 * 4;
+        assert_eq!(
+            resident_partition_bytes(InitKind::Fat, 8, 24),
+            common + (n * l + l * l) * 4
+        );
     }
 
     #[test]

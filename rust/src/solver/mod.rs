@@ -37,8 +37,8 @@ pub use driver::{
     InProcessBackend, RoundOutcome, SessionBackend,
 };
 pub use engine::{
-    ComputeEngine, InitKind, NativeEngine, RoundWorkspace, SeedFactors,
-    WorkerFactorization, WorkerInit, XlaEngine,
+    resident_partition_bytes, ComputeEngine, InitKind, NativeEngine,
+    RoundWorkspace, SeedFactors, WorkerFactorization, WorkerInit, XlaEngine,
 };
 pub use report::{residual_norm, SolveOptions, SolveReport};
 
