@@ -152,6 +152,8 @@ impl JsonReport {
             format!("\"mean_s\": {}", json_num(res.stats.mean())),
             format!("\"median_s\": {}", json_num(res.stats.median())),
             format!("\"p95_s\": {}", json_num(res.stats.p95())),
+            format!("\"p50_s\": {}", json_num(res.stats.p50())),
+            format!("\"p99_s\": {}", json_num(res.stats.p99())),
             format!("\"min_s\": {}", json_num(res.stats.min())),
             format!("\"max_s\": {}", json_num(res.stats.max())),
             format!("\"samples\": {}", res.stats.samples.len()),
@@ -204,8 +206,12 @@ impl JsonReport {
 
 /// Keys every [`JsonReport`] record carries ([`JsonReport::add`] writes
 /// them unconditionally); [`validate_report_text`] requires them all.
-pub const RECORD_KEYS: [&str; 6] =
-    ["mean_s", "median_s", "p95_s", "min_s", "max_s", "samples"];
+/// `p50_s`/`p99_s` are the tail-latency percentiles ROADMAP item 5
+/// tracks — a bench artifact without them fails `dapc bench-validate`.
+pub const RECORD_KEYS: [&str; 8] = [
+    "mean_s", "median_s", "p95_s", "p50_s", "p99_s", "min_s", "max_s",
+    "samples",
+];
 
 /// Validate one rendered `BENCH_*.json` document: it must parse with the
 /// in-repo JSON reader, name its bench, and carry a **non-empty**
@@ -275,7 +281,8 @@ pub fn validate_report_file(path: &std::path::Path) -> crate::error::Result<usiz
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_str(s: &str) -> String {
+/// Shared with the metrics exporter (`obs::export`).
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -299,7 +306,7 @@ fn json_str(s: &str) -> String {
 /// poisoned timing fails [`validate_report_text`] loudly (`as_f64` on
 /// `Json::Null` is `None` -> "missing numeric" error) instead of being
 /// laundered into a plausible-looking zero.
-fn json_num(v: f64) -> String {
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:e}")
     } else {
@@ -405,17 +412,30 @@ mod tests {
         // a literal negative fails the range check
         let neg = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
                    {\"name\": \"k\", \"mean_s\": -1.0, \"median_s\": 1.0, \
-                   \"p95_s\": 1.0, \"min_s\": 1.0, \"max_s\": 1.0, \
+                   \"p95_s\": 1.0, \"p50_s\": 1.0, \"p99_s\": 1.0, \
+                   \"min_s\": 1.0, \"max_s\": 1.0, \
                    \"samples\": 2}\n  ]\n}\n";
         let err = validate_report_text(neg).unwrap_err();
         assert!(err.to_string().contains("mean_s"), "{err}");
         // zero samples — a bench that timed nothing — fails
         let zs = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
                   {\"name\": \"k\", \"mean_s\": 1.0, \"median_s\": 1.0, \
-                  \"p95_s\": 1.0, \"min_s\": 1.0, \"max_s\": 1.0, \
+                  \"p95_s\": 1.0, \"p50_s\": 1.0, \"p99_s\": 1.0, \
+                  \"min_s\": 1.0, \"max_s\": 1.0, \
                   \"samples\": 0}\n  ]\n}\n";
         let err = validate_report_text(zs).unwrap_err();
         assert!(err.to_string().contains("zero samples"), "{err}");
+        // a record predating the percentile keys fails on p50_s/p99_s
+        let old = "{\n  \"bench\": \"x\",\n  \"results\": [\n    \
+                   {\"name\": \"k\", \"mean_s\": 1.0, \"median_s\": 1.0, \
+                   \"p95_s\": 1.0, \"min_s\": 1.0, \"max_s\": 1.0, \
+                   \"samples\": 2}\n  ]\n}\n";
+        let err = validate_report_text(old).unwrap_err();
+        assert!(
+            err.to_string().contains("p50_s")
+                || err.to_string().contains("p99_s"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -11,8 +11,19 @@
 //! The leader owns only n-length vectors; all O(l n) / O(n^2) state stays
 //! on the workers.  Per-worker estimate slots are reused across epochs,
 //! so steady-state leader traffic causes no per-epoch memory growth.
+//!
+//! When metrics are enabled ([`crate::obs`]), every scatter/gather is
+//! traced: per-worker send and reply latency histograms
+//! (`cluster.scatter_ns.w{i}` / `cluster.gather_ns.w{i}`) and per-frame-
+//! kind wire accounting (`wire.{tx,rx}_{frames,bytes}.{label}`).  Worker-
+//! side telemetry crosses the wire on demand via the v4
+//! `StatsRequest`/`StatsReport` frames ([`ClusterBackend::
+//! collect_worker_stats`]).  None of this touches the numeric path.
+
+use std::sync::Arc;
 
 use crate::error::{DapcError, Result};
+use crate::obs::{self, Counter, Histogram};
 use crate::partition::PartitionPlan;
 use crate::solver::driver::{
     accumulate_sum, accumulate_sum_batch, ConsensusBackend, RoundOutcome,
@@ -23,14 +34,98 @@ use crate::solver::{
 };
 use crate::sparse::CsrMatrix;
 
-use super::message::{InitKindWire, Message};
-use super::transport::Transport;
+use super::message::{InitKindWire, Message, KIND_LABELS};
+use super::transport::{Transport, FRAME_OVERHEAD};
 
 /// Fruitless polling passes over all pending workers before the gather
 /// falls back to a blocking receive on the first straggler (avoids a
 /// busy-wait on quiet TCP links while keeping the common case lock-step
 /// free).
 const GATHER_SPIN_PASSES: usize = 256;
+
+/// One worker's wire telemetry: `(worker_id, flat registry snapshot)` as
+/// carried by a v4 `StatsReport` frame.
+pub type WorkerStats = (u32, Vec<(String, f64)>);
+
+/// Leader-side metric handles, resolved from the global registry once at
+/// backend construction so the scatter/gather hot path records lock-free.
+///
+/// Per-worker latency is indexed by transport slot (scatter) or by the
+/// reply's own `worker_id` (gather); per-kind wire counters are indexed
+/// by [`Message::kind_index`] into [`KIND_LABELS`].
+struct ClusterObs {
+    scatter_ns: Vec<Arc<Histogram>>,
+    gather_ns: Vec<Arc<Histogram>>,
+    tx_frames: Vec<Arc<Counter>>,
+    tx_bytes: Vec<Arc<Counter>>,
+    rx_frames: Vec<Arc<Counter>>,
+    rx_bytes: Vec<Arc<Counter>>,
+}
+
+impl ClusterObs {
+    fn new(j: usize) -> Self {
+        Self {
+            scatter_ns: (0..j)
+                .map(|i| obs::histogram(&format!("cluster.scatter_ns.w{i}")))
+                .collect(),
+            gather_ns: (0..j)
+                .map(|i| obs::histogram(&format!("cluster.gather_ns.w{i}")))
+                .collect(),
+            tx_frames: KIND_LABELS
+                .iter()
+                .map(|l| obs::counter(&format!("wire.tx_frames.{l}")))
+                .collect(),
+            tx_bytes: KIND_LABELS
+                .iter()
+                .map(|l| obs::counter(&format!("wire.tx_bytes.{l}")))
+                .collect(),
+            rx_frames: KIND_LABELS
+                .iter()
+                .map(|l| obs::counter(&format!("wire.rx_frames.{l}")))
+                .collect(),
+            rx_bytes: KIND_LABELS
+                .iter()
+                .map(|l| obs::counter(&format!("wire.rx_bytes.{l}")))
+                .collect(),
+        }
+    }
+
+    /// Account one received frame (kind + framed wire size).
+    fn note_rx(&self, msg: &Message) {
+        if !obs::enabled() {
+            return;
+        }
+        let k = msg.kind_index();
+        self.rx_frames[k].inc();
+        self.rx_bytes[k].add(msg.encoded_len() as u64 + FRAME_OVERHEAD);
+    }
+
+    /// Account one sent frame (kind + framed wire size).
+    fn note_tx(&self, msg: &Message) {
+        if !obs::enabled() {
+            return;
+        }
+        let k = msg.kind_index();
+        self.tx_frames[k].inc();
+        self.tx_bytes[k].add(msg.encoded_len() as u64 + FRAME_OVERHEAD);
+    }
+}
+
+/// Send with scatter latency + per-kind tx accounting for worker slot `i`.
+fn send_traced<T: Transport>(
+    w: &mut T,
+    i: usize,
+    msg: &Message,
+    cobs: &ClusterObs,
+) -> Result<()> {
+    let t0 = obs::now();
+    w.send(msg)?;
+    if let Some(h) = cobs.scatter_ns.get(i) {
+        obs::record_since(h, t0);
+    }
+    cobs.note_tx(msg);
+    Ok(())
+}
 
 /// Every reply slot must be claimed by a DISTINCT worker id: a duplicate
 /// would silently clobber one slot and leave another holding the previous
@@ -60,6 +155,7 @@ fn gather<T, F>(
     workers: &mut [T],
     done: &mut Vec<bool>,
     seen: &mut Vec<bool>,
+    cobs: &ClusterObs,
     mut on_msg: F,
 ) -> Result<()>
 where
@@ -71,6 +167,18 @@ where
     done.resize(j, false);
     seen.clear();
     seen.resize(j, false);
+    // per-worker gather latency = gather start -> that worker's reply
+    // dispatched; frame kind/size must be noted BEFORE on_msg consumes
+    // the message
+    let start = obs::now();
+    let mut dispatch = |msg: Message, on_msg: &mut F| -> Result<u32> {
+        cobs.note_rx(&msg);
+        let wid = on_msg(msg)?;
+        if let Some(h) = cobs.gather_ns.get(wid as usize) {
+            obs::record_since(h, start);
+        }
+        Ok(wid)
+    };
     let mut remaining = j;
     let mut idle_passes = 0usize;
     while remaining > 0 {
@@ -80,7 +188,7 @@ where
                 continue;
             }
             if let Some(msg) = w.try_recv()? {
-                let wid = on_msg(msg)?;
+                let wid = dispatch(msg, &mut on_msg)?;
                 mark_seen(seen, wid as usize)?;
                 done[i] = true;
                 remaining -= 1;
@@ -103,7 +211,7 @@ where
         // finished meanwhile is drained by the next polling pass
         let i = done.iter().position(|d| !d).expect("remaining > 0");
         let msg = workers[i].recv()?;
-        let wid = on_msg(msg)?;
+        let wid = dispatch(msg, &mut on_msg)?;
         mark_seen(seen, wid as usize)?;
         done[i] = true;
         remaining -= 1;
@@ -148,6 +256,9 @@ pub struct ClusterBackend<T: Transport> {
     seen: Vec<bool>,
     epoch: u32,
     n_target: usize,
+    /// Metric handles (scatter/gather latency, per-kind wire counters),
+    /// resolved once so the hot path records without registry locks.
+    obs: ClusterObs,
 }
 
 impl<T: Transport> ClusterBackend<T> {
@@ -170,6 +281,7 @@ impl<T: Transport> ClusterBackend<T> {
             seen: Vec::new(),
             epoch: 0,
             n_target: 0,
+            obs: ClusterObs::new(j),
         })
     }
 
@@ -187,9 +299,45 @@ impl<T: Transport> ClusterBackend<T> {
 
     /// Send shutdown to all workers (best-effort).
     pub fn shutdown(&mut self) {
-        for w in self.workers.iter_mut() {
-            let _ = w.send(&Message::Shutdown);
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let _ = send_traced(w, i, &Message::Shutdown, &self.obs);
         }
+    }
+
+    /// Poll every worker for its telemetry snapshot (wire v4
+    /// `StatsRequest`/`StatsReport`); returns `(worker_id, stats)` pairs
+    /// in worker-id order.  `stats` is the flat snapshot of the worker's
+    /// registry (`crate::obs::MetricsRegistry::snapshot_flat`).  Note:
+    /// in-process workers share this process's global registry, so their
+    /// reports all mirror the same aggregate; the per-worker split is
+    /// exact only across process boundaries (TCP workers).
+    pub fn collect_worker_stats(&mut self) -> Result<Vec<WorkerStats>> {
+        let j = self.workers.len();
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(w, i, &Message::StatsRequest, &self.obs)?;
+        }
+        let mut reports: Vec<Option<WorkerStats>> = vec![None; j];
+        let slots = &mut reports;
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
+            match msg {
+                Message::StatsReport { worker_id, stats } => {
+                    if let Some(slot) = slots.get_mut(worker_id as usize) {
+                        *slot = Some((worker_id, stats));
+                    }
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} stats report failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        Ok(reports.into_iter().flatten().collect())
     }
 
     /// Pipelined scatter of per-worker partition blocks.
@@ -202,13 +350,14 @@ impl<T: Transport> ClusterBackend<T> {
     ) -> Result<()> {
         for (i, w) in self.workers.iter_mut().enumerate() {
             let (sub, rhs) = plan.extract(a, b, i);
-            w.send(&Message::InitPartition {
+            let msg = Message::InitPartition {
                 worker_id: i as u32,
                 kind,
                 a: sub,
                 b: rhs,
                 n_target: plan.n as u32,
-            })?;
+            };
+            send_traced(w, i, &msg, &self.obs)?;
         }
         Ok(())
     }
@@ -225,14 +374,16 @@ impl<T: Transport> ClusterBackend<T> {
         for (i, w) in self.workers.iter_mut().enumerate() {
             let blk = plan.blocks[i];
             let sub = a.slice_rows_dense(blk.start, blk.end);
-            w.send(&Message::RegisterMatrix {
+            let msg = Message::RegisterMatrix {
                 worker_id: i as u32,
                 kind,
                 a: sub,
                 n_target: plan.n as u32,
-            })?;
+            };
+            send_traced(w, i, &msg, &self.obs)?;
         }
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::MatrixRegistered { worker_id } => Ok(worker_id),
                 Message::WorkerError { worker_id, message } => {
@@ -265,17 +416,16 @@ impl<T: Transport> ClusterBackend<T> {
         }
         for (i, w) in self.workers.iter_mut().enumerate() {
             let blk = plan.blocks[i];
-            if let [b] = bs {
-                w.send(&Message::SolveRhs {
-                    b: b[blk.start..blk.end].to_vec(),
-                })?;
+            let msg = if let [b] = bs {
+                Message::SolveRhs { b: b[blk.start..blk.end].to_vec() }
             } else {
                 let cols: Vec<Vec<f32>> = bs
                     .iter()
                     .map(|b| b[blk.start..blk.end].to_vec())
                     .collect();
-                w.send(&Message::SolveBatch { bs: cols })?;
-            }
+                Message::SolveBatch { bs: cols }
+            };
+            send_traced(w, i, &msg, &self.obs)?;
         }
         Ok(())
     }
@@ -298,7 +448,8 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
         self.n_target = n;
         self.scatter_blocks(kind.into(), plan, a, b)?;
         let xs = &mut self.xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::InitDone { worker_id, x0 } => {
                     let slot =
@@ -347,12 +498,13 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
         };
         self.epoch = self.epoch.wrapping_add(1);
         // pipelined scatter: workers compute eq. (6) concurrently
-        for w in self.workers.iter_mut() {
-            w.send(&msg)?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(w, i, &msg, &self.obs)?;
         }
         let n = self.n_target;
         let xs = &mut self.xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::UpdateDone { worker_id, x } => {
                     let slot =
@@ -396,7 +548,8 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
         // GradOnly: workers store their block and skip the (for DGD
         // useless) O(l n^2) factorization entirely
         self.scatter_blocks(InitKindWire::GradOnly, plan, a, b)?;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::InitDone { worker_id, .. } => Ok(worker_id),
                 Message::WorkerError { worker_id, message } => {
@@ -414,12 +567,13 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
     fn grad_round(&mut self, x: &[f32], acc: &mut [f64]) -> Result<()> {
         let msg = Message::RunGrad { epoch: self.epoch, x: x.to_vec() };
         self.epoch = self.epoch.wrapping_add(1);
-        for w in self.workers.iter_mut() {
-            w.send(&msg)?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(w, i, &msg, &self.obs)?;
         }
         let n = self.n_target;
         let xs = &mut self.xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::GradDone { worker_id, grad } => {
                     let slot =
@@ -490,7 +644,8 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
         let k = bs.len();
         self.scatter_rhs(plan, bs)?;
         let xs = &mut self.batch_xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::RhsSeeded { worker_id, x0s } => {
                     let slot =
@@ -528,7 +683,8 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
     ) -> Result<()> {
         let k = bs.len();
         self.scatter_rhs(plan, bs)?;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::RhsSeeded { worker_id, x0s } => {
                     // gradient-only sessions return k empty columns
@@ -566,13 +722,14 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
             xbars: xbars.to_vec(),
         };
         self.epoch = self.epoch.wrapping_add(1);
-        for w in self.workers.iter_mut() {
-            w.send(&msg)?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(w, i, &msg, &self.obs)?;
         }
         let n = self.n_target;
         let k = xbars.len();
         let xs = &mut self.batch_xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::UpdateBatchDone { worker_id, xs: cols } => {
                     let slot =
@@ -612,13 +769,14 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
             xs: xs_cols.to_vec(),
         };
         self.epoch = self.epoch.wrapping_add(1);
-        for w in self.workers.iter_mut() {
-            w.send(&msg)?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(w, i, &msg, &self.obs)?;
         }
         let n = self.n_target;
         let k = xs_cols.len();
         let xs = &mut self.batch_xs;
-        gather(&mut self.workers, &mut self.done, &mut self.seen, |msg| {
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
                 Message::GradBatchDone { worker_id, grads } => {
                     let slot =
@@ -673,6 +831,12 @@ impl<T: Transport> Leader<T> {
     /// Total `(sent, received)` wire bytes across all worker links.
     pub fn wire_bytes(&self) -> (u64, u64) {
         self.backend.wire_bytes()
+    }
+
+    /// Gather each worker's telemetry snapshot over the wire (see
+    /// [`ClusterBackend::collect_worker_stats`]).
+    pub fn collect_worker_stats(&mut self) -> Result<Vec<WorkerStats>> {
+        self.backend.collect_worker_stats()
     }
 
     /// Run the APC consensus algorithm distributed over the workers.
@@ -736,6 +900,42 @@ mod tests {
             err.to_string().contains("duplicate reply"),
             "unexpected error: {err}"
         );
+        drop((w0, w1));
+    }
+
+    #[test]
+    fn collect_worker_stats_orders_reports_and_accounts_wire() {
+        let _guard = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        // reports queued out of id order: the gather keys on worker_id
+        let (l0, mut w0) = channel_pair();
+        let (l1, mut w1) = channel_pair();
+        w1.send(&Message::StatsReport {
+            worker_id: 1,
+            stats: vec![("worker.frames".into(), 3.0)],
+        })
+        .unwrap();
+        w0.send(&Message::StatsReport { worker_id: 0, stats: vec![] })
+            .unwrap();
+
+        let mut backend = ClusterBackend::new(vec![l0, l1]).unwrap();
+        let reports = backend.collect_worker_stats().unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].0, 0);
+        assert_eq!(reports[1].0, 1);
+        assert_eq!(
+            reports[1].1,
+            vec![("worker.frames".to_string(), 3.0)]
+        );
+        // wire accounting saw the request going out and the reports
+        // coming back, under their own frame-kind labels
+        assert!(obs::counter("wire.tx_frames.stats_request").get() >= 2);
+        assert!(obs::counter("wire.rx_frames.stats_report").get() >= 2);
+        assert!(
+            obs::counter("wire.rx_bytes.stats_report").get()
+                >= 2 * FRAME_OVERHEAD
+        );
+        crate::obs::set_enabled(false);
         drop((w0, w1));
     }
 

@@ -9,6 +9,8 @@
 //! vec<f32>:= u64 len | f32 * len        (LE)
 //! matrix  := u64 rows | u64 cols | f32 * rows*cols (row-major)
 //! string  := u64 len | utf8 bytes
+//! f64     := 8 bytes (LE)
+//! stats   := u64 count | (string | f64) * count
 //! ```
 //!
 //! The frame header is added by stream transports (see
@@ -33,6 +35,16 @@
 //! [`Message::RunUpdateBatch`] / [`Message::RunGradBatch`], carrying k
 //! n-vectors per frame.  A worker that receives an RHS before a
 //! registration rejects it loudly with a [`Message::WorkerError`].
+//!
+//! # Telemetry (wire v4)
+//!
+//! [`Message::StatsRequest`] asks a worker for a flattened snapshot of
+//! its metrics registry (`obs::MetricsRegistry::snapshot_flat`); the
+//! worker answers with [`Message::StatsReport`] carrying `(name, f64)`
+//! pairs.  Telemetry frames never carry solver state — they are
+//! read-only observation, so requesting stats can never perturb a
+//! solve (the observability never-touch-numerics contract, see
+//! `crate::obs`).
 
 use crate::error::{DapcError, Result};
 use crate::linalg::Matrix;
@@ -43,8 +55,10 @@ use crate::solver::InitKind;
 /// v1 was the unversioned PR-0 framing (`u32 len | payload`); v2 added the
 /// magic/version header and `InitKindWire::GradOnly`; v3 added the
 /// solve-service session frames (`RegisterMatrix`, `SolveRhs`,
-/// `SolveBatch` and the batched round/gradient frames).
-pub const WIRE_VERSION: u32 = 3;
+/// `SolveBatch` and the batched round/gradient frames); v4 added the
+/// telemetry frames (`StatsRequest`/`StatsReport`) and the f64 scalar
+/// encoding they carry.
+pub const WIRE_VERSION: u32 = 4;
 
 /// Protocol messages (both directions).
 #[derive(Debug, Clone, PartialEq)]
@@ -104,7 +118,40 @@ pub enum Message {
     RunGradBatch { epoch: u32, xs: Vec<Vec<f32>> },
     /// Worker -> leader (v3): per-column local gradients.
     GradBatchDone { worker_id: u32, grads: Vec<Vec<f32>> },
+    /// Leader -> worker (v4): ship back a snapshot of your metrics
+    /// registry.  Read-only; never perturbs a solve.
+    StatsRequest,
+    /// Worker -> leader (v4): flattened `(name, value)` metrics
+    /// snapshot (counters/gauges verbatim, histograms exploded into
+    /// `.count`/`.sum`/quantile entries by
+    /// `obs::MetricsRegistry::snapshot_flat`).
+    StatsReport { worker_id: u32, stats: Vec<(String, f64)> },
 }
+
+/// Human label for each frame type, indexed by [`Message::kind_index`]
+/// — the per-kind wire accounting metric names
+/// (`wire.tx_frames.{label}` etc.) are built from these.
+pub const KIND_LABELS: [&str; 19] = [
+    "init_partition",
+    "init_done",
+    "run_update",
+    "update_done",
+    "run_grad",
+    "grad_done",
+    "worker_error",
+    "shutdown",
+    "register_matrix",
+    "matrix_registered",
+    "solve_rhs",
+    "solve_batch",
+    "rhs_seeded",
+    "run_update_batch",
+    "update_batch_done",
+    "run_grad_batch",
+    "grad_batch_done",
+    "stats_request",
+    "stats_report",
+];
 
 /// InitKind twin that is wire-encodable, plus the gradient-only mode that
 /// has no engine-side factorization at all.
@@ -187,6 +234,19 @@ impl<'a> Enc<'a> {
     fn string(&mut self, s: &str) {
         self.buf.extend_from_slice(&(s.len() as u64).to_le_bytes());
         self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u64 count | (string | f64) * count` — the v4 telemetry encoding.
+    fn stats(&mut self, stats: &[(String, f64)]) {
+        self.buf.extend_from_slice(&(stats.len() as u64).to_le_bytes());
+        for (name, v) in stats {
+            self.string(name);
+            self.f64(*v);
+        }
     }
 }
 
@@ -282,6 +342,28 @@ impl<'a> Dec<'a> {
         let bytes = self.take(len)?;
         String::from_utf8(bytes.to_vec())
             .map_err(|_| DapcError::Parse("invalid utf8 in message".into()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn stats(&mut self) -> Result<Vec<(String, f64)>> {
+        let count = self.u64()? as usize;
+        // every counted entry needs at least its u64 name-length prefix
+        // plus the f64 value
+        if count > self.remaining() / 16 {
+            return Err(DapcError::Parse(format!(
+                "stats count {count} exceeds remaining payload"
+            )));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = self.string()?;
+            let v = self.f64()?;
+            out.push((name, v));
+        }
+        Ok(out)
     }
 
     fn finish(&self) -> Result<()> {
@@ -391,7 +473,44 @@ impl Message {
                 e.u32(*worker_id);
                 e.vec2_f32(grads);
             }
+            Message::StatsRequest => buf.push(17),
+            Message::StatsReport { worker_id, stats } => {
+                let mut e = Enc::new(buf, 18);
+                e.u32(*worker_id);
+                e.stats(stats);
+            }
         }
+    }
+
+    /// Dense index of this frame's type (identical to its wire tag);
+    /// indexes [`KIND_LABELS`] for per-kind frame/byte accounting.
+    pub fn kind_index(&self) -> usize {
+        match self {
+            Message::InitPartition { .. } => 0,
+            Message::InitDone { .. } => 1,
+            Message::RunUpdate { .. } => 2,
+            Message::UpdateDone { .. } => 3,
+            Message::RunGrad { .. } => 4,
+            Message::GradDone { .. } => 5,
+            Message::WorkerError { .. } => 6,
+            Message::Shutdown => 7,
+            Message::RegisterMatrix { .. } => 8,
+            Message::MatrixRegistered { .. } => 9,
+            Message::SolveRhs { .. } => 10,
+            Message::SolveBatch { .. } => 11,
+            Message::RhsSeeded { .. } => 12,
+            Message::RunUpdateBatch { .. } => 13,
+            Message::UpdateBatchDone { .. } => 14,
+            Message::RunGradBatch { .. } => 15,
+            Message::GradBatchDone { .. } => 16,
+            Message::StatsRequest => 17,
+            Message::StatsReport { .. } => 18,
+        }
+    }
+
+    /// Accounting label for this frame's type.
+    pub fn kind_label(&self) -> &'static str {
+        KIND_LABELS[self.kind_index()]
     }
 
     /// Encode to a fresh tagged payload (no frame header).
@@ -440,6 +559,15 @@ impl Message {
             Message::UpdateBatchDone { xs, .. } => 1 + 4 + vec2_len(xs),
             Message::RunGradBatch { xs, .. } => 1 + 4 + vec2_len(xs),
             Message::GradBatchDone { grads, .. } => 1 + 4 + vec2_len(grads),
+            Message::StatsRequest => 1,
+            Message::StatsReport { stats, .. } => {
+                1 + 4
+                    + VEC_HEADER
+                    + stats
+                        .iter()
+                        .map(|(name, _)| VEC_HEADER + name.len() + 8)
+                        .sum::<usize>()
+            }
         }
     }
 
@@ -500,6 +628,11 @@ impl Message {
             16 => Message::GradBatchDone {
                 worker_id: d.u32()?,
                 grads: d.vec2_f32()?,
+            },
+            17 => Message::StatsRequest,
+            18 => Message::StatsReport {
+                worker_id: d.u32()?,
+                stats: d.stats()?,
             },
             other => {
                 return Err(DapcError::Parse(format!("unknown tag {other}")))
@@ -579,6 +712,16 @@ mod tests {
                 worker_id: 0,
                 grads: vec![vec![-0.5, 0.5]],
             },
+            Message::StatsRequest,
+            Message::StatsReport {
+                worker_id: 5,
+                stats: vec![
+                    ("worker.update_ns.count".into(), 128.0),
+                    ("worker.update_ns.p99".into(), 4095.0),
+                    ("".into(), -1.5),
+                ],
+            },
+            Message::StatsReport { worker_id: 0, stats: vec![] },
         ]
     }
 
@@ -658,6 +801,28 @@ mod tests {
         // rows u64 sits after tag (1) + worker_id (4) + kind (1)
         enc[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Message::decode(&enc).is_err());
+
+        // hostile stats count: claims more entries than the payload
+        // could hold — must fail cleanly, not over-allocate
+        let mut enc = Message::StatsReport {
+            worker_id: 0,
+            stats: vec![("a".into(), 1.0)],
+        }
+        .encode();
+        // count u64 sits after tag (1) + worker_id (4)
+        enc[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn kind_index_matches_wire_tag_and_labels() {
+        assert_eq!(KIND_LABELS.len(), 19);
+        for m in variants() {
+            let idx = m.kind_index();
+            assert_eq!(m.encode()[0] as usize, idx, "{m:?}");
+            assert_eq!(m.kind_label(), KIND_LABELS[idx]);
+        }
+        assert_eq!(Message::StatsRequest.kind_label(), "stats_request");
     }
 
     #[test]

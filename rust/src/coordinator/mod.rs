@@ -20,7 +20,8 @@
 //! ```
 //!
 //! * [`message`] — the wire protocol (hand-framed binary; no serde),
-//!   versioned via `message::WIRE_VERSION` (currently v3) so old/new
+//!   versioned via `message::WIRE_VERSION` (currently v4, which added
+//!   the `StatsRequest`/`StatsReport` telemetry frames) so old/new
 //!   peer mixes fail loudly at the first frame;
 //! * [`transport`] — in-process channels and TCP streams behind one
 //!   trait, with wire-byte counters and a non-blocking receive path;
@@ -47,5 +48,5 @@ pub mod worker;
 
 pub use cluster::LocalCluster;
 pub use graph::TaskGraph;
-pub use leader::{ClusterBackend, Leader};
+pub use leader::{ClusterBackend, Leader, WorkerStats};
 pub use message::Message;

@@ -446,6 +446,36 @@ mod tests {
     }
 
     #[test]
+    fn v3_peer_rejected_by_v4_build() {
+        // a pre-telemetry (v3) worker connecting to this (v4) build must
+        // die at the first frame with an actionable message, never reach
+        // Message::decode
+        assert!(WIRE_VERSION >= 4, "test assumes the v4 telemetry bump");
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let payload = Message::Shutdown.encode();
+            let v3_header = FRAME_MAGIC | 3;
+            stream.write_all(&v3_header.to_le_bytes()).unwrap();
+            stream
+                .write_all(&(payload.len() as u32).to_le_bytes())
+                .unwrap();
+            stream.write_all(&payload).unwrap();
+            stream.flush().unwrap();
+            let mut sink = [0u8; 1];
+            let _ = stream.read(&mut sink);
+        });
+        let mut client =
+            TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let err = client.recv().unwrap_err().to_string();
+        assert!(err.contains("v3"), "unexpected error: {err}");
+        assert!(err.contains("upgrade"), "unexpected error: {err}");
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
     fn wrong_version_rejected_loudly() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();

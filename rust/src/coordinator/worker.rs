@@ -9,13 +9,49 @@
 //! then re-seed estimates for fresh right-hand sides at O(l n + n^2)
 //! each.  An RHS frame arriving before a registration is rejected loudly
 //! with a `WorkerError` — it would otherwise silently serve stale state.
+//!
+//! Wire-v4 telemetry: every engine call is timed into the process-global
+//! `worker.*` histograms (instrumentation wraps the engine, never enters
+//! it — see `crate::obs`), and a `StatsRequest` frame ships the
+//! flattened registry back as a `StatsReport` so a remote leader can
+//! print a cluster-wide view.
+
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::linalg::{blas, Matrix};
+use crate::obs::{self, Counter, Histogram};
 use crate::solver::{ComputeEngine, SeedFactors};
 
 use super::message::Message;
 use super::transport::Transport;
+
+/// Worker-side metric handles, fetched from the global registry once at
+/// loop start so per-frame recording never takes the registry lock.
+struct WorkerObs {
+    /// Frames handled (any type).
+    frames: Arc<Counter>,
+    /// Factorization time (`InitPartition` init or `RegisterMatrix`).
+    register_ns: Arc<Histogram>,
+    /// Per-`SolveRhs`/`SolveBatch` warm seeding time.
+    seed_ns: Arc<Histogram>,
+    /// Per-round consensus update time (single and batched).
+    update_ns: Arc<Histogram>,
+    /// Per-round gradient time (single and batched).
+    grad_ns: Arc<Histogram>,
+}
+
+impl WorkerObs {
+    fn new() -> Self {
+        Self {
+            frames: obs::counter("worker.frames"),
+            register_ns: obs::histogram("worker.register_ns"),
+            seed_ns: obs::histogram("worker.seed_ns"),
+            update_ns: obs::histogram("worker.update_ns"),
+            grad_ns: obs::histogram("worker.grad_ns"),
+        }
+    }
+}
 
 /// Run the worker protocol until `Shutdown`.  Errors are reported to the
 /// leader as `WorkerError` before returning.
@@ -25,9 +61,11 @@ pub fn run_worker<E: ComputeEngine, T: Transport>(
 ) -> Result<()> {
     let mut state: Option<WorkerState> = None;
     let mut my_id: u32 = u32::MAX;
+    let wobs = WorkerObs::new();
     loop {
         let msg = transport.recv()?;
-        let outcome = handle(engine, &mut state, &mut my_id, msg);
+        wobs.frames.inc();
+        let outcome = handle(engine, &mut state, &mut my_id, msg, &wobs);
         match outcome {
             Ok(Some(reply)) => transport.send(&reply)?,
             Ok(None) => return Ok(()), // shutdown
@@ -110,14 +148,17 @@ fn handle<E: ComputeEngine>(
     state: &mut Option<WorkerState>,
     my_id: &mut u32,
     msg: Message,
+    wobs: &WorkerObs,
 ) -> Result<Option<Message>> {
     match msg {
         Message::InitPartition { worker_id, kind, a, b, n_target } => {
             *my_id = worker_id;
             match kind.engine_kind() {
                 Some(engine_kind) => {
+                    let t0 = obs::now();
                     let init =
                         engine.init(engine_kind, &a, &b, n_target as usize)?;
+                    obs::record_since(&wobs.register_ns, t0);
                     let x0 = init.x0.clone();
                     *state = Some(WorkerState::one_shot(
                         init.x0,
@@ -147,8 +188,10 @@ fn handle<E: ComputeEngine>(
                     // with --threads.  Projector + prepacked panels +
                     // seed state stay resident for every rhs this
                     // session will stream.
+                    let t0 = obs::now();
                     let fac =
                         engine.factorize(engine_kind, &a, n_target as usize)?;
+                    obs::record_since(&wobs.register_ns, t0);
                     *state = Some(WorkerState::registered(
                         Some(fac.projector),
                         Some(fac.seed),
@@ -165,12 +208,16 @@ fn handle<E: ComputeEngine>(
         }
         Message::SolveRhs { b } => {
             let st = registered_state(state, "SolveRhs")?;
+            let t0 = obs::now();
             let x0s = seed_columns(engine, st, vec![b])?;
+            obs::record_since(&wobs.seed_ns, t0);
             Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
         }
         Message::SolveBatch { bs } => {
             let st = registered_state(state, "SolveBatch")?;
+            let t0 = obs::now();
             let x0s = seed_columns(engine, st, bs)?;
+            obs::record_since(&wobs.seed_ns, t0);
             Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
         }
         Message::RunUpdateBatch { epoch: _, gamma, xbars } => {
@@ -197,12 +244,14 @@ fn handle<E: ComputeEngine>(
             // registered sessions carry prepacked panels and take the
             // packed wide-gemm sweep — bit-identical to the row-dot
             // update, so the wire protocol is unchanged
+            let t0 = obs::now();
             st.xs = match &st.panels {
                 Some(panels) => {
                     engine.update_batch_packed(&st.xs, &xbars, panels, gamma)?
                 }
                 None => engine.update_batch(&st.xs, &xbars, p, gamma)?,
             };
+            obs::record_since(&wobs.update_ns, t0);
             Ok(Some(Message::UpdateBatchDone {
                 worker_id: *my_id,
                 xs: st.xs.clone(),
@@ -222,10 +271,12 @@ fn handle<E: ComputeEngine>(
                     xs.len()
                 )));
             }
+            let t0 = obs::now();
             let mut grads = Vec::with_capacity(xs.len());
             for (x, bcol) in xs.iter().zip(&st.bs) {
                 grads.push(engine.dgd_grad(&st.a, x, bcol)?);
             }
+            obs::record_since(&wobs.grad_ns, t0);
             Ok(Some(Message::GradBatchDone { worker_id: *my_id, grads }))
         }
         Message::RunUpdate { epoch: _, gamma, xbar } => {
@@ -241,7 +292,9 @@ fn handle<E: ComputeEngine>(
                         .into(),
                 )
             })?;
+            let t0 = obs::now();
             st.x = engine.update(&st.x, &xbar, p, gamma)?;
+            obs::record_since(&wobs.update_ns, t0);
             Ok(Some(Message::UpdateDone { worker_id: *my_id, x: st.x.clone() }))
         }
         Message::RunGrad { epoch: _, x } => {
@@ -250,8 +303,20 @@ fn handle<E: ComputeEngine>(
                     "RunGrad before InitPartition".into(),
                 )
             })?;
+            let t0 = obs::now();
             let grad = engine.dgd_grad(&st.a, &x, &st.b)?;
+            obs::record_since(&wobs.grad_ns, t0);
             Ok(Some(Message::GradDone { worker_id: *my_id, grad }))
+        }
+        Message::StatsRequest => {
+            // read-only: a flattened snapshot of this process's registry.
+            // NOTE in-process clusters share one registry, so the
+            // snapshot overlaps with the leader's own metrics; the
+            // per-worker split is exact across process boundaries (TCP).
+            Ok(Some(Message::StatsReport {
+                worker_id: *my_id,
+                stats: obs::global().snapshot_flat(),
+            }))
         }
         Message::Shutdown => Ok(None),
         other => Err(crate::error::DapcError::Coordinator(format!(
@@ -528,6 +593,53 @@ mod tests {
             panic!("expected UpdateBatchDone");
         };
         assert_eq!(xs.len(), 2);
+
+        leader.send(&Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn stats_request_returns_registry_snapshot() {
+        // hold the obs test lock: the report reads the process-global
+        // registry, and other tests may toggle the enabled switch
+        let _g = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            run_worker(&engine, &mut worker_side)
+        });
+
+        let (a, b, _) = consistent(24, 8, 77);
+        leader
+            .send(&Message::RegisterMatrix {
+                worker_id: 9,
+                kind: InitKindWire::Qr,
+                a,
+                n_target: 8,
+            })
+            .unwrap();
+        let _ = leader.recv().unwrap();
+        leader.send(&Message::SolveRhs { b }).unwrap();
+        let _ = leader.recv().unwrap();
+
+        leader.send(&Message::StatsRequest).unwrap();
+        let Message::StatsReport { worker_id, stats } = leader.recv().unwrap()
+        else {
+            panic!("expected StatsReport");
+        };
+        assert_eq!(worker_id, 9);
+        let get = |key: &str| {
+            stats
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing stat {key:?}"))
+        };
+        assert!(get("worker.register_ns.count") >= 1.0);
+        assert!(get("worker.seed_ns.count") >= 1.0);
+        assert!(get("worker.frames") >= 2.0);
 
         leader.send(&Message::Shutdown).unwrap();
         handle.join().unwrap().unwrap();

@@ -47,6 +47,7 @@ pub mod coordinator;
 pub mod error;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod partition;
 pub mod rng;

@@ -10,6 +10,15 @@
 //!                  f32 kernel tier, and the gemm tiling constants (CI logs
 //!                  this on every leg of the dispatch matrix)
 //!   bench-validate check BENCH_*.json bench artifacts parse and are non-hollow
+//!   metrics-validate  check METRICS_*.json telemetry dumps parse, are
+//!                  non-hollow and internally consistent
+//!
+//! Any command that does work accepts `--metrics-json PATH`: after a
+//! successful run the process-global metrics registry (latency
+//! histograms, counters, gauges — including imported `cluster.w*`
+//! worker telemetry on distributed runs) is written as a validated JSON
+//! artifact and summarized on stdout.  Recording defaults to on; set
+//! `DAPC_METRICS=off` to prove the zero-instrumentation path.
 
 use std::path::{Path, PathBuf};
 
@@ -51,6 +60,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "listen", help: "worker listen address", takes_value: true },
         OptSpec { name: "out", help: "output path (graph/generate)", takes_value: true },
         OptSpec { name: "trace", help: "print per-epoch MSE (synthetic only)", takes_value: false },
+        OptSpec { name: "metrics-json", help: "write the metrics registry (latency histograms, wire counters) to this JSON path after the run", takes_value: true },
         OptSpec { name: "help", help: "show usage", takes_value: false },
     ]
 }
@@ -69,11 +79,16 @@ fn run(args: &[String]) -> Result<()> {
     if parsed.has_flag("help") || parsed.command.is_none() {
         println!(
             "dapc — Distributed Accelerated Projection-Based Consensus Decomposition\n\n\
-             usage: dapc <solve|worker|graph|info|generate|kernels|bench-validate> \
-             [options]\n\n{}",
+             usage: dapc <solve|worker|graph|info|generate|kernels|bench-validate\
+             |metrics-validate> [options]\n\n{}",
             cli::usage(&specs)
         );
         return Ok(());
+    }
+    if parsed.get("metrics-json").is_some() {
+        // an explicit dump request overrides DAPC_METRICS=off: a knowingly
+        // hollow artifact would just fail metrics-validate downstream
+        dapc::obs::set_enabled(true);
     }
     match parsed.command.as_deref().unwrap() {
         "solve" => cmd_solve(&parsed),
@@ -83,11 +98,90 @@ fn run(args: &[String]) -> Result<()> {
         "generate" => cmd_generate(&parsed),
         "kernels" => cmd_kernels(),
         "bench-validate" => cmd_bench_validate(&parsed),
+        "metrics-validate" => cmd_metrics_validate(&parsed),
         other => Err(DapcError::Parse(format!(
             "unknown command {other:?} (expected \
-             solve|worker|graph|info|generate|kernels|bench-validate)"
+             solve|worker|graph|info|generate|kernels|bench-validate\
+             |metrics-validate)"
         ))),
+    }?;
+    if let Some(path) = parsed.get("metrics-json") {
+        dump_metrics(Path::new(path))?;
     }
+    Ok(())
+}
+
+/// `dapc metrics-validate FILE...`: fail loudly if any metrics JSON dump
+/// is missing, unparseable, hollow, or internally inconsistent (quantile
+/// ordering, bucket/count mismatches, the served-RHS cross-check).
+fn cmd_metrics_validate(parsed: &cli::ParsedArgs) -> Result<()> {
+    if parsed.positionals.is_empty() {
+        return Err(DapcError::Config(
+            "metrics-validate needs one or more METRICS_*.json paths".into(),
+        ));
+    }
+    let mut total = 0usize;
+    for p in &parsed.positionals {
+        let n = dapc::obs::export::validate_metrics_file(Path::new(p))
+            .map_err(|e| DapcError::Parse(format!("{p}: {e}")))?;
+        println!("OK {p} ({n} metrics)");
+        total += n;
+    }
+    println!("{} file(s) valid, {total} metrics", parsed.positionals.len());
+    Ok(())
+}
+
+/// Write the process-global registry as a JSON artifact (the shape
+/// `metrics-validate` checks) and print the human summary table.
+fn dump_metrics(path: &Path) -> Result<()> {
+    let reg = dapc::obs::global();
+    std::fs::write(path, reg.render_json())?;
+    let table = reg.render_table();
+    if !table.is_empty() {
+        println!("{table}");
+    }
+    println!("wrote metrics to {}", path.display());
+    Ok(())
+}
+
+/// Pull each worker's registry snapshot over the wire (v4
+/// `StatsRequest`/`StatsReport`), import every entry into this process's
+/// registry as a `cluster.w{id}.{name}` gauge (so one `--metrics-json`
+/// dump carries leader and worker telemetry side by side), and print a
+/// per-worker summary table.
+fn collect_cluster_telemetry<T: dapc::coordinator::transport::Transport>(
+    leader: &mut dapc::coordinator::Leader<T>,
+) -> Result<()> {
+    if !dapc::obs::enabled() {
+        return Ok(());
+    }
+    let reports = leader.collect_worker_stats()?;
+    let mut tb = dapc::metrics::TableBuilder::new(&[
+        "worker",
+        "frames",
+        "update_p99_ns",
+        "seed_p99_ns",
+    ]);
+    for (wid, stats) in &reports {
+        for (name, v) in stats {
+            dapc::obs::gauge(&format!("cluster.w{wid}.{name}")).set(*v);
+        }
+        let get = |key: &str| {
+            stats.iter().find(|(n, _)| n == key).map(|(_, v)| *v)
+        };
+        let cell = |v: Option<f64>| {
+            v.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into())
+        };
+        tb.row(&[
+            format!("w{wid}"),
+            cell(get("worker.frames")),
+            cell(get("worker.update_ns.p99")),
+            cell(get("worker.seed_ns.p99")),
+        ]);
+    }
+    println!("worker telemetry ({} workers):", reports.len());
+    print!("{}", tb.render());
+    Ok(())
 }
 
 /// `dapc kernels`: which SIMD kernel backend and kernel tier this
@@ -277,12 +371,14 @@ fn cmd_solve(parsed: &cli::ParsedArgs) -> Result<()> {
             Algorithm::ApcClassical => dapc::solver::ApcVariant::Classical,
             Algorithm::Dgd => {
                 let r = leader.solve_dgd(&a, &b, &opts)?;
+                collect_cluster_telemetry(&mut leader)?;
                 leader.shutdown();
                 print_report(&r, x_true.as_deref());
                 return Ok(());
             }
         };
         let r = leader.solve_apc(&a, &b, variant, &opts)?;
+        collect_cluster_telemetry(&mut leader)?;
         leader.shutdown();
         r
     } else if parsed.has_flag("distributed") {
@@ -357,6 +453,7 @@ fn run_local_cluster(
             let mut c =
                 cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
             let r = c.leader.solve_dgd(a, b, opts)?;
+            collect_cluster_telemetry(&mut c.leader)?;
             return Ok(r);
         }
     };
@@ -364,7 +461,9 @@ fn run_local_cluster(
         EngineKind::Native => {
             let mut c =
                 cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
-            c.leader.solve_apc(a, b, variant, opts)
+            let r = c.leader.solve_apc(a, b, variant, opts)?;
+            collect_cluster_telemetry(&mut c.leader)?;
+            Ok(r)
         }
         EngineKind::Xla => {
             let host = XlaExecutorHost::spawn(&cfg.artifacts_dir)?;
@@ -372,7 +471,9 @@ fn run_local_cluster(
             let mut c = cluster::LocalCluster::spawn(cfg.partitions, move || {
                 XlaEngine::new(exec.clone())
             })?;
-            c.leader.solve_apc(a, b, variant, opts)
+            let r = c.leader.solve_apc(a, b, variant, opts)?;
+            collect_cluster_telemetry(&mut c.leader)?;
+            Ok(r)
         }
     }
 }
@@ -456,7 +557,8 @@ fn cmd_serve(
             &opts,
             &bs,
             cold_s,
-        );
+        )
+        .and_then(|()| collect_cluster_telemetry(&mut leader));
         leader.shutdown();
         return result;
     }
@@ -467,14 +569,15 @@ fn cmd_serve(
             cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
         let cold_s =
             time_cold(c.leader.backend_mut(), a, &bs[0], algorithm, &opts)?;
-        return serve_stream(
+        serve_stream(
             c.leader.backend_mut(),
             a,
             algorithm,
             &opts,
             &bs,
             cold_s,
-        );
+        )?;
+        return collect_cluster_telemetry(&mut c.leader);
     }
     match cfg.engine {
         EngineKind::Native if cfg.threads == 1 => {

@@ -76,12 +76,41 @@ impl TimingStats {
         self.percentile(95.0)
     }
 
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Smallest sample.  Empty -> 0.0 (consistent with `mean`/`median`);
+    /// a NaN sample propagates (PR-4 NaN policy: never launder a
+    /// poisoned timing into a plausible number).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if self.samples.iter().any(|s| s.is_nan()) {
+            return f64::NAN;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample.  Empty -> 0.0; NaN propagates.  Folding starts
+    /// from the samples themselves, so all-negative sets report their
+    /// true maximum instead of a spurious 0.0.
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(0.0, f64::max)
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if self.samples.iter().any(|s| s.is_nan()) {
+            return f64::NAN;
+        }
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
     }
 
     pub fn std_dev(&self) -> f64 {
@@ -94,13 +123,18 @@ impl TimingStats {
             .sqrt()
     }
 
-    /// Linear-interpolated percentile (p in [0, 100]).
+    /// Linear-interpolated percentile (p in [0, 100]).  Empty -> 0.0;
+    /// a NaN sample propagates (total_cmp keeps the sort panic-free,
+    /// but a poisoned sample set must not yield a plausible number).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
+        if self.samples.iter().any(|s| s.is_nan()) {
+            return f64::NAN;
+        }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let rank = (p / 100.0) * (s.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -150,5 +184,32 @@ mod tests {
         let one = TimingStats::from_secs(vec![7.0]);
         assert_eq!(one.median(), 7.0);
         assert_eq!(one.std_dev(), 0.0);
+    }
+
+    #[test]
+    fn empty_min_max_consistent_with_mean() {
+        let e = TimingStats::from_secs(vec![]);
+        assert_eq!(e.min(), 0.0);
+        assert_eq!(e.max(), 0.0);
+    }
+
+    #[test]
+    fn all_negative_samples_report_true_max() {
+        let s = TimingStats::from_secs(vec![-3.0, -1.0, -2.0]);
+        assert_eq!(s.max(), -1.0);
+        assert_eq!(s.min(), -3.0);
+        assert_eq!(s.median(), -2.0);
+    }
+
+    #[test]
+    fn nan_propagates_instead_of_panicking() {
+        let s = TimingStats::from_secs(vec![1.0, f64::NAN, 3.0]);
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.median().is_nan());
+        assert!(s.p50().is_nan());
+        assert!(s.p99().is_nan());
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        assert!(s.mean().is_nan());
     }
 }

@@ -1,0 +1,443 @@
+//! Export surfaces for the metrics registry: a JSON artifact (written by
+//! `--metrics-json`, validated like the bench artifacts), a
+//! Prometheus-text exposition, and a human summary through the existing
+//! `TableBuilder`.
+//!
+//! The JSON document is hand-emitted with the same helpers the bench
+//! harness uses (`benchkit::json_str`/`json_num`) and is parseable by
+//! the in-repo `config::json::Json` reader; [`validate_metrics_text`]
+//! is the `dapc metrics-validate` / CI gate: a run that wrote an empty
+//! registry, a non-finite value, a non-monotone quantile chain, or a
+//! histogram whose buckets do not sum to its count fails loudly instead
+//! of uploading a hollow artifact.
+
+use std::collections::BTreeMap;
+
+use crate::benchkit::{json_num, json_str};
+use crate::config::json::Json;
+use crate::error::{DapcError, Result};
+use crate::metrics::TableBuilder;
+
+use super::MetricsRegistry;
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if v >= 1e9 {
+        format!("{:.2}s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}ms", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}us", v / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+impl MetricsRegistry {
+    /// Serialize a snapshot as a JSON document (version 1).  Parseable
+    /// by `config::json::Json`; checked by [`validate_metrics_text`].
+    pub fn render_json(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        out.push_str("{\n  \"metrics_version\": 1,\n");
+        out.push_str("  \"counters\": [");
+        for (i, (name, v)) in snap.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"value\": {v}}}",
+                json_str(name)
+            ));
+        }
+        out.push_str("\n  ],\n  \"gauges\": [");
+        for (i, (name, v)) in snap.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"value\": {}}}",
+                json_str(name),
+                json_num(*v)
+            ));
+        }
+        out.push_str("\n  ],\n  \"histograms\": [");
+        for (i, (name, h)) in snap.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"count\": {}, \"sum_ns\": {}, \
+                 \"min_ns\": {}, \"max_ns\": {}, \"p50_ns\": {}, \
+                 \"p95_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \
+                 \"buckets\": [",
+                json_str(name),
+                h.count,
+                h.sum,
+                h.min,
+                h.max,
+                h.p50,
+                h.p95,
+                h.p99,
+                h.p999
+            ));
+            for (j, (b, c)) in h.buckets.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("[{b}, {c}]"));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Prometheus text exposition: counters and gauges verbatim,
+    /// histograms as summaries (`{quantile="..."}` series plus `_sum`
+    /// and `_count`).  Names are sanitized to `dapc_[a-zA-Z0-9_]*`.
+    pub fn render_prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        for (name, v) in &snap.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &snap.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, h) in &snap.histograms {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (q, v) in [
+                ("0.5", h.p50),
+                ("0.95", h.p95),
+                ("0.99", h.p99),
+                ("0.999", h.p999),
+            ] {
+                out.push_str(&format!("{n}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!(
+                "{n}_sum {}\n{n}_count {}\n",
+                h.sum, h.count
+            ));
+        }
+        out
+    }
+
+    /// Human summary: one table for counters/gauges, one for histogram
+    /// quantiles.  Empty string when nothing is registered.
+    pub fn render_table(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        if !snap.counters.is_empty() || !snap.gauges.is_empty() {
+            let mut t = TableBuilder::new(&["metric", "value"]);
+            for (name, v) in &snap.counters {
+                t.row(&[name.clone(), v.to_string()]);
+            }
+            for (name, v) in &snap.gauges {
+                t.row(&[name.clone(), format!("{v:.3}")]);
+            }
+            out.push_str(&t.render());
+        }
+        if !snap.histograms.is_empty() {
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            let mut t = TableBuilder::new(&[
+                "histogram", "count", "p50", "p95", "p99", "p99.9", "max",
+            ]);
+            for (name, h) in &snap.histograms {
+                t.row(&[
+                    name.clone(),
+                    h.count.to_string(),
+                    fmt_ns(h.p50),
+                    fmt_ns(h.p95),
+                    fmt_ns(h.p99),
+                    fmt_ns(h.p999),
+                    fmt_ns(h.max),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("dapc_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn req_num(rec: &Json, name: &str, key: &str) -> Result<f64> {
+    rec.get(key).and_then(Json::as_f64).ok_or_else(|| {
+        DapcError::Parse(format!(
+            "metrics: {name:?} is missing numeric field {key:?}"
+        ))
+    })
+}
+
+fn check_nonneg(name: &str, key: &str, v: f64) -> Result<()> {
+    if !v.is_finite() || v < 0.0 {
+        return Err(DapcError::Parse(format!(
+            "metrics: {name}.{key} = {v} is not a finite non-negative number"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate one rendered metrics document: it must parse with the
+/// in-repo JSON reader, declare `metrics_version` 1, carry a non-empty
+/// registry, and every value must be finite (counters and histogram
+/// fields additionally non-negative).  Per histogram, the quantile
+/// chain must be monotone (`p50 <= p95 <= p99 <= p999`) and the bucket
+/// counts must sum exactly to `count`.  When the service-layer metrics
+/// are present, the per-RHS histogram totals must equal the
+/// `service.rhs_served` counter — every served RHS records exactly one
+/// latency observation (warm or batched), so a drift here means an
+/// instrumentation hole.
+///
+/// Returns the total number of validated metrics.
+pub fn validate_metrics_text(text: &str) -> Result<usize> {
+    let doc = Json::parse(text)?;
+    let ver = doc.get("metrics_version").and_then(Json::as_usize);
+    if ver != Some(1) {
+        return Err(DapcError::Parse(
+            "metrics: missing or unsupported \"metrics_version\"".into(),
+        ));
+    }
+    let arr = |key: &str| -> Result<&[Json]> {
+        doc.get(key).and_then(Json::as_arr).ok_or_else(|| {
+            DapcError::Parse(format!("metrics: missing {key:?} array"))
+        })
+    };
+    let counters = arr("counters")?;
+    let gauges = arr("gauges")?;
+    let histograms = arr("histograms")?;
+    if counters.is_empty() && gauges.is_empty() && histograms.is_empty() {
+        return Err(DapcError::Parse(
+            "metrics: registry is empty — nothing was recorded".into(),
+        ));
+    }
+
+    let mut counter_vals: BTreeMap<String, f64> = BTreeMap::new();
+    for c in counters {
+        let name = c.req_str("name")?;
+        let v = req_num(c, name, "value")?;
+        check_nonneg(name, "value", v)?;
+        counter_vals.insert(name.to_string(), v);
+    }
+    for g in gauges {
+        let name = g.req_str("name")?;
+        let v = req_num(g, name, "value")?;
+        if !v.is_finite() {
+            return Err(DapcError::Parse(format!(
+                "metrics: gauge {name} = {v} is not finite"
+            )));
+        }
+    }
+
+    let mut hist_counts: BTreeMap<String, f64> = BTreeMap::new();
+    for h in histograms {
+        let name = h.req_str("name")?;
+        let count = req_num(h, name, "count")?;
+        check_nonneg(name, "count", count)?;
+        for key in [
+            "sum_ns", "min_ns", "max_ns", "p50_ns", "p95_ns", "p99_ns",
+            "p999_ns",
+        ] {
+            check_nonneg(name, key, req_num(h, name, key)?)?;
+        }
+        let p50 = req_num(h, name, "p50_ns")?;
+        let p95 = req_num(h, name, "p95_ns")?;
+        let p99 = req_num(h, name, "p99_ns")?;
+        let p999 = req_num(h, name, "p999_ns")?;
+        if count > 0.0 && !(p50 <= p95 && p95 <= p99 && p99 <= p999) {
+            return Err(DapcError::Parse(format!(
+                "metrics: {name} quantiles are not monotone \
+                 ({p50} / {p95} / {p99} / {p999})"
+            )));
+        }
+        let buckets = h.get("buckets").and_then(Json::as_arr).ok_or_else(
+            || {
+                DapcError::Parse(format!(
+                    "metrics: {name} is missing \"buckets\""
+                ))
+            },
+        )?;
+        let mut total = 0.0;
+        for pair in buckets {
+            let pair = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(
+                || {
+                    DapcError::Parse(format!(
+                        "metrics: {name} bucket entries must be \
+                         [index, count] pairs"
+                    ))
+                },
+            )?;
+            total += pair[1].as_f64().ok_or_else(|| {
+                DapcError::Parse(format!(
+                    "metrics: {name} bucket count is not a number"
+                ))
+            })?;
+        }
+        if total != count {
+            return Err(DapcError::Parse(format!(
+                "metrics: {name} buckets sum to {total} but count is \
+                 {count} — dropped increments"
+            )));
+        }
+        hist_counts.insert(name.to_string(), count);
+    }
+
+    if let Some(served) = counter_vals.get("service.rhs_served") {
+        let warm =
+            hist_counts.get("service.warm_rhs_ns").copied().unwrap_or(0.0);
+        let batch =
+            hist_counts.get("service.batch_rhs_ns").copied().unwrap_or(0.0);
+        if warm + batch != *served {
+            return Err(DapcError::Parse(format!(
+                "metrics: per-RHS histogram totals ({warm} warm + {batch} \
+                 batched) != service.rhs_served counter ({served})"
+            )));
+        }
+    }
+
+    Ok(counters.len() + gauges.len() + histograms.len())
+}
+
+/// [`validate_metrics_text`] over a file on disk, with the path in any
+/// error.
+pub fn validate_metrics_file(path: &std::path::Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        DapcError::Parse(format!("metrics: cannot read {}: {e}", path.display()))
+    })?;
+    validate_metrics_text(&text)
+        .map_err(|e| DapcError::Parse(format!("{}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{set_enabled, test_lock, MetricsRegistry};
+    use super::*;
+
+    fn populated() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.counter("service.rhs_served").add(3);
+        reg.gauge("cluster.workers").set(4.0);
+        let warm = reg.histogram("service.warm_rhs_ns");
+        warm.record(1_000);
+        let batch = reg.histogram("service.batch_rhs_ns");
+        batch.record(200);
+        batch.record(300);
+        reg
+    }
+
+    #[test]
+    fn json_roundtrips_and_validates() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = populated();
+        let text = reg.render_json();
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(
+            doc.get("metrics_version").and_then(Json::as_usize),
+            Some(1)
+        );
+        let n = validate_metrics_text(&text).expect("validates");
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn validator_rejects_empty_registry() {
+        let reg = MetricsRegistry::new();
+        let err = validate_metrics_text(&reg.render_json()).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_bucket_count_drift() {
+        let doc = r#"{
+          "metrics_version": 1,
+          "counters": [], "gauges": [],
+          "histograms": [
+            {"name": "h", "count": 2, "sum_ns": 3, "min_ns": 1,
+             "max_ns": 2, "p50_ns": 1, "p95_ns": 3, "p99_ns": 3,
+             "p999_ns": 3, "buckets": [[1, 1]]}
+          ]
+        }"#;
+        let err = validate_metrics_text(doc).unwrap_err();
+        assert!(err.to_string().contains("dropped increments"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_non_monotone_quantiles() {
+        let doc = r#"{
+          "metrics_version": 1,
+          "counters": [], "gauges": [],
+          "histograms": [
+            {"name": "h", "count": 1, "sum_ns": 3, "min_ns": 3,
+             "max_ns": 3, "p50_ns": 7, "p95_ns": 3, "p99_ns": 7,
+             "p999_ns": 7, "buckets": [[2, 1]]}
+          ]
+        }"#;
+        let err = validate_metrics_text(doc).unwrap_err();
+        assert!(err.to_string().contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn validator_cross_checks_rhs_served() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = populated();
+        // one more served RHS than histogram observations -> reject
+        reg.counter("service.rhs_served").inc();
+        let err = validate_metrics_text(&reg.render_json()).unwrap_err();
+        assert!(err.to_string().contains("rhs_served"), "{err}");
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = populated();
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE dapc_service_rhs_served counter"));
+        assert!(text.contains("dapc_service_rhs_served 3"));
+        assert!(text.contains("# TYPE dapc_cluster_workers gauge"));
+        assert!(text.contains("# TYPE dapc_service_warm_rhs_ns summary"));
+        assert!(text
+            .contains("dapc_service_warm_rhs_ns{quantile=\"0.99\"}"));
+        assert!(text.contains("dapc_service_warm_rhs_ns_count 1"));
+    }
+
+    #[test]
+    fn table_renders_all_sections() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = populated();
+        let text = reg.render_table();
+        assert!(text.contains("service.rhs_served"));
+        assert!(text.contains("service.batch_rhs_ns"));
+        assert!(text.contains("p99.9"));
+        assert!(MetricsRegistry::new().render_table().is_empty());
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert!(fmt_ns(5_000).ends_with("us"));
+        assert!(fmt_ns(5_000_000).ends_with("ms"));
+        assert!(fmt_ns(5_000_000_000).ends_with('s'));
+    }
+}

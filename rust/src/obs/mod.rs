@@ -1,0 +1,610 @@
+//! # Structured observability: metrics registry, histograms, phase spans
+//!
+//! Process-wide, std-only observability for every layer of the solver:
+//! atomic [`Counter`]s, f64 [`Gauge`]s, and log2-bucketed latency
+//! [`Histogram`]s (HdrHistogram-lite: 65 power-of-two buckets with
+//! p50/p95/p99/p99.9 extraction) held in a global [`MetricsRegistry`],
+//! plus RAII phase [`Span`]s.  Export surfaces (JSON, Prometheus text,
+//! `TableBuilder` summaries, artifact validation) live in [`export`].
+//!
+//! ## The never-touch-numerics contract
+//!
+//! Instrumentation **wraps** kernels; it never enters them.  Recording
+//! happens strictly outside the flop-carrying code — at driver phase
+//! boundaries (seed/update/mix), service entry points (cold register,
+//! warm and batched RHS), pool job wrappers (queue-wait/run), and
+//! transport frame boundaries (per-worker scatter/gather, per-kind frame
+//! and byte counts) — so enabling or disabling metrics can never change
+//! a solver result.  Every `assert_eq!` equivalence suite must produce
+//! bitwise-identical outputs with metrics enabled and with
+//! `DAPC_METRICS=off`; `rust/tests/observability.rs` enforces this over
+//! the warm-session suite.
+//!
+//! ## Cluster telemetry (wire v4)
+//!
+//! Workers record into their own process-global registry; the leader
+//! pulls a flattened snapshot ([`MetricsRegistry::snapshot_flat`]) over
+//! the wire-v4 telemetry frames (`StatsRequest` -> `StatsReport`, see
+//! `coordinator::message`) and re-exports each entry as a
+//! `cluster.w{id}.{name}` gauge, so a distributed run prints one
+//! cluster-wide view.  In-process clusters (`LocalCluster`) share the
+//! leader's process-global registry, so their per-worker split is exact
+//! only across process boundaries — the shared-registry caveat is
+//! documented on `Leader::collect_worker_stats`.
+//!
+//! ## Overhead and gating
+//!
+//! Recording is lock-free: relaxed atomic ops on pre-registered `Arc`
+//! handles; the registry mutex is touched only at get-or-create time, so
+//! hot paths fetch their handles once up front.  `DAPC_METRICS=off`
+//! disables all recording and clock reads ([`now`] returns `None`);
+//! [`set_enabled`] flips the same switch at runtime so tests can prove
+//! the off path in-process.
+
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `b >= 1`
+/// covers `[2^(b-1), 2^b - 1]`, and bucket 64 tops out at `u64::MAX`.
+pub const HIST_BUCKETS: usize = 65;
+
+// ---------------------------------------------------------------------------
+// Global enable switch
+// ---------------------------------------------------------------------------
+
+const STATE_UNSET: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+static ENABLED: AtomicU8 = AtomicU8::new(STATE_UNSET);
+
+/// Whether recording is enabled.  The first call reads `DAPC_METRICS`
+/// (any value other than `off` enables); every later call is one relaxed
+/// atomic load.
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => {
+            let on = std::env::var("DAPC_METRICS")
+                .map(|v| v != "off")
+                .unwrap_or(true);
+            ENABLED.store(
+                if on { STATE_ON } else { STATE_OFF },
+                Ordering::Relaxed,
+            );
+            on
+        }
+    }
+}
+
+/// Flip recording at runtime.  This exists so the observability suite
+/// can prove the disabled path in one process (env vars are read once);
+/// production code should set `DAPC_METRICS=off` instead.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+/// `Some(Instant::now())` when metrics are enabled, `None` otherwise.
+///
+/// The `None` short-circuit keeps the disabled path free of clock
+/// reads; pair with [`record_since`].
+pub fn now() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Record the nanoseconds elapsed since `started` (no-op on `None`).
+pub fn record_since(hist: &Histogram, started: Option<Instant>) {
+    if let Some(t0) = started {
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (bits stored in an `AtomicU64`).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Map a value to its log2 bucket (0 -> 0, otherwise
+/// `64 - leading_zeros`, i.e. one-past the highest set bit).
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Largest value bucket `b` can hold (`2^b - 1`, saturating at
+/// `u64::MAX` for the top bucket).
+pub fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// HdrHistogram-lite: 65 log2 buckets over `u64` (nanoseconds by
+/// convention), lock-free relaxed-atomic recording, quantiles by
+/// cumulative walk.
+///
+/// A reported quantile is the **upper bound** of the bucket containing
+/// the target rank `ceil(q * count)`, so quantile extraction is monotone
+/// in `q` by construction and over-reports a sample by at most one
+/// bucket width (2x).  Note a quantile may therefore exceed the true
+/// maximum sample (the max shares a bucket whose upper bound is above
+/// it) — consumers must not assume `p999 <= max`.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (gated on [`enabled`]).
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min.load(Ordering::Relaxed)
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile for `q` in `[0, 1]`: the upper bound of the bucket
+    /// holding rank `ceil(q * count)` (clamped to `[1, count]`).
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            cum += bucket.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_upper(b);
+            }
+        }
+        // A concurrent recorder bumped `count` before its bucket: fall
+        // back to the max bound.
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Point-in-time copy of the full state (non-empty buckets only).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((b, c))
+            })
+            .collect();
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.p50(),
+            p95: self.p95(),
+            p99: self.p99(),
+            p999: self.p999(),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p999: u64,
+    /// `(bucket index, count)` for every non-empty bucket.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+/// RAII phase span: records nanoseconds from construction to drop into
+/// its histogram.  Does nothing (not even a clock read) when metrics
+/// are disabled.
+pub struct Span {
+    hist: Arc<Histogram>,
+    started: Option<Instant>,
+}
+
+impl Span {
+    pub fn enter(hist: Arc<Histogram>) -> Self {
+        Self { started: now(), hist }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        record_since(&self.hist, self.started);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Named metrics, get-or-create.  The map mutexes are taken only at
+/// registration; recording through the returned `Arc` handles is
+/// lock-free, so hot loops fetch their handles once before iterating.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map =
+            self.histograms.lock().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// True when nothing has ever been registered.
+    pub fn is_empty(&self) -> bool {
+        self.counters.lock().expect("metrics registry poisoned").is_empty()
+            && self.gauges.lock().expect("metrics registry poisoned").is_empty()
+            && self
+                .histograms
+                .lock()
+                .expect("metrics registry poisoned")
+                .is_empty()
+    }
+
+    /// Sorted point-in-time snapshot of every metric (BTreeMap order,
+    /// so renders are deterministic for a given set of names).
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        Snapshot { counters, gauges, histograms }
+    }
+
+    /// Flattened `(name, value)` view: counters and gauges verbatim,
+    /// histograms exploded into `.count`/`.sum`/`.p50`/`.p95`/`.p99`/
+    /// `.max` entries.  This is what a worker ships in a wire-v4
+    /// `StatsReport`.
+    pub fn snapshot_flat(&self) -> Vec<(String, f64)> {
+        let snap = self.snapshot();
+        let mut out = Vec::new();
+        for (name, v) in &snap.counters {
+            out.push((name.clone(), *v as f64));
+        }
+        for (name, v) in &snap.gauges {
+            out.push((name.clone(), *v));
+        }
+        for (name, h) in &snap.histograms {
+            out.push((format!("{name}.count"), h.count as f64));
+            out.push((format!("{name}.sum"), h.sum as f64));
+            out.push((format!("{name}.p50"), h.p50 as f64));
+            out.push((format!("{name}.p95"), h.p95 as f64));
+            out.push((format!("{name}.p99"), h.p99 as f64));
+            out.push((format!("{name}.max"), h.max as f64));
+        }
+        out
+    }
+}
+
+/// Point-in-time view of a whole [`MetricsRegistry`].
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+/// The process-global registry.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Get-or-create a counter in the global registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+/// Get-or-create a gauge in the global registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name)
+}
+
+/// Get-or-create a histogram in the global registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    global().histogram(name)
+}
+
+/// Serializes tests that record metrics or toggle [`set_enabled`]:
+/// the switch is process-global, and `cargo test` runs test threads in
+/// parallel.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // every bucket's bounds map back to the bucket itself
+        for b in 0..HIST_BUCKETS {
+            assert_eq!(bucket_index(bucket_upper(b)), b, "upper edge of {b}");
+            if b >= 1 {
+                assert_eq!(bucket_index(1u64 << (b - 1)), b, "low edge of {b}");
+            }
+        }
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(10), 1023);
+        assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_quantiles() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        // rank 500 lands in bucket [256, 511]
+        assert_eq!(h.p50(), 511);
+        // rank 1000 lands in bucket [512, 1023]
+        assert_eq!(h.quantile(1.0), 1023);
+        // monotone in q, and never below the true value's bucket floor
+        let mut last = 0u64;
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile({q}) = {v} < {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert!(h.snapshot().buckets.is_empty());
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        let h = Histogram::new();
+        let c = Counter::default();
+        let g = Gauge::default();
+        h.record(42);
+        c.inc();
+        g.set(3.5);
+        assert!(now().is_none());
+        set_enabled(true);
+        assert_eq!(h.count(), 0);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_same_handle() {
+        let reg = MetricsRegistry::new();
+        assert!(reg.is_empty());
+        let a = reg.histogram("x.ns");
+        let b = reg.histogram("x.ns");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &reg.histogram("y.ns")));
+        let c1 = reg.counter("n");
+        c1.add(0); // no-op either way; handle identity is the point
+        assert!(Arc::ptr_eq(&c1, &reg.counter("n")));
+        assert!(!reg.is_empty());
+    }
+
+    #[test]
+    fn snapshot_flat_explodes_histograms() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = MetricsRegistry::new();
+        reg.counter("events").add(3);
+        reg.gauge("load").set(0.5);
+        reg.histogram("lat.ns").record(100);
+        let flat = reg.snapshot_flat();
+        let keys: Vec<&str> =
+            flat.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"events"));
+        assert!(keys.contains(&"load"));
+        assert!(keys.contains(&"lat.ns.count"));
+        assert!(keys.contains(&"lat.ns.p99"));
+        let count = flat
+            .iter()
+            .find(|(k, _)| k == "lat.ns.count")
+            .map(|(_, v)| *v)
+            .unwrap();
+        assert_eq!(count, 1.0);
+    }
+
+    #[test]
+    fn span_records_on_drop() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = Arc::new(Histogram::new());
+        {
+            let _span = Span::enter(h.clone());
+        }
+        assert_eq!(h.count(), 1);
+    }
+}

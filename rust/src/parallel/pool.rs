@@ -27,7 +27,30 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs::{self, Counter, Histogram};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool metric handles (`pool.queue_wait_ns` / `pool.run_ns` /
+/// `pool.jobs`), resolved from the global registry once at pool
+/// construction and cloned into every scope — recording is lock-free and
+/// a no-op while metrics are disabled.
+#[derive(Clone)]
+struct PoolObs {
+    queue_wait_ns: Arc<Histogram>,
+    run_ns: Arc<Histogram>,
+    jobs: Arc<Counter>,
+}
+
+impl PoolObs {
+    fn new() -> Self {
+        Self {
+            queue_wait_ns: obs::histogram("pool.queue_wait_ns"),
+            run_ns: obs::histogram("pool.run_ns"),
+            jobs: obs::counter("pool.jobs"),
+        }
+    }
+}
 
 /// Persistent worker pool; cheap to share behind an `Arc`.
 pub struct ThreadPool {
@@ -36,6 +59,7 @@ pub struct ThreadPool {
     injector: Mutex<Option<Sender<Job>>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     size: usize,
+    obs: PoolObs,
 }
 
 impl ThreadPool {
@@ -63,6 +87,7 @@ impl ThreadPool {
             injector: Mutex::new(Some(tx)),
             workers: Mutex::new(workers),
             size,
+            obs: PoolObs::new(),
         }
     }
 
@@ -86,7 +111,8 @@ impl ThreadPool {
             .expect("pool is shut down")
             .clone();
         let pending = Arc::new(Pending::default());
-        let scope = Scope { tx, pending, _env: PhantomData };
+        let scope =
+            Scope { tx, pending, obs: self.obs.clone(), _env: PhantomData };
         let guard = WaitGuard(&scope.pending);
         let out = f(&scope);
         drop(guard); // blocks until pending == 0, panic-safe
@@ -184,6 +210,7 @@ impl Drop for WaitGuard<'_> {
 pub struct Scope<'env> {
     tx: Sender<Job>,
     pending: Arc<Pending>,
+    obs: PoolObs,
     /// Invariant over `'env` (mirrors `std::thread::Scope`).
     _env: PhantomData<&'env mut &'env ()>,
 }
@@ -197,9 +224,16 @@ impl<'env> Scope<'env> {
     {
         self.pending.inc();
         let pending = Arc::clone(&self.pending);
+        let pobs = self.obs.clone();
+        let enqueued = obs::now();
         let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            // queue wait = enqueue -> a worker actually picks the job up
+            obs::record_since(&pobs.queue_wait_ns, enqueued);
+            let started = obs::now();
             let result =
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            obs::record_since(&pobs.run_ns, started);
+            pobs.jobs.inc();
             if result.is_err() {
                 pending.panicked.store(true, Ordering::SeqCst);
             }

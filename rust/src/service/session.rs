@@ -2,9 +2,11 @@
 //! stream of right-hand sides (single or batched) over any
 //! [`SessionBackend`].
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{DapcError, Result};
+use crate::obs::{self, Counter, Histogram};
 use crate::partition::PartitionPlan;
 use crate::solver::driver::apc_label;
 use crate::solver::{
@@ -15,6 +17,29 @@ use crate::solver::{
 use crate::sparse::CsrMatrix;
 
 use super::ServiceStats;
+
+/// Service-layer metric handles, resolved from the global registry once
+/// at registration.  Contract (checked by the metrics validator): the
+/// `service.rhs_served` counter always equals `service.warm_rhs_ns`
+/// observations plus `service.batch_rhs_ns` observations — a batch of k
+/// records its amortized per-RHS latency k times.
+struct SessionObs {
+    cold_register_ns: Arc<Histogram>,
+    warm_rhs_ns: Arc<Histogram>,
+    batch_rhs_ns: Arc<Histogram>,
+    rhs_served: Arc<Counter>,
+}
+
+impl SessionObs {
+    fn new() -> Self {
+        Self {
+            cold_register_ns: obs::histogram("service.cold_register_ns"),
+            warm_rhs_ns: obs::histogram("service.warm_rhs_ns"),
+            batch_rhs_ns: obs::histogram("service.batch_rhs_ns"),
+            rhs_served: obs::counter("service.rhs_served"),
+        }
+    }
+}
 
 /// Which algorithm a session serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,9 +58,15 @@ pub enum SessionAlgorithm {
 /// O(l n + n^2) + epochs — never a second factorization.
 ///
 /// Works over any [`SessionBackend`]: the in-process backend for
-/// single-host serving, the cluster backend (wire protocol v3) for
+/// single-host serving, the cluster backend (wire protocol v4) for
 /// distributed serving.  Warm results are bit-identical to cold
 /// one-shot solves on both.
+///
+/// When metrics are enabled ([`crate::obs`]) the session feeds the
+/// `service.cold_register_ns` / `service.warm_rhs_ns` /
+/// `service.batch_rhs_ns` latency histograms and the
+/// `service.rhs_served` counter — ROADMAP item 5's p50/p99 per-RHS
+/// serving latency comes straight from these.
 pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
     backend: &'b mut B,
     a: CsrMatrix,
@@ -48,6 +79,7 @@ pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
     /// Reused per-solve eq. (5)/(7) accumulators (k columns).
     accs: Vec<Vec<f64>>,
     stats: ServiceStats,
+    obs: SessionObs,
 }
 
 impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
@@ -80,7 +112,9 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         }
         let (m, n) = a.shape();
         let plan = PartitionPlan::contiguous(m, n, j)?;
+        let session_obs = SessionObs::new();
         let t0 = Instant::now();
+        let ot = obs::now();
         let (n_target, alpha) = match algorithm {
             SessionAlgorithm::Apc(variant) => {
                 let kind = init_kind_for(variant, plan.regime);
@@ -109,6 +143,7 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
             }
             SessionAlgorithm::Dgd => Vec::new(),
         };
+        obs::record_since(&session_obs.cold_register_ns, ot);
         let stats = ServiceStats {
             register_time: t0.elapsed(),
             resident_partition_bytes: resident,
@@ -124,6 +159,7 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
             alpha,
             accs: Vec::new(),
             stats,
+            obs: session_obs,
         })
     }
 
@@ -213,6 +249,19 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
             });
         }
         self.stats.record(k, total);
+        // per-RHS latency: a single serve lands in the warm histogram, a
+        // batch of k records its amortized per-RHS cost k times into the
+        // batched one — so warm + batched observation counts always sum
+        // to the rhs_served counter (the validator cross-checks this)
+        let per_rhs_ns = (total.as_nanos() / k as u128) as u64;
+        if k == 1 {
+            self.obs.warm_rhs_ns.record(per_rhs_ns);
+        } else {
+            for _ in 0..k {
+                self.obs.batch_rhs_ns.record(per_rhs_ns);
+            }
+        }
+        self.obs.rhs_served.add(k as u64);
         Ok(reports)
     }
 
@@ -433,6 +482,53 @@ mod tests {
             .unwrap_err();
             assert!(err.to_string().contains("do not support"), "{err}");
         }
+    }
+
+    #[test]
+    fn per_rhs_histograms_sum_to_served_counter() {
+        // the metrics-validate cross-check relies on this exact split:
+        // k == 1 -> one warm observation, k > 1 -> k batched ones
+        let _g = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        // the registry is process-global and cumulative: diff baselines
+        let warm0 = obs::histogram("service.warm_rhs_ns").count();
+        let batch0 = obs::histogram("service.batch_rhs_ns").count();
+        let served0 = obs::counter("service.rhs_served").get();
+
+        let ds = GeneratorConfig::small_demo(14, 2).generate(21);
+        let bs: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                let mut g = crate::rng::seeded(700 + i);
+                let x: Vec<f32> =
+                    (0..ds.matrix.cols()).map(|_| g.normal_f32()).collect();
+                let mut b = vec![0.0f32; ds.matrix.rows()];
+                ds.matrix.spmv_into(&x, &mut b);
+                b
+            })
+            .collect();
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionAlgorithm::Apc(ApcVariant::Decomposed),
+            opts(5),
+        )
+        .unwrap();
+        session.solve(&ds.rhs).unwrap();
+        session.solve_batch(&bs).unwrap();
+
+        let warm = obs::histogram("service.warm_rhs_ns").count() - warm0;
+        let batch = obs::histogram("service.batch_rhs_ns").count() - batch0;
+        let served = obs::counter("service.rhs_served").get() - served0;
+        assert_eq!(warm, 1);
+        assert_eq!(batch, 3);
+        assert_eq!(served, warm + batch);
+        assert!(
+            obs::histogram("service.cold_register_ns").count() >= 1,
+            "registration latency was not observed"
+        );
+        crate::obs::set_enabled(false);
     }
 
     #[test]

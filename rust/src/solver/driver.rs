@@ -22,12 +22,19 @@
 //! f64 reduction (`engine::average_chunk_kernel`).  Either way
 //! every backend produces bit-identical iterates — the property
 //! `tests/distributed_equivalence.rs` locks in.
+//!
+//! When metrics are enabled ([`crate::obs`]) the loop also feeds the
+//! `driver.seed_ns` / `driver.update_ns` / `driver.mix_ns` phase
+//! histograms.  Instrumentation wraps the phases — it never reaches into
+//! the kernels — so iterates are bitwise identical with metrics on or
+//! off (`tests/observability.rs` pins this).
 
 use std::time::Instant;
 
 use crate::error::{DapcError, Result};
 use crate::linalg::{blas, norms, Matrix};
 use crate::metrics::ConvergenceTrace;
+use crate::obs;
 use crate::partition::{PartitionPlan, PartitionRegime};
 use crate::sparse::CsrMatrix;
 
@@ -218,13 +225,21 @@ pub fn drive_apc<B: ConsensusBackend + ?Sized>(
     let plan = PartitionPlan::contiguous(m, n, j)?;
     let init_kind = init_kind_for(variant, plan.regime);
 
+    // phase histograms resolved once per solve; recording is lock-free
+    // and a no-op when metrics are disabled
+    let obs_seed = obs::histogram("driver.seed_ns");
+    let obs_update = obs::histogram("driver.update_ns");
+    let obs_mix = obs::histogram("driver.mix_ns");
+
     // ---- init phase (Algorithm 1 steps 1-4) -----------------------------
     let t0 = Instant::now();
+    let ot = obs::now();
     let mut acc: Vec<f64> = Vec::new();
     let n_target = backend.init_partitions(init_kind, &plan, a, b, &mut acc)?;
     debug_assert_eq!(acc.len(), n_target);
     // eq. (5): xbar(0) = mean of initial estimates
     let mut xbar = mean_from_acc(&acc, j);
+    obs::record_since(&obs_seed, ot);
     let init_time = t0.elapsed();
 
     // ---- iterate phase (steps 5-8) --------------------------------------
@@ -241,11 +256,16 @@ pub fn drive_apc<B: ConsensusBackend + ?Sized>(
         && backend.try_solve_loop(opts.gamma, opts.eta, opts.epochs, &mut xbar)?;
     if !fused {
         for t in 0..opts.epochs {
+            let ot = obs::now();
             match backend.run_round(opts.gamma, opts.eta, &mut xbar, &mut acc)? {
                 RoundOutcome::Accumulated => {
-                    mix_into(&acc, j, opts.eta, &mut xbar)
+                    obs::record_since(&obs_update, ot);
+                    let om = obs::now();
+                    mix_into(&acc, j, opts.eta, &mut xbar);
+                    obs::record_since(&obs_mix, om);
                 }
-                RoundOutcome::Mixed => {}
+                // the backend's fused round already mixed eq. (7)
+                RoundOutcome::Mixed => obs::record_since(&obs_update, ot),
             }
             if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
                 tr.push(t + 1, norms::mse(&xbar[..xt.len().min(xbar.len())], xt));
@@ -308,7 +328,12 @@ pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
     let (m, n) = check_shapes(a, b, j)?;
     let plan = PartitionPlan::contiguous(m, n, j)?;
 
+    let obs_seed = obs::histogram("driver.seed_ns");
+    let obs_update = obs::histogram("driver.update_ns");
+    let obs_mix = obs::histogram("driver.mix_ns");
+
     let t0 = Instant::now();
+    let ot = obs::now();
     backend.init_grad(&plan, a, b)?;
     let alpha = if opts.dgd_step > 0.0 {
         opts.dgd_step
@@ -316,6 +341,7 @@ pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
         auto_dgd_step(a)
     };
     let mut x = vec![0.0f32; n];
+    obs::record_since(&obs_seed, ot);
     let init_time = t0.elapsed();
 
     let mut trace = opts.x_true.as_ref().map(|xt| {
@@ -327,10 +353,14 @@ pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
     let t1 = Instant::now();
     let mut acc = vec![0.0f64; n];
     for t in 0..opts.epochs {
+        let ot = obs::now();
         backend.grad_round(&x, &mut acc)?;
+        obs::record_since(&obs_update, ot);
+        let om = obs::now();
         for (xi, g) in x.iter_mut().zip(&acc) {
             *xi -= alpha * (*g as f32);
         }
+        obs::record_since(&obs_mix, om);
         if let (Some(tr), Some(xt)) = (&mut trace, &opts.x_true) {
             tr.push(t + 1, norms::mse(&x, xt));
         }
@@ -443,17 +473,26 @@ pub fn drive_apc_epochs_multi<B: SessionBackend + ?Sized>(
     opts: &SolveOptions,
 ) -> Result<Vec<Vec<f32>>> {
     let j = backend.partitions();
+    let obs_seed = obs::histogram("driver.seed_ns");
+    let obs_update = obs::histogram("driver.update_ns");
+    let obs_mix = obs::histogram("driver.mix_ns");
+    let ot = obs::now();
     let mut xbars: Vec<Vec<f32>> =
         accs.iter().map(|acc| mean_from_acc(acc, j)).collect();
+    obs::record_since(&obs_seed, ot);
     for _ in 0..opts.epochs {
+        let ot = obs::now();
         match backend.run_round_batch(opts.gamma, opts.eta, &mut xbars, accs)?
         {
             RoundOutcome::Accumulated => {
+                obs::record_since(&obs_update, ot);
+                let om = obs::now();
                 for (xbar, acc) in xbars.iter_mut().zip(accs.iter()) {
                     mix_into(acc, j, opts.eta, xbar);
                 }
+                obs::record_since(&obs_mix, om);
             }
-            RoundOutcome::Mixed => {}
+            RoundOutcome::Mixed => obs::record_since(&obs_update, ot),
         }
     }
     Ok(xbars)
@@ -469,15 +508,21 @@ pub fn drive_dgd_epochs_multi<B: SessionBackend + ?Sized>(
     alpha: f32,
     epochs: usize,
 ) -> Result<Vec<Vec<f32>>> {
+    let obs_update = obs::histogram("driver.update_ns");
+    let obs_mix = obs::histogram("driver.mix_ns");
     let mut xs = vec![vec![0.0f32; n]; k];
     let mut accs = vec![vec![0.0f64; n]; k];
     for _ in 0..epochs {
+        let ot = obs::now();
         backend.grad_round_batch(&xs, &mut accs)?;
+        obs::record_since(&obs_update, ot);
+        let om = obs::now();
         for (x, acc) in xs.iter_mut().zip(accs.iter()) {
             for (xi, g) in x.iter_mut().zip(acc.iter()) {
                 *xi -= alpha * (*g as f32);
             }
         }
+        obs::record_since(&obs_mix, om);
     }
     Ok(xs)
 }

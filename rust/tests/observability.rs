@@ -1,0 +1,213 @@
+//! Observability contract tests (integration level).
+//!
+//! Two guarantees the `obs` subsystem must hold across the whole crate:
+//!
+//! 1. **Lossless counting under concurrency** — pool jobs recorded from
+//!    many worker threads at once never drop a count; the `pool.jobs`
+//!    counter and the per-job histograms agree exactly with the number
+//!    of jobs spawned.
+//! 2. **Metrics never touch numerics** — the full warm-session suite
+//!    (cold one-shot, warm streamed, batched, in-process and cluster
+//!    backends) produces BIT-IDENTICAL `xbar`/`residual` with metrics
+//!    enabled vs disabled.  Recording happens strictly outside the
+//!    kernels, so `assert_eq!` — not a tolerance — is the right check.
+//!
+//! The registry and the enabled flag are process-global, so every test
+//! here serializes on a local lock and reads counter *deltas* against a
+//! baseline rather than absolute values.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use dapc::coordinator::LocalCluster;
+use dapc::linalg::Matrix;
+use dapc::obs;
+use dapc::parallel::ThreadPool;
+use dapc::rng::seeded;
+use dapc::service::{SessionAlgorithm, SolverSession};
+use dapc::solver::{
+    drive_apc, ApcVariant, InProcessBackend, NativeEngine, SolveOptions,
+    SolveReport,
+};
+use dapc::sparse::CsrMatrix;
+
+/// Serializes tests that flip the process-global enabled flag.  (The
+/// crate-internal test lock is `pub(crate)`; this binary is a separate
+/// process from the unit tests, so a local lock is sufficient.)
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn consistent_system(m: usize, n: usize, seed: u64) -> (CsrMatrix, Vec<f32>) {
+    let mut g = seeded(seed);
+    let dense = Matrix::from_fn(m, n, |i, j| {
+        if (i + j) % 7 == 0 {
+            0.0
+        } else {
+            g.normal_f32()
+        }
+    });
+    let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+    let mut b = vec![0.0f32; m];
+    dapc::linalg::blas::gemv(&dense, &x, &mut b);
+    (CsrMatrix::from_dense(&dense), b)
+}
+
+fn rhs_stream(a: &CsrMatrix, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|i| {
+            let mut g = seeded(seed + i as u64);
+            let x: Vec<f32> =
+                (0..a.cols()).map(|_| g.normal_f32()).collect();
+            let mut b = vec![0.0f32; a.rows()];
+            a.spmv_into(&x, &mut b);
+            b
+        })
+        .collect()
+}
+
+#[test]
+fn pool_concurrent_increments_lose_no_counts() {
+    let _g = lock();
+    obs::set_enabled(true);
+    let jobs0 = obs::counter("pool.jobs").get();
+    let wait0 = obs::histogram("pool.queue_wait_ns").count();
+    let run0 = obs::histogram("pool.run_ns").count();
+
+    const JOBS: usize = 512;
+    let pool = ThreadPool::new(8);
+    let ran = AtomicUsize::new(0);
+    pool.scope(|s| {
+        for _ in 0..JOBS {
+            s.spawn(|| {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+    });
+    assert_eq!(ran.load(Ordering::SeqCst), JOBS);
+
+    // every job is counted exactly once, on all three instruments, even
+    // with 8 workers racing on the shared atomics
+    let jobs = obs::counter("pool.jobs").get() - jobs0;
+    let waits = obs::histogram("pool.queue_wait_ns").count() - wait0;
+    let runs = obs::histogram("pool.run_ns").count() - run0;
+    assert_eq!(jobs, JOBS as u64, "pool.jobs dropped counts");
+    assert_eq!(waits, JOBS as u64, "queue_wait_ns dropped samples");
+    assert_eq!(runs, JOBS as u64, "run_ns dropped samples");
+    obs::set_enabled(false);
+}
+
+/// The warm-session suite as one deterministic run: cold per-rhs
+/// solves, a warm streamed session, and one k-sized batch, over both
+/// the in-process and the local-cluster backend.
+fn run_suite(a: &CsrMatrix, bs: &[Vec<f32>]) -> Vec<SolveReport> {
+    let variant = ApcVariant::Decomposed;
+    let algo = SessionAlgorithm::Apc(variant);
+    let opts = SolveOptions { epochs: 20, ..Default::default() };
+    let engine = NativeEngine::new();
+    let j = 3;
+    let mut out = Vec::new();
+
+    for b in bs {
+        let mut backend = InProcessBackend::new(&engine, j);
+        out.push(drive_apc(&mut backend, a, b, variant, &opts).unwrap());
+    }
+
+    let mut backend = InProcessBackend::new(&engine, j);
+    let mut session = SolverSession::register(
+        &mut backend,
+        a.clone(),
+        algo,
+        opts.clone(),
+    )
+    .unwrap();
+    for b in bs {
+        out.push(session.solve(b).unwrap());
+    }
+    out.extend(session.solve_batch(bs).unwrap());
+    drop(session);
+
+    let mut cluster = LocalCluster::spawn(j, NativeEngine::new).unwrap();
+    let mut dist = SolverSession::register(
+        cluster.leader.backend_mut(),
+        a.clone(),
+        algo,
+        opts.clone(),
+    )
+    .unwrap();
+    for b in bs {
+        out.push(dist.solve(b).unwrap());
+    }
+    out.extend(dist.solve_batch(bs).unwrap());
+    out
+}
+
+#[test]
+fn metrics_on_is_bitwise_identical_to_metrics_off() {
+    let _g = lock();
+    let (a, _) = consistent_system(103, 10, 91);
+    let bs = rhs_stream(&a, 3, 9100);
+
+    obs::set_enabled(false);
+    let off = run_suite(&a, &bs);
+    obs::set_enabled(true);
+    let on = run_suite(&a, &bs);
+    obs::set_enabled(false);
+
+    assert_eq!(off.len(), on.len());
+    for (i, (o, n)) in off.iter().zip(&on).enumerate() {
+        // bitwise, not approximate: recording must never enter a kernel
+        assert_eq!(o.xbar, n.xbar, "xbar diverged at report {i}");
+        assert_eq!(o.residual, n.residual, "residual diverged at {i}");
+        assert_eq!(o.epochs, n.epochs);
+    }
+}
+
+#[test]
+fn cluster_session_populates_per_rhs_and_gather_instruments() {
+    let _g = lock();
+    obs::set_enabled(true);
+    let warm0 = obs::histogram("service.warm_rhs_ns").count();
+    let batch0 = obs::histogram("service.batch_rhs_ns").count();
+    let served0 = obs::counter("service.rhs_served").get();
+    let gather0 = obs::histogram("cluster.gather_ns.w0").count();
+    let seed0 = obs::histogram("driver.seed_ns").count();
+
+    let (a, _) = consistent_system(96, 10, 92);
+    let bs = rhs_stream(&a, 3, 9200);
+    let opts = SolveOptions { epochs: 10, ..Default::default() };
+    let mut cluster = LocalCluster::spawn(3, NativeEngine::new).unwrap();
+    let mut session = SolverSession::register(
+        cluster.leader.backend_mut(),
+        a.clone(),
+        SessionAlgorithm::Apc(ApcVariant::Decomposed),
+        opts,
+    )
+    .unwrap();
+    session.solve(&bs[0]).unwrap();
+    session.solve_batch(&bs).unwrap();
+    drop(session);
+
+    let warm = obs::histogram("service.warm_rhs_ns").count() - warm0;
+    let batch = obs::histogram("service.batch_rhs_ns").count() - batch0;
+    let served = obs::counter("service.rhs_served").get() - served0;
+    assert_eq!(warm, 1, "one warm single-rhs solve");
+    assert_eq!(batch, 3, "k=3 batch records one sample per rhs");
+    // the validator cross-check contract: counter == histogram counts
+    assert_eq!(served, warm + batch);
+    assert!(
+        obs::histogram("cluster.gather_ns.w0").count() > gather0,
+        "cluster gather latency must be sampled per worker"
+    );
+    assert!(
+        obs::histogram("driver.seed_ns").count() > seed0,
+        "driver phase spans must cover the session seed phase"
+    );
+    // a full registry dump round-trips through the JSON validator
+    let json = obs::global().render_json();
+    let n = dapc::obs::export::validate_metrics_text(&json).unwrap();
+    assert!(n > 0, "registry dump must carry at least one metric");
+    obs::set_enabled(false);
+}
