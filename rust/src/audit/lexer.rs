@@ -1,0 +1,334 @@
+//! Comment/string-aware line lexer backing the audit rules.
+//!
+//! The analyzer is deliberately not a Rust parser: the determinism
+//! contracts it enforces are all expressible as *token presence* ("an
+//! `unsafe` keyword", "a `HashMap` path", "a `.fold(` seeded with a
+//! float literal") plus a little brace tracking for the wire rule.  What
+//! a token matcher must not do is fire on words inside comments, doc
+//! text, or string literals — so this lexer splits every source line
+//! into channels first:
+//!
+//! * **code** — comments removed, string/char-literal *contents* blanked
+//!   to spaces (delimiters kept, so column positions survive);
+//! * **comment** — the text of `//…` and `/* … */` comments on the line
+//!   (where `// SAFETY:` and `// audit:allow(...)` markers live);
+//! * **strings** — the contents of string literals that start on or
+//!   span the line (paired with the code channel by the `env-registry`
+//!   rule to catch `env::var("DAPC_…")`).
+//!
+//! Handled: nested block comments, doc comments, raw strings
+//! (`r#"…"#`, byte variants), escapes, char literals vs. lifetimes.
+//! Multi-line literals and comments carry lexer state across lines.
+
+/// One source line split into rule-facing channels.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Original text, untouched — finding excerpts come from here.
+    pub raw: String,
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text on this line.
+    pub comment: String,
+    /// String-literal contents beginning on (or crossing) this line.
+    pub strings: Vec<String>,
+}
+
+enum State {
+    Code,
+    /// Inside `/* … */`; the payload is the nesting depth (Rust block
+    /// comments nest).
+    Block(u32),
+    /// Inside a plain `"…"` (or `b"…"`) string.
+    Str,
+    /// Inside a raw string; the payload is the `#` count.
+    RawStr(u8),
+}
+
+/// Split `src` into per-line channels.  Never fails: unterminated
+/// literals/comments simply run to end of input, which is the right
+/// behaviour for a linter that must not crash on in-progress code.
+pub fn lex(src: &str) -> Vec<Line> {
+    let mut st = State::Code;
+    let mut out = Vec::new();
+    for raw_line in src.lines() {
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut strings: Vec<String> = Vec::new();
+        let mut cur = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match st {
+                State::Code => {
+                    let c = chars[i];
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        // line comment (incl. /// and //! doc forms)
+                        comment.extend(&chars[i..]);
+                        i = chars.len();
+                    } else if c == '/' && next == Some('*') {
+                        st = State::Block(1);
+                        i += 2;
+                    } else if (c == 'r' || c == 'b')
+                        && !prev_is_ident(&code)
+                    {
+                        if let Some((len, hashes)) =
+                            raw_str_open(&chars, i)
+                        {
+                            code.extend(&chars[i..i + len]);
+                            i += len;
+                            st = State::RawStr(hashes);
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        st = State::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        if let Some(end) = char_literal_end(&chars, i) {
+                            // blank the contents, keep the delimiters
+                            code.push('\'');
+                            for _ in i + 1..end {
+                                code.push(' ');
+                            }
+                            code.push('\'');
+                            i = end + 1;
+                        } else {
+                            // lifetime tick
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                State::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        st = if depth == 1 {
+                            State::Code
+                        } else {
+                            State::Block(depth - 1)
+                        };
+                        i += 2;
+                    } else if chars[i] == '/'
+                        && chars.get(i + 1) == Some(&'*')
+                    {
+                        st = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    let c = chars[i];
+                    if c == '\\' {
+                        cur.push(c);
+                        code.push(' ');
+                        if let Some(&n) = chars.get(i + 1) {
+                            cur.push(n);
+                            code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        strings.push(std::mem::take(&mut cur));
+                        code.push('"');
+                        st = State::Code;
+                        i += 1;
+                    } else {
+                        cur.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if chars[i] == '"' && raw_str_closes(&chars, i, hashes)
+                    {
+                        strings.push(std::mem::take(&mut cur));
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        st = State::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur.push(chars[i]);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // a literal continuing onto the next line still exposes the part
+        // seen so far (DAPC_* names never span lines, but be total)
+        if !cur.is_empty() {
+            strings.push(std::mem::take(&mut cur));
+        }
+        out.push(Line {
+            raw: raw_line.to_string(),
+            code,
+            comment,
+            strings,
+        });
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().map(is_ident).unwrap_or(false)
+}
+
+/// At `chars[i]` (an `r` or `b`): is this `r"`, `br#"`, `r##"`, …?
+/// Returns (chars up to and including the opening quote, hash count).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, u8)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u8;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+        if hashes > 16 {
+            return None;
+        }
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// At `chars[i] == '"'` inside a raw string: do `hashes` `#`s follow?
+fn raw_str_closes(chars: &[char], i: usize, hashes: u8) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// At `chars[i] == '\''`: if this opens a char literal, return the index
+/// of its closing quote; `None` means it is a lifetime tick.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    let next = *chars.get(i + 1)?;
+    if next == '\\' {
+        // escaped char ('\n', '\'', '\u{1F600}'): closing quote comes
+        // after the escape sequence — bounded scan keeps a stray
+        // backslash from eating the rest of the line
+        let mut j = i + 3;
+        while j < chars.len() && j <= i + 12 {
+            if chars[j] == '\'' {
+                return Some(j);
+            }
+            j += 1;
+        }
+        None
+    } else if next != '\'' && chars.get(i + 2) == Some(&'\'') {
+        Some(i + 2)
+    } else {
+        None
+    }
+}
+
+/// Word-boundary search for `token` in the code channel: the characters
+/// around the match must not be identifier characters, so `unsafe` does
+/// not fire inside `rule_unsafe_confined` or `UnsafeCell`.
+pub fn has_token(code: &str, token: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(token) {
+        let abs = start + pos;
+        let before_ok = code[..abs]
+            .chars()
+            .last()
+            .map(|c| !is_ident(c))
+            .unwrap_or(true);
+        let after_ok = code[abs + token.len()..]
+            .chars()
+            .next()
+            .map(|c| !is_ident(c))
+            .unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = abs + token.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let lines = lex("let x = 1; // trailing note\n/* block */ let y = 2;");
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert!(lines[0].comment.contains("trailing note"));
+        assert_eq!(lines[1].code.trim(), "let y = 2;");
+        assert!(lines[1].comment.contains("block"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let lines = lex("/* a /* b */ still comment */ code();");
+        assert_eq!(lines[0].code.trim(), "code();");
+        assert!(lines[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_captured() {
+        let src = "call(\"token_inside\"); other();";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("token_inside"));
+        assert!(lines[0].code.contains("call(\""));
+        assert_eq!(lines[0].strings, vec!["token_inside".to_string()]);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = "let a = r#\"raw \"quoted\" body\"#; let b = \"es\\\"c\";";
+        let lines = lex(src);
+        assert_eq!(lines[0].strings.len(), 2);
+        assert_eq!(lines[0].strings[0], "raw \"quoted\" body");
+        assert_eq!(lines[0].strings[1], "es\\\"c");
+        assert!(lines[0].code.contains("let b ="));
+    }
+
+    #[test]
+    fn multiline_block_comment_state_persists() {
+        let lines = lex("before(); /* spans\nlines */ after();");
+        assert_eq!(lines[0].code.trim(), "before();");
+        assert_eq!(lines[1].code.trim(), "after();");
+        assert!(lines[1].comment.contains("lines"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'env>(x: &'env str, c: char) { m(c, 'x', '\\n'); }";
+        let lines = lex(src);
+        // lifetimes survive in code; char-literal contents are blanked
+        assert!(lines[0].code.contains("'env"));
+        assert!(!lines[0].code.contains("'x'"));
+        assert!(lines[0].code.contains("' '"));
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("unsafe { work() }", "unsafe"));
+        assert!(!has_token("rule_unsafe_confined()", "unsafe"));
+        assert!(!has_token("UnsafeCell::new(0)", "unsafe"));
+        assert!(has_token("x.mul_add(y, z)", "mul_add"));
+        assert!(!has_token("smul_adder(y)", "mul_add"));
+    }
+}

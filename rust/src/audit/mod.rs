@@ -1,0 +1,893 @@
+//! `dapc audit` — a std-only static-analysis pass over the repo's own
+//! sources, enforcing the determinism and unsafety contracts that the
+//! dynamic suites (`simd_lane_contract`, `packing_contract`,
+//! `distributed_equivalence`, …) can only check on specific shapes.
+//!
+//! The paper's equivalence guarantees (APC backends interchangeable
+//! bit-for-bit; the accelerated variant preserving the fixed point)
+//! survive in this codebase as *bitwise* contracts: pooled == serial,
+//! SIMD == scalar, cluster == in-process.  Those contracts die through
+//! mundane edits — a `HashMap` iteration feeding wire output, a float
+//! `.sum()` outside the lane-structured kernels, an undocumented
+//! `unsafe` block — so the audit turns each one into a named rule and
+//! CI runs `dapc audit --ci` on every leg:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `unsafe-confined`     | `unsafe` only in `linalg/simd.rs` + `parallel/pool.rs`, every site under `// SAFETY:` |
+//! | `no-hashmap`          | `HashMap`/`HashSet` only under the xla-gated `runtime/`; BTree* is the house type |
+//! | `no-fused-float`      | `mul_add`/`fmadd` only inside `linalg/simd.rs` |
+//! | `fixed-order-reduce`  | typed float `.sum()` / float-seeded `.fold(` only inside `linalg/` |
+//! | `env-registry`        | `DAPC_*` env reads only through [`crate::config::envvars`] |
+//! | `wire-pairing`        | every `Message` variant appears in an encode *and* a decode arm |
+//!
+//! `// audit:allow(rule-id): reason` on the offending line (or in the
+//! comment block directly above it) suppresses a finding; the
+//! justification is mandatory — a bare `audit:allow` still reports.  Rationale for each rule lives in
+//! `CONTRIBUTING.md` ("The determinism contract, statically").
+//!
+//! No `syn`, no `regex` (offline, zero registry deps): a
+//! comment/string-aware line lexer ([`lexer`]) plus token rules and a
+//! little brace tracking for the wire rule.
+
+mod lexer;
+
+pub use lexer::{has_token, lex, Line};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+/// The six audited contracts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    UnsafeConfined,
+    NoHashmap,
+    NoFusedFloat,
+    FixedOrderReduce,
+    EnvRegistry,
+    WirePairing,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::UnsafeConfined,
+        Rule::NoHashmap,
+        Rule::NoFusedFloat,
+        Rule::FixedOrderReduce,
+        Rule::EnvRegistry,
+        Rule::WirePairing,
+    ];
+
+    /// Stable identifier used in findings, JSON, and `audit:allow(...)`.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::UnsafeConfined => "unsafe-confined",
+            Rule::NoHashmap => "no-hashmap",
+            Rule::NoFusedFloat => "no-fused-float",
+            Rule::FixedOrderReduce => "fixed-order-reduce",
+            Rule::EnvRegistry => "env-registry",
+            Rule::WirePairing => "wire-pairing",
+        }
+    }
+
+    /// One-line statement of the contract (printed by `dapc audit`).
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::UnsafeConfined => {
+                "unsafe only in linalg/simd.rs and parallel/pool.rs, every \
+                 site documented with a SAFETY comment"
+            }
+            Rule::NoHashmap => {
+                "HashMap/HashSet only under the xla-gated runtime/ \
+                 (iteration order is nondeterministic; BTree* is the \
+                 house type)"
+            }
+            Rule::NoFusedFloat => {
+                "mul_add/fmadd only inside linalg/simd.rs (fusing changes \
+                 rounding, breaking scalar==simd bitwise equality)"
+            }
+            Rule::FixedOrderReduce => {
+                "typed float sums and float-seeded folds only inside \
+                 linalg/ (reductions must use the fixed 8-lane tree)"
+            }
+            Rule::EnvRegistry => {
+                "DAPC_* environment reads only through config::envvars"
+            }
+            Rule::WirePairing => {
+                "every Message variant must appear in both an encode and \
+                 a decode arm of coordinator/message.rs"
+            }
+        }
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Root-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    /// What is wrong at this site.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+impl Finding {
+    /// `file:line: [rule] message — excerpt` (one terminal line).
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] {} — `{}`",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message,
+            self.excerpt
+        )
+    }
+}
+
+/// Result of auditing a file set.
+#[derive(Debug)]
+pub struct AuditReport {
+    /// Unsuppressed findings, ordered by (file, line, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings silenced by a justified `audit:allow`.
+    pub suppressed: usize,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File-set walk
+// ---------------------------------------------------------------------------
+
+/// Audit every `.rs` file under `<root>/rust/src`, `<root>/rust/tests`,
+/// and `<root>/benches`.  `rust/tests/audit_fixtures/` is excluded: it
+/// holds *seeded violations* that `rust/tests/audit.rs` feeds through
+/// [`scan_source`] to prove each rule fires.
+pub fn audit_root(root: &Path) -> Result<AuditReport> {
+    let mut files: Vec<(PathBuf, String)> = Vec::new();
+    for top in ["rust/src", "rust/tests", "benches"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            collect_rs(&dir, top, &mut files)?;
+        }
+    }
+    // read_dir order is platform-dependent; sort by relative path so
+    // the report (and its JSON artifact) is deterministic
+    files.sort_by(|a, b| a.1.cmp(&b.1));
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for (abs, rel) in &files {
+        let src = fs::read_to_string(abs)?;
+        let (mut f, s) = scan_source(rel, &src);
+        findings.append(&mut f);
+        suppressed += s;
+    }
+    Ok(AuditReport { findings, files_scanned: files.len(), suppressed })
+}
+
+fn collect_rs(
+    dir: &Path,
+    rel: &str,
+    out: &mut Vec<(PathBuf, String)>,
+) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "audit_fixtures" {
+                continue;
+            }
+            collect_rs(&path, &format!("{rel}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push((path, format!("{rel}/{name}")));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan
+// ---------------------------------------------------------------------------
+
+/// Scan one file's text under its root-relative path (which decides
+/// which rules apply where).  Returns (unsuppressed findings, count of
+/// justified suppressions).  Public so the fixture self-test can scan
+/// seeded violations under pretend paths.
+pub fn scan_source(rel: &str, src: &str) -> (Vec<Finding>, usize) {
+    let lines = lexer::lex(src);
+    let mut raw: Vec<Finding> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        rule_unsafe_confined(rel, &lines, idx, &mut raw);
+        rule_no_hashmap(rel, line, idx, &mut raw);
+        rule_no_fused_float(rel, line, idx, &mut raw);
+        rule_fixed_order_reduce(rel, line, idx, &mut raw);
+        rule_env_registry(rel, line, idx, &mut raw);
+    }
+    if rel.ends_with("coordinator/message.rs") {
+        rule_wire_pairing(rel, &lines, &mut raw);
+    }
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for mut f in raw {
+        match allow_marker(&lines, f.line - 1, f.rule) {
+            Allow::Justified => suppressed += 1,
+            Allow::MissingReason => {
+                f.message.push_str(
+                    " (audit:allow without a `: reason` does not suppress)",
+                );
+                findings.push(f);
+            }
+            Allow::None => findings.push(f),
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    (findings, suppressed)
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    rel: &str,
+    line: &Line,
+    line_no: usize,
+    rule: Rule,
+    message: String,
+) {
+    let trimmed = line.raw.trim();
+    let mut excerpt: String = trimmed.chars().take(96).collect();
+    if excerpt.len() < trimmed.len() {
+        excerpt.push('…');
+    }
+    out.push(Finding { file: rel.to_string(), line: line_no, rule, message, excerpt });
+}
+
+// ---------------------------------------------------------------------------
+// Suppression markers
+// ---------------------------------------------------------------------------
+
+enum Allow {
+    None,
+    Justified,
+    MissingReason,
+}
+
+/// Look for `audit:allow(<rule-id>)` in the comments of the finding's
+/// line or the contiguous pure-comment block directly above it (so a
+/// justification may wrap onto several comment lines).  Only a marker
+/// followed by `: <nonempty reason>` suppresses — the justification is
+/// the point.
+fn allow_marker(lines: &[Line], idx: usize, rule: Rule) -> Allow {
+    let marker = format!("audit:allow({})", rule.id());
+    let mut best = Allow::None;
+    let mut j = idx;
+    loop {
+        let line = &lines[j];
+        if let Some(pos) = line.comment.find(&marker) {
+            let rest = line.comment[pos + marker.len()..].trim_start();
+            match rest.strip_prefix(':') {
+                Some(reason) if !reason.trim().is_empty() => {
+                    return Allow::Justified;
+                }
+                _ => best = Allow::MissingReason,
+            }
+        }
+        if j == 0 {
+            break;
+        }
+        let above = &lines[j - 1];
+        let pure_comment = above.code.trim().is_empty()
+            && !above.comment.trim().is_empty();
+        if !pure_comment {
+            break;
+        }
+        j -= 1;
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Rules 1–5: token rules over the code channel
+// ---------------------------------------------------------------------------
+
+const UNSAFE_FILES: [&str; 2] =
+    ["rust/src/linalg/simd.rs", "rust/src/parallel/pool.rs"];
+
+fn rule_unsafe_confined(
+    rel: &str,
+    lines: &[Line],
+    idx: usize,
+    out: &mut Vec<Finding>,
+) {
+    if !lexer::has_token(&lines[idx].code, "unsafe") {
+        return;
+    }
+    if !UNSAFE_FILES.contains(&rel) {
+        push(
+            out,
+            rel,
+            &lines[idx],
+            idx + 1,
+            Rule::UnsafeConfined,
+            "`unsafe` outside the audited kernel/pool files".to_string(),
+        );
+    } else if !safety_documented(lines, idx) {
+        push(
+            out,
+            rel,
+            &lines[idx],
+            idx + 1,
+            Rule::UnsafeConfined,
+            "`unsafe` site without an immediately-preceding SAFETY comment"
+                .to_string(),
+        );
+    }
+}
+
+/// An `unsafe` site counts as documented when a `SAFETY:` comment sits
+/// on the same line or in the contiguous comment/attribute block
+/// directly above it (doc comments and `#[...]` attributes may
+/// intervene; a blank line or other code breaks the chain).
+fn safety_documented(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let line = &lines[j];
+        if line.comment.contains("SAFETY:") {
+            return true;
+        }
+        let code = line.code.trim();
+        let pure_comment = code.is_empty() && !line.comment.trim().is_empty();
+        let attribute = code.starts_with("#[") || code.starts_with("#!");
+        if !(pure_comment || attribute) {
+            return false;
+        }
+    }
+    false
+}
+
+fn rule_no_hashmap(rel: &str, line: &Line, idx: usize, out: &mut Vec<Finding>) {
+    if rel.starts_with("rust/src/runtime/") {
+        return;
+    }
+    for t in ["HashMap", "HashSet"] {
+        if lexer::has_token(&line.code, t) {
+            push(
+                out,
+                rel,
+                line,
+                idx + 1,
+                Rule::NoHashmap,
+                format!("{t} outside runtime/ — iteration order is \
+                         nondeterministic; use the BTree equivalent"),
+            );
+        }
+    }
+}
+
+fn rule_no_fused_float(
+    rel: &str,
+    line: &Line,
+    idx: usize,
+    out: &mut Vec<Finding>,
+) {
+    if rel == "rust/src/linalg/simd.rs" {
+        return;
+    }
+    let fused = lexer::has_token(&line.code, "mul_add")
+        || line.code.contains("fmadd");
+    if fused {
+        push(
+            out,
+            rel,
+            line,
+            idx + 1,
+            Rule::NoFusedFloat,
+            "fused multiply-add outside simd.rs — fusing changes rounding \
+             and breaks scalar==simd bitwise equality"
+                .to_string(),
+        );
+    }
+}
+
+fn rule_fixed_order_reduce(
+    rel: &str,
+    line: &Line,
+    idx: usize,
+    out: &mut Vec<Finding>,
+) {
+    if rel.starts_with("rust/src/linalg/") {
+        return;
+    }
+    let typed_sum = line.code.contains(".sum::<f32>")
+        || line.code.contains(".sum::<f64>");
+    let message = if typed_sum {
+        "order-sensitive float sum outside linalg/ — route reductions \
+         through the fixed 8-lane kernels"
+    } else if float_seeded_fold(&line.code) {
+        "float-seeded fold outside linalg/ — reduction order must be the \
+         fixed 8-lane tree"
+    } else {
+        return;
+    };
+    push(out, rel, line, idx + 1, Rule::FixedOrderReduce, message.to_string());
+}
+
+/// Does the code channel contain `.fold(` whose first argument starts
+/// with a float literal (`0.0`, `1.5f32`, `2e-3`, …)?  Integer seeds,
+/// tuple seeds, and named constants (`f64::INFINITY`) are deliberately
+/// out of scope — those sites are order-insensitive or integer folds.
+fn float_seeded_fold(code: &str) -> bool {
+    let needle = ".fold(";
+    let mut start = 0;
+    while let Some(p) = code[start..].find(needle) {
+        let arg = code[start + p + needle.len()..].trim_start();
+        if leads_with_float_literal(arg) {
+            return true;
+        }
+        start += p + needle.len();
+    }
+    false
+}
+
+fn leads_with_float_literal(s: &str) -> bool {
+    let s = s.strip_prefix('-').unwrap_or(s);
+    let digits =
+        s.chars().take_while(|c| c.is_ascii_digit() || *c == '_').count();
+    if digits == 0 {
+        return false;
+    }
+    let rest: String = s.chars().skip(digits).collect();
+    let decimal_point = rest.starts_with('.')
+        && rest.chars().nth(1).map(|c| c.is_ascii_digit()).unwrap_or(false);
+    decimal_point
+        || rest.starts_with("f32")
+        || rest.starts_with("f64")
+        || rest.starts_with('e')
+        || rest.starts_with('E')
+}
+
+fn rule_env_registry(
+    rel: &str,
+    line: &Line,
+    idx: usize,
+    out: &mut Vec<Finding>,
+) {
+    if rel == "rust/src/config/envvars.rs" {
+        return;
+    }
+    let reads_env = line.code.contains("env::var")
+        || line.code.contains("var_os")
+        || line.code.contains("option_env!");
+    if reads_env && line.strings.iter().any(|s| s.starts_with("DAPC_")) {
+        push(
+            out,
+            rel,
+            line,
+            idx + 1,
+            Rule::EnvRegistry,
+            "raw DAPC_* environment read — go through config::envvars"
+                .to_string(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: wire pairing (brace-tracking over coordinator/message.rs)
+// ---------------------------------------------------------------------------
+
+fn rule_wire_pairing(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    let Some(enum_line) = lines
+        .iter()
+        .position(|l| lexer::has_token(&l.code, "enum") && lexer::has_token(&l.code, "Message"))
+    else {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: Rule::WirePairing,
+            message: "no `enum Message` found to audit".to_string(),
+            excerpt: String::new(),
+        });
+        return;
+    };
+    let variants = enum_variants(lines, enum_line);
+    if variants.is_empty() {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: enum_line + 1,
+            rule: Rule::WirePairing,
+            message: "`enum Message` has no parseable variants".to_string(),
+            excerpt: lines[enum_line].raw.trim().to_string(),
+        });
+        return;
+    }
+    let encode_body = fn_bodies(lines, "encode");
+    let decode_body = fn_bodies(lines, "decode");
+    for (name, line_no) in &variants {
+        let qualified = format!("Message::{name}");
+        let self_form = format!("Self::{name}");
+        let in_enc = lexer::has_token(&encode_body, &qualified)
+            || lexer::has_token(&encode_body, &self_form);
+        let in_dec = lexer::has_token(&decode_body, &qualified)
+            || lexer::has_token(&decode_body, &self_form);
+        for (ok, side) in [(in_enc, "an encode"), (in_dec, "a decode")] {
+            if !ok {
+                push(
+                    out,
+                    rel,
+                    &lines[line_no - 1],
+                    *line_no,
+                    Rule::WirePairing,
+                    format!("variant `{name}` never appears in {side} arm"),
+                );
+            }
+        }
+    }
+}
+
+/// Collect `(variant name, 1-based line)` for identifiers declared at
+/// depth 1 of the brace block opened on `start`'s line.  Assumes one
+/// variant per line (the repo style rustfmt enforces).
+fn enum_variants(lines: &[Line], start: usize) -> Vec<(String, usize)> {
+    let mut depth = 0usize;
+    let mut opened = false;
+    let mut variants = Vec::new();
+    for (li, line) in lines.iter().enumerate().skip(start) {
+        if opened && depth == 1 {
+            let name: String = line
+                .code
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if name.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false)
+            {
+                variants.push((name, li + 1));
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        return variants;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    variants
+}
+
+/// Concatenated code of every `fn` whose name starts with `prefix`
+/// (`encode` matches `encode`, `encode_into`, `encoded_len`; the union
+/// is what the pairing check searches).
+fn fn_bodies(lines: &[Line], prefix: &str) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if !declares_fn(&lines[i].code, prefix) {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        while i < lines.len() {
+            for c in lines[i].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            out.push_str(&lines[i].code);
+            out.push('\n');
+            i += 1;
+            if opened && depth == 0 {
+                break;
+            }
+        }
+    }
+    out
+}
+
+fn declares_fn(code: &str, prefix: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = code[start..].find("fn ") {
+        let abs = start + p;
+        let boundary = code[..abs]
+            .chars()
+            .last()
+            .map(|c| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        let name = code[abs + 3..].trim_start();
+        if boundary && name.starts_with(prefix) {
+            return true;
+        }
+        start = abs + 3;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// JSON rendering (std-only, mirrors benchkit's hand-rolled style)
+// ---------------------------------------------------------------------------
+
+/// Render the report as a JSON document (the `--json PATH` artifact CI
+/// uploads from every leg).
+pub fn render_json(report: &AuditReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"files_scanned\": {},\n  \"suppressed\": {},\n  \"findings\": [\n",
+        report.files_scanned, report.suppressed
+    ));
+    for (i, f) in report.findings.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \
+             \"message\": {}, \"excerpt\": {}}}{}\n",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule.id()),
+            json_str(&f.message),
+            json_str(&f.excerpt),
+            if i + 1 < report.findings.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule.id()).collect()
+    }
+
+    #[test]
+    fn unsafe_outside_allowed_files_fires() {
+        let src = "fn f() {\n    unsafe { danger() }\n}\n";
+        let (f, _) = scan_source("rust/src/solver/engine.rs", src);
+        assert_eq!(rules_of(&f), vec!["unsafe-confined"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn documented_unsafe_in_simd_is_clean() {
+        let src = "fn f() {\n    // SAFETY: caller checked avx2\n    unsafe { go() }\n}\n";
+        let (f, _) = scan_source("rust/src/linalg/simd.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn undocumented_unsafe_in_simd_fires() {
+        let src = "fn f() {\n    unsafe { go() }\n}\n";
+        let (f, _) = scan_source("rust/src/linalg/simd.rs", src);
+        assert_eq!(rules_of(&f), vec!["unsafe-confined"]);
+    }
+
+    #[test]
+    fn safety_comment_skips_doc_and_attributes() {
+        let src = "/// Docs.\n\
+                   // SAFETY: lanes checked\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn k() {}\n";
+        let (f, _) = scan_source("rust/src/linalg/simd.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn blank_line_breaks_the_safety_chain() {
+        let src = "// SAFETY: stale\n\nunsafe fn k() {}\n";
+        let (f, _) = scan_source("rust/src/linalg/simd.rs", src);
+        assert_eq!(rules_of(&f), vec!["unsafe-confined"]);
+    }
+
+    #[test]
+    fn the_word_unsafe_in_comments_and_strings_is_ignored() {
+        let src = "// totally unsafe idea\nlet s = \"unsafe\";\n";
+        let (f, _) = scan_source("rust/src/solver/engine.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn hashmap_fires_outside_runtime_only() {
+        let src = "use std::collections::HashMap;\n";
+        let (f, _) = scan_source("rust/src/coordinator/leader.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-hashmap"]);
+        let (f, _) = scan_source("rust/src/runtime/pjrt.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn fused_float_fires_outside_simd_only() {
+        let src = "let y = a.mul_add(b, c);\n";
+        let (f, _) = scan_source("rust/src/linalg/blas.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-fused-float"]);
+        let (f, _) = scan_source("rust/src/linalg/simd.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn typed_float_sum_fires_outside_linalg_only() {
+        let src = "let t = xs.iter().sum::<f64>();\n";
+        let (f, _) = scan_source("rust/src/metrics/timer.rs", src);
+        assert_eq!(rules_of(&f), vec!["fixed-order-reduce"]);
+        let (f, _) = scan_source("rust/src/linalg/norms.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn float_seeded_fold_fires_but_integer_and_const_seeds_do_not() {
+        let fires = "let m = xs.iter().fold(0.0f32, f32::max);\n";
+        let (f, _) = scan_source("rust/src/sparse/generate.rs", fires);
+        assert_eq!(rules_of(&f), vec!["fixed-order-reduce"]);
+        let quiet = "let a = xs.iter().fold(0, |s, x| s + x);\n\
+                     let b = xs.iter().fold((0, 0), |s, _| s);\n\
+                     let c = xs.iter().fold(f64::INFINITY, f64::min);\n";
+        let (f, _) = scan_source("rust/src/sparse/generate.rs", quiet);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn raw_env_read_fires_outside_envvars_only() {
+        let src = "let v = std::env::var(\"DAPC_QUICK\").ok();\n";
+        let (f, _) = scan_source("rust/src/benchkit/mod.rs", src);
+        assert_eq!(rules_of(&f), vec!["env-registry"]);
+        let (f, _) = scan_source("rust/src/config/envvars.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn non_dapc_env_reads_are_fine() {
+        let src = "let home = std::env::var(\"HOME\").ok();\n";
+        let (f, _) = scan_source("rust/src/main.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn wire_pairing_catches_a_decode_only_and_an_encode_only_variant() {
+        let src = "\
+pub enum Message {\n\
+    Ping,\n\
+    Pong,\n\
+    Lost,\n\
+}\n\
+impl Message {\n\
+    pub fn encode_into(&self, b: &mut Vec<u8>) {\n\
+        match self {\n\
+            Message::Ping => b.push(0),\n\
+            Message::Lost => b.push(2),\n\
+            _ => {}\n\
+        }\n\
+    }\n\
+    pub fn decode(b: &[u8]) -> Option<Message> {\n\
+        match b[0] {\n\
+            0 => Some(Message::Ping),\n\
+            1 => Some(Message::Pong),\n\
+            _ => None,\n\
+        }\n\
+    }\n\
+}\n";
+        let (f, _) = scan_source("rust/src/coordinator/message.rs", src);
+        let mut got: Vec<String> =
+            f.iter().map(|x| x.message.clone()).collect();
+        got.sort();
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got[0].contains("`Lost` never appears in a decode"));
+        assert!(got[1].contains("`Pong` never appears in an encode arm"));
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_is_counted() {
+        let src = "// audit:allow(no-hashmap): scratch set, never iterated\n\
+                   use std::collections::HashSet;\n";
+        let (f, suppressed) = scan_source("rust/src/rng/xoshiro.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn allow_marker_reaches_through_a_wrapped_comment_block() {
+        // the marker sits two comment lines above the finding — the
+        // justification wraps, as the in-tree suppressions do
+        let src = "// audit:allow(no-hashmap): scratch set, never\n\
+                   // iterated; only membership is queried\n\
+                   use std::collections::HashSet;\n";
+        let (f, suppressed) = scan_source("rust/src/rng/xoshiro.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(suppressed, 1);
+        // a blank line breaks the block: the marker no longer applies
+        let broken = "// audit:allow(no-hashmap): stale marker\n\
+                      \n\
+                      use std::collections::HashSet;\n";
+        let (f, suppressed) = scan_source("rust/src/rng/xoshiro.rs", broken);
+        assert_eq!(f.len(), 1);
+        assert_eq!(suppressed, 0);
+    }
+
+    #[test]
+    fn allow_without_reason_does_not_suppress() {
+        let src = "// audit:allow(no-hashmap)\n\
+                   use std::collections::HashSet;\n";
+        let (f, suppressed) = scan_source("rust/src/rng/xoshiro.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(suppressed, 0);
+        assert!(f[0].message.contains("does not suppress"));
+    }
+
+    #[test]
+    fn allow_for_a_different_rule_does_not_suppress() {
+        let src = "// audit:allow(no-fused-float): wrong rule\n\
+                   use std::collections::HashSet;\n";
+        let (f, _) = scan_source("rust/src/rng/xoshiro.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-hashmap"]);
+    }
+
+    #[test]
+    fn json_report_is_well_formed_enough_to_round_trip_keys() {
+        let report = AuditReport {
+            findings: vec![Finding {
+                file: "rust/src/a.rs".into(),
+                line: 3,
+                rule: Rule::NoHashmap,
+                message: "msg with \"quotes\"".into(),
+                excerpt: "let x = 1;".into(),
+            }],
+            files_scanned: 7,
+            suppressed: 2,
+        };
+        let json = render_json(&report);
+        assert!(json.contains("\"files_scanned\": 7"));
+        assert!(json.contains("\"suppressed\": 2"));
+        assert!(json.contains("\"rule\": \"no-hashmap\""));
+        assert!(json.contains("msg with \\\"quotes\\\""));
+        // crate's own parser accepts it
+        assert!(crate::config::json::Json::parse(&json).is_ok());
+    }
+}

@@ -31,14 +31,15 @@ impl Default for Bench {
     }
 }
 
-/// `DAPC_QUICK=1` => smoke-test iteration counts.
+/// `DAPC_QUICK=1` => smoke-test iteration counts (see
+/// [`crate::config::envvars`] for the full registry).
 pub fn quick_mode() -> bool {
-    std::env::var("DAPC_QUICK").map(|v| v == "1").unwrap_or(false)
+    crate::config::envvars::quick_bench()
 }
 
 /// `DAPC_FULL=1` => paper-scale workloads.
 pub fn full_mode() -> bool {
-    std::env::var("DAPC_FULL").map(|v| v == "1").unwrap_or(false)
+    crate::config::envvars::full_bench()
 }
 
 /// A measured result, printable as one bench line.
@@ -179,8 +180,8 @@ impl JsonReport {
     /// Destination path: `$DAPC_BENCH_DIR` (or the working directory)
     /// joined with `BENCH_<name>.json`.
     pub fn path(&self) -> PathBuf {
-        let dir = std::env::var("DAPC_BENCH_DIR").unwrap_or_else(|_| ".".into());
-        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+        crate::config::envvars::bench_dir()
+            .join(format!("BENCH_{}.json", self.name))
     }
 
     /// Render the full JSON document.

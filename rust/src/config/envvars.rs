@@ -1,0 +1,138 @@
+//! Central registry of every `DAPC_*` environment variable.
+//!
+//! This module is the **only** place in the tree allowed to call
+//! `std::env::var` on a `DAPC_*` name — the `env-registry` rule of
+//! [`crate::audit`] rejects raw reads anywhere else.  Funneling every
+//! knob through one file keeps the process-level configuration surface
+//! enumerable: `dapc kernels` prints [`REGISTRY`] with live values, docs
+//! link here, and a new variable cannot be introduced without a name,
+//! a help line, and a documented default.
+//!
+//! Accessors are intentionally *value-typed* (`bool` / `PathBuf`), not
+//! string-returning: call sites express the decision they need, and the
+//! string-matching convention (`"1"`, `"off"`, `"fast"`) lives here
+//! exactly once.
+
+use std::path::PathBuf;
+
+/// One registered environment variable.
+pub struct EnvVar {
+    /// Full variable name (`DAPC_…`).
+    pub name: &'static str,
+    /// One-line semantics, printed by `dapc kernels`.
+    pub help: &'static str,
+    /// Behaviour when the variable is unset.
+    pub default: &'static str,
+}
+
+/// Every `DAPC_*` variable the binary, tests, or benches consult.
+pub const REGISTRY: [EnvVar; 6] = [
+    EnvVar {
+        name: "DAPC_METRICS",
+        help: "metrics recording; \"off\" disables the global registry",
+        default: "on",
+    },
+    EnvVar {
+        name: "DAPC_FORCE_SCALAR",
+        help: "\"1\" pins the lane-structured scalar kernels even when \
+               AVX2+FMA is detected (bitwise-equal by contract)",
+        default: "0 (runtime dispatch)",
+    },
+    EnvVar {
+        name: "DAPC_KERNEL_TIER",
+        help: "\"fast\" opts into the f32-FMA tier (per-backend \
+               reproducible, not scalar-bitwise)",
+        default: "deterministic",
+    },
+    EnvVar {
+        name: "DAPC_QUICK",
+        help: "\"1\" shrinks bench shapes/iterations to CI smoke size",
+        default: "0",
+    },
+    EnvVar {
+        name: "DAPC_FULL",
+        help: "\"1\" expands benches to the full Table-1 sweep",
+        default: "0",
+    },
+    EnvVar {
+        name: "DAPC_BENCH_DIR",
+        help: "directory BENCH_*.json bench reports are written into",
+        default: ". (working directory)",
+    },
+];
+
+/// The single raw read.  `name` must be a [`REGISTRY`] entry — accessors
+/// below guarantee this; the debug assert catches drift if one is added
+/// without registering it.
+fn raw(name: &str) -> Option<String> {
+    debug_assert!(
+        REGISTRY.iter().any(|v| v.name == name),
+        "unregistered env var {name}"
+    );
+    std::env::var(name).ok()
+}
+
+/// `DAPC_METRICS`: metrics recording is on unless the value is `off`.
+pub fn metrics_enabled() -> bool {
+    raw("DAPC_METRICS").map(|v| v != "off").unwrap_or(true)
+}
+
+/// `DAPC_FORCE_SCALAR=1`: pin the scalar kernel backend.
+pub fn force_scalar() -> bool {
+    raw("DAPC_FORCE_SCALAR").as_deref() == Some("1")
+}
+
+/// `DAPC_KERNEL_TIER=fast`: opt into the tier-1 f32-FMA microkernel.
+pub fn fast_tier() -> bool {
+    raw("DAPC_KERNEL_TIER").as_deref() == Some("fast")
+}
+
+/// `DAPC_QUICK=1`: smoke-test bench iteration counts.
+pub fn quick_bench() -> bool {
+    raw("DAPC_QUICK").as_deref() == Some("1")
+}
+
+/// `DAPC_FULL=1`: paper-scale bench workloads.
+pub fn full_bench() -> bool {
+    raw("DAPC_FULL").as_deref() == Some("1")
+}
+
+/// `DAPC_BENCH_DIR`: where bench JSON reports land (default: cwd).
+pub fn bench_dir() -> PathBuf {
+    raw("DAPC_BENCH_DIR").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// `(name, live value or "(unset)")` for every registered variable, in
+/// registry order — the `dapc kernels` display.
+pub fn snapshot() -> Vec<(&'static str, String)> {
+    REGISTRY
+        .iter()
+        .map(|v| (v.name, raw(v.name).unwrap_or_else(|| "(unset)".into())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_prefixed() {
+        for (i, v) in REGISTRY.iter().enumerate() {
+            assert!(v.name.starts_with("DAPC_"), "{} not DAPC_*", v.name);
+            assert!(!v.help.is_empty() && !v.default.is_empty());
+            for w in &REGISTRY[i + 1..] {
+                assert_ne!(v.name, w.name, "duplicate registry entry");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_covers_the_whole_registry() {
+        let snap = snapshot();
+        assert_eq!(snap.len(), REGISTRY.len());
+        for ((name, value), reg) in snap.iter().zip(REGISTRY.iter()) {
+            assert_eq!(*name, reg.name);
+            assert!(!value.is_empty());
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! the CLI; validated before a run starts.  JSON parsing is in-repo
 //! ([`json::Json`]) since serde is unavailable offline.
 
+pub mod envvars;
 pub mod json;
 
 use std::path::{Path, PathBuf};

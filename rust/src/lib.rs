@@ -40,6 +40,7 @@
 // obscure the hot path.
 #![allow(clippy::too_many_arguments)]
 
+pub mod audit;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

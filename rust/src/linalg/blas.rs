@@ -19,7 +19,10 @@
 //! thread count, can never change a result.  `simd.rs` documents the
 //! contract (lane order, remainder handling, where FMA is and is not
 //! allowed, NaN policy); `tests/simd_lane_contract.rs` enforces it
-//! bitwise across every `n % 8` remainder class.
+//! bitwise across every `n % 8` remainder class, and the `dapc audit`
+//! static pass enforces its preconditions repo-wide (no fused float
+//! ops and no order-sensitive reductions outside the kernel layer —
+//! see CONTRIBUTING.md, "The determinism contract, statically").
 //!
 //! # The chunk-stable packing contract
 //!

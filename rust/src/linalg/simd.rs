@@ -48,6 +48,12 @@
 //! choice is *invisible in the output bits*.  `DAPC_FORCE_SCALAR=1` is a
 //! perf switch, not a numerics switch.
 //!
+//! The contract's preconditions are machine-enforced repo-wide by the
+//! `dapc audit` static pass: `unsafe` and fused float ops are confined
+//! to this file (plus the pool), and order-sensitive float reductions
+//! may not appear outside `linalg/` — see CONTRIBUTING.md, "The
+//! determinism contract, statically".
+//!
 //! # The two-tier determinism contract ([`KernelTier`])
 //!
 //! The gemm microkernel exists at two numerics tiers:
@@ -167,15 +173,16 @@ impl KernelTier {
 }
 
 /// `DAPC_FORCE_SCALAR=1` forces the scalar path (any other value, or
-/// unset, lets detection decide).
+/// unset, lets detection decide).  Reads go through the central
+/// [`crate::config::envvars`] registry.
 fn force_scalar_env() -> bool {
-    std::env::var("DAPC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+    crate::config::envvars::force_scalar()
 }
 
 /// `DAPC_KERNEL_TIER=fast` opts the process into the tier-1 microkernel
 /// (any other value, or unset, keeps the deterministic default).
 fn fast_tier_env() -> bool {
-    std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false)
+    crate::config::envvars::fast_tier()
 }
 
 /// The tier selection rule, split out pure so it is unit-testable
@@ -446,6 +453,9 @@ pub fn microkernel_wide_tier_on(
 #[inline]
 fn dot_avx2(x: &[f32], y: &[f32]) -> f64 {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: the assert above proves the CPU has AVX2+FMA, the only
+    // precondition of the `#[target_feature]` callee; slices are read
+    // in-bounds (it splits n = 8*(n/8) + n%8 itself).
     unsafe { avx2::dot(x, y) }
 }
 
@@ -453,6 +463,8 @@ fn dot_avx2(x: &[f32], y: &[f32]) -> f64 {
 #[inline]
 fn dot_wide_avx2(x: &[f64], y: &[f32]) -> f64 {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above — the callee's only
+    // precondition; all loads stay within the slice lengths it checks.
     unsafe { avx2::dot_wide(x, y) }
 }
 
@@ -460,6 +472,8 @@ fn dot_wide_avx2(x: &[f64], y: &[f32]) -> f64 {
 #[inline]
 fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above — the callee's only
+    // precondition; it handles the x/y length mismatch check itself.
     unsafe { avx2::axpy(alpha, x, y) }
 }
 
@@ -467,6 +481,8 @@ fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
 #[inline]
 fn widen_avx2(src: &[f32], dst: &mut [f64]) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above — the callee's only
+    // precondition; src/dst bounds are asserted inside the callee.
     unsafe { avx2::widen(src, dst) }
 }
 
@@ -474,6 +490,8 @@ fn widen_avx2(src: &[f32], dst: &mut [f64]) {
 #[inline]
 fn microkernel_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above; the public `*_on`
+    // wrapper has already asserted `ap`/`bp` cover kc*MR / kc*NR.
     unsafe { avx2::microkernel(kc, ap, bp, acc) }
 }
 
@@ -486,6 +504,8 @@ fn microkernel_fma_avx2(
     acc: &mut [[f32; NR]; MR],
 ) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above; panel bounds
+    // (kc*MR / kc*NR) were asserted by the tiered `*_on` entry point.
     unsafe { avx2::microkernel_fma(kc, ap, bp, acc) }
 }
 
@@ -498,6 +518,8 @@ fn microkernel_wide_avx2(
     out: &mut [[f64; NR]; MR],
 ) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above; panel bounds
+    // (kc*MR / kc*NR) were asserted by the public `*_on` wrapper.
     unsafe { avx2::microkernel_wide(kc, ap, bp, out) }
 }
 
@@ -510,6 +532,8 @@ fn microkernel_wide_fma_avx2(
     out: &mut [[f64; NR]; MR],
 ) {
     assert!(avx2_available(), "avx2+fma kernels need avx2+fma support");
+    // SAFETY: AVX2+FMA verified by the assert above; panel bounds
+    // (kc*MR / kc*NR) were asserted by the tiered `*_on` entry point.
     unsafe { avx2::microkernel_wide_fma(kc, ap, bp, out) }
 }
 
@@ -765,6 +789,9 @@ mod avx2 {
     ///
     /// # Safety
     /// Requires AVX2 (checked by every public trampoline).
+    // SAFETY: pure register arithmetic — no memory access; the AVX2
+    // requirement is discharged by the trampolines' avx2_available()
+    // assert before any caller reaches this module.
     #[target_feature(enable = "avx2")]
     unsafe fn reduce_pd(lo: __m256d, hi: __m256d) -> f64 {
         // [a0+a4, a1+a5, a2+a6, a3+a7]
@@ -778,6 +805,9 @@ mod avx2 {
 
     /// # Safety
     /// Requires AVX2+FMA and `x.len() == y.len()`.
+    // SAFETY: every `loadu` reads 8 f32 at i = c*LANES with
+    // c < n/LANES, so i+7 < n stays inside both slices; the remainder
+    // uses checked indexing.  AVX2+FMA is asserted at the trampoline.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn dot(x: &[f32], y: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), y.len());
@@ -812,6 +842,9 @@ mod avx2 {
     /// Requires AVX2 and `x.len() == y.len()`.  Deliberately mul+add,
     /// not FMA: the f64 x f64 product is not exact, and the scalar
     /// contract rounds it before the accumulate.
+    // SAFETY: unaligned loads read lanes i..i+7 (f32) and two f64
+    // quads at i and i+4 with i+7 < n = min length; tail indexing is
+    // bounds-checked.  AVX2 is asserted at the trampoline.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn dot_wide(x: &[f64], y: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), y.len());
@@ -841,6 +874,9 @@ mod avx2 {
     /// # Safety
     /// Requires AVX2 and `x.len() == y.len()`.  mul+add (no f32 FMA) so
     /// every lane rounds exactly like the scalar `*yi += alpha * xi`.
+    // SAFETY: loads/stores touch y[i..i+8] and x[i..i+8] only for
+    // i = c*LANES, c < n/LANES (in-bounds for both); `y` is borrowed
+    // mutably so no aliasing.  AVX2 is asserted at the trampoline.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
@@ -864,6 +900,9 @@ mod avx2 {
     /// # Safety
     /// Requires AVX2 and `src.len() == dst.len()`.  Conversion is
     /// exact, so vectorization is trivially bit-identical.
+    // SAFETY: reads src[i..i+8], writes dst[i..i+8] for i = c*LANES,
+    // c < n/LANES — in-bounds on both sides; src/dst cannot alias
+    // (&/&mut).  AVX2 is asserted at the trampoline.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn widen(src: &[f32], dst: &mut [f64]) {
         debug_assert_eq!(src.len(), dst.len());
@@ -891,6 +930,9 @@ mod avx2 {
     /// mul+add per `p` step — the same per-element rounding chain as
     /// the scalar microkernel (f32 FMA would round once where the
     /// contract rounds twice, so it is deliberately not used).
+    // SAFETY: pointer reads stay below kc*MR (A) / kc*NR (B) — the
+    // bounds the trampoline asserted; `acc` tile loads/stores are
+    // fixed [MR][NR] arrays.  AVX2 is asserted at the trampoline.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn microkernel(
         kc: usize,
@@ -928,6 +970,9 @@ mod avx2 {
     /// # Safety
     /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
     /// `kc * NR` elements (asserted by the dispatching trampoline).
+    // SAFETY: identical access pattern to the tier-0 microkernel above
+    // (reads below kc*MR / kc*NR, fixed-size acc tile); AVX2+FMA is
+    // asserted at the trampoline.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn microkernel_fma(
         kc: usize,
@@ -968,6 +1013,10 @@ mod avx2 {
     /// # Safety
     /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
     /// `kc * NR` elements (asserted by the dispatching trampoline).
+    // SAFETY: depth index p < kc throughout, so A reads (p*MR + i,
+    // i < MR) and B reads of 4 f32 at p*NR + col0 (col0 <= 4) stay
+    // below kc*MR / kc*NR; the f64 tile is a fixed [MR][NR] array.
+    // AVX2+FMA is asserted at the trampoline.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn microkernel_wide(
         kc: usize,
@@ -1028,6 +1077,9 @@ mod avx2 {
     /// # Safety
     /// Requires AVX2 + FMA; `ap`/`bp` must hold at least `kc * MR` /
     /// `kc * NR` elements (asserted by the dispatching trampoline).
+    // SAFETY: reads A at p*MR + i (p < kc, i < MR) and 8 f32 of B at
+    // p*NR — within the asserted panel bounds; stores hit the fixed
+    // [MR][NR] f64 tile.  AVX2+FMA is asserted at the trampoline.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn microkernel_wide_fma(
         kc: usize,
@@ -1139,7 +1191,7 @@ mod tests {
         let first = active_tier();
         // cached: repeated queries can never flip mid-process
         assert_eq!(active_tier(), first);
-        let fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+        let fast = crate::config::envvars::fast_tier();
         assert_eq!(first, select_tier(fast));
         // description never panics and names the tier
         assert!(tier_description().starts_with("tier-"));

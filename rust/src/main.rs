@@ -12,6 +12,10 @@
 //!   bench-validate check BENCH_*.json bench artifacts parse and are non-hollow
 //!   metrics-validate  check METRICS_*.json telemetry dumps parse, are
 //!                  non-hollow and internally consistent
+//!   audit          static determinism/unsafety analysis over the repo's own
+//!                  sources (six named rules; see CONTRIBUTING.md "The
+//!                  determinism contract, statically"); `--ci` exits nonzero
+//!                  on any unsuppressed finding
 //!
 //! Any command that does work accepts `--metrics-json PATH`: after a
 //! successful run the process-global metrics registry (latency
@@ -61,6 +65,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "out", help: "output path (graph/generate)", takes_value: true },
         OptSpec { name: "trace", help: "print per-epoch MSE (synthetic only)", takes_value: false },
         OptSpec { name: "metrics-json", help: "write the metrics registry (latency histograms, wire counters) to this JSON path after the run", takes_value: true },
+        OptSpec { name: "ci", help: "audit: exit nonzero on any unsuppressed finding", takes_value: false },
+        OptSpec { name: "json", help: "audit: also write the findings as JSON to this path", takes_value: true },
+        OptSpec { name: "root", help: "audit: repo root to scan (default: nearest ancestor of the cwd containing rust/src)", takes_value: true },
         OptSpec { name: "help", help: "show usage", takes_value: false },
     ]
 }
@@ -80,7 +87,7 @@ fn run(args: &[String]) -> Result<()> {
         println!(
             "dapc — Distributed Accelerated Projection-Based Consensus Decomposition\n\n\
              usage: dapc <solve|worker|graph|info|generate|kernels|bench-validate\
-             |metrics-validate> [options]\n\n{}",
+             |metrics-validate|audit> [options]\n\n{}",
             cli::usage(&specs)
         );
         return Ok(());
@@ -99,10 +106,11 @@ fn run(args: &[String]) -> Result<()> {
         "kernels" => cmd_kernels(),
         "bench-validate" => cmd_bench_validate(&parsed),
         "metrics-validate" => cmd_metrics_validate(&parsed),
+        "audit" => cmd_audit(&parsed),
         other => Err(DapcError::Parse(format!(
             "unknown command {other:?} (expected \
              solve|worker|graph|info|generate|kernels|bench-validate\
-             |metrics-validate)"
+             |metrics-validate|audit)"
         ))),
     }?;
     if let Some(path) = parsed.get("metrics-json") {
@@ -191,12 +199,9 @@ fn collect_cluster_telemetry<T: dapc::coordinator::transport::Transport>(
 /// detected CPU features next to each test run.
 fn cmd_kernels() -> Result<()> {
     use dapc::linalg::{blas, qr, simd};
+    use dapc::config::envvars;
     println!("kernel backend: {}", simd::description());
     println!("  avx2+fma detected: {}", simd::avx2_available());
-    println!(
-        "  DAPC_FORCE_SCALAR: {}",
-        std::env::var("DAPC_FORCE_SCALAR").unwrap_or_else(|_| "(unset)".into())
-    );
     println!(
         "  lane contract: {} fixed f64 accumulator lanes, shared reduction \
          tree — dispatch never changes output bits",
@@ -204,9 +209,16 @@ fn cmd_kernels() -> Result<()> {
     );
     println!("kernel tier: {}", simd::tier_description());
     println!(
-        "  DAPC_KERNEL_TIER: {}",
-        std::env::var("DAPC_KERNEL_TIER").unwrap_or_else(|_| "(unset)".into())
+        "env registry ({} DAPC_* variables; all reads go through \
+         config::envvars):",
+        envvars::REGISTRY.len()
     );
+    for ((name, value), var) in
+        envvars::snapshot().iter().zip(envvars::REGISTRY.iter())
+    {
+        println!("  {name:<18} = {value:<12} [default: {}]", var.default);
+        println!("  {:<18}   {}", "", var.help);
+    }
     println!(
         "tiling: MR={} NR={} MC={} KC={} NC={} PANEL={}",
         simd::MR,
@@ -235,6 +247,64 @@ fn cmd_kernels() -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `dapc audit [--ci] [--json PATH] [--root DIR]`: run the static
+/// determinism/unsafety pass (`dapc::audit`) over `rust/src`,
+/// `rust/tests`, and `benches`.  Prints findings as `file:line: [rule]`,
+/// optionally writes them as JSON, and with `--ci` turns any
+/// unsuppressed finding into a nonzero exit — the gate CI runs on every
+/// leg of the dispatch matrix.
+fn cmd_audit(parsed: &cli::ParsedArgs) -> Result<()> {
+    let root = match parsed.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => audit_default_root()?,
+    };
+    let report = dapc::audit::audit_root(&root)?;
+    for f in &report.findings {
+        println!("{}", f.render());
+    }
+    println!(
+        "audit: {} file(s) scanned under {}, {} finding(s), {} suppressed",
+        report.files_scanned,
+        root.display(),
+        report.findings.len(),
+        report.suppressed
+    );
+    if let Some(path) = parsed.get("json") {
+        std::fs::write(path, dapc::audit::render_json(&report))?;
+        println!("wrote audit report to {path}");
+    }
+    if parsed.has_flag("ci") && !report.clean() {
+        return Err(DapcError::Config(format!(
+            "audit --ci: {} unsuppressed finding(s)",
+            report.findings.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Nearest ancestor of the working directory that contains `rust/src` —
+/// works from the workspace root (`cargo run`) and from the package dir
+/// (`rust/`, where cargo puts test/bench cwd).
+fn audit_default_root() -> Result<PathBuf> {
+    let start = std::env::current_dir()?;
+    let mut dir = start.as_path();
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => {
+                return Err(DapcError::Config(format!(
+                    "audit: no ancestor of {} contains rust/src (pass \
+                     --root)",
+                    start.display()
+                )))
+            }
+        }
+    }
 }
 
 /// Parse `--kernel-tier` into the [`SolveOptions::kernel_tier`] override

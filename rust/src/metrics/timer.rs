@@ -65,6 +65,8 @@ impl TimingStats {
         if self.samples.is_empty() {
             return 0.0;
         }
+        // audit:allow(fixed-order-reduce): timing statistics — wall-clock
+        // samples are inherently nondeterministic, no bitwise contract
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
@@ -118,6 +120,8 @@ impl TimingStats {
             return 0.0;
         }
         let m = self.mean();
+        // audit:allow(fixed-order-reduce): timing statistics — wall-clock
+        // samples are inherently nondeterministic, no bitwise contract
         (self.samples.iter().map(|s| (s - m).powi(2)).sum::<f64>()
             / (self.samples.len() - 1) as f64)
             .sqrt()

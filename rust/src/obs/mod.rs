@@ -70,9 +70,7 @@ pub fn enabled() -> bool {
         STATE_ON => true,
         STATE_OFF => false,
         _ => {
-            let on = std::env::var("DAPC_METRICS")
-                .map(|v| v != "off")
-                .unwrap_or(true);
+            let on = crate::config::envvars::metrics_enabled();
             ENABLED.store(
                 if on { STATE_ON } else { STATE_OFF },
                 Ordering::Relaxed,

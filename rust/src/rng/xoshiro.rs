@@ -95,8 +95,11 @@ impl Xoshiro256 {
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         debug_assert!(k <= n);
         // For small k relative to n use a set-based draw, else shuffle.
+        // BTreeSet (house type, audit rule no-hashmap): only membership
+        // is queried, so the ordered set changes nothing but the lookup
+        // constant — and never iteration order.
         if k * 4 < n {
-            let mut seen = std::collections::HashSet::with_capacity(k);
+            let mut seen = std::collections::BTreeSet::new();
             let mut out = Vec::with_capacity(k);
             while out.len() < k {
                 let idx = self.gen_range(0, n);
@@ -132,7 +135,7 @@ mod tests {
         for &(n, k) in &[(100usize, 5usize), (50, 40), (10, 10)] {
             let idx = g.sample_indices(n, k);
             assert_eq!(idx.len(), k);
-            let set: std::collections::HashSet<_> = idx.iter().collect();
+            let set: std::collections::BTreeSet<_> = idx.iter().collect();
             assert_eq!(set.len(), k);
             assert!(idx.iter().all(|&i| i < n));
         }

@@ -195,6 +195,8 @@ impl CsrMatrix {
         if total == 0.0 {
             return 0.0;
         }
+        // audit:allow(fixed-order-reduce): reporting-only statistic over
+        // the stored-value order, never fed back into solve state
         self.values.iter().map(|&v| v as f64).sum::<f64>() / total
     }
 

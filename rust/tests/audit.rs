@@ -1,0 +1,187 @@
+//! Self-test for the `dapc audit` static-analysis pass.
+//!
+//! Two halves:
+//!
+//! 1. **Seeded violations** — every fixture under `tests/audit_fixtures/`
+//!    is scanned under a pretend repo path and must trip exactly the rule
+//!    its name says (and clean twins must not).  This is the proof that
+//!    the analyzer detects what it claims to detect: a rule that silently
+//!    stops firing fails here, not in a post-mortem.
+//! 2. **The repo itself audits clean** — `audit_root` over this checkout
+//!    reports zero unsuppressed findings, which is exactly what the
+//!    `cargo run -- audit --ci` CI step enforces on every leg.
+
+use std::fs;
+use std::path::Path;
+
+use dapc::audit::{self, Rule};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/audit_fixtures")
+        .join(name);
+    fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Scan a fixture under a pretend root-relative path; return the rules
+/// that fired (in report order) and the suppression count.
+fn scan(name: &str, pretend: &str) -> (Vec<Rule>, usize) {
+    let (findings, suppressed) = audit::scan_source(pretend, &fixture(name));
+    (findings.iter().map(|f| f.rule).collect(), suppressed)
+}
+
+#[test]
+fn undocumented_unsafe_fires_both_ways() {
+    // outside the kernel/pool allowlist: confinement violation
+    let (rules, _) = scan("unsafe_undocumented.rs", "rust/src/solver/mod.rs");
+    assert_eq!(rules, vec![Rule::UnsafeConfined]);
+    let (findings, _) = audit::scan_source(
+        "rust/src/solver/mod.rs",
+        &fixture("unsafe_undocumented.rs"),
+    );
+    assert!(findings[0].message.contains("outside"), "{}", findings[0].render());
+
+    // inside the allowlist: still a violation, but for the missing
+    // SAFETY comment (the blank line breaks the comment chain)
+    let (rules, _) = scan("unsafe_undocumented.rs", "rust/src/linalg/simd.rs");
+    assert_eq!(rules, vec![Rule::UnsafeConfined]);
+    let (findings, _) = audit::scan_source(
+        "rust/src/linalg/simd.rs",
+        &fixture("unsafe_undocumented.rs"),
+    );
+    assert!(findings[0].message.contains("SAFETY"), "{}", findings[0].render());
+}
+
+#[test]
+fn documented_unsafe_is_clean_inside_the_allowlist() {
+    let (rules, _) = scan("unsafe_documented.rs", "rust/src/linalg/simd.rs");
+    assert!(rules.is_empty(), "clean twin fired: {rules:?}");
+    let (rules, _) = scan("unsafe_documented.rs", "rust/src/parallel/pool.rs");
+    assert!(rules.is_empty(), "clean twin fired in pool.rs: {rules:?}");
+    // documentation does not excuse a site outside the allowlist
+    let (rules, _) = scan("unsafe_documented.rs", "rust/src/sparse/csr.rs");
+    assert_eq!(rules, vec![Rule::UnsafeConfined]);
+}
+
+#[test]
+fn hashmap_fires_outside_runtime_only() {
+    let (rules, _) = scan("hashmap_use.rs", "rust/src/rng/xoshiro.rs");
+    assert!(!rules.is_empty());
+    assert!(rules.iter().all(|&r| r == Rule::NoHashmap), "{rules:?}");
+    // the xla-gated runtime/ is exempt (host-side caches, order never
+    // observable in numerics)
+    let (rules, _) = scan("hashmap_use.rs", "rust/src/runtime/cache.rs");
+    assert!(rules.is_empty(), "runtime/ should be exempt: {rules:?}");
+}
+
+#[test]
+fn fused_float_fires_outside_simd_only() {
+    let (rules, _) = scan("fused_float.rs", "rust/src/linalg/blas.rs");
+    assert_eq!(rules, vec![Rule::NoFusedFloat]);
+    let (rules, _) = scan("fused_float.rs", "rust/src/linalg/simd.rs");
+    assert!(rules.is_empty(), "simd.rs should be exempt: {rules:?}");
+}
+
+#[test]
+fn float_reduce_fires_outside_linalg_only() {
+    let (rules, _) = scan("float_reduce.rs", "rust/src/solver/native.rs");
+    // the typed sum and the float-seeded fold fire; the integer fold
+    // must not
+    assert_eq!(rules, vec![Rule::FixedOrderReduce, Rule::FixedOrderReduce]);
+    let (rules, _) = scan("float_reduce.rs", "rust/src/linalg/norms.rs");
+    assert!(rules.is_empty(), "linalg/ should be exempt: {rules:?}");
+}
+
+#[test]
+fn raw_dapc_env_read_fires_anywhere_but_the_registry() {
+    let (rules, _) = scan("env_read.rs", "rust/src/obs/mod.rs");
+    // exactly one: the DAPC_* read — the HOME read is out of scope
+    assert_eq!(rules, vec![Rule::EnvRegistry]);
+    let (rules, _) = scan("env_read.rs", "rust/tests/some_test.rs");
+    assert_eq!(rules, vec![Rule::EnvRegistry], "tests are audited too");
+    let (rules, _) = scan("env_read.rs", "rust/src/config/envvars.rs");
+    assert!(rules.is_empty(), "the registry itself is exempt: {rules:?}");
+}
+
+#[test]
+fn unpaired_wire_variant_fires() {
+    let (findings, _) = audit::scan_source(
+        "rust/src/coordinator/message.rs",
+        &fixture("wire_unpaired.rs"),
+    );
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::WirePairing);
+    assert!(
+        findings[0].message.contains("`Pong` never appears in a decode arm"),
+        "{}",
+        findings[0].render()
+    );
+    // the pairing rule only runs under the real wire module's path
+    let (rules, _) = scan("wire_unpaired.rs", "rust/src/coordinator/leader.rs");
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let (rules, suppressed) =
+        scan("allow_justified.rs", "rust/src/metrics/trace.rs");
+    assert!(rules.is_empty(), "justified allow did not suppress: {rules:?}");
+    assert_eq!(suppressed, 1);
+}
+
+#[test]
+fn reasonless_allow_does_not_suppress() {
+    let (findings, suppressed) = audit::scan_source(
+        "rust/src/metrics/trace.rs",
+        &fixture("allow_no_reason.rs"),
+    );
+    assert_eq!(suppressed, 0);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::FixedOrderReduce);
+    assert!(
+        findings[0].message.contains("does not suppress"),
+        "the finding should explain why the marker was ignored: {}",
+        findings[0].render()
+    );
+}
+
+#[test]
+fn the_repo_itself_audits_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .to_path_buf();
+    let report = audit::audit_root(&root).expect("audit walk");
+    assert!(report.files_scanned > 40, "only {} files", report.files_scanned);
+    assert!(
+        report.clean(),
+        "repo has {} unsuppressed finding(s):\n{}",
+        report.findings.len(),
+        report
+            .findings
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // the suppressions placed in-tree are all justified ones
+    assert!(report.suppressed >= 5, "suppressed = {}", report.suppressed);
+}
+
+#[test]
+fn json_report_is_parseable_and_complete() {
+    let (findings, _) = audit::scan_source(
+        "rust/src/solver/native.rs",
+        &fixture("float_reduce.rs"),
+    );
+    let report = audit::AuditReport { findings, files_scanned: 1, suppressed: 0 };
+    let text = audit::render_json(&report);
+    let parsed = dapc::config::json::Json::parse(&text).expect("valid json");
+    let n = parsed
+        .get("findings")
+        .and_then(|f| f.as_arr())
+        .map(|a| a.len())
+        .expect("findings array");
+    assert_eq!(n, 2);
+}

@@ -1,0 +1,8 @@
+// A reason-less `audit:allow` marker: suppression requires a
+// `: reason`, so the finding below must survive (with a note telling
+// the author why the marker did nothing).
+pub fn mean(xs: &[f32]) -> f32 {
+    // audit:allow(fixed-order-reduce)
+    let s = xs.iter().sum::<f32>();
+    s / xs.len().max(1) as f32
+}

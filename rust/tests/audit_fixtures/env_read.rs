@@ -1,0 +1,11 @@
+// Seeded violation: a raw DAPC_* environment read bypassing
+// config::envvars.  Unregistered knobs are invisible to `dapc kernels`
+// and undocumented.
+pub fn sneaky_flag() -> bool {
+    std::env::var("DAPC_SNEAKY").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn unrelated_env_is_fine() -> Option<String> {
+    // non-DAPC reads are out of scope for the registry rule
+    std::env::var("HOME").ok()
+}

@@ -1,0 +1,15 @@
+// Seeded violations: a typed float sum and a float-seeded fold outside
+// linalg/ — both reduce in iterator order instead of the fixed 8-lane
+// tree.
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+pub fn total64(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |acc, &v| acc + v)
+}
+
+pub fn count(xs: &[f64]) -> usize {
+    // integer-seeded fold: deliberately NOT a violation
+    xs.iter().fold(0usize, |acc, _| acc + 1)
+}

@@ -1,0 +1,10 @@
+// Seeded violation: a fused multiply-add outside simd.rs.  Fusing
+// drops an intermediate rounding, so scalar and SIMD paths stop being
+// bitwise-identical.
+pub fn horner(coeffs: &[f32], x: f32) -> f32 {
+    let mut acc = 0.0f32;
+    for &c in coeffs.iter().rev() {
+        acc = acc.mul_add(x, c);
+    }
+    acc
+}

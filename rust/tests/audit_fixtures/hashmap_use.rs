@@ -1,0 +1,11 @@
+// Seeded violation: HashMap/HashSet outside runtime/ — iteration order
+// is nondeterministic, the house types are BTreeMap/BTreeSet.
+use std::collections::HashMap;
+
+pub fn histogram(words: &[&str]) -> usize {
+    let mut counts: HashMap<&str, usize> = HashMap::new();
+    for w in words {
+        *counts.entry(w).or_insert(0) += 1;
+    }
+    counts.len()
+}

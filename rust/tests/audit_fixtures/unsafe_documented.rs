@@ -1,0 +1,9 @@
+// Clean twin of `unsafe_undocumented.rs`: the SAFETY comment sits
+// directly above the site, so under the pretend simd.rs path this file
+// must audit clean.
+pub fn first_byte(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above proves the slice is non-empty, so the
+    // pointer read is in-bounds.
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,10 @@
+// Seeded violation: an `unsafe` block with no SAFETY comment in the
+// contiguous comment/attribute block above it (the blank line below
+// breaks the chain).  Under a pretend non-kernel path the rule fires on
+// confinement; under the pretend simd.rs path it fires on the missing
+// documentation.
+pub fn first_byte(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,23 @@
+// Seeded violation: a Message enum whose `Pong` variant is encoded but
+// never decoded — a frame the peer can emit and nobody can read.
+// Scanned under the pretend path rust/src/coordinator/message.rs.
+pub enum Message {
+    Ping,
+    Pong,
+}
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Message::Ping => vec![0],
+            Message::Pong => vec![1],
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Message> {
+        match buf.first()? {
+            0 => Some(Message::Ping),
+            _ => None,
+        }
+    }
+}

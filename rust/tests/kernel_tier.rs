@@ -38,7 +38,7 @@ fn fast_tier_is_opt_in_and_engines_inherit_the_process_default() {
     // the process default follows DAPC_KERNEL_TIER exactly: unset (or
     // anything but "fast") means tier-0 — the fast tier never turns
     // itself on
-    let env_fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+    let env_fast = dapc::config::envvars::fast_tier();
     let expect = if env_fast {
         KernelTier::Fast
     } else {

@@ -310,7 +310,7 @@ fn microkernel_poisons_exactly_the_nan_column_on_all_backends() {
 #[test]
 fn forced_scalar_env_pins_the_scalar_backend() {
     // this binary runs twice in CI: natively and with DAPC_FORCE_SCALAR=1
-    let forced = std::env::var("DAPC_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false);
+    let forced = dapc::config::envvars::force_scalar();
     if forced {
         assert_eq!(simd::active(), Backend::Scalar);
         assert!(simd::description().contains("DAPC_FORCE_SCALAR"));
@@ -329,7 +329,7 @@ fn forced_scalar_env_pins_the_scalar_backend() {
 fn kernel_tier_env_pins_the_active_tier() {
     // this binary also runs on the DAPC_KERNEL_TIER=fast leg of the CI
     // matrix; the process-wide tier must follow the env exactly
-    let fast = std::env::var("DAPC_KERNEL_TIER").map(|v| v == "fast").unwrap_or(false);
+    let fast = dapc::config::envvars::fast_tier();
     if fast {
         assert_eq!(simd::active_tier(), KernelTier::Fast);
         assert!(simd::tier_description().contains("fast"));
