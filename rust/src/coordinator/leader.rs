@@ -29,8 +29,8 @@ use crate::solver::driver::{
     accumulate_sum, accumulate_sum_batch, ConsensusBackend, RoundOutcome,
 };
 use crate::solver::{
-    drive_apc, drive_dgd, ApcVariant, InitKind, SessionBackend, SolveOptions,
-    SolveReport,
+    drive_apc, drive_dgd, ApcVariant, InitKind, RequestId, SessionBackend,
+    SessionId, SolveOptions, SolveReport,
 };
 use crate::sparse::CsrMatrix;
 
@@ -220,6 +220,29 @@ where
     Ok(())
 }
 
+/// Since wire v5 every session reply echoes the `(session_id,
+/// request_id)` pair of the request it answers; a mismatch means the
+/// mux paired a reply with the wrong in-flight request — refuse loudly
+/// rather than risk feeding one session's estimates into another's
+/// accumulator.
+fn check_reply_ids(
+    worker_id: u32,
+    what: &str,
+    got_sid: SessionId,
+    got_rid: RequestId,
+    sid: SessionId,
+    rid: RequestId,
+) -> Result<()> {
+    if got_sid != sid || got_rid != rid {
+        return Err(DapcError::Coordinator(format!(
+            "worker {worker_id} {what} reply names session {got_sid} \
+             request {got_rid}, expected session {sid} request {rid} \
+             (cross-session reply desync)"
+        )));
+    }
+    Ok(())
+}
+
 /// Validate a worker's batched session reply: exactly `k` columns, each
 /// of width `n` — shared by every v3 gather so the error shape (and any
 /// future tightening) lives once.
@@ -256,9 +279,29 @@ pub struct ClusterBackend<T: Transport> {
     seen: Vec<bool>,
     epoch: u32,
     n_target: usize,
+    /// Per-session leader bookkeeping, keyed by [`SessionId`] (wire v5
+    /// multi-tenant service).  Deliberately tiny — the leader's O(n)
+    /// state guarantee is per *solve*, not per session: all heavy
+    /// per-session state (factorizations, packed panels) lives on the
+    /// workers; the leader only remembers each session's width and the
+    /// id of its in-flight request.
+    sessions: std::collections::BTreeMap<SessionId, LeaderSession>,
+    /// Monotonic request-id allocator (casparianflow-style job ids);
+    /// every registration/seed allocates a fresh id, echoed by workers.
+    next_request_id: RequestId,
     /// Metric handles (scatter/gather latency, per-kind wire counters),
     /// resolved once so the hot path records without registry locks.
     obs: ClusterObs,
+}
+
+/// Per-session leader state (see [`ClusterBackend::sessions`]).
+struct LeaderSession {
+    /// Solution width the session's consensus loop runs at.
+    n_target: usize,
+    /// Request id of the session's current solve; allocated by
+    /// `seed_rhs`/`seed_grad_rhs`, reused by every round frame of that
+    /// solve, verified against every reply.
+    active_req: RequestId,
 }
 
 impl<T: Transport> ClusterBackend<T> {
@@ -281,8 +324,15 @@ impl<T: Transport> ClusterBackend<T> {
             seen: Vec::new(),
             epoch: 0,
             n_target: 0,
+            sessions: std::collections::BTreeMap::new(),
+            next_request_id: 0,
             obs: ClusterObs::new(j),
         })
+    }
+
+    fn next_rid(&mut self) -> RequestId {
+        self.next_request_id += 1;
+        self.next_request_id
     }
 
     pub fn worker_count(&self) -> usize {
@@ -362,20 +412,25 @@ impl<T: Transport> ClusterBackend<T> {
         Ok(())
     }
 
-    /// Session registration: scatter `RegisterMatrix` blocks (workers
-    /// factorize once and keep the state) and gather the acks.
+    /// Session registration: scatter `RegisterMatrix` blocks under
+    /// `sid` (workers factorize once and keep the state keyed by
+    /// session id) and gather the acks, verifying each echoes the
+    /// registration's `(session_id, request_id)`.
     fn register_wire(
         &mut self,
+        sid: SessionId,
         kind: InitKindWire,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<()> {
-        self.n_target = plan.n;
+        let rid = self.next_rid();
         for (i, w) in self.workers.iter_mut().enumerate() {
             let blk = plan.blocks[i];
             let sub = a.slice_rows_dense(blk.start, blk.end);
             let msg = Message::RegisterMatrix {
                 worker_id: i as u32,
+                session_id: sid,
+                request_id: rid,
                 kind,
                 a: sub,
                 n_target: plan.n as u32,
@@ -385,7 +440,21 @@ impl<T: Transport> ClusterBackend<T> {
         let cobs = &self.obs;
         gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
-                Message::MatrixRegistered { worker_id } => Ok(worker_id),
+                Message::MatrixRegistered {
+                    worker_id,
+                    session_id,
+                    request_id,
+                } => {
+                    check_reply_ids(
+                        worker_id,
+                        "registration",
+                        session_id,
+                        request_id,
+                        sid,
+                        rid,
+                    )?;
+                    Ok(worker_id)
+                }
                 Message::WorkerError { worker_id, message } => {
                     Err(DapcError::Coordinator(format!(
                         "worker {worker_id} registration failed: {message}"
@@ -395,6 +464,20 @@ impl<T: Transport> ClusterBackend<T> {
                     "unexpected reply {other:?}"
                 ))),
             }
+        })?;
+        self.sessions
+            .insert(sid, LeaderSession { n_target: plan.n, active_req: rid });
+        Ok(())
+    }
+
+    /// `sid`'s leader bookkeeping, or the same loud unknown-session
+    /// error the in-process backend raises.
+    fn session(&self, sid: SessionId, what: &str) -> Result<&LeaderSession> {
+        self.sessions.get(&sid).ok_or_else(|| {
+            DapcError::Coordinator(format!(
+                "session {sid}: {what} before register_matrix: register a \
+                 matrix into the session before streaming right-hand sides"
+            ))
         })
     }
 
@@ -402,6 +485,8 @@ impl<T: Transport> ClusterBackend<T> {
     /// `SolveRhs` frame for a single rhs, one `SolveBatch` for k > 1.
     fn scatter_rhs(
         &mut self,
+        sid: SessionId,
+        rid: RequestId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
     ) -> Result<()> {
@@ -417,13 +502,21 @@ impl<T: Transport> ClusterBackend<T> {
         for (i, w) in self.workers.iter_mut().enumerate() {
             let blk = plan.blocks[i];
             let msg = if let [b] = bs {
-                Message::SolveRhs { b: b[blk.start..blk.end].to_vec() }
+                Message::SolveRhs {
+                    session_id: sid,
+                    request_id: rid,
+                    b: b[blk.start..blk.end].to_vec(),
+                }
             } else {
                 let cols: Vec<Vec<f32>> = bs
                     .iter()
                     .map(|b| b[blk.start..blk.end].to_vec())
                     .collect();
-                Message::SolveBatch { bs: cols }
+                Message::SolveBatch {
+                    session_id: sid,
+                    request_id: rid,
+                    bs: cols,
+                }
             };
             send_traced(w, i, &msg, &self.obs)?;
         }
@@ -618,36 +711,53 @@ impl<T: Transport> ConsensusBackend for ClusterBackend<T> {
 impl<T: Transport> SessionBackend for ClusterBackend<T> {
     fn register_matrix(
         &mut self,
+        sid: SessionId,
         kind: InitKind,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<usize> {
-        self.register_wire(kind.into(), plan, a)?;
+        self.register_wire(sid, kind.into(), plan, a)?;
         Ok(plan.n)
     }
 
     fn register_grad(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<()> {
-        self.register_wire(InitKindWire::GradOnly, plan, a)
+        self.register_wire(sid, InitKindWire::GradOnly, plan, a)
     }
 
     fn seed_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
         accs: &mut [Vec<f64>],
     ) -> Result<()> {
-        let n = self.n_target;
+        let n = self.session(sid, "seed_rhs")?.n_target;
         let k = bs.len();
-        self.scatter_rhs(plan, bs)?;
+        // a fresh solve: allocate its request id, reused by every round
+        let rid = self.next_rid();
+        self.sessions
+            .get_mut(&sid)
+            .expect("session checked above")
+            .active_req = rid;
+        self.scatter_rhs(sid, rid, plan, bs)?;
         let xs = &mut self.batch_xs;
         let cobs = &self.obs;
         gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
-                Message::RhsSeeded { worker_id, x0s } => {
+                Message::RhsSeeded {
+                    worker_id,
+                    session_id,
+                    request_id,
+                    x0s,
+                } => {
+                    check_reply_ids(
+                        worker_id, "seed", session_id, request_id, sid, rid,
+                    )?;
                     let slot =
                         xs.get_mut(worker_id as usize).ok_or_else(|| {
                             DapcError::Coordinator(format!(
@@ -678,15 +788,30 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
 
     fn seed_grad_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
     ) -> Result<()> {
+        self.session(sid, "seed_grad_rhs")?;
         let k = bs.len();
-        self.scatter_rhs(plan, bs)?;
+        let rid = self.next_rid();
+        self.sessions
+            .get_mut(&sid)
+            .expect("session checked above")
+            .active_req = rid;
+        self.scatter_rhs(sid, rid, plan, bs)?;
         let cobs = &self.obs;
         gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
-                Message::RhsSeeded { worker_id, x0s } => {
+                Message::RhsSeeded {
+                    worker_id,
+                    session_id,
+                    request_id,
+                    x0s,
+                } => {
+                    check_reply_ids(
+                        worker_id, "seed", session_id, request_id, sid, rid,
+                    )?;
                     // gradient-only sessions return k empty columns
                     if x0s.len() != k {
                         return Err(DapcError::Coordinator(format!(
@@ -711,12 +836,17 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
 
     fn run_round_batch(
         &mut self,
+        sid: SessionId,
         gamma: f32,
         _eta: f32,
         xbars: &mut [Vec<f32>],
         accs: &mut [Vec<f64>],
     ) -> Result<RoundOutcome> {
+        let sess = self.session(sid, "run_round_batch")?;
+        let (n, rid) = (sess.n_target, sess.active_req);
         let msg = Message::RunUpdateBatch {
+            session_id: sid,
+            request_id: rid,
             epoch: self.epoch,
             gamma,
             xbars: xbars.to_vec(),
@@ -725,13 +855,20 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
         for (i, w) in self.workers.iter_mut().enumerate() {
             send_traced(w, i, &msg, &self.obs)?;
         }
-        let n = self.n_target;
         let k = xbars.len();
         let xs = &mut self.batch_xs;
         let cobs = &self.obs;
         gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
-                Message::UpdateBatchDone { worker_id, xs: cols } => {
+                Message::UpdateBatchDone {
+                    worker_id,
+                    session_id,
+                    request_id,
+                    xs: cols,
+                } => {
+                    check_reply_ids(
+                        worker_id, "update", session_id, request_id, sid, rid,
+                    )?;
                     let slot =
                         xs.get_mut(worker_id as usize).ok_or_else(|| {
                             DapcError::Coordinator(format!(
@@ -761,10 +898,15 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
 
     fn grad_round_batch(
         &mut self,
+        sid: SessionId,
         xs_cols: &[Vec<f32>],
         accs: &mut [Vec<f64>],
     ) -> Result<()> {
+        let sess = self.session(sid, "grad_round_batch")?;
+        let (n, rid) = (sess.n_target, sess.active_req);
         let msg = Message::RunGradBatch {
+            session_id: sid,
+            request_id: rid,
             epoch: self.epoch,
             xs: xs_cols.to_vec(),
         };
@@ -772,13 +914,21 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
         for (i, w) in self.workers.iter_mut().enumerate() {
             send_traced(w, i, &msg, &self.obs)?;
         }
-        let n = self.n_target;
         let k = xs_cols.len();
         let xs = &mut self.batch_xs;
         let cobs = &self.obs;
         gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
             match msg {
-                Message::GradBatchDone { worker_id, grads } => {
+                Message::GradBatchDone {
+                    worker_id,
+                    session_id,
+                    request_id,
+                    grads,
+                } => {
+                    check_reply_ids(
+                        worker_id, "gradient", session_id, request_id, sid,
+                        rid,
+                    )?;
                     let slot =
                         xs.get_mut(worker_id as usize).ok_or_else(|| {
                             DapcError::Coordinator(format!(
@@ -802,6 +952,44 @@ impl<T: Transport> SessionBackend for ClusterBackend<T> {
             }
         })?;
         accumulate_sum_batch(&self.batch_xs, accs);
+        Ok(())
+    }
+
+    fn unregister_session(&mut self, sid: SessionId) -> Result<()> {
+        // scatter the eviction even when the leader no longer tracks
+        // `sid` — unregistration must be idempotent, and workers ack
+        // absent ids as a no-op
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            send_traced(
+                w,
+                i,
+                &Message::EvictSession { session_id: sid },
+                &self.obs,
+            )?;
+        }
+        let cobs = &self.obs;
+        gather(&mut self.workers, &mut self.done, &mut self.seen, cobs, |msg| {
+            match msg {
+                Message::SessionEvicted { worker_id, session_id } => {
+                    if session_id != sid {
+                        return Err(DapcError::Coordinator(format!(
+                            "worker {worker_id} acked eviction of session \
+                             {session_id}, expected {sid}"
+                        )));
+                    }
+                    Ok(worker_id)
+                }
+                Message::WorkerError { worker_id, message } => {
+                    Err(DapcError::Coordinator(format!(
+                        "worker {worker_id} eviction failed: {message}"
+                    )))
+                }
+                other => Err(DapcError::Coordinator(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        })?;
+        self.sessions.remove(&sid);
         Ok(())
     }
 }

@@ -9,7 +9,7 @@
 //! vec<f32>:= u64 len | f32 * len        (LE)
 //! matrix  := u64 rows | u64 cols | f32 * rows*cols (row-major)
 //! string  := u64 len | utf8 bytes
-//! f64     := 8 bytes (LE)
+//! u64/f64 := 8 bytes (LE)
 //! stats   := u64 count | (string | f64) * count
 //! ```
 //!
@@ -24,7 +24,7 @@
 //! [`InitKindWire::GradOnly`], which ships the block but skips the
 //! worker-side factorization entirely.
 //!
-//! # Sessions (wire v3)
+//! # Sessions (wire v3, multi-tenant since v5)
 //!
 //! The solve-service frames separate the RHS-independent registration
 //! from per-RHS serving: [`Message::RegisterMatrix`] ships a block ONCE
@@ -36,6 +36,15 @@
 //! n-vectors per frame.  A worker that receives an RHS before a
 //! registration rejects it loudly with a [`Message::WorkerError`].
 //!
+//! Since v5, EVERY session frame carries a `session_id` (which of the
+//! worker's resident factorizations the frame addresses) and a
+//! `request_id` (the leader-assigned id of the solve/registration the
+//! frame belongs to, echoed verbatim in the reply) — one worker serves
+//! MANY registered matrices concurrently, keyed by session id.
+//! [`Message::EvictSession`] drops one resident factorization (acked by
+//! [`Message::SessionEvicted`]); a session frame naming an id the worker
+//! does not hold is rejected with a loud [`Message::WorkerError`].
+//!
 //! # Telemetry (wire v4)
 //!
 //! [`Message::StatsRequest`] asks a worker for a flattened snapshot of
@@ -45,6 +54,18 @@
 //! read-only observation, so requesting stats can never perturb a
 //! solve (the observability never-touch-numerics contract, see
 //! `crate::obs`).
+//!
+//! # Service frames (wire v5)
+//!
+//! The multi-tenant solve server speaks client-facing frames over the
+//! same encoding: [`Message::SubmitSolve`] carries full right-hand
+//! sides (not partition slices) under a `(session_id, request_id)` pair
+//! and is answered by [`Message::SolveResult`] (per-column solutions +
+//! residuals), [`Message::Busy`] (bounded queue full — resubmit later),
+//! or [`Message::Evicted`] (the named session is not registered on the
+//! server).  [`Message::Credit`] grants flow-control admission credits
+//! (quill-style): a client may keep `credits` requests in flight and
+//! regains one credit per completed reply.
 
 use crate::error::{DapcError, Result};
 use crate::linalg::Matrix;
@@ -57,8 +78,11 @@ use crate::solver::InitKind;
 /// solve-service session frames (`RegisterMatrix`, `SolveRhs`,
 /// `SolveBatch` and the batched round/gradient frames); v4 added the
 /// telemetry frames (`StatsRequest`/`StatsReport`) and the f64 scalar
-/// encoding they carry.
-pub const WIRE_VERSION: u32 = 4;
+/// encoding they carry; v5 made sessions multi-tenant — every session
+/// frame now carries `session_id` + `request_id` u64s, plus the
+/// eviction (`EvictSession`/`SessionEvicted`) and service-surface
+/// (`SubmitSolve`/`SolveResult`/`Busy`/`Evicted`/`Credit`) frames.
+pub const WIRE_VERSION: u32 = 5;
 
 /// Protocol messages (both directions).
 #[derive(Debug, Clone, PartialEq)]
@@ -87,37 +111,68 @@ pub enum Message {
     WorkerError { worker_id: u32, message: String },
     /// Leader -> worker: done, exit the loop.
     Shutdown,
-    /// Leader -> worker (v3): register this block for session service —
-    /// factorize once, retain `A_j`/`P_j`/seed state across solves
-    /// ([`InitKindWire::GradOnly`] stores the block only).
+    /// Leader -> worker (v3/v5): register this block under `session_id`
+    /// for session service — factorize once, retain `A_j`/`P_j`/seed
+    /// state across solves ([`InitKindWire::GradOnly`] stores the block
+    /// only).  One worker holds MANY sessions keyed by id.
     RegisterMatrix {
         worker_id: u32,
+        session_id: u64,
+        request_id: u64,
         kind: InitKindWire,
         a: Matrix,
         /// Padded solution width the consensus loop runs at.
         n_target: u32,
     },
-    /// Worker -> leader (v3): registration finished; the factorization
-    /// is resident and ready to serve right-hand sides.
-    MatrixRegistered { worker_id: u32 },
-    /// Leader -> worker (v3): seed ONE fresh rhs slice through the
-    /// retained factorization.  Rejected loudly before `RegisterMatrix`.
-    SolveRhs { b: Vec<f32> },
-    /// Leader -> worker (v3): seed k fresh rhs slices (one batched
-    /// solve).  Rejected loudly before `RegisterMatrix`.
-    SolveBatch { bs: Vec<Vec<f32>> },
-    /// Worker -> leader (v3): per-column initial estimates `x_j(0)`
+    /// Worker -> leader (v3/v5): registration finished; the
+    /// factorization is resident under `session_id` and ready to serve
+    /// right-hand sides.  `request_id` echoes the registration frame.
+    MatrixRegistered { worker_id: u32, session_id: u64, request_id: u64 },
+    /// Leader -> worker (v3/v5): seed ONE fresh rhs slice through the
+    /// retained factorization of `session_id`.  Rejected loudly if that
+    /// session is not registered on this worker.
+    SolveRhs { session_id: u64, request_id: u64, b: Vec<f32> },
+    /// Leader -> worker (v3/v5): seed k fresh rhs slices (one batched
+    /// solve) into `session_id`.  Rejected loudly if unregistered.
+    SolveBatch { session_id: u64, request_id: u64, bs: Vec<Vec<f32>> },
+    /// Worker -> leader (v3/v5): per-column initial estimates `x_j(0)`
     /// (empty columns for gradient-only sessions — DGD starts at 0).
-    RhsSeeded { worker_id: u32, x0s: Vec<Vec<f32>> },
-    /// Leader -> worker (v3): one batched eq. (6) round at the current
-    /// per-column averages.
-    RunUpdateBatch { epoch: u32, gamma: f32, xbars: Vec<Vec<f32>> },
-    /// Worker -> leader (v3): updated estimates for every column.
-    UpdateBatchDone { worker_id: u32, xs: Vec<Vec<f32>> },
-    /// Leader -> worker (v3): one batched DGD gradient round.
-    RunGradBatch { epoch: u32, xs: Vec<Vec<f32>> },
-    /// Worker -> leader (v3): per-column local gradients.
-    GradBatchDone { worker_id: u32, grads: Vec<Vec<f32>> },
+    RhsSeeded {
+        worker_id: u32,
+        session_id: u64,
+        request_id: u64,
+        x0s: Vec<Vec<f32>>,
+    },
+    /// Leader -> worker (v3/v5): one batched eq. (6) round at the
+    /// current per-column averages, against `session_id`'s seeded state.
+    RunUpdateBatch {
+        session_id: u64,
+        request_id: u64,
+        epoch: u32,
+        gamma: f32,
+        xbars: Vec<Vec<f32>>,
+    },
+    /// Worker -> leader (v3/v5): updated estimates for every column.
+    UpdateBatchDone {
+        worker_id: u32,
+        session_id: u64,
+        request_id: u64,
+        xs: Vec<Vec<f32>>,
+    },
+    /// Leader -> worker (v3/v5): one batched DGD gradient round.
+    RunGradBatch {
+        session_id: u64,
+        request_id: u64,
+        epoch: u32,
+        xs: Vec<Vec<f32>>,
+    },
+    /// Worker -> leader (v3/v5): per-column local gradients.
+    GradBatchDone {
+        worker_id: u32,
+        session_id: u64,
+        request_id: u64,
+        grads: Vec<Vec<f32>>,
+    },
     /// Leader -> worker (v4): ship back a snapshot of your metrics
     /// registry.  Read-only; never perturbs a solve.
     StatsRequest,
@@ -126,12 +181,42 @@ pub enum Message {
     /// `.count`/`.sum`/quantile entries by
     /// `obs::MetricsRegistry::snapshot_flat`).
     StatsReport { worker_id: u32, stats: Vec<(String, f64)> },
+    /// Leader -> worker (v5): drop the resident factorization of
+    /// `session_id` (LRU eviction under the resident-memory cap).  The
+    /// session can be re-registered later; eviction only reclaims the
+    /// worker-side bytes.
+    EvictSession { session_id: u64 },
+    /// Worker -> leader (v5): eviction ack — the named session's state
+    /// is gone (acked even if the id was already absent, so eviction is
+    /// idempotent).
+    SessionEvicted { worker_id: u32, session_id: u64 },
+    /// Client -> server (v5): solve k full right-hand sides (whole
+    /// vectors, not partition slices) against registered `session_id`.
+    SubmitSolve { session_id: u64, request_id: u64, bs: Vec<Vec<f32>> },
+    /// Server -> client (v5): per-column solutions and residual norms
+    /// for a completed [`Message::SubmitSolve`].
+    SolveResult {
+        session_id: u64,
+        request_id: u64,
+        xbars: Vec<Vec<f32>>,
+        residuals: Vec<f32>,
+    },
+    /// Server -> client (v5): the bounded request queue is full —
+    /// explicit backpressure; resubmit after a completed reply returns
+    /// a credit.  `queue_depth` reports the configured bound.
+    Busy { request_id: u64, queue_depth: u32 },
+    /// Server -> client (v5): the named session is not registered on
+    /// this server (never registered, or unregistered/closed).
+    Evicted { session_id: u64, request_id: u64 },
+    /// Server -> client (v5): flow-control admission grant — the client
+    /// may keep `credits` requests in flight (quill-style CREDIT).
+    Credit { credits: u32 },
 }
 
 /// Human label for each frame type, indexed by [`Message::kind_index`]
 /// — the per-kind wire accounting metric names
 /// (`wire.tx_frames.{label}` etc.) are built from these.
-pub const KIND_LABELS: [&str; 19] = [
+pub const KIND_LABELS: [&str; 26] = [
     "init_partition",
     "init_done",
     "run_update",
@@ -151,6 +236,13 @@ pub const KIND_LABELS: [&str; 19] = [
     "grad_batch_done",
     "stats_request",
     "stats_report",
+    "evict_session",
+    "session_evicted",
+    "submit_solve",
+    "solve_result",
+    "busy",
+    "evicted",
+    "credit",
 ];
 
 /// InitKind twin that is wire-encodable, plus the gradient-only mode that
@@ -201,6 +293,10 @@ impl<'a> Enc<'a> {
     }
 
     fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -376,6 +472,8 @@ impl<'a> Dec<'a> {
 
 const VEC_HEADER: usize = 8; // u64 length prefix
 const MAT_HEADER: usize = 16; // u64 rows + u64 cols
+/// `session_id` + `request_id`, carried by every v5 session frame.
+const SESSION_IDS: usize = 16;
 
 /// Encoded size of a `vec2_f32` column batch.
 fn vec2_len(vs: &[Vec<f32>]) -> usize {
@@ -428,49 +526,90 @@ impl Message {
                 e.string(message);
             }
             Message::Shutdown => buf.push(7),
-            Message::RegisterMatrix { worker_id, kind, a, n_target } => {
+            Message::RegisterMatrix {
+                worker_id,
+                session_id,
+                request_id,
+                kind,
+                a,
+                n_target,
+            } => {
                 let mut e = Enc::new(buf, 8);
                 e.u32(*worker_id);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.buf.push(*kind as u8);
                 e.matrix(a);
                 e.u32(*n_target);
             }
-            Message::MatrixRegistered { worker_id } => {
+            Message::MatrixRegistered { worker_id, session_id, request_id } => {
                 let mut e = Enc::new(buf, 9);
                 e.u32(*worker_id);
+                e.u64(*session_id);
+                e.u64(*request_id);
             }
-            Message::SolveRhs { b } => {
+            Message::SolveRhs { session_id, request_id, b } => {
                 let mut e = Enc::new(buf, 10);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.vec_f32(b);
             }
-            Message::SolveBatch { bs } => {
+            Message::SolveBatch { session_id, request_id, bs } => {
                 let mut e = Enc::new(buf, 11);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.vec2_f32(bs);
             }
-            Message::RhsSeeded { worker_id, x0s } => {
+            Message::RhsSeeded { worker_id, session_id, request_id, x0s } => {
                 let mut e = Enc::new(buf, 12);
                 e.u32(*worker_id);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.vec2_f32(x0s);
             }
-            Message::RunUpdateBatch { epoch, gamma, xbars } => {
+            Message::RunUpdateBatch {
+                session_id,
+                request_id,
+                epoch,
+                gamma,
+                xbars,
+            } => {
                 let mut e = Enc::new(buf, 13);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.u32(*epoch);
                 e.f32(*gamma);
                 e.vec2_f32(xbars);
             }
-            Message::UpdateBatchDone { worker_id, xs } => {
+            Message::UpdateBatchDone {
+                worker_id,
+                session_id,
+                request_id,
+                xs,
+            } => {
                 let mut e = Enc::new(buf, 14);
                 e.u32(*worker_id);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.vec2_f32(xs);
             }
-            Message::RunGradBatch { epoch, xs } => {
+            Message::RunGradBatch { session_id, request_id, epoch, xs } => {
                 let mut e = Enc::new(buf, 15);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.u32(*epoch);
                 e.vec2_f32(xs);
             }
-            Message::GradBatchDone { worker_id, grads } => {
+            Message::GradBatchDone {
+                worker_id,
+                session_id,
+                request_id,
+                grads,
+            } => {
                 let mut e = Enc::new(buf, 16);
                 e.u32(*worker_id);
+                e.u64(*session_id);
+                e.u64(*request_id);
                 e.vec2_f32(grads);
             }
             Message::StatsRequest => buf.push(17),
@@ -478,6 +617,47 @@ impl Message {
                 let mut e = Enc::new(buf, 18);
                 e.u32(*worker_id);
                 e.stats(stats);
+            }
+            Message::EvictSession { session_id } => {
+                let mut e = Enc::new(buf, 19);
+                e.u64(*session_id);
+            }
+            Message::SessionEvicted { worker_id, session_id } => {
+                let mut e = Enc::new(buf, 20);
+                e.u32(*worker_id);
+                e.u64(*session_id);
+            }
+            Message::SubmitSolve { session_id, request_id, bs } => {
+                let mut e = Enc::new(buf, 21);
+                e.u64(*session_id);
+                e.u64(*request_id);
+                e.vec2_f32(bs);
+            }
+            Message::SolveResult {
+                session_id,
+                request_id,
+                xbars,
+                residuals,
+            } => {
+                let mut e = Enc::new(buf, 22);
+                e.u64(*session_id);
+                e.u64(*request_id);
+                e.vec2_f32(xbars);
+                e.vec_f32(residuals);
+            }
+            Message::Busy { request_id, queue_depth } => {
+                let mut e = Enc::new(buf, 23);
+                e.u64(*request_id);
+                e.u32(*queue_depth);
+            }
+            Message::Evicted { session_id, request_id } => {
+                let mut e = Enc::new(buf, 24);
+                e.u64(*session_id);
+                e.u64(*request_id);
+            }
+            Message::Credit { credits } => {
+                let mut e = Enc::new(buf, 25);
+                e.u32(*credits);
             }
         }
     }
@@ -505,6 +685,13 @@ impl Message {
             Message::GradBatchDone { .. } => 16,
             Message::StatsRequest => 17,
             Message::StatsReport { .. } => 18,
+            Message::EvictSession { .. } => 19,
+            Message::SessionEvicted { .. } => 20,
+            Message::SubmitSolve { .. } => 21,
+            Message::SolveResult { .. } => 22,
+            Message::Busy { .. } => 23,
+            Message::Evicted { .. } => 24,
+            Message::Credit { .. } => 25,
         }
     }
 
@@ -547,18 +734,33 @@ impl Message {
             }
             Message::Shutdown => 1,
             Message::RegisterMatrix { a, .. } => {
-                1 + 4 + 1 + MAT_HEADER + 4 * a.rows() * a.cols() + 4
+                1 + 4
+                    + SESSION_IDS
+                    + 1
+                    + MAT_HEADER
+                    + 4 * a.rows() * a.cols()
+                    + 4
             }
-            Message::MatrixRegistered { .. } => 1 + 4,
-            Message::SolveRhs { b } => 1 + VEC_HEADER + 4 * b.len(),
-            Message::SolveBatch { bs } => 1 + vec2_len(bs),
-            Message::RhsSeeded { x0s, .. } => 1 + 4 + vec2_len(x0s),
+            Message::MatrixRegistered { .. } => 1 + 4 + SESSION_IDS,
+            Message::SolveRhs { b, .. } => {
+                1 + SESSION_IDS + VEC_HEADER + 4 * b.len()
+            }
+            Message::SolveBatch { bs, .. } => 1 + SESSION_IDS + vec2_len(bs),
+            Message::RhsSeeded { x0s, .. } => {
+                1 + 4 + SESSION_IDS + vec2_len(x0s)
+            }
             Message::RunUpdateBatch { xbars, .. } => {
-                1 + 4 + 4 + vec2_len(xbars)
+                1 + SESSION_IDS + 4 + 4 + vec2_len(xbars)
             }
-            Message::UpdateBatchDone { xs, .. } => 1 + 4 + vec2_len(xs),
-            Message::RunGradBatch { xs, .. } => 1 + 4 + vec2_len(xs),
-            Message::GradBatchDone { grads, .. } => 1 + 4 + vec2_len(grads),
+            Message::UpdateBatchDone { xs, .. } => {
+                1 + 4 + SESSION_IDS + vec2_len(xs)
+            }
+            Message::RunGradBatch { xs, .. } => {
+                1 + SESSION_IDS + 4 + vec2_len(xs)
+            }
+            Message::GradBatchDone { grads, .. } => {
+                1 + 4 + SESSION_IDS + vec2_len(grads)
+            }
             Message::StatsRequest => 1,
             Message::StatsReport { stats, .. } => {
                 1 + 4
@@ -568,6 +770,18 @@ impl Message {
                         .map(|(name, _)| VEC_HEADER + name.len() + 8)
                         .sum::<usize>()
             }
+            Message::EvictSession { .. } => 1 + 8,
+            Message::SessionEvicted { .. } => 1 + 4 + 8,
+            Message::SubmitSolve { bs, .. } => 1 + SESSION_IDS + vec2_len(bs),
+            Message::SolveResult { xbars, residuals, .. } => {
+                1 + SESSION_IDS
+                    + vec2_len(xbars)
+                    + VEC_HEADER
+                    + 4 * residuals.len()
+            }
+            Message::Busy { .. } => 1 + 8 + 4,
+            Message::Evicted { .. } => 1 + SESSION_IDS,
+            Message::Credit { .. } => 1 + 4,
         }
     }
 
@@ -600,33 +814,64 @@ impl Message {
             7 => Message::Shutdown,
             8 => {
                 let worker_id = d.u32()?;
+                let session_id = d.u64()?;
+                let request_id = d.u64()?;
                 let kind = decode_kind(d.u8()?)?;
                 let a = d.matrix()?;
                 let n_target = d.u32()?;
-                Message::RegisterMatrix { worker_id, kind, a, n_target }
+                Message::RegisterMatrix {
+                    worker_id,
+                    session_id,
+                    request_id,
+                    kind,
+                    a,
+                    n_target,
+                }
             }
-            9 => Message::MatrixRegistered { worker_id: d.u32()? },
-            10 => Message::SolveRhs { b: d.vec_f32()? },
-            11 => Message::SolveBatch { bs: d.vec2_f32()? },
+            9 => Message::MatrixRegistered {
+                worker_id: d.u32()?,
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+            },
+            10 => Message::SolveRhs {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+                b: d.vec_f32()?,
+            },
+            11 => Message::SolveBatch {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+                bs: d.vec2_f32()?,
+            },
             12 => Message::RhsSeeded {
                 worker_id: d.u32()?,
+                session_id: d.u64()?,
+                request_id: d.u64()?,
                 x0s: d.vec2_f32()?,
             },
             13 => Message::RunUpdateBatch {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
                 epoch: d.u32()?,
                 gamma: d.f32()?,
                 xbars: d.vec2_f32()?,
             },
             14 => Message::UpdateBatchDone {
                 worker_id: d.u32()?,
+                session_id: d.u64()?,
+                request_id: d.u64()?,
                 xs: d.vec2_f32()?,
             },
             15 => Message::RunGradBatch {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
                 epoch: d.u32()?,
                 xs: d.vec2_f32()?,
             },
             16 => Message::GradBatchDone {
                 worker_id: d.u32()?,
+                session_id: d.u64()?,
+                request_id: d.u64()?,
                 grads: d.vec2_f32()?,
             },
             17 => Message::StatsRequest,
@@ -634,6 +879,31 @@ impl Message {
                 worker_id: d.u32()?,
                 stats: d.stats()?,
             },
+            19 => Message::EvictSession { session_id: d.u64()? },
+            20 => Message::SessionEvicted {
+                worker_id: d.u32()?,
+                session_id: d.u64()?,
+            },
+            21 => Message::SubmitSolve {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+                bs: d.vec2_f32()?,
+            },
+            22 => Message::SolveResult {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+                xbars: d.vec2_f32()?,
+                residuals: d.vec_f32()?,
+            },
+            23 => Message::Busy {
+                request_id: d.u64()?,
+                queue_depth: d.u32()?,
+            },
+            24 => Message::Evicted {
+                session_id: d.u64()?,
+                request_id: d.u64()?,
+            },
+            25 => Message::Credit { credits: d.u32()? },
             other => {
                 return Err(DapcError::Parse(format!("unknown tag {other}")))
             }
@@ -685,31 +955,56 @@ mod tests {
             Message::Shutdown,
             Message::RegisterMatrix {
                 worker_id: 7,
+                session_id: 11,
+                request_id: 900,
                 kind: InitKindWire::Qr,
                 a: Matrix::from_fn(3, 2, |i, j| (i + 2 * j) as f32),
                 n_target: 2,
             },
-            Message::MatrixRegistered { worker_id: 7 },
-            Message::SolveRhs { b: vec![0.5, -1.5, 2.0] },
+            Message::MatrixRegistered {
+                worker_id: 7,
+                session_id: 11,
+                request_id: 900,
+            },
+            Message::SolveRhs {
+                session_id: 11,
+                request_id: 901,
+                b: vec![0.5, -1.5, 2.0],
+            },
             Message::SolveBatch {
+                session_id: u64::MAX,
+                request_id: 902,
                 bs: vec![vec![1.0, 2.0], vec![], vec![3.0]],
             },
             Message::RhsSeeded {
                 worker_id: 1,
+                session_id: 11,
+                request_id: 901,
                 x0s: vec![vec![0.25, 0.5], vec![]],
             },
             Message::RunUpdateBatch {
+                session_id: 11,
+                request_id: 902,
                 epoch: 4,
                 gamma: 0.9,
                 xbars: vec![vec![1.0; 3], vec![2.0; 3]],
             },
             Message::UpdateBatchDone {
                 worker_id: 3,
+                session_id: 11,
+                request_id: 902,
                 xs: vec![vec![0.0; 3], vec![-1.0; 3]],
             },
-            Message::RunGradBatch { epoch: 6, xs: vec![vec![1.0, 2.0]] },
+            Message::RunGradBatch {
+                session_id: 12,
+                request_id: 903,
+                epoch: 6,
+                xs: vec![vec![1.0, 2.0]],
+            },
             Message::GradBatchDone {
                 worker_id: 0,
+                session_id: 12,
+                request_id: 903,
                 grads: vec![vec![-0.5, 0.5]],
             },
             Message::StatsRequest,
@@ -722,6 +1017,22 @@ mod tests {
                 ],
             },
             Message::StatsReport { worker_id: 0, stats: vec![] },
+            Message::EvictSession { session_id: 11 },
+            Message::SessionEvicted { worker_id: 2, session_id: 11 },
+            Message::SubmitSolve {
+                session_id: 11,
+                request_id: 7_000_000_000,
+                bs: vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 1.0]],
+            },
+            Message::SolveResult {
+                session_id: 11,
+                request_id: 7_000_000_000,
+                xbars: vec![vec![0.5, 0.25], vec![]],
+                residuals: vec![1e-6, 0.0],
+            },
+            Message::Busy { request_id: 904, queue_depth: 32 },
+            Message::Evicted { session_id: 13, request_id: 905 },
+            Message::Credit { credits: 8 },
         ]
     }
 
@@ -779,27 +1090,40 @@ mod tests {
     fn hostile_batch_count_rejected() {
         // a SolveBatch whose count claims more columns than the payload
         // could hold must fail cleanly, not over-allocate
-        let mut enc = Message::SolveBatch { bs: vec![vec![1.0]] }.encode();
-        // overwrite the u64 count (right after the tag byte)
-        enc[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut enc = Message::SolveBatch {
+            session_id: 1,
+            request_id: 2,
+            bs: vec![vec![1.0]],
+        }
+        .encode();
+        // the u64 count sits after tag (1) + session_id (8) + request_id (8)
+        enc[17..25].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Message::decode(&enc).is_err());
 
         // hostile inner vector length: must error, not wrap the
         // length * 4 multiplication into a tiny read
-        let mut enc = Message::SolveRhs { b: vec![1.0, 2.0] }.encode();
-        enc[1..9].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        let mut enc = Message::SolveRhs {
+            session_id: 1,
+            request_id: 2,
+            b: vec![1.0, 2.0],
+        }
+        .encode();
+        enc[17..25].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
         assert!(Message::decode(&enc).is_err());
 
         // hostile matrix dims (rows * cols overflows usize)
         let mut enc = Message::RegisterMatrix {
             worker_id: 0,
+            session_id: 1,
+            request_id: 2,
             kind: InitKindWire::Qr,
             a: Matrix::zeros(1, 1),
             n_target: 1,
         }
         .encode();
-        // rows u64 sits after tag (1) + worker_id (4) + kind (1)
-        enc[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
+        // rows u64 sits after tag (1) + worker_id (4) + session_id (8)
+        // + request_id (8) + kind (1)
+        enc[22..30].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Message::decode(&enc).is_err());
 
         // hostile stats count: claims more entries than the payload
@@ -812,17 +1136,45 @@ mod tests {
         // count u64 sits after tag (1) + worker_id (4)
         enc[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Message::decode(&enc).is_err());
+
+        // hostile SubmitSolve column count (the service ingress frame)
+        let mut enc = Message::SubmitSolve {
+            session_id: 1,
+            request_id: 2,
+            bs: vec![vec![1.0]],
+        }
+        .encode();
+        enc[17..25].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&enc).is_err());
     }
 
     #[test]
     fn kind_index_matches_wire_tag_and_labels() {
-        assert_eq!(KIND_LABELS.len(), 19);
+        assert_eq!(KIND_LABELS.len(), 26);
         for m in variants() {
             let idx = m.kind_index();
             assert_eq!(m.encode()[0] as usize, idx, "{m:?}");
             assert_eq!(m.kind_label(), KIND_LABELS[idx]);
         }
         assert_eq!(Message::StatsRequest.kind_label(), "stats_request");
+        assert_eq!(
+            Message::Credit { credits: 1 }.kind_label(),
+            "credit"
+        );
+    }
+
+    #[test]
+    fn session_ids_roundtrip_at_u64_extremes() {
+        // session/request ids are opaque u64s: the full range must
+        // survive the wire, including the sentinel-looking extremes
+        for (sid, rid) in [(0u64, 0u64), (u64::MAX, u64::MAX), (1, u64::MAX)] {
+            let m = Message::SolveRhs {
+                session_id: sid,
+                request_id: rid,
+                b: vec![1.0],
+            };
+            assert_eq!(Message::decode(&m.encode()).unwrap(), m);
+        }
     }
 
     #[test]

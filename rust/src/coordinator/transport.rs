@@ -476,6 +476,36 @@ mod tests {
     }
 
     #[test]
+    fn v4_peer_rejected_by_v5_build() {
+        // a pre-multi-tenant (v4) peer connecting to this (v5) build must
+        // die at the first frame — its session frames have no
+        // session_id/request_id and would otherwise mis-decode
+        assert!(WIRE_VERSION >= 5, "test assumes the v5 multi-tenant bump");
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let payload = Message::Shutdown.encode();
+            let v4_header = FRAME_MAGIC | 4;
+            stream.write_all(&v4_header.to_le_bytes()).unwrap();
+            stream
+                .write_all(&(payload.len() as u32).to_le_bytes())
+                .unwrap();
+            stream.write_all(&payload).unwrap();
+            stream.flush().unwrap();
+            let mut sink = [0u8; 1];
+            let _ = stream.read(&mut sink);
+        });
+        let mut client =
+            TcpTransport::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let err = client.recv().unwrap_err().to_string();
+        assert!(err.contains("v4"), "unexpected error: {err}");
+        assert!(err.contains("upgrade"), "unexpected error: {err}");
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
     fn wrong_version_rejected_loudly() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();

@@ -4,11 +4,18 @@
 //! projector `P_j` and the dense block `A_j` never leave the worker —
 //! only n-length vectors cross the transport.
 //!
-//! Wire-v3 sessions: a `RegisterMatrix` frame factorizes ONCE and keeps
-//! the seed state resident; any number of `SolveRhs`/`SolveBatch` frames
-//! then re-seed estimates for fresh right-hand sides at O(l n + n^2)
-//! each.  An RHS frame arriving before a registration is rejected loudly
-//! with a `WorkerError` — it would otherwise silently serve stale state.
+//! Sessions (wire v3, multi-tenant since v5): a `RegisterMatrix` frame
+//! factorizes ONCE and keeps the seed state resident under its
+//! `session_id`; any number of `SolveRhs`/`SolveBatch` frames then
+//! re-seed estimates for fresh right-hand sides at O(l n + n^2) each.  A
+//! worker holds MANY sessions at once (`WorkerSessions`), routes every
+//! session frame by its id and echoes `session_id`/`request_id` in the
+//! reply so the leader can detect cross-session desync.  `EvictSession`
+//! drops one session's resident state (idempotently — absent ids still
+//! ack) and a later `RegisterMatrix` under the same id transparently
+//! re-factorizes.  An RHS frame naming an unknown session is rejected
+//! loudly with a `WorkerError` — it would otherwise silently serve stale
+//! state.
 //!
 //! Wire-v4 telemetry: every engine call is timed into the process-global
 //! `worker.*` histograms (instrumentation wraps the engine, never enters
@@ -59,7 +66,7 @@ pub fn run_worker<E: ComputeEngine, T: Transport>(
     engine: &E,
     transport: &mut T,
 ) -> Result<()> {
-    let mut state: Option<WorkerState> = None;
+    let mut state = WorkerSessions::new();
     let mut my_id: u32 = u32::MAX;
     let wobs = WorkerObs::new();
     loop {
@@ -80,6 +87,25 @@ pub fn run_worker<E: ComputeEngine, T: Transport>(
     }
 }
 
+/// All solver state one worker connection holds: the one-shot
+/// `InitPartition` slot plus MANY registered sessions keyed by
+/// `session_id` (wire v5 multi-tenant service).  BTreeMap for the audit
+/// no-hashmap rule and deterministic iteration.
+struct WorkerSessions {
+    /// `InitPartition` state (cold one-shot solves) — disjoint from the
+    /// session map; the two protocols never share estimates.
+    one_shot: Option<WorkerState>,
+    /// Resident registered sessions: projector + seed factorization +
+    /// prepacked panels each, evictable via `EvictSession`.
+    sessions: std::collections::BTreeMap<u64, WorkerState>,
+}
+
+impl WorkerSessions {
+    fn new() -> Self {
+        Self { one_shot: None, sessions: std::collections::BTreeMap::new() }
+    }
+}
+
 struct WorkerState {
     x: Vec<f32>,
     /// `None` after a `GradOnly` init: the worker serves gradients only
@@ -94,9 +120,6 @@ struct WorkerState {
     /// registered sessions stream their batched epochs through the
     /// packed wide-gemm update instead of the row-dot sweep.
     panels: Option<blas::PrepackedPanels>,
-    /// Whether a `RegisterMatrix` created this state — RHS frames are
-    /// only legal on registered sessions.
-    registered: bool,
     /// Per-column batch estimates (v3 batched solves).
     xs: Vec<Vec<f32>>,
     /// Per-column rhs slices (v3 gradient service).
@@ -117,7 +140,6 @@ impl WorkerState {
             b,
             seed: None,
             panels: None,
-            registered: false,
             xs: Vec::new(),
             bs: Vec::new(),
         }
@@ -136,7 +158,6 @@ impl WorkerState {
             b: Vec::new(),
             seed,
             panels,
-            registered: true,
             xs: Vec::new(),
             bs: Vec::new(),
         }
@@ -145,7 +166,7 @@ impl WorkerState {
 
 fn handle<E: ComputeEngine>(
     engine: &E,
-    state: &mut Option<WorkerState>,
+    state: &mut WorkerSessions,
     my_id: &mut u32,
     msg: Message,
     wobs: &WorkerObs,
@@ -160,7 +181,7 @@ fn handle<E: ComputeEngine>(
                         engine.init(engine_kind, &a, &b, n_target as usize)?;
                     obs::record_since(&wobs.register_ns, t0);
                     let x0 = init.x0.clone();
-                    *state = Some(WorkerState::one_shot(
+                    state.one_shot = Some(WorkerState::one_shot(
                         init.x0,
                         Some(init.projector),
                         a,
@@ -172,15 +193,22 @@ fn handle<E: ComputeEngine>(
                     // GradOnly: store the block, skip the O(l n^2)
                     // factorization entirely; DGD starts from x = 0 so
                     // there is no estimate to return either
-                    *state =
+                    state.one_shot =
                         Some(WorkerState::one_shot(Vec::new(), None, a, b));
                     Ok(Some(Message::InitDone { worker_id, x0: Vec::new() }))
                 }
             }
         }
-        Message::RegisterMatrix { worker_id, kind, a, n_target } => {
+        Message::RegisterMatrix {
+            worker_id,
+            session_id,
+            request_id,
+            kind,
+            a,
+            n_target,
+        } => {
             *my_id = worker_id;
-            match kind.engine_kind() {
+            let st = match kind.engine_kind() {
                 Some(engine_kind) => {
                     // factorize once — the panel-blocked QR; a pooled
                     // engine fans the trailing updates across its
@@ -192,40 +220,66 @@ fn handle<E: ComputeEngine>(
                     let fac =
                         engine.factorize(engine_kind, &a, n_target as usize)?;
                     obs::record_since(&wobs.register_ns, t0);
-                    *state = Some(WorkerState::registered(
+                    WorkerState::registered(
                         Some(fac.projector),
                         Some(fac.seed),
                         Some(fac.panels),
                         a,
-                    ));
+                    )
                 }
-                None => {
-                    // gradient-only session: the block alone is resident
-                    *state = Some(WorkerState::registered(None, None, None, a));
-                }
-            }
-            Ok(Some(Message::MatrixRegistered { worker_id }))
+                // gradient-only session: the block alone is resident
+                None => WorkerState::registered(None, None, None, a),
+            };
+            // replaces any state this id already held (re-registration
+            // after eviction lands here)
+            state.sessions.insert(session_id, st);
+            Ok(Some(Message::MatrixRegistered {
+                worker_id,
+                session_id,
+                request_id,
+            }))
         }
-        Message::SolveRhs { b } => {
-            let st = registered_state(state, "SolveRhs")?;
+        Message::EvictSession { session_id } => {
+            // idempotent: evicting an absent id still acks, so a leader
+            // retrying an eviction can never wedge
+            state.sessions.remove(&session_id);
+            Ok(Some(Message::SessionEvicted {
+                worker_id: *my_id,
+                session_id,
+            }))
+        }
+        Message::SolveRhs { session_id, request_id, b } => {
+            let st = session_state(state, session_id, "SolveRhs")?;
             let t0 = obs::now();
             let x0s = seed_columns(engine, st, vec![b])?;
             obs::record_since(&wobs.seed_ns, t0);
-            Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
+            Ok(Some(Message::RhsSeeded {
+                worker_id: *my_id,
+                session_id,
+                request_id,
+                x0s,
+            }))
         }
-        Message::SolveBatch { bs } => {
-            let st = registered_state(state, "SolveBatch")?;
+        Message::SolveBatch { session_id, request_id, bs } => {
+            let st = session_state(state, session_id, "SolveBatch")?;
             let t0 = obs::now();
             let x0s = seed_columns(engine, st, bs)?;
             obs::record_since(&wobs.seed_ns, t0);
-            Ok(Some(Message::RhsSeeded { worker_id: *my_id, x0s }))
+            Ok(Some(Message::RhsSeeded {
+                worker_id: *my_id,
+                session_id,
+                request_id,
+                x0s,
+            }))
         }
-        Message::RunUpdateBatch { epoch: _, gamma, xbars } => {
-            let st = state.as_mut().ok_or_else(|| {
-                crate::error::DapcError::Coordinator(
-                    "RunUpdateBatch before RegisterMatrix".into(),
-                )
-            })?;
+        Message::RunUpdateBatch {
+            session_id,
+            request_id,
+            epoch: _,
+            gamma,
+            xbars,
+        } => {
+            let st = session_state(state, session_id, "RunUpdateBatch")?;
             let p = st.projector.as_ref().ok_or_else(|| {
                 crate::error::DapcError::Coordinator(
                     "RunUpdateBatch on a grad-only worker: no projector \
@@ -254,15 +308,13 @@ fn handle<E: ComputeEngine>(
             obs::record_since(&wobs.update_ns, t0);
             Ok(Some(Message::UpdateBatchDone {
                 worker_id: *my_id,
+                session_id,
+                request_id,
                 xs: st.xs.clone(),
             }))
         }
-        Message::RunGradBatch { epoch: _, xs } => {
-            let st = state.as_ref().ok_or_else(|| {
-                crate::error::DapcError::Coordinator(
-                    "RunGradBatch before RegisterMatrix".into(),
-                )
-            })?;
+        Message::RunGradBatch { session_id, request_id, epoch: _, xs } => {
+            let st = session_state(state, session_id, "RunGradBatch")?;
             if st.bs.len() != xs.len() {
                 return Err(crate::error::DapcError::Coordinator(format!(
                     "batch width mismatch: {} stored rhs vs {} iterates \
@@ -277,10 +329,15 @@ fn handle<E: ComputeEngine>(
                 grads.push(engine.dgd_grad(&st.a, x, bcol)?);
             }
             obs::record_since(&wobs.grad_ns, t0);
-            Ok(Some(Message::GradBatchDone { worker_id: *my_id, grads }))
+            Ok(Some(Message::GradBatchDone {
+                worker_id: *my_id,
+                session_id,
+                request_id,
+                grads,
+            }))
         }
         Message::RunUpdate { epoch: _, gamma, xbar } => {
-            let st = state.as_mut().ok_or_else(|| {
+            let st = state.one_shot.as_mut().ok_or_else(|| {
                 crate::error::DapcError::Coordinator(
                     "RunUpdate before InitPartition".into(),
                 )
@@ -298,7 +355,7 @@ fn handle<E: ComputeEngine>(
             Ok(Some(Message::UpdateDone { worker_id: *my_id, x: st.x.clone() }))
         }
         Message::RunGrad { epoch: _, x } => {
-            let st = state.as_ref().ok_or_else(|| {
+            let st = state.one_shot.as_ref().ok_or_else(|| {
                 crate::error::DapcError::Coordinator(
                     "RunGrad before InitPartition".into(),
                 )
@@ -325,20 +382,21 @@ fn handle<E: ComputeEngine>(
     }
 }
 
-/// The session state, or a loud error naming the offending frame when no
-/// `RegisterMatrix` preceded it (one-shot `InitPartition` state does NOT
-/// qualify: it retains no seed factorization to serve from).
-fn registered_state<'s>(
-    state: &'s mut Option<WorkerState>,
+/// The named session's state, or a loud error naming the offending frame
+/// when no `RegisterMatrix` created (or an `EvictSession` removed) that
+/// id — one-shot `InitPartition` state does NOT qualify: it retains no
+/// seed factorization to serve from.
+fn session_state<'s>(
+    state: &'s mut WorkerSessions,
+    session_id: u64,
     frame: &str,
 ) -> Result<&'s mut WorkerState> {
-    match state {
-        Some(st) if st.registered => Ok(st),
-        _ => Err(crate::error::DapcError::Coordinator(format!(
-            "{frame} before RegisterMatrix: register a matrix into the \
-             session before streaming right-hand sides"
-        ))),
-    }
+    state.sessions.get_mut(&session_id).ok_or_else(|| {
+        crate::error::DapcError::Coordinator(format!(
+            "session {session_id}: {frame} before RegisterMatrix: register \
+             a matrix into the session before streaming right-hand sides"
+        ))
+    })
 }
 
 /// Seed k rhs columns through the retained factorization (or store them
@@ -492,13 +550,20 @@ mod tests {
             let engine = NativeEngine::new();
             let _ = run_worker(&engine, &mut worker_side);
         });
-        leader.send(&Message::SolveRhs { b: vec![1.0, 2.0] }).unwrap();
+        leader
+            .send(&Message::SolveRhs {
+                session_id: 7,
+                request_id: 1,
+                b: vec![1.0, 2.0],
+            })
+            .unwrap();
         match leader.recv().unwrap() {
             Message::WorkerError { message, .. } => {
                 assert!(
                     message.contains("SolveRhs before RegisterMatrix"),
                     "{message}"
                 );
+                assert!(message.contains("session 7"), "{message}");
             }
             other => panic!("expected WorkerError, got {other:?}"),
         }
@@ -521,7 +586,13 @@ mod tests {
             })
             .unwrap();
         let _ = leader.recv().unwrap();
-        leader.send(&Message::SolveBatch { bs: vec![b] }).unwrap();
+        leader
+            .send(&Message::SolveBatch {
+                session_id: 7,
+                request_id: 2,
+                bs: vec![b],
+            })
+            .unwrap();
         match leader.recv().unwrap() {
             Message::WorkerError { message, .. } => {
                 assert!(
@@ -546,27 +617,41 @@ mod tests {
         leader
             .send(&Message::RegisterMatrix {
                 worker_id: 4,
+                session_id: 11,
+                request_id: 1,
                 kind: InitKindWire::Qr,
                 a: a.clone(),
                 n_target: 8,
             })
             .unwrap();
-        let Message::MatrixRegistered { worker_id } = leader.recv().unwrap()
+        let Message::MatrixRegistered { worker_id, session_id, request_id } =
+            leader.recv().unwrap()
         else {
             panic!("expected MatrixRegistered");
         };
         assert_eq!(worker_id, 4);
+        assert_eq!(session_id, 11);
+        assert_eq!(request_id, 1);
 
         // stream several rhs: each warm seed must equal a cold init
         let engine = NativeEngine::new();
         for seed in 0..3u64 {
             let mut g = seeded(600 + seed);
             let b2: Vec<f32> = (0..24).map(|_| g.normal_f32()).collect();
-            leader.send(&Message::SolveRhs { b: b2.clone() }).unwrap();
-            let Message::RhsSeeded { x0s, .. } = leader.recv().unwrap()
+            leader
+                .send(&Message::SolveRhs {
+                    session_id: 11,
+                    request_id: 2 + seed,
+                    b: b2.clone(),
+                })
+                .unwrap();
+            let Message::RhsSeeded { session_id, request_id, x0s, .. } =
+                leader.recv().unwrap()
             else {
                 panic!("expected RhsSeeded");
             };
+            assert_eq!(session_id, 11);
+            assert_eq!(request_id, 2 + seed);
             let cold = engine
                 .init(crate::solver::InitKind::Qr, &a, &b2, 8)
                 .unwrap();
@@ -575,7 +660,11 @@ mod tests {
 
         // a batched epoch over k = 2 columns
         leader
-            .send(&Message::SolveBatch { bs: vec![b.clone(), b.clone()] })
+            .send(&Message::SolveBatch {
+                session_id: 11,
+                request_id: 9,
+                bs: vec![b.clone(), b.clone()],
+            })
             .unwrap();
         let Message::RhsSeeded { x0s, .. } = leader.recv().unwrap() else {
             panic!("expected RhsSeeded");
@@ -583,17 +672,140 @@ mod tests {
         assert_eq!(x0s.len(), 2);
         leader
             .send(&Message::RunUpdateBatch {
+                session_id: 11,
+                request_id: 9,
                 epoch: 0,
                 gamma: 0.9,
                 xbars: x0s.clone(),
             })
             .unwrap();
-        let Message::UpdateBatchDone { xs, .. } = leader.recv().unwrap()
+        let Message::UpdateBatchDone { session_id, request_id, xs, .. } =
+            leader.recv().unwrap()
         else {
             panic!("expected UpdateBatchDone");
         };
+        assert_eq!(session_id, 11);
+        assert_eq!(request_id, 9);
         assert_eq!(xs.len(), 2);
 
+        leader.send(&Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn two_sessions_resident_and_eviction_is_idempotent() {
+        // one worker holds two registered sessions at once; frames route
+        // by session_id, eviction drops exactly one, and re-registration
+        // after eviction reproduces the original warm seed bit-for-bit
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            let _ = run_worker(&engine, &mut worker_side);
+        });
+
+        let (a1, b1, _) = consistent(24, 8, 41);
+        let (a2, b2, _) = consistent(20, 8, 42);
+        for (sid, a) in [(1u64, &a1), (2u64, &a2)] {
+            leader
+                .send(&Message::RegisterMatrix {
+                    worker_id: 0,
+                    session_id: sid,
+                    request_id: sid,
+                    kind: InitKindWire::Qr,
+                    a: a.clone(),
+                    n_target: 8,
+                })
+                .unwrap();
+            let Message::MatrixRegistered { session_id, .. } =
+                leader.recv().unwrap()
+            else {
+                panic!("expected MatrixRegistered");
+            };
+            assert_eq!(session_id, sid);
+        }
+
+        // interleave seeds across the two sessions; each must match the
+        // cold init against ITS OWN matrix
+        let engine = NativeEngine::new();
+        let mut warm1 = Vec::new();
+        for (sid, a, b) in [(1u64, &a1, &b1), (2u64, &a2, &b2)] {
+            leader
+                .send(&Message::SolveRhs {
+                    session_id: sid,
+                    request_id: 10 + sid,
+                    b: b.clone(),
+                })
+                .unwrap();
+            let Message::RhsSeeded { session_id, x0s, .. } =
+                leader.recv().unwrap()
+            else {
+                panic!("expected RhsSeeded");
+            };
+            assert_eq!(session_id, sid);
+            let cold =
+                engine.init(crate::solver::InitKind::Qr, a, b, 8).unwrap();
+            assert_eq!(x0s, vec![cold.x0]);
+            if sid == 1 {
+                warm1 = x0s;
+            }
+        }
+
+        // evict session 1 twice: second ack proves idempotency
+        for _ in 0..2 {
+            leader.send(&Message::EvictSession { session_id: 1 }).unwrap();
+            let Message::SessionEvicted { session_id, .. } =
+                leader.recv().unwrap()
+            else {
+                panic!("expected SessionEvicted");
+            };
+            assert_eq!(session_id, 1);
+        }
+
+        // session 1 is gone, session 2 still serves
+        leader
+            .send(&Message::SolveRhs {
+                session_id: 1,
+                request_id: 20,
+                b: b1.clone(),
+            })
+            .unwrap();
+        match leader.recv().unwrap() {
+            Message::WorkerError { message, .. } => {
+                assert!(message.contains("session 1"), "{message}");
+            }
+            other => panic!("expected WorkerError, got {other:?}"),
+        }
+        handle.join().unwrap();
+
+        // a fresh worker re-registering session 1 reproduces the warm
+        // seed bit-for-bit (eviction lost nothing but time)
+        let (mut leader, mut worker_side) = channel_pair();
+        let handle = std::thread::spawn(move || {
+            let engine = NativeEngine::new();
+            run_worker(&engine, &mut worker_side)
+        });
+        leader
+            .send(&Message::RegisterMatrix {
+                worker_id: 0,
+                session_id: 1,
+                request_id: 30,
+                kind: InitKindWire::Qr,
+                a: a1.clone(),
+                n_target: 8,
+            })
+            .unwrap();
+        let _ = leader.recv().unwrap();
+        leader
+            .send(&Message::SolveRhs {
+                session_id: 1,
+                request_id: 31,
+                b: b1.clone(),
+            })
+            .unwrap();
+        let Message::RhsSeeded { x0s, .. } = leader.recv().unwrap() else {
+            panic!("expected RhsSeeded");
+        };
+        assert_eq!(x0s, warm1);
         leader.send(&Message::Shutdown).unwrap();
         handle.join().unwrap().unwrap();
     }
@@ -615,13 +827,17 @@ mod tests {
         leader
             .send(&Message::RegisterMatrix {
                 worker_id: 9,
+                session_id: 3,
+                request_id: 1,
                 kind: InitKindWire::Qr,
                 a,
                 n_target: 8,
             })
             .unwrap();
         let _ = leader.recv().unwrap();
-        leader.send(&Message::SolveRhs { b }).unwrap();
+        leader
+            .send(&Message::SolveRhs { session_id: 3, request_id: 2, b })
+            .unwrap();
         let _ = leader.recv().unwrap();
 
         leader.send(&Message::StatsRequest).unwrap();

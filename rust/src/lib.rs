@@ -65,7 +65,10 @@ pub mod prelude {
     pub use crate::linalg::Matrix;
     pub use crate::partition::{PartitionPlan, PartitionRegime};
     pub use crate::parallel::ParallelEngine;
-    pub use crate::service::{ServiceStats, SessionAlgorithm, SolverSession};
+    pub use crate::service::{
+        ServiceStats, SessionAlgorithm, SessionConfig, SessionManager,
+        SolverSession,
+    };
     pub use crate::solver::{
         ApcClassicalSolver, DapcSolver, DgdSolver, NativeEngine, SolveOptions,
         SolveReport, Solver,

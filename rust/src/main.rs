@@ -2,6 +2,13 @@
 //!
 //! Subcommands:
 //!   solve          run a solver on a dataset (MatrixMarket or synthetic)
+//!   serve          multi-tenant solve server smoke: register --sessions
+//!                  matrices into a SessionManager, stream interleaved
+//!                  right-hand sides from concurrent clients (in-process
+//!                  channels, or real sockets with --tcp), verify every
+//!                  reply bitwise against isolated reference sessions;
+//!                  --max-resident-bytes exercises LRU eviction and
+//!                  --queue-depth the Busy backpressure path
 //!   worker         serve a TCP worker (multi-process cluster)
 //!   graph          export the Algorithm-1 task graph as Graphviz DOT
 //!   info           list available AOT artifacts
@@ -34,7 +41,10 @@ use dapc::error::{DapcError, Result};
 use dapc::linalg::norms;
 use dapc::linalg::simd::KernelTier;
 use dapc::runtime::executor::XlaExecutorHost;
-use dapc::service::{SessionAlgorithm, SolverSession};
+use dapc::service::{
+    serve_connections, ClientReply, ServeOptions, SessionAlgorithm,
+    SessionConfig, SessionManager, SolveClient, SolverSession,
+};
 use dapc::solver::{
     drive_apc, drive_dgd, ApcClassicalSolver, ApcVariant, ComputeEngine,
     DapcSolver, DgdSolver, InProcessBackend, NativeEngine, ParallelEngine,
@@ -60,6 +70,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "artifacts", help: "artifact directory", takes_value: true },
         OptSpec { name: "distributed", help: "run over a local worker cluster", takes_value: false },
         OptSpec { name: "serve-rhs", help: "solve-service mode: register the matrix once, stream K generated right-hand sides", takes_value: true },
+        OptSpec { name: "sessions", help: "serve: number of tenant matrices to register (default 2)", takes_value: true },
+        OptSpec { name: "max-resident-bytes", help: "serve: resident-memory cap across live sessions; LRU sessions are evicted (and transparently re-factorized) to stay under it", takes_value: true },
+        OptSpec { name: "queue-depth", help: "serve: bounded request-queue depth; a full queue answers Busy (default 8)", takes_value: true },
+        OptSpec { name: "tcp", help: "serve: run client connections over real loopback sockets instead of in-process channels", takes_value: false },
         OptSpec { name: "workers", help: "comma-separated worker addrs (TCP leader)", takes_value: true },
         OptSpec { name: "listen", help: "worker listen address", takes_value: true },
         OptSpec { name: "out", help: "output path (graph/generate)", takes_value: true },
@@ -86,8 +100,8 @@ fn run(args: &[String]) -> Result<()> {
     if parsed.has_flag("help") || parsed.command.is_none() {
         println!(
             "dapc — Distributed Accelerated Projection-Based Consensus Decomposition\n\n\
-             usage: dapc <solve|worker|graph|info|generate|kernels|bench-validate\
-             |metrics-validate|audit> [options]\n\n{}",
+             usage: dapc <solve|serve|worker|graph|info|generate|kernels\
+             |bench-validate|metrics-validate|audit> [options]\n\n{}",
             cli::usage(&specs)
         );
         return Ok(());
@@ -99,6 +113,7 @@ fn run(args: &[String]) -> Result<()> {
     }
     match parsed.command.as_deref().unwrap() {
         "solve" => cmd_solve(&parsed),
+        "serve" => cmd_serve_multi(&parsed),
         "worker" => cmd_worker(&parsed),
         "graph" => cmd_graph(&parsed),
         "info" => cmd_info(&parsed),
@@ -109,7 +124,7 @@ fn run(args: &[String]) -> Result<()> {
         "audit" => cmd_audit(&parsed),
         other => Err(DapcError::Parse(format!(
             "unknown command {other:?} (expected \
-             solve|worker|graph|info|generate|kernels|bench-validate\
+             solve|serve|worker|graph|info|generate|kernels|bench-validate\
              |metrics-validate|audit)"
         ))),
     }?;
@@ -719,8 +734,8 @@ fn serve_stream<B: SessionBackend + ?Sized>(
     bs: &[Vec<f32>],
     cold_s: f64,
 ) -> Result<()> {
-    let mut session =
-        SolverSession::register(backend, a.clone(), algorithm, opts.clone())?;
+    let config = SessionConfig::new(algorithm).options(opts.clone());
+    let mut session = SolverSession::register(backend, a.clone(), config)?;
     let mut worst_residual = 0.0f64;
     let t0 = std::time::Instant::now();
     for b in bs {
@@ -748,6 +763,391 @@ fn serve_stream<B: SessionBackend + ?Sized>(
     );
     println!("worst residual across the stream: {worst_residual:.3e}");
     Ok(())
+}
+
+/// One tenant of the multi-session smoke: its matrix, the right-hand
+/// sides it will be asked to solve, and the isolated-session reference
+/// solutions every served reply must match bitwise.
+struct Tenant {
+    a: CsrMatrix,
+    bs: Vec<Vec<f32>>,
+    expected: Vec<Vec<f32>>,
+}
+
+/// Generate `n_sessions` synthetic tenants and solve each one's
+/// right-hand sides through an ISOLATED warm session on a fresh
+/// in-process backend — the references the served replies are checked
+/// against (bit-for-bit, per the interleaving-equivalence contract).
+fn build_tenants<E: ComputeEngine>(
+    cfg: &RunConfig,
+    ref_engine: &E,
+    config: &SessionConfig,
+    n_sessions: usize,
+    per_session: usize,
+) -> Result<Vec<Tenant>> {
+    let mut tenants = Vec::with_capacity(n_sessions);
+    for s in 0..n_sessions as u64 {
+        let ds = GeneratorConfig::schenk_like(cfg.synth_n)
+            .try_generate(cfg.seed.wrapping_add(s))?;
+        let a = ds.matrix;
+        let (m, n) = a.shape();
+        let mut bs = Vec::with_capacity(per_session);
+        for r in 0..per_session as u64 {
+            let mut g = dapc::rng::seeded(
+                cfg.seed.wrapping_add(1000 * (s + 1) + r),
+            );
+            let x: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+            let mut b = vec![0.0f32; m];
+            a.spmv_into(&x, &mut b);
+            bs.push(b);
+        }
+        let mut backend = InProcessBackend::new(ref_engine, cfg.partitions);
+        let mut session =
+            SolverSession::register(&mut backend, a.clone(), config.clone())?;
+        let mut expected = Vec::with_capacity(per_session);
+        for b in &bs {
+            expected.push(session.solve(b)?.xbar);
+        }
+        tenants.push(Tenant { a, bs, expected });
+    }
+    Ok(tenants)
+}
+
+/// Smoke-client request: (session id, global request index, rhs).
+type SmokeReq = (u64, usize, Vec<f32>);
+
+/// Drive one client connection: handshake, submit every assigned
+/// request (retrying through transient `Busy`), return `(global index,
+/// xbar)` per reply.
+fn run_smoke_client<T: dapc::coordinator::transport::Transport>(
+    conn: &mut T,
+    reqs: &[SmokeReq],
+) -> Result<Vec<(usize, Vec<f32>)>> {
+    let mut client = SolveClient::connect(conn)?;
+    let mut out = Vec::with_capacity(reqs.len());
+    for (sid, idx, b) in reqs {
+        // wait out transient Busy rejections: the server is making
+        // progress on other connections, so back off briefly and
+        // resubmit; bounded so a wedged server fails loudly
+        let mut reply = client.submit(*sid, std::slice::from_ref(b))?;
+        let mut attempts = 0u32;
+        while let ClientReply::Busy { .. } = reply {
+            attempts += 1;
+            if attempts > 10_000 {
+                return Err(DapcError::Coordinator(format!(
+                    "request {idx}: still Busy after {attempts} retries"
+                )));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            reply = client.submit(*sid, std::slice::from_ref(b))?;
+        }
+        match reply {
+            ClientReply::Solved { mut xbars, .. } => {
+                let xbar = xbars.pop().ok_or_else(|| {
+                    DapcError::Coordinator(format!(
+                        "request {idx}: SolveResult carried no columns"
+                    ))
+                })?;
+                out.push((*idx, xbar));
+            }
+            other => {
+                return Err(DapcError::Coordinator(format!(
+                    "request {idx} (session {sid}): expected Solved, got \
+                     {other:?}"
+                )))
+            }
+        }
+    }
+    client.shutdown()?;
+    Ok(out)
+}
+
+/// Spawn one client thread per connection pair, run the server on this
+/// thread, and scatter each client's replies into `results` by global
+/// request index.
+fn serve_over<B, T>(
+    mgr: &mut SessionManager<'_, B>,
+    pairs: Vec<(T, T)>,
+    assigned: &[Vec<SmokeReq>],
+    opts: &ServeOptions,
+    results: &mut [Option<Vec<f32>>],
+) -> Result<dapc::service::ServeReport>
+where
+    B: SessionBackend + ?Sized,
+    T: dapc::coordinator::transport::Transport,
+{
+    std::thread::scope(|sc| {
+        let mut conns = Vec::with_capacity(pairs.len());
+        let mut handles = Vec::with_capacity(pairs.len());
+        for ((srv, mut cli), reqs) in pairs.into_iter().zip(assigned) {
+            conns.push(srv);
+            handles.push(sc.spawn(move || run_smoke_client(&mut cli, reqs)));
+        }
+        let report = serve_connections(mgr, conns, opts)?;
+        for h in handles {
+            let got = h.join().map_err(|_| {
+                DapcError::Coordinator("smoke client thread panicked".into())
+            })??;
+            for (idx, xbar) in got {
+                results[idx] = Some(xbar);
+            }
+        }
+        Ok(report)
+    })
+}
+
+/// Register every tenant into a [`SessionManager`] over `backend`, serve
+/// the interleaved request schedule through concurrent client
+/// connections, and verify each reply bitwise against the tenant's
+/// isolated reference solution.
+fn run_multi_session_server<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    tenants: &[Tenant],
+    config: &SessionConfig,
+    cap: Option<u64>,
+    queue_depth: usize,
+    tcp: bool,
+) -> Result<()> {
+    use dapc::coordinator::transport::{channel_pair, TcpTransport};
+
+    let mut mgr = match cap {
+        Some(c) => SessionManager::with_memory_cap(backend, c),
+        None => SessionManager::new(backend),
+    };
+    let mut sids = Vec::with_capacity(tenants.len());
+    for t in tenants {
+        sids.push(mgr.register(t.a.clone(), config.clone())?);
+    }
+    println!(
+        "registered {} sessions (ids {:?}); resident {} B, cap {}",
+        sids.len(),
+        sids,
+        mgr.resident_bytes(),
+        cap.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+    );
+
+    // strict round-robin across sessions, split round-robin across one
+    // client connection per tenant — every connection touches EVERY
+    // session, so the wire multiplexing is exercised, not just the map
+    let per_session = tenants[0].bs.len();
+    let mut reqs: Vec<SmokeReq> = Vec::new();
+    let mut sched: Vec<(usize, usize)> = Vec::new();
+    for r in 0..per_session {
+        for (s, t) in tenants.iter().enumerate() {
+            reqs.push((sids[s], reqs.len(), t.bs[r].clone()));
+            sched.push((s, r));
+        }
+    }
+    let n_clients = tenants.len();
+    let assigned: Vec<Vec<SmokeReq>> = (0..n_clients)
+        .map(|c| {
+            reqs.iter()
+                .filter(|(_, idx, _)| idx % n_clients == c)
+                .cloned()
+                .collect()
+        })
+        .collect();
+
+    let opts = ServeOptions { queue_depth, credit_window: 4 };
+    let mut results: Vec<Option<Vec<f32>>> = vec![None; reqs.len()];
+    let report = if tcp {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        println!("serving over loopback TCP on {addr}");
+        let mut pairs = Vec::with_capacity(n_clients);
+        for _ in 0..n_clients {
+            // connect-then-accept on one thread: the listener backlog
+            // holds the pending connection, so this cannot block
+            let out = std::net::TcpStream::connect(addr)?;
+            let (inn, _) = listener.accept()?;
+            pairs.push((TcpTransport::new(inn)?, TcpTransport::new(out)?));
+        }
+        serve_over(&mut mgr, pairs, &assigned, &opts, &mut results)?
+    } else {
+        let pairs: Vec<_> = (0..n_clients)
+            .map(|_| {
+                let (srv, cli) = channel_pair();
+                (srv, cli)
+            })
+            .collect();
+        serve_over(&mut mgr, pairs, &assigned, &opts, &mut results)?
+    };
+
+    // every reply must be bitwise identical to the isolated reference
+    let mut missing = 0usize;
+    for (i, got) in results.iter().enumerate() {
+        let (s, r) = sched[i];
+        match got {
+            Some(x) if *x == tenants[s].expected[r] => {}
+            Some(_) => {
+                return Err(DapcError::Coordinator(format!(
+                    "request {i} (session {}, rhs {r}): served solution \
+                     diverges from the isolated reference",
+                    sids[s]
+                )))
+            }
+            None => missing += 1,
+        }
+    }
+    if missing > 0 {
+        return Err(DapcError::Coordinator(format!(
+            "{missing} request(s) never produced a SolveResult"
+        )));
+    }
+    println!(
+        "verified {} interleaved replies bitwise against isolated \
+         sessions ({} served, {} busy rejections, {} evictions)",
+        results.len(),
+        report.served,
+        report.busy,
+        mgr.evictions(),
+    );
+    if let Some(c) = cap {
+        let live = sids.iter().filter(|s| mgr.is_resident(**s)).count();
+        if live > 1 && mgr.resident_bytes() > c {
+            return Err(DapcError::Coordinator(format!(
+                "resident bytes {} exceed the cap {c} with {live} \
+                 sessions live",
+                mgr.resident_bytes()
+            )));
+        }
+    }
+    for sid in &sids {
+        if let Some(stats) = mgr.stats(*sid) {
+            println!("session {sid}: {}", stats.summary());
+        }
+    }
+    // unregister the first tenant so the metrics dump proves the
+    // accounting decrements (the validator cross-checks the per-session
+    // gauges against the total)
+    mgr.unregister(sids[0])?;
+    println!(
+        "unregistered session {}; resident now {} B across {} sessions",
+        sids[0],
+        mgr.resident_bytes(),
+        mgr.len(),
+    );
+    Ok(())
+}
+
+/// `dapc serve`: the multi-tenant solve-server smoke.  Registers
+/// `--sessions` synthetic matrices into one [`SessionManager`], streams
+/// `--serve-rhs` right-hand sides per session from concurrent client
+/// connections (each client touching every session), and fails unless
+/// every reply is bitwise identical to an isolated single-session
+/// reference.  `--max-resident-bytes` forces LRU eviction mid-stream;
+/// `--tcp` swaps in-process channels for real loopback sockets;
+/// `--distributed` serves over a local worker cluster.
+fn cmd_serve_multi(parsed: &cli::ParsedArgs) -> Result<()> {
+    let cfg = build_config(parsed)?;
+    let n_sessions = parsed.get_parse::<usize>("sessions")?.unwrap_or(2);
+    let per_session = parsed.get_parse::<usize>("serve-rhs")?.unwrap_or(3);
+    let queue_depth = parsed.get_parse::<usize>("queue-depth")?.unwrap_or(8);
+    let cap = parsed.get_parse::<u64>("max-resident-bytes")?;
+    let tcp = parsed.has_flag("tcp");
+    if n_sessions == 0 || per_session == 0 {
+        return Err(DapcError::Config(
+            "serve needs --sessions >= 1 and --serve-rhs >= 1".into(),
+        ));
+    }
+    let algorithm = match cfg.algorithm {
+        Algorithm::DapcDecomposed => {
+            SessionAlgorithm::Apc(ApcVariant::Decomposed)
+        }
+        Algorithm::ApcClassical => SessionAlgorithm::Apc(ApcVariant::Classical),
+        Algorithm::Dgd => SessionAlgorithm::Dgd,
+    };
+    let config = SessionConfig::new(algorithm)
+        .partitions(cfg.partitions)
+        .options(SolveOptions {
+            epochs: cfg.epochs,
+            eta: cfg.eta,
+            gamma: cfg.gamma,
+            dgd_step: cfg.dgd_step,
+            kernel_tier: parse_kernel_tier(parsed)?,
+            ..Default::default()
+        });
+    println!(
+        "multi-tenant serve: {n_sessions} sessions x {per_session} rhs, \
+         queue depth {queue_depth}, J = {}",
+        cfg.partitions
+    );
+
+    if parsed.has_flag("distributed") {
+        // cluster workers run NativeEngine; the in-process NativeEngine
+        // references are bitwise-equivalent by the distributed contract
+        let ref_engine = NativeEngine::new();
+        let tenants = build_tenants(
+            &cfg,
+            &ref_engine,
+            &config,
+            n_sessions,
+            per_session,
+        )?;
+        let mut c =
+            cluster::LocalCluster::spawn(cfg.partitions, NativeEngine::new)?;
+        run_multi_session_server(
+            c.leader.backend_mut(),
+            &tenants,
+            &config,
+            cap,
+            queue_depth,
+            tcp,
+        )?;
+        return collect_cluster_telemetry(&mut c.leader);
+    }
+    match cfg.engine {
+        EngineKind::Native if cfg.threads == 1 => {
+            let engine = match config.solve_options().kernel_tier {
+                Some(t) => NativeEngine::with_tier(t),
+                None => NativeEngine::new(),
+            };
+            let tenants = build_tenants(
+                &cfg,
+                &engine,
+                &config,
+                n_sessions,
+                per_session,
+            )?;
+            let mut backend = InProcessBackend::new(&engine, cfg.partitions);
+            run_multi_session_server(
+                &mut backend,
+                &tenants,
+                &config,
+                cap,
+                queue_depth,
+                tcp,
+            )
+        }
+        EngineKind::Native => {
+            let engine = match config.solve_options().kernel_tier {
+                Some(t) => ParallelEngine::with_tier(cfg.threads, t),
+                None => ParallelEngine::new(cfg.threads),
+            };
+            println!("parallel native engine: {} threads", engine.threads());
+            let tenants = build_tenants(
+                &cfg,
+                &engine,
+                &config,
+                n_sessions,
+                per_session,
+            )?;
+            let mut backend = InProcessBackend::new(&engine, cfg.partitions);
+            run_multi_session_server(
+                &mut backend,
+                &tenants,
+                &config,
+                cap,
+                queue_depth,
+                tcp,
+            )
+        }
+        EngineKind::Xla => Err(DapcError::Config(
+            "serve requires the native engine (the XLA init is a fused \
+             artifact with no retained factorization)"
+                .into(),
+        )),
+    }
 }
 
 fn cmd_worker(parsed: &cli::ParsedArgs) -> Result<()> {

@@ -205,7 +205,11 @@ fn check_nonneg(name: &str, key: &str, v: f64) -> Result<()> {
 /// are present, the per-RHS histogram totals must equal the
 /// `service.rhs_served` counter — every served RHS records exactly one
 /// latency observation (warm or batched), so a drift here means an
-/// instrumentation hole.
+/// instrumentation hole.  Likewise the per-session
+/// `service.s{id}.resident_bytes` gauges must sum exactly to the
+/// `service.resident_bytes` total when it is present — eviction and
+/// unregister decrement both, so a drift means stale resident-memory
+/// accounting.
 ///
 /// Returns the total number of validated metrics.
 pub fn validate_metrics_text(text: &str) -> Result<usize> {
@@ -237,6 +241,7 @@ pub fn validate_metrics_text(text: &str) -> Result<usize> {
         check_nonneg(name, "value", v)?;
         counter_vals.insert(name.to_string(), v);
     }
+    let mut gauge_vals: BTreeMap<String, f64> = BTreeMap::new();
     for g in gauges {
         let name = g.req_str("name")?;
         let v = req_num(g, name, "value")?;
@@ -245,6 +250,7 @@ pub fn validate_metrics_text(text: &str) -> Result<usize> {
                 "metrics: gauge {name} = {v} is not finite"
             )));
         }
+        gauge_vals.insert(name.to_string(), v);
     }
 
     let mut hist_counts: BTreeMap<String, f64> = BTreeMap::new();
@@ -298,6 +304,28 @@ pub fn validate_metrics_text(text: &str) -> Result<usize> {
             )));
         }
         hist_counts.insert(name.to_string(), count);
+    }
+
+    if let Some(total) = gauge_vals.get("service.resident_bytes") {
+        // per-session gauges must sum to the total: eviction and
+        // unregister decrement both, so a drift here means the resident
+        // accounting went stale (the bug this check exists to catch).
+        // "service.resident_bytes" itself does not match the prefix.
+        let mut per_session = 0.0;
+        for (name, v) in &gauge_vals {
+            if name.starts_with("service.s")
+                && name.ends_with(".resident_bytes")
+            {
+                per_session += *v;
+            }
+        }
+        if per_session != *total {
+            return Err(DapcError::Parse(format!(
+                "metrics: per-session resident-bytes gauges sum to \
+                 {per_session} but service.resident_bytes says {total} \
+                 — stale eviction/unregister accounting"
+            )));
+        }
     }
 
     if let Some(served) = counter_vals.get("service.rhs_served") {
@@ -404,6 +432,22 @@ mod tests {
         reg.counter("service.rhs_served").inc();
         let err = validate_metrics_text(&reg.render_json()).unwrap_err();
         assert!(err.to_string().contains("rhs_served"), "{err}");
+    }
+
+    #[test]
+    fn validator_cross_checks_resident_bytes_gauges() {
+        let _g = test_lock();
+        set_enabled(true);
+        let reg = MetricsRegistry::new();
+        reg.gauge("service.resident_bytes").set(300.0);
+        reg.gauge("service.s1.resident_bytes").set(100.0);
+        reg.gauge("service.s2.resident_bytes").set(200.0);
+        assert_eq!(validate_metrics_text(&reg.render_json()).unwrap(), 3);
+
+        // stale accounting: an evicted session's gauge was never zeroed
+        reg.gauge("service.s2.resident_bytes").set(0.0);
+        let err = validate_metrics_text(&reg.render_json()).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
     }
 
     #[test]

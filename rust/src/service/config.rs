@@ -1,0 +1,170 @@
+//! [`SessionConfig`]: the builder every session registration goes
+//! through.
+//!
+//! `SolverSession::register` used to take positional
+//! `(algorithm, opts)` arguments; call sites grew unreadable the moment
+//! a caller needed to touch one knob (`register(b, a, alg,
+//! SolveOptions { epochs, ..Default::default() })`).  The builder names
+//! every knob, supplies defaults for the rest, and is the ONE
+//! registration surface shared by [`super::SolverSession`] and
+//! [`super::SessionManager`].
+
+use crate::error::{DapcError, Result};
+use crate::linalg::simd::KernelTier;
+use crate::solver::{ApcVariant, SolveOptions};
+
+use super::SessionAlgorithm;
+
+/// Declarative registration config for a solver session.
+///
+/// ```
+/// use dapc::service::SessionConfig;
+/// use dapc::solver::ApcVariant;
+///
+/// let config = SessionConfig::apc(ApcVariant::Decomposed)
+///     .partitions(4)
+///     .epochs(60);
+/// ```
+///
+/// `partitions` is a cross-check, not a request: the partition count is
+/// owned by the backend (its worker count), and registration fails
+/// loudly when the declared count disagrees instead of silently
+/// repartitioning.  Leave it unset to accept whatever the backend has.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    algorithm: SessionAlgorithm,
+    partitions: Option<usize>,
+    opts: SolveOptions,
+}
+
+impl SessionConfig {
+    /// Config for `algorithm` with default [`SolveOptions`].
+    pub fn new(algorithm: SessionAlgorithm) -> Self {
+        Self { algorithm, partitions: None, opts: SolveOptions::default() }
+    }
+
+    /// Consensus session (decomposed or classical init).
+    pub fn apc(variant: ApcVariant) -> Self {
+        Self::new(SessionAlgorithm::Apc(variant))
+    }
+
+    /// Distributed-gradient-descent session.
+    pub fn dgd() -> Self {
+        Self::new(SessionAlgorithm::Dgd)
+    }
+
+    /// Declare the expected partition/worker count.  Registration fails
+    /// if the backend disagrees.
+    pub fn partitions(mut self, j: usize) -> Self {
+        self.partitions = Some(j);
+        self
+    }
+
+    /// Consensus epochs T (or gradient steps for DGD).
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.opts.epochs = epochs;
+        self
+    }
+
+    /// DGD step size (`0.0` = resolve automatically at registration).
+    pub fn dgd_step(mut self, alpha: f32) -> Self {
+        self.opts.dgd_step = alpha;
+        self
+    }
+
+    /// Per-session f32 kernel-tier override for in-process native
+    /// engines (see the two-tier contract in `linalg::simd`).
+    pub fn kernel_tier(mut self, tier: KernelTier) -> Self {
+        self.opts.kernel_tier = Some(tier);
+        self
+    }
+
+    /// Request per-partition final estimates in each report.  Sessions
+    /// reject this at registration (the serving layer returns raw
+    /// solves only) — the builder still carries it so the rejection has
+    /// one authoritative code path.
+    pub fn collect_x_parts(mut self, on: bool) -> Self {
+        self.opts.collect_x_parts = on;
+        self
+    }
+
+    /// Escape hatch: replace the full [`SolveOptions`] (keeps the
+    /// algorithm and partition declaration).
+    pub fn options(mut self, opts: SolveOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// The algorithm this config registers.
+    pub fn algorithm(&self) -> SessionAlgorithm {
+        self.algorithm
+    }
+
+    /// The solve options this config carries.
+    pub fn solve_options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// Resolve the partition count against the backend's, erroring on a
+    /// mismatch (and on a zero-partition backend).
+    pub(crate) fn resolve_partitions(&self, backend_j: usize) -> Result<usize> {
+        if backend_j == 0 {
+            return Err(DapcError::Coordinator(
+                "solver session needs at least one partition/worker (got 0)"
+                    .into(),
+            ));
+        }
+        match self.partitions {
+            Some(j) if j != backend_j => Err(DapcError::Config(format!(
+                "SessionConfig declares {j} partitions but the backend has \
+                 {backend_j} workers"
+            ))),
+            _ => Ok(backend_j),
+        }
+    }
+
+    pub(crate) fn into_parts(self) -> (SessionAlgorithm, SolveOptions) {
+        (self.algorithm, self.opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let c = SessionConfig::apc(ApcVariant::Classical)
+            .partitions(3)
+            .epochs(12)
+            .kernel_tier(KernelTier::Fast)
+            .collect_x_parts(true);
+        assert_eq!(
+            c.algorithm(),
+            SessionAlgorithm::Apc(ApcVariant::Classical)
+        );
+        assert_eq!(c.solve_options().epochs, 12);
+        assert_eq!(c.solve_options().kernel_tier, Some(KernelTier::Fast));
+        assert!(c.solve_options().collect_x_parts);
+        assert_eq!(c.resolve_partitions(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn partition_mismatch_rejected() {
+        let c = SessionConfig::dgd().partitions(4);
+        let err = c.resolve_partitions(2).unwrap_err().to_string();
+        assert!(err.contains("4 partitions"), "{err}");
+        assert!(err.contains("2 workers"), "{err}");
+        // unset accepts the backend's count; zero is always rejected
+        assert_eq!(SessionConfig::dgd().resolve_partitions(5).unwrap(), 5);
+        assert!(SessionConfig::dgd().resolve_partitions(0).is_err());
+    }
+
+    #[test]
+    fn options_escape_hatch_replaces_solve_options() {
+        let c = SessionConfig::dgd()
+            .options(SolveOptions { epochs: 3, ..Default::default() });
+        assert_eq!(c.solve_options().epochs, 3);
+        assert_eq!(c.algorithm(), SessionAlgorithm::Dgd);
+    }
+}

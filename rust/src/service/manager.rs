@@ -1,0 +1,492 @@
+//! [`SessionManager`]: the multi-tenant owner of MANY warm sessions
+//! over ONE [`SessionBackend`], with a configurable resident-memory cap
+//! enforced by LRU eviction.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//!   register(a, config) ──► live (factorization resident backend-side)
+//!        ▲                     │ cap pressure (LRU victim)
+//!        │ next solve          ▼
+//!        └──────────────── evicted (matrix + config retained manager-
+//!                            side; backend state dropped)
+//!   unregister(sid)     ──► gone (all state released, id invalid)
+//! ```
+//!
+//! Eviction is **transparent**: the manager keeps each session's CSR
+//! matrix and [`SessionConfig`], so the next solve against an evicted
+//! id silently re-registers (re-factorizes) and then serves — bit-for-
+//! bit identical to the pre-eviction solves, because registration is
+//! deterministic.  What eviction costs is time, never numerics.
+//!
+//! # Accounting
+//!
+//! `resident_bytes()` tracks the projected backend-resident footprint
+//! ([`crate::solver::resident_partition_bytes`]) of every LIVE session;
+//! it decrements on eviction and unregister (the v5 accounting bugfix —
+//! the old per-session stats never gave bytes back).  The same number
+//! is mirrored to the `service.resident_bytes` gauge, with one
+//! `service.s{id}.resident_bytes` gauge per session; the metrics
+//! validator cross-checks that the per-session gauges sum to the total,
+//! so stale accounting fails `dapc metrics-validate`.  Cap-forced
+//! evictions count into `service.evictions`.
+//!
+//! The cap is enforced BEFORE the incoming factorization is built, so
+//! the total never exceeds it even transiently — with one documented
+//! exception: a single session whose own footprint exceeds the cap is
+//! admitted after evicting everything else (rejecting it would make the
+//! service unusable under a misconfigured cap); the invariant is
+//! `resident_bytes() <= max(cap, largest single session)`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{DapcError, Result};
+use crate::obs::{self, Counter, Gauge};
+use crate::solver::{SessionBackend, SessionId, SolveReport};
+use crate::sparse::CsrMatrix;
+
+use super::session::{next_session_id, projected_resident_bytes, SessionCore};
+use super::{ServiceStats, SessionConfig};
+
+/// One tenant's entry: live core or evicted remains.
+struct Managed {
+    /// Live serving state; `None` while evicted (the backend dropped
+    /// the factorization — `a` + `config` rebuild it on next use).
+    core: Option<SessionCore>,
+    a: Arc<CsrMatrix>,
+    config: SessionConfig,
+    /// Backend-resident bytes while live (0 while evicted).
+    resident_bytes: u64,
+    /// Counters carried across evictions (authoritative while evicted;
+    /// merged into the fresh core on re-registration).
+    saved_stats: ServiceStats,
+    /// LRU tick of the last register/solve touching this session.
+    last_used: u64,
+}
+
+/// Owns many warm sessions over one backend; see the module docs for
+/// the lifecycle and the eviction/accounting contract.
+pub struct SessionManager<'b, B: SessionBackend + ?Sized> {
+    backend: &'b mut B,
+    sessions: BTreeMap<SessionId, Managed>,
+    /// Resident-memory cap over all live sessions (`None` = uncapped).
+    max_resident_bytes: Option<u64>,
+    /// Sum of live sessions' `resident_bytes` (mirrored to the
+    /// `service.resident_bytes` gauge).
+    resident_total: u64,
+    /// LRU clock.
+    clock: u64,
+    /// Cap-forced evictions (local count; tests read it with metrics
+    /// off, the counter feeds `service.evictions`).
+    evicted_count: u64,
+    evictions: Arc<Counter>,
+    resident_gauge: Arc<Gauge>,
+}
+
+impl<'b, B: SessionBackend + ?Sized> SessionManager<'b, B> {
+    /// Uncapped manager: sessions stay resident until unregistered.
+    pub fn new(backend: &'b mut B) -> Self {
+        Self::build(backend, None)
+    }
+
+    /// Manager with a resident-memory cap in bytes (LRU eviction).
+    pub fn with_memory_cap(backend: &'b mut B, max_resident_bytes: u64) -> Self {
+        Self::build(backend, Some(max_resident_bytes))
+    }
+
+    fn build(backend: &'b mut B, cap: Option<u64>) -> Self {
+        Self {
+            backend,
+            sessions: BTreeMap::new(),
+            max_resident_bytes: cap,
+            resident_total: 0,
+            clock: 0,
+            evicted_count: 0,
+            evictions: obs::counter("service.evictions"),
+            resident_gauge: obs::gauge("service.resident_bytes"),
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn session_gauge(sid: SessionId) -> Arc<Gauge> {
+        obs::gauge(&format!("service.s{sid}.resident_bytes"))
+    }
+
+    /// Register `a` under a fresh session id and return the id.  May
+    /// evict LRU sessions first to make room under the cap.
+    pub fn register(
+        &mut self,
+        a: CsrMatrix,
+        config: SessionConfig,
+    ) -> Result<SessionId> {
+        let sid = next_session_id();
+        let a = Arc::new(a);
+        let incoming = projected_resident_bytes(
+            &a,
+            &config,
+            self.backend.partitions(),
+        )?;
+        self.make_room(incoming, sid)?;
+        let core = SessionCore::register(
+            &mut *self.backend,
+            sid,
+            a.clone(),
+            config.clone(),
+        )?;
+        let resident = core.resident_bytes();
+        self.resident_total += resident;
+        Self::session_gauge(sid).set(resident as f64);
+        self.resident_gauge.set(self.resident_total as f64);
+        let tick = self.tick();
+        self.sessions.insert(
+            sid,
+            Managed {
+                core: Some(core),
+                a,
+                config,
+                resident_bytes: resident,
+                saved_stats: ServiceStats::default(),
+                last_used: tick,
+            },
+        );
+        Ok(sid)
+    }
+
+    /// Evict LRU live sessions (skipping `incoming_sid`) until
+    /// `incoming` more bytes fit under the cap.  Stops early when no
+    /// other live session remains — a single oversized session is
+    /// admitted rather than wedging the service.
+    fn make_room(&mut self, incoming: u64, incoming_sid: SessionId) -> Result<()> {
+        let Some(cap) = self.max_resident_bytes else {
+            return Ok(());
+        };
+        while self.resident_total.saturating_add(incoming) > cap {
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(id, m)| m.core.is_some() && **id != incoming_sid)
+                .min_by_key(|(_, m)| m.last_used)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(v) => self.evict(v)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop `sid`'s backend-resident state, retaining the matrix and
+    /// config for transparent re-registration.
+    fn evict(&mut self, sid: SessionId) -> Result<()> {
+        let m = self
+            .sessions
+            .get_mut(&sid)
+            .expect("evict victim chosen from the session map");
+        let core = m.core.take().expect("evict victim is live");
+        m.saved_stats = core.stats().clone();
+        self.backend.unregister_session(sid)?;
+        self.resident_total -= m.resident_bytes;
+        m.resident_bytes = 0;
+        Self::session_gauge(sid).set(0.0);
+        self.resident_gauge.set(self.resident_total as f64);
+        self.evicted_count += 1;
+        self.evictions.inc();
+        Ok(())
+    }
+
+    /// Re-register an evicted session (no-op when live).  The rebuilt
+    /// factorization is deterministic, so post-revival solves are
+    /// bit-identical to pre-eviction ones.
+    fn revive(&mut self, sid: SessionId) -> Result<()> {
+        let m = self.session_entry(sid)?;
+        if m.core.is_some() {
+            return Ok(());
+        }
+        let (a, config, saved) =
+            (m.a.clone(), m.config.clone(), m.saved_stats.clone());
+        let incoming = projected_resident_bytes(
+            &a,
+            &config,
+            self.backend.partitions(),
+        )?;
+        self.make_room(incoming, sid)?;
+        let mut core =
+            SessionCore::register(&mut *self.backend, sid, a, config)?;
+        // carry the pre-eviction serving counters; registration cost
+        // accumulates (the session has now paid for two factorizations)
+        let fresh = core.stats_mut();
+        fresh.register_time += saved.register_time;
+        fresh.solve_calls = saved.solve_calls;
+        fresh.rhs_served = saved.rhs_served;
+        fresh.max_batch = saved.max_batch;
+        fresh.solve_time = saved.solve_time;
+        let resident = core.resident_bytes();
+        self.resident_total += resident;
+        Self::session_gauge(sid).set(resident as f64);
+        self.resident_gauge.set(self.resident_total as f64);
+        let m = self
+            .sessions
+            .get_mut(&sid)
+            .expect("session checked by session_entry above");
+        m.core = Some(core);
+        m.resident_bytes = resident;
+        Ok(())
+    }
+
+    fn session_entry(&mut self, sid: SessionId) -> Result<&mut Managed> {
+        self.sessions.get_mut(&sid).ok_or_else(|| {
+            DapcError::Coordinator(format!(
+                "unknown session {sid}: never registered with this manager \
+                 (or already unregistered)"
+            ))
+        })
+    }
+
+    /// Serve one right-hand side through session `sid`, transparently
+    /// re-registering it if evicted.
+    pub fn solve(&mut self, sid: SessionId, b: &[f32]) -> Result<SolveReport> {
+        let mut reports = self.solve_batch(sid, &[b])?;
+        Ok(reports.pop().expect("one report per rhs"))
+    }
+
+    /// Serve a column-blocked batch through session `sid` (see
+    /// [`super::SolverSession::solve_batch`] for the batching
+    /// contract), transparently re-registering it if evicted.
+    pub fn solve_batch<S: AsRef<[f32]>>(
+        &mut self,
+        sid: SessionId,
+        bs: &[S],
+    ) -> Result<Vec<SolveReport>> {
+        self.revive(sid)?;
+        let tick = self.tick();
+        let m = self
+            .sessions
+            .get_mut(&sid)
+            .expect("session revived above");
+        m.last_used = tick;
+        let core = m.core.as_mut().expect("session revived above");
+        let refs: Vec<&[f32]> = bs.iter().map(|b| b.as_ref()).collect();
+        core.solve_batch_refs(&mut *self.backend, &refs)
+    }
+
+    /// Release ALL of `sid`'s state — backend-resident factorization
+    /// and the manager-side matrix/config — invalidating the id.
+    pub fn unregister(&mut self, sid: SessionId) -> Result<()> {
+        let m = self.session_entry(sid)?;
+        let was_live = m.core.is_some();
+        let bytes = m.resident_bytes;
+        if was_live {
+            self.backend.unregister_session(sid)?;
+            self.resident_total -= bytes;
+            Self::session_gauge(sid).set(0.0);
+            self.resident_gauge.set(self.resident_total as f64);
+        }
+        self.sessions.remove(&sid);
+        Ok(())
+    }
+
+    /// Whether `sid` is registered with this manager (live OR evicted).
+    pub fn contains(&self, sid: SessionId) -> bool {
+        self.sessions.contains_key(&sid)
+    }
+
+    /// Whether `sid`'s factorization is currently backend-resident
+    /// (false when evicted or unknown).
+    pub fn is_resident(&self, sid: SessionId) -> bool {
+        self.sessions.get(&sid).is_some_and(|m| m.core.is_some())
+    }
+
+    /// Total backend-resident bytes across live sessions.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_total
+    }
+
+    /// The configured cap, if any.
+    pub fn max_resident_bytes(&self) -> Option<u64> {
+        self.max_resident_bytes
+    }
+
+    /// Cap-forced evictions so far.
+    pub fn evictions(&self) -> u64 {
+        self.evicted_count
+    }
+
+    /// Registered session ids (live and evicted), ascending.
+    pub fn session_ids(&self) -> Vec<SessionId> {
+        self.sessions.keys().copied().collect()
+    }
+
+    /// Registered-session count (live and evicted).
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Amortization counters for `sid` (survives eviction; `None` for
+    /// unknown ids).
+    pub fn stats(&self, sid: SessionId) -> Option<ServiceStats> {
+        self.sessions.get(&sid).map(|m| match &m.core {
+            Some(core) => core.stats().clone(),
+            None => m.saved_stats.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::SolverSession;
+    use crate::solver::{ApcVariant, InProcessBackend, NativeEngine};
+    use crate::sparse::generate::GeneratorConfig;
+
+    fn cfg(epochs: usize) -> SessionConfig {
+        SessionConfig::apc(ApcVariant::Decomposed).epochs(epochs)
+    }
+
+    #[test]
+    fn interleaved_sessions_match_isolated_sessions() {
+        let ds1 = GeneratorConfig::small_demo(16, 2).generate(51);
+        let ds2 = GeneratorConfig::small_demo(20, 2).generate(52);
+        let e = NativeEngine::new();
+
+        // isolated references, one backend each
+        let mut ib1 = InProcessBackend::new(&e, 2);
+        let mut ref1 =
+            SolverSession::register(&mut ib1, ds1.matrix.clone(), cfg(12))
+                .unwrap();
+        let r1 = ref1.solve(&ds1.rhs).unwrap();
+        let mut ib2 = InProcessBackend::new(&e, 2);
+        let mut ref2 =
+            SolverSession::register(&mut ib2, ds2.matrix.clone(), cfg(12))
+                .unwrap();
+        let r2 = ref2.solve(&ds2.rhs).unwrap();
+
+        // one manager, one backend, interleaved serving
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::new(&mut backend);
+        let s1 = mgr.register(ds1.matrix.clone(), cfg(12)).unwrap();
+        let s2 = mgr.register(ds2.matrix.clone(), cfg(12)).unwrap();
+        for _ in 0..2 {
+            assert_eq!(mgr.solve(s1, &ds1.rhs).unwrap().xbar, r1.xbar);
+            assert_eq!(mgr.solve(s2, &ds2.rhs).unwrap().xbar, r2.xbar);
+        }
+        assert_eq!(mgr.len(), 2);
+        assert_eq!(mgr.evictions(), 0);
+        assert_eq!(mgr.stats(s1).unwrap().rhs_served, 2);
+    }
+
+    #[test]
+    fn cap_forces_lru_eviction_and_revival_is_bitwise() {
+        let ds = GeneratorConfig::small_demo(18, 3).generate(53);
+        let e = NativeEngine::new();
+
+        // learn one session's footprint with an uncapped manager
+        let per_session = {
+            let mut b = InProcessBackend::new(&e, 3);
+            let mut m = SessionManager::new(&mut b);
+            let sid = m.register(ds.matrix.clone(), cfg(8)).unwrap();
+            m.stats(sid).unwrap().resident_bytes_total()
+        };
+        assert!(per_session > 0);
+
+        // room for exactly two
+        let cap = 2 * per_session;
+        let mut backend = InProcessBackend::new(&e, 3);
+        let mut mgr = SessionManager::with_memory_cap(&mut backend, cap);
+        let s1 = mgr.register(ds.matrix.clone(), cfg(8)).unwrap();
+        let s2 = mgr.register(ds.matrix.clone(), cfg(8)).unwrap();
+        let first = mgr.solve(s1, &ds.rhs).unwrap();
+        assert!(mgr.resident_bytes() <= cap);
+        assert_eq!(mgr.evictions(), 0);
+
+        // third tenant: s2 is LRU (s1 was just used) and gets evicted
+        let s3 = mgr.register(ds.matrix.clone(), cfg(8)).unwrap();
+        assert!(mgr.resident_bytes() <= cap);
+        assert_eq!(mgr.evictions(), 1);
+        assert!(mgr.is_resident(s1) && mgr.is_resident(s3));
+        assert!(!mgr.is_resident(s2));
+        assert_eq!(mgr.len(), 3, "evicted sessions stay registered");
+
+        // solving the evicted session transparently revives it (evicting
+        // the new LRU, s1) and reproduces the original solve bit-for-bit
+        let revived = mgr.solve(s2, &ds.rhs).unwrap();
+        assert_eq!(revived.xbar, first.xbar);
+        assert!(mgr.is_resident(s2));
+        assert!(!mgr.is_resident(s1));
+        assert!(mgr.resident_bytes() <= cap);
+        assert_eq!(mgr.evictions(), 2);
+        // counters survived the eviction round-trip
+        assert_eq!(mgr.stats(s2).unwrap().rhs_served, 1);
+
+        // and s1 revives too, still bitwise
+        assert_eq!(mgr.solve(s1, &ds.rhs).unwrap().xbar, first.xbar);
+    }
+
+    #[test]
+    fn oversized_session_admitted_after_evicting_everything() {
+        let ds = GeneratorConfig::small_demo(18, 3).generate(54);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 3);
+        // cap of 1 byte: every APC session is oversized
+        let mut mgr = SessionManager::with_memory_cap(&mut backend, 1);
+        let s1 = mgr.register(ds.matrix.clone(), cfg(6)).unwrap();
+        let r1 = mgr.solve(s1, &ds.rhs).unwrap();
+        // the second tenant evicts the first, then runs oversized itself
+        let s2 = mgr.register(ds.matrix.clone(), cfg(6)).unwrap();
+        assert!(!mgr.is_resident(s1));
+        assert!(mgr.is_resident(s2));
+        assert_eq!(mgr.evictions(), 1);
+        // both still serve, bitwise identical
+        assert_eq!(mgr.solve(s2, &ds.rhs).unwrap().xbar, r1.xbar);
+        assert_eq!(mgr.solve(s1, &ds.rhs).unwrap().xbar, r1.xbar);
+    }
+
+    #[test]
+    fn unregister_releases_bytes_and_invalidates_id() {
+        let ds = GeneratorConfig::small_demo(14, 2).generate(55);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::new(&mut backend);
+        let s1 = mgr.register(ds.matrix.clone(), cfg(4)).unwrap();
+        let s2 = mgr.register(ds.matrix.clone(), cfg(4)).unwrap();
+        let total = mgr.resident_bytes();
+        assert!(total > 0);
+
+        mgr.unregister(s1).unwrap();
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.resident_bytes() < total);
+        let err = mgr.solve(s1, &ds.rhs).unwrap_err().to_string();
+        assert!(err.contains("unknown session"), "{err}");
+        assert!(mgr.unregister(s1).is_err(), "double unregister rejected");
+
+        mgr.unregister(s2).unwrap();
+        assert_eq!(mgr.resident_bytes(), 0);
+        assert!(mgr.is_empty());
+    }
+
+    #[test]
+    fn dgd_sessions_are_weightless() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(56);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::with_memory_cap(&mut backend, 1);
+        let sid = mgr
+            .register(ds.matrix.clone(), SessionConfig::dgd().epochs(10))
+            .unwrap();
+        assert_eq!(mgr.resident_bytes(), 0);
+        assert_eq!(
+            mgr.stats(sid).unwrap().resident_partition_bytes.len(),
+            0
+        );
+        assert_eq!(mgr.solve(sid, &ds.rhs).unwrap().algorithm, "dgd");
+        assert_eq!(mgr.evictions(), 0);
+    }
+}

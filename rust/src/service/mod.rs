@@ -49,9 +49,34 @@
 //!
 //! [`ServiceStats`] tracks the amortization story: one-time registration
 //! cost vs per-RHS solve time and per-session solve counters.
+//!
+//! # Multi-tenant serving
+//!
+//! [`SolverSession`] owns ONE matrix; the layer above it scales that to
+//! many tenants:
+//!
+//! * [`SessionConfig`] — the builder every registration goes through
+//!   (algorithm, partitions, epochs, kernel tier).
+//! * [`SessionManager`] — MANY registered matrices keyed by session id
+//!   over one backend, with a configurable resident-memory cap enforced
+//!   by LRU eviction.  Eviction is transparent: the next solve against
+//!   an evicted id re-factorizes and serves, bit-for-bit identical.
+//! * [`serve_connections`] / [`SolveClient`] — the wire-v5 solve
+//!   server: many concurrent client connections multiplexed onto one
+//!   manager behind a bounded request queue, with credit-granted
+//!   admission and explicit `Busy` backpressure.
 
+mod config;
+mod manager;
+mod server;
 mod session;
 mod stats;
 
+pub use config::SessionConfig;
+pub use manager::SessionManager;
+pub use server::{
+    serve_connections, ClientReply, ServeOptions, ServeReport, SolveClient,
+    SERVER_ERROR_ID,
+};
 pub use session::{SessionAlgorithm, SolverSession};
 pub use stats::ServiceStats;

@@ -1,0 +1,601 @@
+//! Multi-tenant solve server: many client connections multiplexed onto
+//! ONE [`SessionManager`] behind a bounded request queue.
+//!
+//! # Topology
+//!
+//! ```text
+//!   client 0 ──(Transport)── conn thread 0 ──┐
+//!   client 1 ──(Transport)── conn thread 1 ──┼─► bounded queue ─► solve
+//!   client 2 ──(Transport)── conn thread 2 ──┘   (depth Q)        loop
+//!                                                             (SessionManager)
+//! ```
+//!
+//! Each accepted connection gets its own thread that owns its
+//! [`Transport`]; the calling thread runs the solve loop, draining the
+//! shared queue into [`SessionManager::solve_batch`].  One solve loop —
+//! the backend (and its workers) stays single-owner, so interleaved
+//! cross-session streams remain bit-identical to isolated sessions.
+//!
+//! # Backpressure (wire v5)
+//!
+//! Admission is credit-granted, quill-style: the server greets every
+//! connection with `Credit { credits: window }`; each `SubmitSolve`
+//! spends one credit and each completed reply (`SolveResult`,
+//! `Evicted`, `WorkerError`) is followed by `Credit { credits: 1 }`
+//! refunding it.  The queue itself is a bounded channel of depth
+//! `queue_depth`: a `SubmitSolve` that arrives while the queue is full
+//! is rejected IMMEDIATELY with `Busy { request_id, queue_depth }` —
+//! never silently dropped, never unboundedly buffered.  A `Busy` reply
+//! refunds the admission credit implicitly (no `Credit` frame follows);
+//! the client resubmits later.
+//!
+//! Replies echo the request's `session_id`/`request_id`, so a client
+//! may hold several requests in flight (up to its credit window) and
+//! match replies by id.  `SubmitSolve` naming a session the manager
+//! does not hold is answered with `Evicted { session_id, request_id }`
+//! — the one reply that means "re-register, then retry".
+//!
+//! The queue occupancy is mirrored to the `service.queue_depth` gauge
+//! and rejections count into `service.busy_rejections`.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc;
+
+use crate::coordinator::message::Message;
+use crate::coordinator::transport::Transport;
+use crate::error::{DapcError, Result};
+use crate::obs::{self, Counter, Gauge};
+use crate::solver::{RequestId, SessionBackend, SessionId};
+
+use super::SessionManager;
+
+/// Sentinel `worker_id` on server-origin `WorkerError` frames (the
+/// solve server is not a worker; real worker ids are small).
+pub const SERVER_ERROR_ID: u32 = u32::MAX;
+
+/// Knobs for [`serve_connections`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bounded request-queue depth shared by ALL connections (must be
+    /// >= 1).  A `SubmitSolve` arriving while the queue holds this many
+    /// pending requests is rejected with `Busy`.
+    pub queue_depth: usize,
+    /// Admission credits granted to each connection at accept time.
+    pub credit_window: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { queue_depth: 8, credit_window: 4 }
+    }
+}
+
+/// What one serve run did, summed over all connections.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    /// Requests answered with `SolveResult`.
+    pub served: u64,
+    /// Requests rejected with `Busy` (queue full).
+    pub busy: u64,
+    /// Requests answered with `Evicted` (unknown session id).
+    pub evicted: u64,
+    /// Requests answered with `WorkerError` (solve failed).
+    pub failed: u64,
+}
+
+/// One queued request plus the channel its reply travels back on.
+/// (The request id stays with the connection thread, which matches the
+/// reply back to the frame it answers.)
+struct Job {
+    sid: SessionId,
+    bs: Vec<Vec<f32>>,
+    reply: mpsc::Sender<Reply>,
+}
+
+enum Reply {
+    Solved { xbars: Vec<Vec<f32>>, residuals: Vec<f32> },
+    UnknownSession,
+    Failed(String),
+}
+
+/// Per-connection counters folded into the [`ServeReport`].
+#[derive(Default)]
+struct ConnTally {
+    busy: u64,
+}
+
+/// Serve `conns` until every client disconnects or sends `Shutdown`.
+///
+/// The calling thread becomes the solve loop; one thread is spawned per
+/// connection.  Returns the aggregate [`ServeReport`].  Individual
+/// solve failures are reported to the offending client as
+/// `WorkerError` frames and do NOT stop the server; transport failures
+/// on a connection end that connection and surface here.
+pub fn serve_connections<B, T>(
+    manager: &mut SessionManager<'_, B>,
+    conns: Vec<T>,
+    opts: &ServeOptions,
+) -> Result<ServeReport>
+where
+    B: SessionBackend + ?Sized,
+    T: Transport,
+{
+    if opts.queue_depth == 0 {
+        return Err(DapcError::Config(
+            "solve server queue depth must be >= 1".into(),
+        ));
+    }
+    let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue_depth);
+    let depth = AtomicI64::new(0);
+    let depth_gauge = obs::gauge("service.queue_depth");
+    let busy_counter = obs::counter("service.busy_rejections");
+
+    let mut report = ServeReport::default();
+    let mut conn_err: Option<DapcError> = None;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(conns.len());
+        for conn in conns {
+            let tx = tx.clone();
+            let (depth, gauge, busy) = (&depth, &depth_gauge, &busy_counter);
+            handles.push(s.spawn(move || {
+                handle_connection(conn, tx, opts, depth, gauge, busy)
+            }));
+        }
+        // the solve loop's recv() ends exactly when every connection
+        // thread has finished and dropped its queue sender
+        drop(tx);
+        while let Ok(job) = rx.recv() {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            depth_gauge.set(depth.load(Ordering::Relaxed).max(0) as f64);
+            let reply = if !manager.contains(job.sid) {
+                report.evicted += 1;
+                Reply::UnknownSession
+            } else {
+                match manager.solve_batch(job.sid, &job.bs) {
+                    Ok(reports) => {
+                        report.served += 1;
+                        Reply::Solved {
+                            xbars: reports
+                                .iter()
+                                .map(|r| r.xbar.clone())
+                                .collect(),
+                            residuals: reports
+                                .iter()
+                                .map(|r| r.residual.unwrap_or(0.0) as f32)
+                                .collect(),
+                        }
+                    }
+                    Err(e) => {
+                        report.failed += 1;
+                        Reply::Failed(e.to_string())
+                    }
+                }
+            };
+            // a send failure means the connection died mid-request; the
+            // connection thread reports that itself
+            let _ = job.reply.send(reply);
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(tally)) => report.busy += tally.busy,
+                Ok(Err(e)) => conn_err = Some(e),
+                Err(_) => {
+                    conn_err = Some(DapcError::Coordinator(
+                        "solve-server connection thread panicked".into(),
+                    ));
+                }
+            }
+        }
+    });
+    match conn_err {
+        Some(e) => Err(e),
+        None => Ok(report),
+    }
+}
+
+/// One connection's receive loop: admit `SubmitSolve` frames into the
+/// bounded queue (or reject with `Busy`), relay replies, refund
+/// credits.  Ends on `Shutdown` or peer hangup.
+fn handle_connection<T: Transport>(
+    mut conn: T,
+    queue: mpsc::SyncSender<Job>,
+    opts: &ServeOptions,
+    depth: &AtomicI64,
+    depth_gauge: &Gauge,
+    busy_counter: &Counter,
+) -> Result<ConnTally> {
+    conn.send(&Message::Credit { credits: opts.credit_window })?;
+    let mut tally = ConnTally::default();
+    loop {
+        let msg = match conn.recv() {
+            Ok(m) => m,
+            // peer hangup is a normal way to end a connection
+            Err(_) => break,
+        };
+        match msg {
+            Message::SubmitSolve { session_id, request_id, bs } => {
+                let (rtx, rrx) = mpsc::channel();
+                let job = Job { sid: session_id, bs, reply: rtx };
+                depth.fetch_add(1, Ordering::Relaxed);
+                depth_gauge
+                    .set(depth.load(Ordering::Relaxed).max(0) as f64);
+                match queue.try_send(job) {
+                    Ok(()) => {
+                        let reply = rrx.recv().map_err(|_| {
+                            DapcError::Coordinator(
+                                "solve loop hung up before replying".into(),
+                            )
+                        })?;
+                        let frame = match reply {
+                            Reply::Solved { xbars, residuals } => {
+                                Message::SolveResult {
+                                    session_id,
+                                    request_id,
+                                    xbars,
+                                    residuals,
+                                }
+                            }
+                            Reply::UnknownSession => {
+                                Message::Evicted { session_id, request_id }
+                            }
+                            Reply::Failed(message) => Message::WorkerError {
+                                worker_id: SERVER_ERROR_ID,
+                                message,
+                            },
+                        };
+                        conn.send(&frame)?;
+                        conn.send(&Message::Credit { credits: 1 })?;
+                    }
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        tally.busy += 1;
+                        busy_counter.inc();
+                        // Busy refunds the admission credit implicitly
+                        conn.send(&Message::Busy {
+                            request_id,
+                            queue_depth: opts.queue_depth as u32,
+                        })?;
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        return Err(DapcError::Coordinator(
+                            "solve loop shut down mid-connection".into(),
+                        ));
+                    }
+                }
+            }
+            Message::Shutdown => break,
+            other => {
+                // per-frame protocol error; the connection survives
+                conn.send(&Message::WorkerError {
+                    worker_id: SERVER_ERROR_ID,
+                    message: format!(
+                        "solve server got unexpected {} frame: this \
+                         endpoint speaks SubmitSolve/Shutdown only",
+                        other.kind_label()
+                    ),
+                })?;
+            }
+        }
+    }
+    Ok(tally)
+}
+
+/// One reply to a [`SolveClient::submit`] call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientReply {
+    /// Per-column solutions and residuals, in submission order.
+    Solved { xbars: Vec<Vec<f32>>, residuals: Vec<f32> },
+    /// The server's queue was full; resubmit later.
+    Busy { queue_depth: u32 },
+    /// The named session is not registered on the server.
+    Evicted,
+    /// The solve itself failed (bad column length, backend error, ...).
+    Failed(String),
+}
+
+/// Client half of the solve-server protocol: credit bookkeeping plus
+/// request-id allocation over any [`Transport`].
+///
+/// This is the strictly-serial client (one request in flight): it is
+/// what `dapc serve` uses for its smoke traffic and what the
+/// equivalence suites drive.  The wire protocol itself allows up to
+/// `credit_window` pipelined requests per connection.
+pub struct SolveClient<'t, T: Transport> {
+    conn: &'t mut T,
+    credits: u32,
+    next_rid: RequestId,
+}
+
+impl<'t, T: Transport> SolveClient<'t, T> {
+    /// Perform the connection handshake: wait for the server's opening
+    /// credit grant.
+    pub fn connect(conn: &'t mut T) -> Result<Self> {
+        match conn.recv()? {
+            Message::Credit { credits } => {
+                Ok(Self { conn, credits, next_rid: 0 })
+            }
+            other => Err(DapcError::Coordinator(format!(
+                "solve server greeting must be Credit, got {}",
+                other.kind_label()
+            ))),
+        }
+    }
+
+    /// Admission credits currently held.
+    pub fn credits(&self) -> u32 {
+        self.credits
+    }
+
+    /// Submit one column-blocked batch to session `sid` and wait for
+    /// the reply.
+    pub fn submit(
+        &mut self,
+        sid: SessionId,
+        bs: &[Vec<f32>],
+    ) -> Result<ClientReply> {
+        if self.credits == 0 {
+            return Err(DapcError::Coordinator(
+                "no admission credits left: wait for a Credit grant \
+                 before submitting"
+                    .into(),
+            ));
+        }
+        self.next_rid += 1;
+        let rid = self.next_rid;
+        self.conn.send(&Message::SubmitSolve {
+            session_id: sid,
+            request_id: rid,
+            bs: bs.to_vec(),
+        })?;
+        self.credits -= 1;
+        match self.conn.recv()? {
+            Message::Busy { request_id, queue_depth } => {
+                Self::check_ids(sid, rid, sid, request_id)?;
+                // Busy refunds the credit; no Credit frame follows
+                self.credits += 1;
+                Ok(ClientReply::Busy { queue_depth })
+            }
+            Message::SolveResult {
+                session_id,
+                request_id,
+                xbars,
+                residuals,
+            } => {
+                Self::check_ids(sid, rid, session_id, request_id)?;
+                self.take_credit()?;
+                Ok(ClientReply::Solved { xbars, residuals })
+            }
+            Message::Evicted { session_id, request_id } => {
+                Self::check_ids(sid, rid, session_id, request_id)?;
+                self.take_credit()?;
+                Ok(ClientReply::Evicted)
+            }
+            Message::WorkerError { message, .. } => {
+                self.take_credit()?;
+                Ok(ClientReply::Failed(message))
+            }
+            other => Err(DapcError::Coordinator(format!(
+                "solve server sent unexpected {} frame mid-request",
+                other.kind_label()
+            ))),
+        }
+    }
+
+    /// Resubmit through transient `Busy` replies, up to `retries`
+    /// attempts total.
+    pub fn submit_with_retry(
+        &mut self,
+        sid: SessionId,
+        bs: &[Vec<f32>],
+        retries: usize,
+    ) -> Result<ClientReply> {
+        let mut last = self.submit(sid, bs)?;
+        for _ in 1..retries.max(1) {
+            match last {
+                ClientReply::Busy { .. } => last = self.submit(sid, bs)?,
+                other => return Ok(other),
+            }
+        }
+        Ok(last)
+    }
+
+    fn check_ids(
+        want_sid: SessionId,
+        want_rid: RequestId,
+        got_sid: SessionId,
+        got_rid: RequestId,
+    ) -> Result<()> {
+        if want_sid != got_sid || want_rid != got_rid {
+            return Err(DapcError::Coordinator(format!(
+                "solve server reply desync: expected session \
+                 {want_sid} request {want_rid}, got session {got_sid} \
+                 request {got_rid}"
+            )));
+        }
+        Ok(())
+    }
+
+    fn take_credit(&mut self) -> Result<()> {
+        match self.conn.recv()? {
+            Message::Credit { credits } => {
+                self.credits += credits;
+                Ok(())
+            }
+            other => Err(DapcError::Coordinator(format!(
+                "expected a Credit refund after the reply, got {}",
+                other.kind_label()
+            ))),
+        }
+    }
+
+    /// End the connection (the server's handler thread exits).
+    pub fn shutdown(self) -> Result<()> {
+        self.conn.send(&Message::Shutdown)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::channel_pair;
+    use crate::service::{SessionConfig, SolverSession};
+    use crate::solver::{ApcVariant, InProcessBackend, NativeEngine};
+    use crate::sparse::generate::GeneratorConfig;
+
+    fn cfg(epochs: usize) -> SessionConfig {
+        SessionConfig::apc(ApcVariant::Decomposed).epochs(epochs)
+    }
+
+    #[test]
+    fn interleaved_connections_match_isolated_sessions() {
+        let ds1 = GeneratorConfig::small_demo(16, 2).generate(61);
+        let ds2 = GeneratorConfig::small_demo(20, 2).generate(62);
+        let e = NativeEngine::new();
+
+        // isolated references on fresh backends
+        let mut ib1 = InProcessBackend::new(&e, 2);
+        let r1 = SolverSession::register(&mut ib1, ds1.matrix.clone(), cfg(10))
+            .unwrap()
+            .solve(&ds1.rhs)
+            .unwrap();
+        let mut ib2 = InProcessBackend::new(&e, 2);
+        let r2 = SolverSession::register(&mut ib2, ds2.matrix.clone(), cfg(10))
+            .unwrap()
+            .solve(&ds2.rhs)
+            .unwrap();
+
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::new(&mut backend);
+        let s1 = mgr.register(ds1.matrix.clone(), cfg(10)).unwrap();
+        let s2 = mgr.register(ds2.matrix.clone(), cfg(10)).unwrap();
+
+        // two clients, each hammering BOTH sessions over one connection
+        let (srv_a, mut cli_a) = channel_pair();
+        let (srv_b, mut cli_b) = channel_pair();
+        let reqs = [(s1, ds1.rhs.clone()), (s2, ds2.rhs.clone())];
+        let run_client = |conn: &mut crate::coordinator::transport::ChannelTransport,
+                          reqs: &[(u64, Vec<f32>)]| {
+            let mut client = SolveClient::connect(conn).unwrap();
+            let mut got = Vec::new();
+            for (sid, b) in reqs {
+                match client.submit(*sid, &[b.clone()]).unwrap() {
+                    ClientReply::Solved { mut xbars, .. } => {
+                        got.push(xbars.pop().unwrap())
+                    }
+                    other => panic!("expected Solved, got {other:?}"),
+                }
+            }
+            assert_eq!(client.credits(), 4, "all credits refunded");
+            client.shutdown().unwrap();
+            got
+        };
+        let (got_a, got_b) = std::thread::scope(|s| {
+            let ha = s.spawn(|| run_client(&mut cli_a, &reqs));
+            let hb = s.spawn(|| run_client(&mut cli_b, &reqs));
+            let report = serve_connections(
+                &mut mgr,
+                vec![srv_a, srv_b],
+                &ServeOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(report.served, 4);
+            assert_eq!(report.busy + report.evicted + report.failed, 0);
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        for got in [got_a, got_b] {
+            assert_eq!(got[0], r1.xbar, "session 1 diverged under serving");
+            assert_eq!(got[1], r2.xbar, "session 2 diverged under serving");
+        }
+    }
+
+    #[test]
+    fn unknown_session_and_bad_rhs_reported_per_request() {
+        let ds = GeneratorConfig::small_demo(14, 2).generate(63);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::new(&mut backend);
+        let sid = mgr.register(ds.matrix.clone(), cfg(6)).unwrap();
+
+        let (srv, mut cli) = channel_pair();
+        std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                let mut client = SolveClient::connect(&mut cli).unwrap();
+                // unknown session id => Evicted
+                assert_eq!(
+                    client.submit(sid + 999, &[ds.rhs.clone()]).unwrap(),
+                    ClientReply::Evicted
+                );
+                // wrong column length => per-request failure
+                match client.submit(sid, &[vec![1.0f32; 3]]).unwrap() {
+                    ClientReply::Failed(msg) => {
+                        assert!(msg.contains("length"), "{msg}")
+                    }
+                    other => panic!("expected Failed, got {other:?}"),
+                }
+                // the connection survived both: a real solve still works
+                match client.submit(sid, &[ds.rhs.clone()]).unwrap() {
+                    ClientReply::Solved { .. } => {}
+                    other => panic!("expected Solved, got {other:?}"),
+                }
+                client.shutdown().unwrap();
+            });
+            let report = serve_connections(
+                &mut mgr,
+                vec![srv],
+                &ServeOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(report.served, 1);
+            assert_eq!(report.evicted, 1);
+            assert_eq!(report.failed, 1);
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn full_queue_rejects_with_busy_and_refunds_credit() {
+        // drive handle_connection directly against a queue we stuffed
+        // full, so the Busy path is deterministic
+        let (tx, _rx) = mpsc::sync_channel::<Job>(1);
+        let (dead_tx, _dead_rx) = mpsc::channel();
+        tx.try_send(Job { sid: 1, bs: vec![], reply: dead_tx }).unwrap();
+
+        let (srv, mut cli) = channel_pair();
+        let opts = ServeOptions { queue_depth: 1, credit_window: 2 };
+        let depth = AtomicI64::new(1);
+        let gauge = obs::gauge("service.queue_depth");
+        let busy = obs::counter("service.busy_rejections");
+        std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                handle_connection(srv, tx, &opts, &depth, &gauge, &busy)
+            });
+            let mut client = SolveClient::connect(&mut cli).unwrap();
+            assert_eq!(client.credits(), 2);
+            match client.submit(7, &[vec![0.0f32; 4]]).unwrap() {
+                ClientReply::Busy { queue_depth } => {
+                    assert_eq!(queue_depth, 1)
+                }
+                other => panic!("expected Busy, got {other:?}"),
+            }
+            assert_eq!(client.credits(), 2, "Busy refunds the credit");
+            client.shutdown().unwrap();
+            let tally = h.join().unwrap().unwrap();
+            assert_eq!(tally.busy, 1);
+        });
+    }
+
+    #[test]
+    fn zero_queue_depth_rejected() {
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut mgr = SessionManager::new(&mut backend);
+        let err = serve_connections(
+            &mut mgr,
+            Vec::<crate::coordinator::transport::ChannelTransport>::new(),
+            &ServeOptions { queue_depth: 0, credit_window: 1 },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("queue depth"), "{err}");
+    }
+}

@@ -1,7 +1,16 @@
 //! [`SolverSession`]: register a matrix once, then serve an arbitrary
 //! stream of right-hand sides (single or batched) over any
 //! [`SessionBackend`].
+//!
+//! Since the multi-tenant redesign every session owns a process-unique
+//! [`SessionId`] and every backend call is scoped to it, so any number
+//! of sessions can share one backend (and one cluster of workers).  The
+//! shared serving logic lives in [`SessionCore`] — a backend-less value
+//! the [`super::SessionManager`] can hold MANY of while driving them
+//! all over a single `&mut B`; [`SolverSession`] is the one-session
+//! convenience wrapper that bundles a core with its backend borrow.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -11,12 +20,21 @@ use crate::partition::PartitionPlan;
 use crate::solver::driver::apc_label;
 use crate::solver::{
     auto_dgd_step, drive_apc_epochs_multi, drive_dgd_epochs_multi,
-    init_kind_for, resident_partition_bytes, residual_norm, ApcVariant,
-    SessionBackend, SolveOptions, SolveReport,
+    init_kind_for, resident_partition_bytes, residual_norm, SessionBackend,
+    SessionId, SolveOptions, SolveReport,
 };
 use crate::sparse::CsrMatrix;
 
-use super::ServiceStats;
+use super::{ServiceStats, SessionConfig};
+
+/// Process-wide session-id allocator: ids are unique across every
+/// manager and standalone session in the process, so two tenants
+/// sharing one backend can never collide.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) fn next_session_id() -> SessionId {
+    NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Service-layer metric handles, resolved from the global registry once
 /// at registration.  Contract (checked by the metrics validator): the
@@ -46,30 +64,44 @@ impl SessionObs {
 pub enum SessionAlgorithm {
     /// Consensus solves (decomposed or classical init, chosen once at
     /// registration together with the regime).
-    Apc(ApcVariant),
+    Apc(crate::solver::ApcVariant),
     /// Distributed gradient descent (gradient-only workers, no
     /// factorization; the step size is resolved once at registration).
     Dgd,
 }
 
-/// A warm solver session: the matrix is registered (factorized and
-/// retained partition-side) exactly once, after which [`Self::solve`]
-/// and [`Self::solve_batch`] serve right-hand sides at per-RHS cost
-/// O(l n + n^2) + epochs — never a second factorization.
+/// What a registration of `a` under `config` will pin resident on the
+/// backend, in bytes — pure shape arithmetic, usable BEFORE paying the
+/// factorization.  [`super::SessionManager`] evicts against this
+/// projection so its memory cap is never exceeded even transiently.
+pub(crate) fn projected_resident_bytes(
+    a: &CsrMatrix,
+    config: &SessionConfig,
+    j: usize,
+) -> Result<u64> {
+    let (m, n) = a.shape();
+    let plan = PartitionPlan::contiguous(m, n, j)?;
+    Ok(match config.algorithm() {
+        SessionAlgorithm::Apc(variant) => {
+            let kind = init_kind_for(variant, plan.regime);
+            plan.blocks
+                .iter()
+                .map(|b| resident_partition_bytes(kind, b.len(), plan.n))
+                .sum()
+        }
+        SessionAlgorithm::Dgd => 0,
+    })
+}
+
+/// The backend-independent half of a warm session: id, matrix, plan,
+/// resolved algorithm parameters, reusable accumulators and stats.
 ///
-/// Works over any [`SessionBackend`]: the in-process backend for
-/// single-host serving, the cluster backend (wire protocol v4) for
-/// distributed serving.  Warm results are bit-identical to cold
-/// one-shot solves on both.
-///
-/// When metrics are enabled ([`crate::obs`]) the session feeds the
-/// `service.cold_register_ns` / `service.warm_rhs_ns` /
-/// `service.batch_rhs_ns` latency histograms and the
-/// `service.rhs_served` counter — ROADMAP item 5's p50/p99 per-RHS
-/// serving latency comes straight from these.
-pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
-    backend: &'b mut B,
-    a: CsrMatrix,
+/// Holds NO backend borrow — callers pass `&mut B` into every
+/// operation — which is exactly what lets [`super::SessionManager`]
+/// own many cores while multiplexing them over one backend.
+pub(crate) struct SessionCore {
+    sid: SessionId,
+    a: Arc<CsrMatrix>,
     plan: PartitionPlan,
     algorithm: SessionAlgorithm,
     opts: SolveOptions,
@@ -82,23 +114,18 @@ pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
     obs: SessionObs,
 }
 
-impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
-    /// Register `a` into the backend: partition, factorize, retain.
-    /// This is the session's one-time cold cost ([`ServiceStats`]
-    /// records it).
-    pub fn register(
-        backend: &'b mut B,
-        a: CsrMatrix,
-        algorithm: SessionAlgorithm,
-        opts: SolveOptions,
+impl SessionCore {
+    /// Register `a` into the backend under `sid`: partition, factorize,
+    /// retain.  This is the session's one-time cold cost
+    /// ([`ServiceStats`] records it).
+    pub(crate) fn register<B: SessionBackend + ?Sized>(
+        backend: &mut B,
+        sid: SessionId,
+        a: Arc<CsrMatrix>,
+        config: SessionConfig,
     ) -> Result<Self> {
-        let j = backend.partitions();
-        if j == 0 {
-            return Err(DapcError::Coordinator(
-                "solver session needs at least one partition/worker (got 0)"
-                    .into(),
-            ));
-        }
+        let j = config.resolve_partitions(backend.partitions())?;
+        let (algorithm, opts) = config.into_parts();
         if opts.x_true.is_some() || opts.collect_x_parts {
             // the serving layer returns raw solves only; silently
             // dropping a requested trace/x_parts would hand callers a
@@ -118,10 +145,10 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         let (n_target, alpha) = match algorithm {
             SessionAlgorithm::Apc(variant) => {
                 let kind = init_kind_for(variant, plan.regime);
-                (backend.register_matrix(kind, &plan, &a)?, 0.0)
+                (backend.register_matrix(sid, kind, &plan, &a)?, 0.0)
             }
             SessionAlgorithm::Dgd => {
-                backend.register_grad(&plan, &a)?;
+                backend.register_grad(sid, &plan, &a)?;
                 let alpha = if opts.dgd_step > 0.0 {
                     opts.dgd_step
                 } else {
@@ -150,7 +177,7 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
             ..ServiceStats::default()
         };
         Ok(Self {
-            backend,
+            sid,
             a,
             plan,
             algorithm,
@@ -163,23 +190,11 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         })
     }
 
-    /// Serve one right-hand side through the warm session.
-    pub fn solve(&mut self, b: &[f32]) -> Result<SolveReport> {
-        let mut reports = self.solve_batch_refs(&[b])?;
-        Ok(reports.pop().expect("one report per rhs"))
-    }
-
-    /// Serve `bs.len()` right-hand sides as ONE column-blocked batch:
-    /// all columns move through a single epoch loop, so each projector
-    /// sweep is shared by the whole batch.  Results are bit-identical
-    /// to calling [`Self::solve`] per column; reported times are the
-    /// batch cost divided evenly across columns (the amortized view).
-    pub fn solve_batch(&mut self, bs: &[Vec<f32>]) -> Result<Vec<SolveReport>> {
-        let refs: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
-        self.solve_batch_refs(&refs)
-    }
-
-    fn solve_batch_refs(&mut self, bs: &[&[f32]]) -> Result<Vec<SolveReport>> {
+    pub(crate) fn solve_batch_refs<B: SessionBackend + ?Sized>(
+        &mut self,
+        backend: &mut B,
+        bs: &[&[f32]],
+    ) -> Result<Vec<SolveReport>> {
         let k = bs.len();
         if k == 0 {
             return Err(DapcError::Shape(
@@ -200,20 +215,22 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         let (seed_time, mut xbars, algorithm) = match self.algorithm {
             SessionAlgorithm::Apc(variant) => {
                 self.accs.resize_with(k, Vec::new);
-                self.backend.seed_rhs(&self.plan, bs, &mut self.accs)?;
+                backend.seed_rhs(self.sid, &self.plan, bs, &mut self.accs)?;
                 let seed_time = t0.elapsed();
                 let xbars = drive_apc_epochs_multi(
-                    &mut *self.backend,
+                    backend,
+                    self.sid,
                     &mut self.accs,
                     &self.opts,
                 )?;
                 (seed_time, xbars, apc_label(variant))
             }
             SessionAlgorithm::Dgd => {
-                self.backend.seed_grad_rhs(&self.plan, bs)?;
+                backend.seed_grad_rhs(self.sid, &self.plan, bs)?;
                 let seed_time = t0.elapsed();
                 let xs = drive_dgd_epochs_multi(
-                    &mut *self.backend,
+                    backend,
+                    self.sid,
                     k,
                     self.n_target,
                     self.alpha,
@@ -244,7 +261,7 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
                 init_time: per_init,
                 iterate_time: per_iter,
                 algorithm,
-                engine: self.backend.backend_name(),
+                engine: backend.backend_name(),
                 epochs: self.opts.epochs,
             });
         }
@@ -265,24 +282,145 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
         Ok(reports)
     }
 
+    pub(crate) fn session_id(&self) -> SessionId {
+        self.sid
+    }
+
+    pub(crate) fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    pub(crate) fn stats_mut(&mut self) -> &mut ServiceStats {
+        &mut self.stats
+    }
+
+    pub(crate) fn matrix(&self) -> &CsrMatrix {
+        &self.a
+    }
+
+    pub(crate) fn partitions(&self) -> usize {
+        self.plan.j()
+    }
+
+    pub(crate) fn algorithm(&self) -> SessionAlgorithm {
+        self.algorithm
+    }
+
+    /// Total backend-resident factorization bytes this session pins
+    /// (0 for DGD sessions, which retain no factorization).
+    pub(crate) fn resident_bytes(&self) -> u64 {
+        self.stats.resident_bytes_total()
+    }
+}
+
+/// A warm solver session: the matrix is registered (factorized and
+/// retained partition-side) exactly once, after which [`Self::solve`]
+/// and [`Self::solve_batch`] serve right-hand sides at per-RHS cost
+/// O(l n + n^2) + epochs — never a second factorization.
+///
+/// Registration goes through the [`SessionConfig`] builder:
+///
+/// ```
+/// use dapc::service::{SessionConfig, SolverSession};
+/// use dapc::solver::{ApcVariant, InProcessBackend, NativeEngine};
+/// use dapc::sparse::generate::GeneratorConfig;
+///
+/// let ds = GeneratorConfig::small_demo(16, 2).generate(1);
+/// let engine = NativeEngine::new();
+/// let mut backend = InProcessBackend::new(&engine, 2);
+/// let mut session = SolverSession::register(
+///     &mut backend,
+///     ds.matrix.clone(),
+///     SessionConfig::apc(ApcVariant::Decomposed).epochs(10),
+/// )?;
+/// let report = session.solve(&ds.rhs)?;
+/// # assert!(report.residual.unwrap() < 1.0);
+/// # Ok::<(), dapc::error::DapcError>(())
+/// ```
+///
+/// Works over any [`SessionBackend`]: the in-process backend for
+/// single-host serving, the cluster backend (wire protocol v5) for
+/// distributed serving.  Warm results are bit-identical to cold
+/// one-shot solves on both, and every backend call is scoped to this
+/// session's [`SessionId`], so other sessions may share the backend
+/// (see [`super::SessionManager`] for the many-session owner with
+/// capped-memory eviction).
+///
+/// When metrics are enabled ([`crate::obs`]) the session feeds the
+/// `service.cold_register_ns` / `service.warm_rhs_ns` /
+/// `service.batch_rhs_ns` latency histograms and the
+/// `service.rhs_served` counter — ROADMAP item 5's p50/p99 per-RHS
+/// serving latency comes straight from these.
+pub struct SolverSession<'b, B: SessionBackend + ?Sized> {
+    backend: &'b mut B,
+    core: SessionCore,
+}
+
+impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
+    /// Register `a` into the backend under a fresh process-unique
+    /// session id: partition, factorize, retain.
+    pub fn register(
+        backend: &'b mut B,
+        a: CsrMatrix,
+        config: SessionConfig,
+    ) -> Result<Self> {
+        let sid = next_session_id();
+        let core =
+            SessionCore::register(backend, sid, Arc::new(a), config)?;
+        Ok(Self { backend, core })
+    }
+
+    /// Serve one right-hand side through the warm session.
+    pub fn solve(&mut self, b: &[f32]) -> Result<SolveReport> {
+        let mut reports = self.solve_batch(&[b])?;
+        Ok(reports.pop().expect("one report per rhs"))
+    }
+
+    /// Serve `bs.len()` right-hand sides as ONE column-blocked batch:
+    /// all columns move through a single epoch loop, so each projector
+    /// sweep is shared by the whole batch.  Results are bit-identical
+    /// to calling [`Self::solve`] per column; reported times are the
+    /// batch cost divided evenly across columns (the amortized view).
+    ///
+    /// Accepts any slice of rhs-shaped values — `&[Vec<f32>]`,
+    /// `&[&[f32]]`, arrays — via `AsRef<[f32]>`.
+    pub fn solve_batch<S: AsRef<[f32]>>(
+        &mut self,
+        bs: &[S],
+    ) -> Result<Vec<SolveReport>> {
+        let refs: Vec<&[f32]> = bs.iter().map(|b| b.as_ref()).collect();
+        self.core.solve_batch_refs(self.backend, &refs)
+    }
+
+    /// Release this session's backend-resident state (factorization,
+    /// prepacked panels, blocks) and consume the session.
+    pub fn unregister(self) -> Result<()> {
+        self.backend.unregister_session(self.core.sid)
+    }
+
+    /// The process-unique id scoping this session's backend state.
+    pub fn session_id(&self) -> crate::solver::SessionId {
+        self.core.session_id()
+    }
+
     /// Amortization counters for this session.
     pub fn stats(&self) -> &ServiceStats {
-        &self.stats
+        self.core.stats()
     }
 
     /// The registered matrix.
     pub fn matrix(&self) -> &CsrMatrix {
-        &self.a
+        self.core.matrix()
     }
 
     /// Partition count the session was registered with.
     pub fn partitions(&self) -> usize {
-        self.plan.j()
+        self.core.partitions()
     }
 
     /// The algorithm this session serves.
     pub fn algorithm(&self) -> SessionAlgorithm {
-        self.algorithm
+        self.core.algorithm()
     }
 }
 
@@ -290,9 +428,14 @@ impl<'b, B: SessionBackend + ?Sized> SolverSession<'b, B> {
 mod tests {
     use super::*;
     use crate::solver::{
-        drive_apc, drive_dgd, InProcessBackend, NativeEngine, Solver as _,
+        drive_apc, drive_dgd, ApcVariant, InProcessBackend, NativeEngine,
+        Solver as _,
     };
     use crate::sparse::generate::GeneratorConfig;
+
+    fn apc_cfg(epochs: usize, variant: ApcVariant) -> SessionConfig {
+        SessionConfig::apc(variant).epochs(epochs)
+    }
 
     fn opts(epochs: usize) -> SolveOptions {
         SolveOptions { epochs, ..Default::default() }
@@ -317,8 +460,7 @@ mod tests {
             let mut session = SolverSession::register(
                 &mut backend,
                 ds.matrix.clone(),
-                SessionAlgorithm::Apc(variant),
-                opts(15),
+                apc_cfg(15, variant),
             )
             .unwrap();
             let warm = session.solve(&ds.rhs).unwrap();
@@ -331,6 +473,45 @@ mod tests {
     }
 
     #[test]
+    fn session_ids_are_process_unique() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(18);
+        let e = NativeEngine::new();
+        let mut b1 = InProcessBackend::new(&e, 2);
+        let s1 = SolverSession::register(
+            &mut b1,
+            ds.matrix.clone(),
+            apc_cfg(2, ApcVariant::Decomposed),
+        )
+        .unwrap()
+        .session_id();
+        let mut b2 = InProcessBackend::new(&e, 2);
+        let s2 = SolverSession::register(
+            &mut b2,
+            ds.matrix.clone(),
+            apc_cfg(2, ApcVariant::Decomposed),
+        )
+        .unwrap()
+        .session_id();
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn partition_mismatch_rejected_at_register() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(19);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let err = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            SessionConfig::apc(ApcVariant::Decomposed).partitions(5),
+        )
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("5 partitions"), "{err}");
+    }
+
+    #[test]
     fn register_reports_resident_factorization_bytes() {
         let ds = GeneratorConfig::small_demo(16, 3).generate(11);
         let e = NativeEngine::new();
@@ -338,8 +519,7 @@ mod tests {
         let session = SolverSession::register(
             &mut backend,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(5),
+            apc_cfg(5, ApcVariant::Decomposed),
         )
         .unwrap();
         let stats = session.stats();
@@ -362,8 +542,7 @@ mod tests {
         let dgd = SolverSession::register(
             &mut b2,
             ds.matrix.clone(),
-            SessionAlgorithm::Dgd,
-            SolveOptions { epochs: 2, ..Default::default() },
+            SessionConfig::dgd().epochs(2),
         )
         .unwrap();
         assert!(dgd.stats().resident_partition_bytes.is_empty());
@@ -384,8 +563,7 @@ mod tests {
         let mut session = SolverSession::register(
             &mut backend,
             ds.matrix.clone(),
-            SessionAlgorithm::Dgd,
-            o,
+            SessionConfig::dgd().options(o),
         )
         .unwrap();
         let warm = session.solve(&ds.rhs).unwrap();
@@ -413,8 +591,7 @@ mod tests {
         let mut seq = SolverSession::register(
             &mut b1,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(20),
+            apc_cfg(20, ApcVariant::Decomposed),
         )
         .unwrap();
         let singles: Vec<_> =
@@ -424,8 +601,7 @@ mod tests {
         let mut batched = SolverSession::register(
             &mut b2,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(20),
+            apc_cfg(20, ApcVariant::Decomposed),
         )
         .unwrap();
         let batch = batched.solve_batch(&bs).unwrap();
@@ -439,6 +615,13 @@ mod tests {
         assert_eq!(batched.stats().solve_calls, 1);
         assert_eq!(batched.stats().max_batch, 3);
         assert_eq!(seq.stats().solve_calls, 3);
+
+        // AsRef flexibility: a slice of borrowed slices works unchanged
+        let refs: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
+        let again = batched.solve_batch(&refs).unwrap();
+        for (one, many) in singles.iter().zip(&again) {
+            assert_eq!(one.xbar, many.xbar);
+        }
     }
 
     #[test]
@@ -453,8 +636,7 @@ mod tests {
         let mut session = SolverSession::register(
             &mut backend,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(10),
+            apc_cfg(10, ApcVariant::Decomposed),
         )
         .unwrap();
         assert_eq!(session.solve(&ds.rhs).unwrap().xbar, via_facade.xbar);
@@ -464,24 +646,50 @@ mod tests {
     fn trace_and_x_parts_options_rejected_at_register() {
         let ds = GeneratorConfig::small_demo(8, 1).generate(16);
         let e = NativeEngine::new();
-        for o in [
-            SolveOptions {
-                x_true: Some(ds.x_true.clone()),
-                ..Default::default()
-            },
-            SolveOptions { collect_x_parts: true, ..Default::default() },
-        ] {
+        let configs = [
+            SessionConfig::apc(ApcVariant::Decomposed).options(
+                SolveOptions {
+                    x_true: Some(ds.x_true.clone()),
+                    ..Default::default()
+                },
+            ),
+            SessionConfig::apc(ApcVariant::Decomposed).collect_x_parts(true),
+        ];
+        for config in configs {
             let mut backend = InProcessBackend::new(&e, 1);
             let err = SolverSession::register(
                 &mut backend,
                 ds.matrix.clone(),
-                SessionAlgorithm::Apc(ApcVariant::Decomposed),
-                o,
+                config,
             )
             .map(|_| ())
             .unwrap_err();
             assert!(err.to_string().contains("do not support"), "{err}");
         }
+    }
+
+    #[test]
+    fn unregister_releases_backend_state() {
+        let ds = GeneratorConfig::small_demo(12, 2).generate(17);
+        let e = NativeEngine::new();
+        let mut backend = InProcessBackend::new(&e, 2);
+        let mut session = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            apc_cfg(5, ApcVariant::Decomposed),
+        )
+        .unwrap();
+        let first = session.solve(&ds.rhs).unwrap();
+        session.unregister().unwrap();
+        // a fresh registration over the same backend reproduces the
+        // solve bit-for-bit — eviction loses no numerics, only time
+        let mut again = SolverSession::register(
+            &mut backend,
+            ds.matrix.clone(),
+            apc_cfg(5, ApcVariant::Decomposed),
+        )
+        .unwrap();
+        assert_eq!(again.solve(&ds.rhs).unwrap().xbar, first.xbar);
     }
 
     #[test]
@@ -511,8 +719,7 @@ mod tests {
         let mut session = SolverSession::register(
             &mut backend,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(5),
+            apc_cfg(5, ApcVariant::Decomposed),
         )
         .unwrap();
         session.solve(&ds.rhs).unwrap();
@@ -539,11 +746,10 @@ mod tests {
         let mut session = SolverSession::register(
             &mut backend,
             ds.matrix.clone(),
-            SessionAlgorithm::Apc(ApcVariant::Decomposed),
-            opts(5),
+            apc_cfg(5, ApcVariant::Decomposed),
         )
         .unwrap();
         assert!(session.solve(&ds.rhs[..3]).is_err());
-        assert!(session.solve_batch(&[]).is_err());
+        assert!(session.solve_batch::<Vec<f32>>(&[]).is_err());
     }
 }

@@ -390,43 +390,65 @@ pub fn drive_dgd<B: ConsensusBackend + ?Sized>(
 // Warm sessions: register once, stream right-hand sides
 // ---------------------------------------------------------------------------
 
+/// Opaque id naming one registered matrix (a *session*) on a backend.
+/// Allocated by the service layer (`service::SessionManager`), carried
+/// on every v5 session wire frame, and meaningful to workers: one
+/// worker holds MANY resident factorizations keyed by session id.
+pub type SessionId = u64;
+
+/// Leader-assigned id of one registration/solve request, echoed
+/// verbatim in every reply frame it produces (casparianflow-style job
+/// ids) — lets a multiplexing leader pair replies with requests.
+pub type RequestId = u64;
+
 /// Warm-session capability on a [`ConsensusBackend`]: register a matrix
-/// ONCE (partitions factorize and retain `A_j`/`P_j`/seed state), then
-/// serve an arbitrary stream of right-hand sides — per-RHS work is
-/// seeding plus the epoch loop, never a second O(l n^2) factorization.
-/// `P_j` is RHS-independent (eqs. (1)-(4) build it from `A_j` alone), so
-/// the retained state serves every future `b` unchanged.
+/// under a [`SessionId`] (partitions factorize and retain
+/// `A_j`/`P_j`/seed state for THAT session), then serve an arbitrary
+/// stream of right-hand sides against it — per-RHS work is seeding plus
+/// the epoch loop, never a second O(l n^2) factorization.  `P_j` is
+/// RHS-independent (eqs. (1)-(4) build it from `A_j` alone), so the
+/// retained state serves every future `b` unchanged.
+///
+/// A backend holds MANY sessions at once (multi-tenant service);
+/// every method names the session it operates on, and
+/// [`Self::unregister_session`] releases one session's resident state
+/// (idempotent — the LRU evictor may race a concurrent unregister).
 ///
 /// All methods operate on k >= 1 RHS *columns* at once and keep the base
 /// trait's fixed-order f64 reduction contract per column, so warm and
 /// batched solves stay bit-identical to cold sequential ones across
-/// every backend (`tests/distributed_equivalence.rs` locks this in).
+/// every backend — with requests interleaved across sessions in any
+/// order (`tests/distributed_equivalence.rs` locks this in).
 pub trait SessionBackend: ConsensusBackend {
     /// Factorize and retain the plan's blocks (projector + seed state,
-    /// both RHS-independent).  Returns the solution width the consensus
-    /// loop runs at.
+    /// both RHS-independent) under `sid`, replacing any state that id
+    /// already held.  Returns the solution width the consensus loop
+    /// runs at.
     fn register_matrix(
         &mut self,
+        sid: SessionId,
         kind: InitKind,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<usize>;
 
-    /// Register for gradient-only (DGD) service: partitions store their
-    /// blocks, no factorization at all.
+    /// Register `sid` for gradient-only (DGD) service: partitions store
+    /// their blocks, no factorization at all.
     fn register_grad(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<()>;
 
-    /// Seed `bs.len()` fresh right-hand sides through the retained
+    /// Seed `bs.len()` fresh right-hand sides through `sid`'s retained
     /// factorizations: per-partition estimates become `x_j(0)` per
     /// column and `accs[c]` (resized to the session width) receives the
-    /// fixed-order f64 sum feeding eq. (5).  Errors loudly when no
-    /// matrix was registered.
+    /// fixed-order f64 sum feeding eq. (5).  Errors loudly when `sid`
+    /// has no registered matrix.
     fn seed_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
         accs: &mut [Vec<f64>],
@@ -436,28 +458,37 @@ pub trait SessionBackend: ConsensusBackend {
     /// twin of [`Self::seed_rhs`] (no estimates exist; DGD starts at 0).
     fn seed_grad_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
     ) -> Result<()>;
 
-    /// One eq. (6)/(7) round over every partition and every seeded
-    /// column; outcome semantics per column match
+    /// One eq. (6)/(7) round over every partition and every column
+    /// seeded into `sid`; outcome semantics per column match
     /// [`ConsensusBackend::run_round`].
     fn run_round_batch(
         &mut self,
+        sid: SessionId,
         gamma: f32,
         eta: f32,
         xbars: &mut [Vec<f32>],
         accs: &mut [Vec<f64>],
     ) -> Result<RoundOutcome>;
 
-    /// One DGD gradient round per column:
+    /// One DGD gradient round per column against `sid`:
     /// `accs[c] = sum_j A_j^T (A_j x_c - b_jc)` (fixed order per column).
     fn grad_round_batch(
         &mut self,
+        sid: SessionId,
         xs: &[Vec<f32>],
         accs: &mut [Vec<f64>],
     ) -> Result<()>;
+
+    /// Release every resident byte `sid` holds (factorizations, packed
+    /// panels, retained blocks).  Idempotent: unknown ids are a no-op —
+    /// eviction must be safe to repeat.  The session can be registered
+    /// again later under the same id.
+    fn unregister_session(&mut self, sid: SessionId) -> Result<()>;
 }
 
 /// [`drive_apc`]'s iterate phase generalized to k RHS columns over a
@@ -469,6 +500,7 @@ pub trait SessionBackend: ConsensusBackend {
 /// caller truncates).
 pub fn drive_apc_epochs_multi<B: SessionBackend + ?Sized>(
     backend: &mut B,
+    sid: SessionId,
     accs: &mut [Vec<f64>],
     opts: &SolveOptions,
 ) -> Result<Vec<Vec<f32>>> {
@@ -482,7 +514,8 @@ pub fn drive_apc_epochs_multi<B: SessionBackend + ?Sized>(
     obs::record_since(&obs_seed, ot);
     for _ in 0..opts.epochs {
         let ot = obs::now();
-        match backend.run_round_batch(opts.gamma, opts.eta, &mut xbars, accs)?
+        match backend
+            .run_round_batch(sid, opts.gamma, opts.eta, &mut xbars, accs)?
         {
             RoundOutcome::Accumulated => {
                 obs::record_since(&obs_update, ot);
@@ -503,6 +536,7 @@ pub fn drive_apc_epochs_multi<B: SessionBackend + ?Sized>(
 /// session).  Returns the k final iterates.
 pub fn drive_dgd_epochs_multi<B: SessionBackend + ?Sized>(
     backend: &mut B,
+    sid: SessionId,
     k: usize,
     n: usize,
     alpha: f32,
@@ -514,7 +548,7 @@ pub fn drive_dgd_epochs_multi<B: SessionBackend + ?Sized>(
     let mut accs = vec![vec![0.0f64; n]; k];
     for _ in 0..epochs {
         let ot = obs::now();
-        backend.grad_round_batch(&xs, &mut accs)?;
+        backend.grad_round_batch(sid, &xs, &mut accs)?;
         obs::record_since(&obs_update, ot);
         let om = obs::now();
         for (x, acc) in xs.iter_mut().zip(accs.iter()) {
@@ -552,19 +586,32 @@ pub struct InProcessBackend<'e, E: ComputeEngine> {
     blocks: Vec<(Matrix, Vec<f32>)>,
     ax: Vec<Vec<f32>>,
     grad: Vec<f32>,
-    // warm-session state (filled by register_matrix / register_grad):
-    // the dense blocks + seed factorizations + prepacked projector
-    // panels stay resident so every later rhs pays only O(l n + n^2)
-    // seeding, and every epoch runs the packed wide-gemm sweep with no
-    // per-epoch packing or widening
+    // warm-session state, keyed by session id (multi-tenant service):
+    // each session's dense blocks + seed factorizations + prepacked
+    // projector panels stay resident so every later rhs pays only
+    // O(l n + n^2) seeding, and every epoch runs the packed wide-gemm
+    // sweep with no per-epoch packing or widening.  BTreeMap for the
+    // audit no-hashmap rule AND deterministic iteration order.
+    sessions: std::collections::BTreeMap<SessionId, InProcSession>,
+}
+
+/// One registered session's resident state on [`InProcessBackend`].
+struct InProcSession {
+    // APC state (empty for gradient-only sessions)
+    ps: Vec<Matrix>,
     seeds: Vec<SeedFactors>,
     packs: Vec<blas::PrepackedPanels>,
-    session_blocks: Vec<Matrix>,
-    session_bs: Vec<Vec<Vec<f32>>>,
+    // retained dense blocks (seeding + DGD gradients)
+    blocks: Vec<Matrix>,
+    // DGD: per-partition, per-column rhs slices + gradient scratch
+    bs: Vec<Vec<Vec<f32>>>,
+    ax: Vec<Vec<f32>>,
+    grad: Vec<f32>,
+    // seeded batch iterate state (double-buffered)
     batch_xs: Vec<Vec<Vec<f32>>>,
     batch_next_xs: Vec<Vec<Vec<f32>>>,
     next_xbars: Vec<Vec<f32>>,
-    session_n: usize,
+    n: usize,
 }
 
 impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
@@ -581,16 +628,29 @@ impl<'e, E: ComputeEngine> InProcessBackend<'e, E> {
             blocks: Vec::new(),
             ax: Vec::new(),
             grad: Vec::new(),
-            seeds: Vec::new(),
-            packs: Vec::new(),
-            session_blocks: Vec::new(),
-            session_bs: Vec::new(),
-            batch_xs: Vec::new(),
-            batch_next_xs: Vec::new(),
-            next_xbars: Vec::new(),
-            session_n: 0,
+            sessions: std::collections::BTreeMap::new(),
         }
     }
+
+    fn check_plan(&self, plan: &PartitionPlan) -> Result<()> {
+        if plan.j() != self.j {
+            return Err(DapcError::Shape(format!(
+                "plan has {} blocks for a {}-partition backend",
+                plan.j(),
+                self.j
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The loud unknown-session error every backend raises when an RHS
+/// names a session that was never registered (or has been evicted).
+fn unknown_session(sid: SessionId, what: &str, want: &str) -> DapcError {
+    DapcError::Coordinator(format!(
+        "session {sid}: {what} before {want}: register a matrix into the \
+         session before streaming right-hand sides"
+    ))
 }
 
 impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
@@ -622,11 +682,10 @@ impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
             self.engine
                 .init_all(kind, j, &|i| plan.extract(a, b, i), n_target)?;
         self.xs = inits.iter().map(|w| w.x0.clone()).collect();
+        // cold one-shot solves keep the row-dot round over `self.ps`;
+        // session state (prepacked panels included) lives per-session in
+        // `self.sessions` and can never be paired with these projectors
         self.ps = inits.into_iter().map(|w| w.projector).collect();
-        // cold one-shot solves keep the row-dot round; drop any stale
-        // prepacked panels from an earlier registration so they can
-        // never be paired with the wrong projectors
-        self.packs.clear();
         self.next_xs =
             self.xs.iter().map(|x| vec![0.0f32; x.len()]).collect();
         self.next_xbar = vec![0.0f32; n_target];
@@ -721,17 +780,12 @@ impl<E: ComputeEngine> ConsensusBackend for InProcessBackend<'_, E> {
 impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
     fn register_matrix(
         &mut self,
+        sid: SessionId,
         kind: InitKind,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<usize> {
-        if plan.j() != self.j {
-            return Err(DapcError::Shape(format!(
-                "plan has {} blocks for a {}-partition backend",
-                plan.j(),
-                self.j
-            )));
-        }
+        self.check_plan(plan)?;
         let n = plan.n;
         // densify every block up front (sessions retain them for seeding
         // anyway), then factorize in ONE engine-level pass — partition-
@@ -751,58 +805,78 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
             packs.push(fac.panels);
             seeds.push(fac.seed);
         }
-        self.ps = ps;
-        self.seeds = seeds;
-        self.packs = packs;
-        self.session_blocks = blocks;
-        self.session_bs.clear();
-        self.session_n = n;
+        // replaces any state `sid` already held (re-registration after
+        // eviction lands here too)
+        self.sessions.insert(
+            sid,
+            InProcSession {
+                ps,
+                seeds,
+                packs,
+                blocks,
+                bs: Vec::new(),
+                ax: Vec::new(),
+                grad: Vec::new(),
+                batch_xs: Vec::new(),
+                batch_next_xs: Vec::new(),
+                next_xbars: Vec::new(),
+                n,
+            },
+        );
         Ok(n)
     }
 
     fn register_grad(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         a: &CsrMatrix,
     ) -> Result<()> {
-        if plan.j() != self.j {
-            return Err(DapcError::Shape(format!(
-                "plan has {} blocks for a {}-partition backend",
-                plan.j(),
-                self.j
-            )));
-        }
-        self.session_blocks = plan
+        self.check_plan(plan)?;
+        let blocks: Vec<Matrix> = plan
             .blocks
             .iter()
             .map(|blk| a.slice_rows_dense(blk.start, blk.end))
             .collect();
-        self.seeds.clear();
-        self.ax = self
-            .session_blocks
-            .iter()
-            .map(|sub| vec![0.0f32; sub.rows()])
-            .collect();
-        self.grad = vec![0.0f32; plan.n];
-        self.session_bs.clear();
-        self.session_n = plan.n;
+        let ax = blocks.iter().map(|sub| vec![0.0f32; sub.rows()]).collect();
+        self.sessions.insert(
+            sid,
+            InProcSession {
+                ps: Vec::new(),
+                seeds: Vec::new(),
+                packs: Vec::new(),
+                blocks,
+                bs: Vec::new(),
+                ax,
+                grad: vec![0.0f32; plan.n],
+                batch_xs: Vec::new(),
+                batch_next_xs: Vec::new(),
+                next_xbars: Vec::new(),
+                n: plan.n,
+            },
+        );
         Ok(())
     }
 
     fn seed_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
         accs: &mut [Vec<f64>],
     ) -> Result<()> {
         let j = self.j;
-        if self.seeds.len() != j || j == 0 {
-            return Err(DapcError::Coordinator(
-                "seed_rhs before register_matrix: register a matrix into \
-                 the session before streaming right-hand sides"
-                    .into(),
-            ));
-        }
+        let engine = self.engine;
+        let sess = match self.sessions.get_mut(&sid) {
+            Some(s) if s.seeds.len() == j && j > 0 => s,
+            _ => {
+                return Err(unknown_session(
+                    sid,
+                    "seed_rhs",
+                    "register_matrix",
+                ))
+            }
+        };
         let m = plan.blocks.last().map(|b| b.end).unwrap_or(0);
         for b in bs {
             if b.len() != m {
@@ -813,13 +887,12 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
             }
         }
         let k = bs.len();
-        let n = self.session_n;
-        let engine = self.engine;
-        self.batch_xs.resize_with(j, Vec::new);
-        for ((xcols, (seed, sub)), blk) in self
+        let n = sess.n;
+        sess.batch_xs.resize_with(j, Vec::new);
+        for ((xcols, (seed, sub)), blk) in sess
             .batch_xs
             .iter_mut()
-            .zip(self.seeds.iter().zip(&self.session_blocks))
+            .zip(sess.seeds.iter().zip(&sess.blocks))
             .zip(&plan.blocks)
         {
             xcols.clear();
@@ -827,31 +900,33 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
                 xcols.push(engine.seed(seed, sub, &b[blk.start..blk.end])?);
             }
         }
-        self.batch_next_xs = vec![vec![vec![0.0f32; n]; k]; j];
-        self.next_xbars = vec![vec![0.0f32; n]; k];
+        sess.batch_next_xs = vec![vec![vec![0.0f32; n]; k]; j];
+        sess.next_xbars = vec![vec![0.0f32; n]; k];
         for acc in accs.iter_mut() {
             acc.clear();
             acc.resize(n, 0.0);
         }
-        accumulate_sum_batch(&self.batch_xs, accs);
+        accumulate_sum_batch(&sess.batch_xs, accs);
         Ok(())
     }
 
     fn seed_grad_rhs(
         &mut self,
+        sid: SessionId,
         plan: &PartitionPlan,
         bs: &[&[f32]],
     ) -> Result<()> {
-        if self.session_blocks.len() != self.j
-            || self.ax.len() != self.j
-            || self.j == 0
-        {
-            return Err(DapcError::Coordinator(
-                "seed_grad_rhs before register_grad: register a matrix \
-                 into the session before streaming right-hand sides"
-                    .into(),
-            ));
-        }
+        let j = self.j;
+        let sess = match self.sessions.get_mut(&sid) {
+            Some(s) if s.blocks.len() == j && s.ax.len() == j && j > 0 => s,
+            _ => {
+                return Err(unknown_session(
+                    sid,
+                    "seed_grad_rhs",
+                    "register_grad",
+                ))
+            }
+        };
         let m = plan.blocks.last().map(|b| b.end).unwrap_or(0);
         for b in bs {
             if b.len() != m {
@@ -861,7 +936,7 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
                 )));
             }
         }
-        self.session_bs = plan
+        sess.bs = plan
             .blocks
             .iter()
             .map(|blk| {
@@ -873,42 +948,57 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
 
     fn run_round_batch(
         &mut self,
+        sid: SessionId,
         gamma: f32,
         eta: f32,
         xbars: &mut [Vec<f32>],
         _accs: &mut [Vec<f64>],
     ) -> Result<RoundOutcome> {
-        // allocation-free batched round: warmed workspace + double
-        // buffers, the multi-column twin of `run_round`.  Registered
-        // sessions carry prepacked projector panels and take the packed
-        // wide-gemm epoch path — bit-identical to the row-dot round,
-        // minus the per-epoch widening/matrix traffic.
-        if self.packs.len() == self.j {
+        // allocation-free batched round: warmed (shared) workspace +
+        // per-session double buffers, the multi-column twin of
+        // `run_round`.  Registered sessions carry prepacked projector
+        // panels and take the packed wide-gemm epoch path — bit-identical
+        // to the row-dot round, minus the per-epoch widening/matrix
+        // traffic.  The workspace is safe to share across sessions: the
+        // engine resizes it per call and every kernel overwrites its
+        // scratch before reading it.
+        let j = self.j;
+        let sess = match self.sessions.get_mut(&sid) {
+            Some(s) if s.seeds.len() == j && j > 0 => s,
+            _ => {
+                return Err(unknown_session(
+                    sid,
+                    "run_round_batch",
+                    "register_matrix",
+                ))
+            }
+        };
+        if sess.packs.len() == j {
             self.engine.round_batch_packed_into(
-                &self.batch_xs,
+                &sess.batch_xs,
                 xbars,
-                &self.ps,
-                &self.packs,
+                &sess.ps,
+                &sess.packs,
                 gamma,
                 eta,
                 &mut self.ws,
-                &mut self.batch_next_xs,
-                &mut self.next_xbars,
+                &mut sess.batch_next_xs,
+                &mut sess.next_xbars,
             )?;
         } else {
             self.engine.round_batch_into(
-                &self.batch_xs,
+                &sess.batch_xs,
                 xbars,
-                &self.ps,
+                &sess.ps,
                 gamma,
                 eta,
                 &mut self.ws,
-                &mut self.batch_next_xs,
-                &mut self.next_xbars,
+                &mut sess.batch_next_xs,
+                &mut sess.next_xbars,
             )?;
         }
-        std::mem::swap(&mut self.batch_xs, &mut self.batch_next_xs);
-        for (xbar, next) in xbars.iter_mut().zip(self.next_xbars.iter()) {
+        std::mem::swap(&mut sess.batch_xs, &mut sess.batch_next_xs);
+        for (xbar, next) in xbars.iter_mut().zip(sess.next_xbars.iter()) {
             xbar.copy_from_slice(next);
         }
         Ok(RoundOutcome::Mixed)
@@ -916,46 +1006,52 @@ impl<E: ComputeEngine> SessionBackend for InProcessBackend<'_, E> {
 
     fn grad_round_batch(
         &mut self,
+        sid: SessionId,
         xs: &[Vec<f32>],
         accs: &mut [Vec<f64>],
     ) -> Result<()> {
-        if self.session_bs.len() != self.j {
-            return Err(DapcError::Coordinator(
-                "grad_round_batch before seed_grad_rhs".into(),
-            ));
-        }
+        let j = self.j;
+        let engine = self.engine;
+        let sess = match self.sessions.get_mut(&sid) {
+            Some(s) if s.bs.len() == j => s,
+            Some(_) | None => {
+                return Err(DapcError::Coordinator(format!(
+                    "session {sid}: grad_round_batch before seed_grad_rhs"
+                )));
+            }
+        };
         let k = xs.len();
-        if accs.len() != k
-            || self.session_bs.iter().any(|bcols| bcols.len() != k)
-        {
+        if accs.len() != k || sess.bs.iter().any(|bcols| bcols.len() != k) {
             // a zip would silently truncate the wider side and hand the
             // caller all-zero gradients for the dropped columns
             return Err(DapcError::Coordinator(format!(
                 "batch width mismatch: {} stored rhs columns / {} \
                  accumulators vs {k} iterates (seed_grad_rhs before \
                  grad_round_batch?)",
-                self.session_bs.first().map(Vec::len).unwrap_or(0),
+                sess.bs.first().map(Vec::len).unwrap_or(0),
                 accs.len()
             )));
         }
         for acc in accs.iter_mut() {
             acc.fill(0.0);
         }
-        for ((sub, bcols), ax) in self
-            .session_blocks
-            .iter()
-            .zip(&self.session_bs)
-            .zip(self.ax.iter_mut())
+        for ((sub, bcols), ax) in
+            sess.blocks.iter().zip(&sess.bs).zip(sess.ax.iter_mut())
         {
             for ((x, bcol), acc) in
                 xs.iter().zip(bcols.iter()).zip(accs.iter_mut())
             {
-                self.engine.dgd_grad_into(sub, x, bcol, ax, &mut self.grad)?;
-                for (a, g) in acc.iter_mut().zip(&self.grad) {
+                engine.dgd_grad_into(sub, x, bcol, ax, &mut sess.grad)?;
+                for (a, g) in acc.iter_mut().zip(&sess.grad) {
                     *a += *g as f64;
                 }
             }
         }
+        Ok(())
+    }
+
+    fn unregister_session(&mut self, sid: SessionId) -> Result<()> {
+        self.sessions.remove(&sid);
         Ok(())
     }
 }
@@ -1044,9 +1140,10 @@ mod tests {
         let mut backend = InProcessBackend::new(&e, 2);
         let b = ds.rhs.clone();
         let mut accs = vec![Vec::new()];
-        let err = backend.seed_rhs(&plan, &[&b], &mut accs).unwrap_err();
+        let err = backend.seed_rhs(7, &plan, &[&b], &mut accs).unwrap_err();
         assert!(err.to_string().contains("before register_matrix"), "{err}");
-        let err = backend.seed_grad_rhs(&plan, &[&b]).unwrap_err();
+        assert!(err.to_string().contains("session 7"), "{err}");
+        let err = backend.seed_grad_rhs(7, &plan, &[&b]).unwrap_err();
         assert!(err.to_string().contains("before register_grad"), "{err}");
     }
 
@@ -1071,17 +1168,121 @@ mod tests {
         let plan = PartitionPlan::contiguous(m, n, 3).unwrap();
         let mut warm_backend = InProcessBackend::new(&e, 3);
         let width = warm_backend
-            .register_matrix(InitKind::Qr, &plan, &ds.matrix)
+            .register_matrix(1, InitKind::Qr, &plan, &ds.matrix)
             .unwrap();
         let mut accs = vec![Vec::new()];
-        warm_backend.seed_rhs(&plan, &[&ds.rhs], &mut accs).unwrap();
+        warm_backend.seed_rhs(1, &plan, &[&ds.rhs], &mut accs).unwrap();
         assert_eq!(accs[0].len(), width);
         let mut xbars =
-            drive_apc_epochs_multi(&mut warm_backend, &mut accs, &opts)
+            drive_apc_epochs_multi(&mut warm_backend, 1, &mut accs, &opts)
                 .unwrap();
         let mut warm = xbars.pop().unwrap();
         warm.truncate(n);
         assert_eq!(warm, cold.xbar);
+    }
+
+    #[test]
+    fn unregister_evicts_and_reregistration_recovers_bitwise() {
+        // eviction drops the resident state (later rhs rejected loudly);
+        // re-registering the SAME matrix under the SAME id reproduces
+        // the original solve bit-for-bit — the transparent
+        // re-factorization contract the LRU evictor relies on
+        let e = NativeEngine::new();
+        let ds = GeneratorConfig::small_demo(24, 3).generate(11);
+        let opts = SolveOptions { epochs: 9, ..Default::default() };
+        let (m, n) = ds.matrix.shape();
+        let plan = PartitionPlan::contiguous(m, n, 3).unwrap();
+        let mut backend = InProcessBackend::new(&e, 3);
+
+        let solve = |backend: &mut InProcessBackend<NativeEngine>| {
+            let mut accs = vec![Vec::new()];
+            backend.seed_rhs(5, &plan, &[&ds.rhs], &mut accs).unwrap();
+            let mut xbars =
+                drive_apc_epochs_multi(backend, 5, &mut accs, &opts).unwrap();
+            let mut x = xbars.pop().unwrap();
+            x.truncate(n);
+            x
+        };
+
+        backend.register_matrix(5, InitKind::Qr, &plan, &ds.matrix).unwrap();
+        let first = solve(&mut backend);
+
+        backend.unregister_session(5).unwrap();
+        // idempotent: evicting an already-gone session is a no-op
+        backend.unregister_session(5).unwrap();
+        let mut accs = vec![Vec::new()];
+        let err =
+            backend.seed_rhs(5, &plan, &[&ds.rhs], &mut accs).unwrap_err();
+        assert!(err.to_string().contains("before register_matrix"), "{err}");
+
+        backend.register_matrix(5, InitKind::Qr, &plan, &ds.matrix).unwrap();
+        assert_eq!(solve(&mut backend), first);
+    }
+
+    #[test]
+    fn interleaved_sessions_match_isolated_sessions_bitwise() {
+        // two sessions with DIFFERENT matrices, their epoch loops driven
+        // through one backend in interleaved order, must produce exactly
+        // what each session produces alone — per-session state never
+        // leaks across ids
+        let e = NativeEngine::new();
+        let ds1 = GeneratorConfig::small_demo(24, 3).generate(21);
+        let ds2 = GeneratorConfig::small_demo(30, 3).generate(22);
+        let opts = SolveOptions { epochs: 7, ..Default::default() };
+
+        let isolated = |ds: &crate::sparse::generate::Dataset, sid| {
+            let mut b = InProcessBackend::new(&e, 3);
+            let (m, n) = ds.matrix.shape();
+            let plan = PartitionPlan::contiguous(m, n, 3).unwrap();
+            b.register_matrix(sid, InitKind::Qr, &plan, &ds.matrix).unwrap();
+            let mut accs = vec![Vec::new()];
+            b.seed_rhs(sid, &plan, &[&ds.rhs], &mut accs).unwrap();
+            let mut xs =
+                drive_apc_epochs_multi(&mut b, sid, &mut accs, &opts).unwrap();
+            let mut x = xs.pop().unwrap();
+            x.truncate(n);
+            x
+        };
+        let want1 = isolated(&ds1, 1);
+        let want2 = isolated(&ds2, 2);
+
+        let mut b = InProcessBackend::new(&e, 3);
+        let plan1 = PartitionPlan::contiguous(
+            ds1.matrix.rows(),
+            ds1.matrix.cols(),
+            3,
+        )
+        .unwrap();
+        let plan2 = PartitionPlan::contiguous(
+            ds2.matrix.rows(),
+            ds2.matrix.cols(),
+            3,
+        )
+        .unwrap();
+        b.register_matrix(1, InitKind::Qr, &plan1, &ds1.matrix).unwrap();
+        b.register_matrix(2, InitKind::Qr, &plan2, &ds2.matrix).unwrap();
+        let mut accs1 = vec![Vec::new()];
+        let mut accs2 = vec![Vec::new()];
+        b.seed_rhs(1, &plan1, &[&ds1.rhs], &mut accs1).unwrap();
+        b.seed_rhs(2, &plan2, &[&ds2.rhs], &mut accs2).unwrap();
+        // interleave the two epoch loops round by round
+        let j = 3usize;
+        let mut xb1: Vec<Vec<f32>> =
+            accs1.iter().map(|a| mean_from_acc(a, j)).collect();
+        let mut xb2: Vec<Vec<f32>> =
+            accs2.iter().map(|a| mean_from_acc(a, j)).collect();
+        for _ in 0..opts.epochs {
+            b.run_round_batch(1, opts.gamma, opts.eta, &mut xb1, &mut accs1)
+                .unwrap();
+            b.run_round_batch(2, opts.gamma, opts.eta, &mut xb2, &mut accs2)
+                .unwrap();
+        }
+        let mut got1 = xb1.pop().unwrap();
+        got1.truncate(ds1.matrix.cols());
+        let mut got2 = xb2.pop().unwrap();
+        got2.truncate(ds2.matrix.cols());
+        assert_eq!(got1, want1);
+        assert_eq!(got2, want2);
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub use dgd::DgdSolver;
 pub use driver::{
     auto_dgd_step, drive_apc, drive_apc_epochs_multi, drive_dgd,
     drive_dgd_epochs_multi, init_kind_for, ConsensusBackend,
-    InProcessBackend, RoundOutcome, SessionBackend,
+    InProcessBackend, RequestId, RoundOutcome, SessionBackend, SessionId,
 };
 pub use engine::{
     resident_partition_bytes, ComputeEngine, InitKind, NativeEngine,

@@ -11,7 +11,9 @@
 use dapc::coordinator::LocalCluster;
 use dapc::linalg::Matrix;
 use dapc::rng::seeded;
-use dapc::service::{SessionAlgorithm, SolverSession};
+use dapc::service::{
+    SessionAlgorithm, SessionConfig, SessionManager, SolverSession,
+};
 use dapc::solver::{
     drive_apc, drive_dgd, ApcVariant, InProcessBackend, NativeEngine,
     SessionBackend, SolveOptions, SolveReport,
@@ -189,9 +191,9 @@ fn warm_session_solves<B: SessionBackend + ?Sized>(
     opts: &SolveOptions,
     bs: &[Vec<f32>],
 ) -> Vec<SolveReport> {
-    let mut session =
-        SolverSession::register(backend, a.clone(), algo, opts.clone())
-            .expect("register");
+    let config = SessionConfig::new(algo).options(opts.clone());
+    let mut session = SolverSession::register(backend, a.clone(), config)
+        .expect("register");
     bs.iter().map(|b| session.solve(b).expect("warm solve")).collect()
 }
 
@@ -202,9 +204,9 @@ fn warm_session_batch<B: SessionBackend + ?Sized>(
     opts: &SolveOptions,
     bs: &[Vec<f32>],
 ) -> Vec<SolveReport> {
-    let mut session =
-        SolverSession::register(backend, a.clone(), algo, opts.clone())
-            .expect("register");
+    let config = SessionConfig::new(algo).options(opts.clone());
+    let mut session = SolverSession::register(backend, a.clone(), config)
+        .expect("register");
     session.solve_batch(bs).expect("batched solve")
 }
 
@@ -364,8 +366,7 @@ fn warm_session_interleaved_stream_stays_stateless_per_rhs() {
     let mut session = SolverSession::register(
         &mut backend,
         a.clone(),
-        SessionAlgorithm::Apc(ApcVariant::Decomposed),
-        opts,
+        SessionConfig::apc(ApcVariant::Decomposed).options(opts),
     )
     .expect("register");
     let first = session.solve(&bs[0]).expect("b0");
@@ -373,6 +374,159 @@ fn warm_session_interleaved_stream_stays_stateless_per_rhs() {
     let again = session.solve(&bs[0]).expect("b0 again");
     assert_eq!(first.xbar, again.xbar);
     assert_eq!(session.stats().rhs_served, 3);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant suite: requests interleaved across MANY sessions over ONE
+// backend must stay bitwise identical to isolated single-session runs,
+// on the in-process and cluster backends alike; under a resident-memory
+// cap, LRU eviction must never change a single bit while the resident
+// total stays under the cap at every step (the ISSUE's acceptance
+// criteria for the session-manager tentpole).
+// ---------------------------------------------------------------------------
+
+/// (matrix, per-tenant config, rhs stream, isolated expected xbars).
+type TenantSpec<'a> =
+    (&'a CsrMatrix, SessionConfig, &'a [Vec<f32>], &'a [Vec<f32>]);
+
+/// Isolated reference: a fresh single-session backend per tenant.
+fn isolated_xbars(
+    a: &CsrMatrix,
+    config: &SessionConfig,
+    bs: &[Vec<f32>],
+    j: usize,
+) -> Vec<Vec<f32>> {
+    let engine = NativeEngine::new();
+    let mut backend = InProcessBackend::new(&engine, j);
+    let mut session =
+        SolverSession::register(&mut backend, a.clone(), config.clone())
+            .expect("isolated register");
+    bs.iter().map(|b| session.solve(b).expect("isolated").xbar).collect()
+}
+
+/// Register every tenant into one manager and serve the rhs streams in
+/// strict round-robin, asserting each reply against the tenant's
+/// isolated reference (and the cap, when set).  Returns the eviction
+/// count.
+fn run_interleaved<B: SessionBackend + ?Sized>(
+    backend: &mut B,
+    cap: Option<u64>,
+    tenants: &[TenantSpec<'_>],
+) -> u64 {
+    let mut mgr = match cap {
+        Some(c) => SessionManager::with_memory_cap(backend, c),
+        None => SessionManager::new(backend),
+    };
+    let sids: Vec<u64> = tenants
+        .iter()
+        .map(|(a, c, _, _)| {
+            mgr.register((*a).clone(), c.clone()).expect("register")
+        })
+        .collect();
+    let rounds = tenants[0].2.len();
+    for r in 0..rounds {
+        for (i, (_, _, bs, expect)) in tenants.iter().enumerate() {
+            let got = mgr.solve(sids[i], &bs[r]).expect("managed solve");
+            assert_eq!(
+                got.xbar, expect[r],
+                "tenant {i} rhs {r}: interleaved solve diverged from the \
+                 isolated session"
+            );
+            if let Some(c) = cap {
+                assert!(
+                    mgr.resident_bytes() <= c,
+                    "resident bytes {} exceed the cap {c}",
+                    mgr.resident_bytes()
+                );
+            }
+        }
+    }
+    mgr.evictions()
+}
+
+#[test]
+fn interleaved_sessions_bitwise_match_isolated_on_both_backends() {
+    let (a1, _) = consistent_system(96, 10, 71);
+    let (a2, _) = consistent_system(103, 12, 72);
+    let bs1 = rhs_stream(&a1, 2, 7100);
+    let bs2 = rhs_stream(&a2, 2, 7200);
+    let j = 3;
+    let apc = SessionConfig::apc(ApcVariant::Decomposed)
+        .partitions(j)
+        .epochs(15);
+    let dgd = SessionConfig::dgd().partitions(j).epochs(25);
+
+    let e1 = isolated_xbars(&a1, &apc, &bs1, j);
+    let e2 = isolated_xbars(&a2, &apc, &bs2, j);
+    // a heterogeneous third tenant: DGD multiplexed next to two APCs
+    let e3 = isolated_xbars(&a1, &dgd, &bs1, j);
+    let tenants: Vec<TenantSpec<'_>> = vec![
+        (&a1, apc.clone(), &bs1, &e1),
+        (&a2, apc.clone(), &bs2, &e2),
+        (&a1, dgd, &bs1, &e3),
+    ];
+
+    let engine = NativeEngine::new();
+    let mut backend = InProcessBackend::new(&engine, j);
+    assert_eq!(run_interleaved(&mut backend, None, &tenants), 0);
+
+    let mut cluster =
+        LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    assert_eq!(
+        run_interleaved(cluster.leader.backend_mut(), None, &tenants),
+        0
+    );
+}
+
+#[test]
+fn capped_eviction_reproduces_solves_bitwise_on_both_backends() {
+    let (a1, _) = consistent_system(96, 10, 73);
+    let (a2, _) = consistent_system(103, 12, 74);
+    let bs1 = rhs_stream(&a1, 2, 7300);
+    let bs2 = rhs_stream(&a2, 2, 7400);
+    let j = 3;
+    let config = SessionConfig::apc(ApcVariant::Decomposed)
+        .partitions(j)
+        .epochs(12);
+    let e1 = isolated_xbars(&a1, &config, &bs1, j);
+    let e2 = isolated_xbars(&a2, &config, &bs2, j);
+
+    // learn each tenant's resident footprint from uncapped managers
+    let engine = NativeEngine::new();
+    let footprint = |a: &CsrMatrix| -> u64 {
+        let mut b = InProcessBackend::new(&engine, j);
+        let mut m = SessionManager::new(&mut b);
+        m.register(a.clone(), config.clone()).expect("probe register");
+        m.resident_bytes()
+    };
+    let (f1, f2) = (footprint(&a1), footprint(&a2));
+    assert!(f1 > 0 && f2 > 0);
+    // cap holds EITHER session alone but never both: every cross-session
+    // solve forces an eviction and a transparent re-factorization
+    let cap = f1.max(f2) + f1.min(f2) / 2;
+    assert!(cap < f1 + f2);
+
+    let tenants: Vec<TenantSpec<'_>> = vec![
+        (&a1, config.clone(), &bs1, &e1),
+        (&a2, config.clone(), &bs2, &e2),
+    ];
+    let mut backend = InProcessBackend::new(&engine, j);
+    let local_evictions =
+        run_interleaved(&mut backend, Some(cap), &tenants);
+    assert!(
+        local_evictions >= 3,
+        "thrashing cap must evict on every cross-session hop, got \
+         {local_evictions}"
+    );
+
+    let mut cluster =
+        LocalCluster::spawn(j, NativeEngine::new).expect("cluster");
+    let dist_evictions = run_interleaved(
+        cluster.leader.backend_mut(),
+        Some(cap),
+        &tenants,
+    );
+    assert_eq!(local_evictions, dist_evictions, "eviction schedules differ");
 }
 
 #[test]

@@ -24,7 +24,7 @@ use dapc::linalg::Matrix;
 use dapc::obs;
 use dapc::parallel::ThreadPool;
 use dapc::rng::seeded;
-use dapc::service::{SessionAlgorithm, SolverSession};
+use dapc::service::{SessionAlgorithm, SessionConfig, SolverSession};
 use dapc::solver::{
     drive_apc, ApcVariant, InProcessBackend, NativeEngine, SolveOptions,
     SolveReport,
@@ -115,14 +115,11 @@ fn run_suite(a: &CsrMatrix, bs: &[Vec<f32>]) -> Vec<SolveReport> {
         out.push(drive_apc(&mut backend, a, b, variant, &opts).unwrap());
     }
 
+    let config = SessionConfig::new(algo).options(opts.clone());
     let mut backend = InProcessBackend::new(&engine, j);
-    let mut session = SolverSession::register(
-        &mut backend,
-        a.clone(),
-        algo,
-        opts.clone(),
-    )
-    .unwrap();
+    let mut session =
+        SolverSession::register(&mut backend, a.clone(), config.clone())
+            .unwrap();
     for b in bs {
         out.push(session.solve(b).unwrap());
     }
@@ -133,8 +130,7 @@ fn run_suite(a: &CsrMatrix, bs: &[Vec<f32>]) -> Vec<SolveReport> {
     let mut dist = SolverSession::register(
         cluster.leader.backend_mut(),
         a.clone(),
-        algo,
-        opts.clone(),
+        config,
     )
     .unwrap();
     for b in bs {
@@ -177,13 +173,11 @@ fn cluster_session_populates_per_rhs_and_gather_instruments() {
 
     let (a, _) = consistent_system(96, 10, 92);
     let bs = rhs_stream(&a, 3, 9200);
-    let opts = SolveOptions { epochs: 10, ..Default::default() };
     let mut cluster = LocalCluster::spawn(3, NativeEngine::new).unwrap();
     let mut session = SolverSession::register(
         cluster.leader.backend_mut(),
         a.clone(),
-        SessionAlgorithm::Apc(ApcVariant::Decomposed),
-        opts,
+        SessionConfig::apc(ApcVariant::Decomposed).epochs(10),
     )
     .unwrap();
     session.solve(&bs[0]).unwrap();

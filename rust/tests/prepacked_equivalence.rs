@@ -16,7 +16,7 @@
 use dapc::linalg::blas;
 use dapc::linalg::Matrix;
 use dapc::rng::seeded;
-use dapc::service::{SessionAlgorithm, SolverSession};
+use dapc::service::{SessionConfig, SolverSession};
 use dapc::solver::{
     drive_apc, ApcVariant, ComputeEngine, InProcessBackend, NativeEngine,
     ParallelEngine, RoundWorkspace, SolveOptions,
@@ -227,8 +227,7 @@ fn warm_sessions_stay_bitwise_equal_to_cold_solves() {
             let mut session = SolverSession::register(
                 &mut warm_backend,
                 ds.matrix.clone(),
-                SessionAlgorithm::Apc(variant),
-                opts.clone(),
+                SessionConfig::apc(variant).options(opts.clone()),
             )
             .unwrap();
             let warm = session.solve(&ds.rhs).unwrap();

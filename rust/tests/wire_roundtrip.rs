@@ -1,4 +1,4 @@
-//! Wire v4 exhaustiveness: every [`Message`] variant roundtrips through
+//! Wire v5 exhaustiveness: every [`Message`] variant roundtrips through
 //! `encode`/`decode`, `encoded_len` is exact, and every *strict prefix*
 //! of a valid encoding is rejected (the decoder consumes the payload
 //! deterministically and `finish()` refuses trailing bytes, so a
@@ -13,7 +13,7 @@
 use dapc::coordinator::message::{InitKindWire, Message, KIND_LABELS};
 use dapc::linalg::Matrix;
 
-/// One instance of every wire v4 variant, with non-trivial field values
+/// One instance of every wire v5 variant, with non-trivial field values
 /// (non-zero ids, non-square matrices, ragged batches, unicode strings)
 /// so a field mix-up cannot roundtrip by coincidence.
 fn all_variants() -> Vec<Message> {
@@ -71,6 +71,27 @@ fn all_variants() -> Vec<Message> {
                 ("π.unicode.name".to_string(), -0.0),
             ],
         },
+        // v5 session frames: ids chosen wide (> u32::MAX) so a u64
+        // field truncated to 32 bits cannot roundtrip by coincidence
+        Message::EvictSession { session_id: 0x1_0000_0007 },
+        Message::SessionEvicted { worker_id: 12, session_id: 0x2_0000_0003 },
+        Message::SubmitSolve {
+            session_id: 0x3_0000_0001,
+            request_id: 0x4_0000_0009,
+            bs: vec![vec![0.5, -0.25], vec![], vec![1e-6]],
+        },
+        Message::SolveResult {
+            session_id: 0x5_0000_0002,
+            request_id: 0x6_0000_0004,
+            xbars: vec![vec![-7.5], vec![8.0, -9.0]],
+            residuals: vec![1e-9, f32::INFINITY],
+        },
+        Message::Busy { request_id: 0x7_0000_0006, queue_depth: 17 },
+        Message::Evicted {
+            session_id: 0x8_0000_0008,
+            request_id: 0x9_0000_000a,
+        },
+        Message::Credit { credits: 4 },
     ]
 }
 
